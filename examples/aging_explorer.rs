@@ -1,0 +1,112 @@
+//! Aging explorer: interactively inspect the NBTI + process-variation
+//! substrate the whole paper rests on —
+//!   (a) frequency-degradation curves under different duty schedules,
+//!   (b) the effect of age halting (C6) vs merely unallocated cores,
+//!   (c) a sampled process-variation chip map,
+//!   (d) the PJRT aging_step artifact cross-check (if built).
+//!
+//! Run: `cargo run --release --example aging_explorer`
+
+use carbon_sim::cpu::{
+    aging::SECONDS_PER_YEAR, AgingParams, CState, Core, ProcVarParams, ProcVarSampler,
+    TemperatureModel,
+};
+use carbon_sim::util::rng::Rng;
+use carbon_sim::util::stats;
+
+fn main() {
+    let aging = AgingParams::paper_default();
+    let temps = TemperatureModel::paper_default();
+
+    println!("== (a) 10-year frequency loss vs duty schedule ==");
+    println!("{:>6} {:>14} {:>14} {:>14} {:>14}", "year", "allocated(%)", "active-idle(%)", "50% C6(%)", "94% C6(%)");
+    for year in [1, 2, 3, 5, 10] {
+        let t = year as f64 * SECONDS_PER_YEAR;
+        let adf_alloc = aging.adf(temps.steady_k(CState::C0, true), 1.0);
+        let adf_sys = aging.adf(temps.steady_k(CState::C0, false), aging.unallocated_stress);
+        let allocated = aging.rel_reduction(aging.dvth_step(0.0, adf_alloc, t));
+        let active_idle = aging.rel_reduction(aging.dvth_step(0.0, adf_sys, t));
+        let half = aging.rel_reduction(aging.dvth_step(0.0, adf_alloc, t * 0.5));
+        let tiny = aging.rel_reduction(aging.dvth_step(0.0, adf_alloc, t * 0.06));
+        println!(
+            "{:>6} {:>14.2} {:>14.2} {:>14.2} {:>14.2}",
+            year, allocated * 100.0, active_idle * 100.0, half * 100.0, tiny * 100.0
+        );
+    }
+    println!("(30% at year 10 for the allocated column is the calibration datum)");
+
+    println!("\n== (b) age halting vs even-out over one simulated month ==");
+    let month = SECONDS_PER_YEAR / 12.0;
+    let mut always_on = Core::new(0, 2.6);
+    let mut halted = Core::new(1, 2.6);
+    let steps = 1000;
+    for i in 0..steps {
+        let t0 = i as f64 * month / steps as f64;
+        let t1 = (i + 1) as f64 * month / steps as f64;
+        always_on.advance(t1, &aging, &temps);
+        // `halted` spends 90% of each window in C6.
+        halted.set_state(CState::C0, t0, &aging, &temps);
+        halted.advance(t0 + 0.1 * (t1 - t0), &aging, &temps);
+        halted.set_state(CState::C6, t0 + 0.1 * (t1 - t0), &aging, &temps);
+        halted.advance(t1, &aging, &temps);
+    }
+    println!(
+        "always-active core: -{:.1} MHz | 90%-halted core: -{:.1} MHz  ({:.1}x less aging)",
+        always_on.freq_reduction_ghz(&aging) * 1e3,
+        halted.freq_reduction_ghz(&aging) * 1e3,
+        always_on.freq_reduction_ghz(&aging) / halted.freq_reduction_ghz(&aging)
+    );
+
+    println!("\n== (c) process-variation chip sample (40 cores) ==");
+    let sampler = ProcVarSampler::new(ProcVarParams::paper_default());
+    let f0 = sampler.sample_chip(&mut Rng::new(1234), 40);
+    let s = stats::Summary::of(&f0);
+    println!(
+        "f0: mean {:.3} GHz, min {:.3}, max {:.3}, CV {:.3}%",
+        s.mean,
+        s.min,
+        s.max,
+        stats::coeff_of_variation(&f0) * 100.0
+    );
+    for row in 0..5 {
+        let line: Vec<String> =
+            (0..8).map(|c| format!("{:.2}", f0[row * 8 + c])).collect();
+        println!("  {}", line.join(" "));
+    }
+
+    println!("\n== (d) PJRT aging_step cross-check ==");
+    match pjrt_check() {
+        Ok(err) => println!("rust vs Pallas-kernel artifact: max |Δf| = {err:.2e} GHz ✓"),
+        Err(e) => println!("skipped ({e:#}) — run `make artifacts`"),
+    }
+}
+
+fn pjrt_check() -> anyhow::Result<f64> {
+    use carbon_sim::runtime::{AgingStepPjrt, Runtime};
+    let dir = Runtime::default_artifacts_dir();
+    anyhow::ensure!(Runtime::artifacts_available(&dir), "artifacts missing");
+    let rt = Runtime::cpu(dir)?;
+    let step = AgingStepPjrt::load(&rt)?;
+    let aging = AgingParams::paper_default();
+    let n = step.machines * step.cores;
+    let mut rng = Rng::new(9);
+    let dvth: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 0.05) as f32).collect();
+    let adf: Vec<f32> = (0..n).map(|_| rng.range_f64(0.001, 0.01) as f32).collect();
+    let tau: Vec<f32> =
+        (0..n).map(|_| if rng.bool(0.3) { 0.0 } else { rng.range_f64(1.0, 1e5) as f32 }).collect();
+    let f0: Vec<f32> = (0..n).map(|_| rng.range_f64(2.4, 2.7) as f32).collect();
+    let (new_dvth, freqs) = step.step(&dvth, &adf, &tau, &f0)?;
+    let mut max_err = 0.0f64;
+    for i in 0..n {
+        let expect_dvth = if tau[i] > 0.0 {
+            aging.dvth_step(dvth[i] as f64, adf[i] as f64, tau[i] as f64)
+        } else {
+            dvth[i] as f64
+        };
+        let expect_f = aging.freq_ghz(f0[i] as f64, expect_dvth);
+        max_err = max_err.max((freqs[i] as f64 - expect_f).abs());
+        max_err = max_err.max((new_dvth[i] as f64 - expect_dvth).abs());
+    }
+    anyhow::ensure!(max_err < 1e-4, "mismatch {max_err}");
+    Ok(max_err)
+}

@@ -1,0 +1,62 @@
+//! Carbon report: the paper's full evaluation sweep (Figs. 6, 7, 8) as a
+//! single operator-facing report, plus JSON output for dashboards.
+//!
+//! Run: `cargo run --release --example carbon_report [-- <duration_s>]`
+
+use carbon_sim::carbon::EmbodiedModel;
+use carbon_sim::experiments::{fig6, fig7, fig8, run_matrix, Scale};
+use carbon_sim::util::json::Value;
+
+fn main() {
+    let duration: f64 =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60.0);
+    let mut scale = Scale::paper();
+    scale.duration_s = duration;
+    println!(
+        "sweep: rates {:?} rps × cores {:?} × 3 policies, {duration}s traces, 22 machines",
+        scale.rates, scale.core_counts
+    );
+    let t0 = std::time::Instant::now();
+    let cells = run_matrix(&scale);
+    println!("ran {} simulations in {:.1}s", cells.len() * 3, t0.elapsed().as_secs_f64());
+
+    let rows6 = fig6::rows(&cells, 2.6);
+    let rows7 = fig7::rows(&cells, &EmbodiedModel::paper_default());
+    let rows8 = fig8::rows(&cells);
+    fig6::print(&rows6);
+    fig7::print(&rows7);
+    fig8::print(&rows8);
+
+    // Machine-readable dump.
+    let json = Value::Arr(
+        rows7
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("cores", r.cores.into()),
+                    ("rate", r.rate.into()),
+                    ("policy", r.policy.as_str().into()),
+                    ("yearly_kg_p99", r.yearly_kg_p99.into()),
+                    ("reduction_pct_p99", r.reduction_pct_p99.into()),
+                    ("reduction_pct_p50", r.reduction_pct_p50.into()),
+                    ("lifetime_yr_p99", r.lifetime_yr_p99.into()),
+                ])
+            })
+            .collect(),
+    );
+    let path = std::env::temp_dir().join("carbon_report.json");
+    std::fs::write(&path, json.to_string_pretty()).expect("write report");
+    println!("\nmachine-readable report: {}", path.display());
+
+    for (name, violations) in [
+        ("fig6", fig6::check_shape(&rows6)),
+        ("fig7", fig7::check_shape(&rows7)),
+        ("fig8", fig8::check_shape(&rows8)),
+    ] {
+        if violations.is_empty() {
+            println!("{name} shape: OK");
+        } else {
+            println!("{name} shape violations: {violations:?}");
+        }
+    }
+}

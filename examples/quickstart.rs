@@ -1,0 +1,60 @@
+//! Quickstart: simulate a small LLM inference cluster under the paper's
+//! aging-aware core management and compare it with the linux baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use carbon_sim::carbon::EmbodiedModel;
+use carbon_sim::cluster::{Cluster, ClusterConfig};
+use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
+use carbon_sim::util::stats::{self, Summary};
+
+fn main() {
+    // 1. Synthesize an Azure-like trace: 60 requests/s for one minute.
+    let trace = AzureTraceGen::new(TraceParams {
+        rate_rps: 60.0,
+        duration_s: 60.0,
+        workload: Workload::Mixed,
+        seed: 7,
+    })
+    .generate();
+    println!("trace: {} requests over {:.0}s", trace.requests.len(), trace.duration_s);
+
+    // 2. Run the same silicon + trace under both policies (paired).
+    let base_cfg = ClusterConfig::default(); // 22 machines, 40-core CPUs
+    let f0 = base_cfg.sample_f0();
+    let mut results = Vec::new();
+    for policy in ["linux", "proposed"] {
+        let cfg = ClusterConfig {
+            policy: policy.into(),
+            f0_override: Some(f0.clone()),
+            ..base_cfg.clone()
+        };
+        let r = Cluster::new(cfg).run(&trace);
+        println!(
+            "\n[{policy}] completed {} requests, {} events in {:.2}s wall",
+            r.completed_requests, r.events_processed, r.wall_time_s
+        );
+        let e2e = r.e2e_summary();
+        println!("  E2E latency p50/p99      {:.2} / {:.2} s", e2e.p50, e2e.p99);
+        let fred = Summary::of(&r.mean_fred_per_machine());
+        println!("  mean freq degradation    {:.2} MHz (p50 across machines)", fred.p50 * 1e3);
+        let idle = Summary::of(&r.pooled_idle_samples());
+        println!("  normalized idle p1/p90   {:.3} / {:.3}", idle.p1, idle.p90);
+        results.push(r);
+    }
+
+    // 3. Embodied-carbon verdict (the paper's Fig. 7 arithmetic).
+    let model = EmbodiedModel::paper_default();
+    let linux_fred = results[0].mean_fred_per_machine();
+    let prop_fred = results[1].mean_fred_per_machine();
+    let base_p50 = stats::percentile(&linux_fred, 50.0);
+    let tech_p50 = stats::percentile(&prop_fred, 50.0);
+    println!(
+        "\nembodied carbon: {:.2} -> {:.2} kgCO2eq/server/yr  ({:.1}% reduction @p50, lifetime {:.1}y -> {:.1}y)",
+        model.yearly_kg(model.base_lifetime_yr),
+        model.yearly_kg_for(base_p50, tech_p50),
+        model.reduction_pct(base_p50, tech_p50),
+        model.base_lifetime_yr,
+        model.extended_lifetime_yr(base_p50, tech_p50),
+    );
+}

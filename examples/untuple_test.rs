@@ -1,0 +1,13 @@
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/aging_notuple.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let a = xla::Literal::vec1(&[0.01f32;6]).reshape(&[2,3])?;
+    let outs = exe.execute::<xla::Literal>(&[a.clone(), a.clone(), a.clone(), a])?;
+    println!("replicas={} outputs={}", outs.len(), outs[0].len());
+    for (i, b) in outs[0].iter().enumerate() {
+        let lit = b.to_literal_sync()?;
+        println!("out{i}: elems={}", lit.element_count());
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX graphs + AOT).
+
+Python runs ONCE at `make artifacts` and never on the request path: the
+Rust coordinator loads the lowered HLO-text artifacts through PJRT.
+"""

@@ -1,0 +1,158 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** + export weights.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  prefill.hlo.txt     (params..., tokens[B,S], lengths[B]) -> (logits, k, v)
+  decode.hlo.txt      (params..., k, v, tokens[B], lengths[B]) -> (logits, k', v')
+  aging_step.hlo.txt  (dvth[M,C], adf, tau, f0) -> (dvth', f)
+  weights.bin         all params, f32 little-endian, param_spec order
+  manifest.json       config + param table (name/shape/offset) + aging dims
+
+Usage: python -m compile.aot [--out-dir DIR] [--machines M] [--cores C]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    aging_step,
+    decode_chunk,
+    decode_step,
+    init_params,
+    param_spec,
+    prefill,
+)
+
+#: Decode steps fused into one dispatch (§Perf L2 optimization).
+DECODE_CHUNK = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: ModelConfig):
+    """Lower prefill + decode with concrete example shapes."""
+    n_params = len(param_spec(cfg))
+    p_spec = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in param_spec(cfg)
+    ]
+    tokens_pf = jax.ShapeDtypeStruct((cfg.batch, cfg.max_seq), jnp.int32)
+    tokens_dc = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    lengths = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.batch, cfg.max_seq, cfg.n_heads, cfg.head_dim), jnp.float32
+    )
+
+    def prefill_fn(*args):
+        params = list(args[:n_params])
+        tokens, lens = args[n_params], args[n_params + 1]
+        return prefill(cfg, params, tokens, lens)
+
+    def decode_fn(*args):
+        params = list(args[:n_params])
+        k, v, tokens, lens = args[n_params:]
+        return decode_step(cfg, params, k, v, tokens, lens)
+
+    def decode_chunk_fn(*args):
+        params = list(args[:n_params])
+        k, v, tokens, lens, rem = args[n_params:]
+        return decode_chunk(cfg, params, k, v, tokens, lens, rem, n_steps=DECODE_CHUNK)
+
+    pf = jax.jit(prefill_fn).lower(*p_spec, tokens_pf, lengths)
+    dc = jax.jit(decode_fn).lower(*p_spec, kv, kv, tokens_dc, lengths)
+    dck = jax.jit(decode_chunk_fn).lower(*p_spec, kv, kv, tokens_dc, lengths, lengths)
+    return to_hlo_text(pf), to_hlo_text(dc), to_hlo_text(dck)
+
+
+def lower_aging(machines: int, cores: int):
+    spec = jax.ShapeDtypeStruct((machines, cores), jnp.float32)
+    fn = functools.partial(aging_step)
+    lowered = jax.jit(fn).lower(spec, spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def export_weights(cfg: ModelConfig, out_dir: str, seed: int):
+    params = init_params(cfg, seed=seed)
+    table = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for (name, shape), arr in zip(param_spec(cfg), params):
+            data = np.asarray(arr, dtype="<f4")
+            assert data.shape == tuple(shape)
+            f.write(data.tobytes())
+            table.append({"name": name, "shape": list(shape), "offset": offset})
+            offset += data.size
+    return table, offset
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--machines", type=int, default=22, help="aging grid: cluster machines")
+    ap.add_argument("--cores", type=int, default=40, help="aging grid: cores per CPU")
+    ap.add_argument("--seed", type=int, default=0, help="weight init seed")
+    # Back-compat with the scaffold Makefile (`--out artifacts/model.hlo.txt`).
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = ModelConfig()
+    print(f"model: {cfg.n_params()/1e6:.2f}M params, lowering prefill+decode ...")
+    pf_text, dc_text, dck_text = lower_model(cfg)
+    with open(os.path.join(out_dir, "prefill.hlo.txt"), "w") as f:
+        f.write(pf_text)
+    with open(os.path.join(out_dir, "decode.hlo.txt"), "w") as f:
+        f.write(dc_text)
+    with open(os.path.join(out_dir, "decode_chunk.hlo.txt"), "w") as f:
+        f.write(dck_text)
+
+    print(f"aging grid: {args.machines} x {args.cores}, lowering aging_step ...")
+    ag_text = lower_aging(args.machines, args.cores)
+    with open(os.path.join(out_dir, "aging_step.hlo.txt"), "w") as f:
+        f.write(ag_text)
+
+    print("exporting weights ...")
+    table, total = export_weights(cfg, out_dir, args.seed)
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "decode_chunk": DECODE_CHUNK,
+        "params": table,
+        "total_floats": total,
+        "aging": {"machines": args.machines, "cores": args.cores,
+                  "n": 1.0 / 6.0, "vdd": 1.0, "vth": 0.3},
+        "artifacts": ["prefill.hlo.txt", "decode.hlo.txt", "decode_chunk.hlo.txt",
+                      "aging_step.hlo.txt", "weights.bin"],
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    sizes = {
+        name: os.path.getsize(os.path.join(out_dir, name)) for name in manifest["artifacts"]
+    }
+    print("artifacts written to", out_dir)
+    for name, size in sizes.items():
+        print(f"  {name:<22} {size/1e6:8.2f} MB")
+
+
+if __name__ == "__main__":
+    main()

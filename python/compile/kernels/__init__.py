@@ -1,0 +1,9 @@
+"""L1 Pallas kernels + pure-jnp oracles.
+
+`attention.decode_attention` — decode-step attention over a padded KV
+cache (used by the L2 transformer's decode graph).
+`aging_update.nbti_update` — cluster-wide batched NBTI aging update.
+`ref` — jnp oracles both are tested against.
+"""
+
+from . import aging_update, attention, ref  # noqa: F401

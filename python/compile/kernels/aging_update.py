@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: batched NBTI aging update for a whole cluster.
+
+The paper's periodic `adjust_sleeping_cores` pass is "an opportunity to
+accurately calculate degraded core frequency due to aging" (Section 5).
+This kernel performs that calculation for every core of every CPU in the
+cluster in one shot: the reaction-diffusion recursion
+
+    dvth' = ADF * ((dvth / ADF)^(1/n) + tau)^n     (tau > 0)
+    dvth' = dvth                                   (tau = 0, age-halted C6)
+    f     = f0 * (1 - dvth' / (Vdd - Vth))
+
+vectorized over a [n_cpus, n_cores] state grid. The grid dimension is the
+CPU (machine) index; each program instance updates one CPU's cores as a
+VMEM-resident row — the natural TPU mapping of the paper's per-core loop
+(VPU elementwise math, no MXU needed). interpret=True for CPU PJRT.
+
+The Rust coordinator loads the lowered HLO (artifacts/aging_step.hlo.txt)
+and can run its cluster-wide aging refresh through PJRT; the pure-Rust
+implementation in `cpu::aging` is cross-validated against this kernel by
+rust/tests/runtime_pjrt.rs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _aging_kernel(dvth_ref, adf_ref, tau_ref, f0_ref, dvth_out_ref, f_out_ref, *, n, vdd, vth):
+    dvth = dvth_ref[...]
+    adf = adf_ref[...]
+    tau = tau_ref[...]
+    f0 = f0_ref[...]
+    eq_time = jnp.where(dvth > 0.0, (dvth / adf) ** (1.0 / n), 0.0)
+    stepped = adf * (eq_time + tau) ** n
+    new_dvth = jnp.where(tau > 0.0, stepped, dvth)
+    dvth_out_ref[...] = new_dvth
+    f_out_ref[...] = f0 * (1.0 - new_dvth / (vdd - vth))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "vdd", "vth", "interpret"))
+def nbti_update(dvth, adf, tau, f0, n=1.0 / 6.0, vdd=1.0, vth=0.3, interpret=True):
+    """Batched NBTI update.
+
+    Args:
+      dvth: [M, C] f32 accumulated threshold shifts (V).
+      adf:  [M, C] f32 per-interval aging factors.
+      tau:  [M, C] f32 interval lengths (s); 0 marks age-halted (C6) cores.
+      f0:   [M, C] f32 initial (process-variation) frequencies (GHz).
+      n, vdd, vth: model constants (static).
+
+    Returns:
+      (new_dvth [M, C], freq [M, C]) both f32.
+    """
+    m, c = dvth.shape
+    kernel = functools.partial(_aging_kernel, n=n, vdd=vdd, vth=vth)
+    row = pl.BlockSpec((1, c), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[row, row, row, row],
+        out_specs=[row, row],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, c), jnp.float32),
+            jax.ShapeDtypeStruct((m, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dvth, adf, tau, f0)

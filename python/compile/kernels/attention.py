@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: single-step decode attention over a padded KV cache.
+
+TPU-oriented design (see DESIGN.md §Hardware-Adaptation): the grid is
+(batch,); each program instance streams one sequence's KV cache
+HBM->VMEM through its BlockSpec and reduces **all heads at once** in a
+single pass — the flash-attention decode pattern re-expressed as a
+BlockSpec schedule instead of CUDA threadblocks, with the head dimension
+vectorized onto the VPU/MXU lanes.
+
+§Perf note (EXPERIMENTS.md): the first version used a (batch, heads)
+grid, one head per program instance. Under interpret mode each instance
+pays interpreter overhead, which dominated the decode step (11 ms of a
+15 ms step at B=4, H=4). Folding heads into the instance (grid (B,),
+4x fewer instances, head-vectorized math) cut the kernel to ~1/4 of
+that with identical numerics — and is *also* the better real-TPU layout:
+[S, H·Dh] tiles feed the MXU contraction directly.
+
+VMEM footprint per program instance (budget, v5e ~16 MiB/core):
+  q block   H * D floats          =   1 KiB (H=4, D=64, f32)
+  k block   S * H * D floats      = 128 KiB (S=128)
+  v block   S * H * D floats      = 128 KiB
+well under budget; S can grow to ~8k before VMEM pressure.
+
+On the CPU backend we must lower with interpret=True (real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute); numerics
+are identical, which is what python/tests asserts against ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, *, seq_len):
+    """One batch-row program instance.
+
+    Block shapes:
+      lengths_ref: [1]          (per-sequence valid length)
+      q_ref:       [1, H, D]
+      k_ref:       [1, S, H, D]
+      v_ref:       [1, S, H, D]
+      o_ref:       [1, H, D]
+    """
+    q = q_ref[0].astype(jnp.float32)  # [H, D]
+    k = k_ref[0].astype(jnp.float32)  # [S, H, D]
+    v = v_ref[0].astype(jnp.float32)  # [S, H, D]
+    length = lengths_ref[0]
+
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    # scores[h, s] = q[h, :] . k[s, h, :]
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale
+    mask = (jnp.arange(seq_len) < length)[None, :]  # [1, S]
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * mask  # [H, S]
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hs,shd->hd", p, v) / denom  # [H, D]
+    o_ref[0] = out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, lengths, interpret=True):
+    """Pallas decode attention.
+
+    Args:
+      q:        [B, H, D] current-token queries.
+      k_cache:  [B, S, H, D] padded key cache.
+      v_cache:  [B, S, H, D] padded value cache.
+      lengths:  [B] int32 valid lengths (>= 1).
+      interpret: must stay True on CPU PJRT (Mosaic unavailable).
+
+    Returns:
+      [B, H, D] f32 attention outputs.
+    """
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    kernel = functools.partial(_decode_attn_kernel, seq_len=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),  # lengths[b]
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),  # q[b]
+            pl.BlockSpec((1, s, h, d), lambda i: (i, 0, 0, 0)),  # k[b]
+            pl.BlockSpec((1, s, h, d), lambda i: (i, 0, 0, 0)),  # v[b]
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

@@ -1,0 +1,66 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact counterpart here written
+with plain jax.numpy. pytest (python/tests/test_kernels.py) sweeps shapes
+and dtypes with hypothesis and asserts allclose between kernel and oracle —
+this is the core correctness signal of the L1 layer.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- attention
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-step decode attention over a padded KV cache.
+
+    Args:
+      q:        [B, H, D]   query for the current token.
+      k_cache:  [B, S, H, D] keys   (only positions < lengths[b] are valid).
+      v_cache:  [B, S, H, D] values.
+      lengths:  [B] int32    valid context length per sequence.
+
+    Returns:
+      [B, H, D] attention output, f32.
+    """
+    q = q.astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    d = q.shape[-1]
+    # scores[b, h, s] = q[b, h, :] . k[b, s, h, :]
+    scores = jnp.einsum("bhd,bshd->bhs", q, k) / jnp.sqrt(jnp.float32(d))
+    s = k.shape[1]
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", probs, v)
+
+
+# ---------------------------------------------------------------- NBTI aging
+
+
+def nbti_update_ref(dvth, adf, tau, n):
+    """Reaction-diffusion NBTI recursion, vectorized over cores.
+
+    dvth' = adf * ((dvth / adf)^(1/n) + tau)^n  where tau > 0,
+    dvth' = dvth                                 where tau == 0 (age-halted).
+
+    Args:
+      dvth: [...] accumulated threshold-voltage shift (V).
+      adf:  [...] aging-and-duty factor for the interval.
+      tau:  [...] interval length in seconds (0 for C6 / frozen cores).
+      n:    scalar time exponent (1/6).
+    """
+    dvth = dvth.astype(jnp.float32)
+    adf = adf.astype(jnp.float32)
+    tau = tau.astype(jnp.float32)
+    eq_time = jnp.where(dvth > 0.0, (dvth / adf) ** (1.0 / n), 0.0)
+    stepped = adf * (eq_time + tau) ** n
+    return jnp.where(tau > 0.0, stepped, dvth)
+
+
+def freq_from_dvth_ref(f0, dvth, vdd, vth):
+    """f(t) = f0 * (1 - dvth / (vdd - vth))   — Eq. (1) of the paper."""
+    return f0.astype(jnp.float32) * (1.0 - dvth.astype(jnp.float32) / (vdd - vth))

@@ -1,0 +1,264 @@
+"""L2: the JAX model graphs lowered to the AOT artifacts.
+
+Two families:
+
+1. A small GPT-style transformer served by the Rust stack — `prefill`
+   (causal full-sequence pass producing the KV cache) and `decode_step`
+   (single-token step whose attention is the L1 Pallas kernel, so the
+   kernel lowers into the same HLO artifact).
+2. `aging_step` — the cluster-wide batched NBTI update built on the
+   `aging_update` Pallas kernel.
+
+Weights are randomly initialized at AOT time with a fixed seed (no network
+access to fetch published checkpoints — see DESIGN.md substitutions) and
+exported to artifacts/weights.bin + manifest.json; the Rust runtime feeds
+them back as PJRT execution arguments, exactly as a real serving system
+feeds checkpoints.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention
+
+# ------------------------------------------------------------------ config
+
+
+class ModelConfig:
+    """Hyperparameters of the served transformer (GPT-style)."""
+
+    def __init__(
+        self,
+        vocab=256,
+        d_model=256,
+        n_heads=4,
+        n_layers=4,
+        d_ff=1024,
+        max_seq=128,
+        batch=4,
+    ):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.n_layers = n_layers
+        self.d_ff = d_ff
+        self.max_seq = max_seq
+        self.batch = batch
+        assert d_model % n_heads == 0
+        self.head_dim = d_model // n_heads
+
+    def to_dict(self):
+        return {
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_heads": self.n_heads,
+            "n_layers": self.n_layers,
+            "d_ff": self.d_ff,
+            "max_seq": self.max_seq,
+            "batch": self.batch,
+        }
+
+    def n_params(self):
+        d, v, f = self.d_model, self.vocab, self.d_ff
+        per_layer = 2 * d + 4 * d * d + 2 * d * f
+        return v * d + self.max_seq * d + self.n_layers * per_layer + d
+
+
+# ------------------------------------------------------------------ params
+
+
+def param_spec(cfg):
+    """Ordered (name, shape) list — the flattening contract with Rust."""
+    spec = [("embed", (cfg.vocab, cfg.d_model)), ("pos", (cfg.max_seq, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    spec.append(("lnf", (cfg.d_model,)))
+    return spec
+
+
+def init_params(cfg, seed=0):
+    """Random init (fixed seed): list of f32 arrays matching param_spec."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        if name.endswith(("ln1", "ln2", "lnf")):
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            arr = rng.normal(0.0, fan_in**-0.5, size=shape).astype(np.float32)
+        params.append(jnp.asarray(arr))
+    return params
+
+
+def _unpack(cfg, params):
+    """params list -> (embed, pos, layers[...], lnf)."""
+    it = iter(params)
+    embed, pos = next(it), next(it)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            dict(
+                ln1=next(it), wq=next(it), wk=next(it), wv=next(it), wo=next(it),
+                ln2=next(it), w1=next(it), w2=next(it),
+            )
+        )
+    lnf = next(it)
+    return embed, pos, layers, lnf
+
+
+def _rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _split_heads(x, cfg):
+    # [..., d_model] -> [..., H, Dh]
+    return x.reshape(x.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+
+
+# ------------------------------------------------------------------ prefill
+
+
+def prefill(cfg, params, tokens, lengths):
+    """Full-sequence causal pass.
+
+    Args:
+      tokens:  [B, S] int32 (padded with anything beyond lengths).
+      lengths: [B] int32 valid lengths (1..S).
+
+    Returns:
+      (logits [B, vocab] at each sequence's last valid position,
+       k_cache [L, B, S, H, Dh], v_cache [L, B, S, H, Dh])
+    """
+    embed, pos, layers, lnf = _unpack(cfg, params)
+    b, s = tokens.shape
+    x = embed[tokens] + pos[None, :s, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    pad = jnp.arange(s)[None, :] < lengths[:, None]  # [B, S] valid keys
+    mask = causal[None, None, :, :] & pad[:, None, None, :]
+    ks, vs = [], []
+    for layer in layers:
+        h = _rmsnorm(x, layer["ln1"])
+        q = _split_heads(h @ layer["wq"], cfg)  # [B,S,H,Dh]
+        k = _split_heads(h @ layer["wk"], cfg)
+        v = _split_heads(h @ layer["wv"], cfg)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        x = x + attn.reshape(b, s, cfg.d_model) @ layer["wo"]
+        h2 = _rmsnorm(x, layer["ln2"])
+        x = x + jax.nn.gelu(h2 @ layer["w1"]) @ layer["w2"]
+        ks.append(k)
+        vs.append(v)
+    x = _rmsnorm(x, lnf)
+    logits_all = x @ embed.T  # tied head: [B, S, V]
+    last = jnp.clip(lengths - 1, 0, s - 1)
+    logits = jnp.take_along_axis(logits_all, last[:, None, None], axis=1)[:, 0, :]
+    k_cache = jnp.stack(ks)  # [L, B, S, H, Dh]
+    v_cache = jnp.stack(vs)
+    return logits, k_cache, v_cache
+
+
+# ------------------------------------------------------------------ decode
+
+
+def decode_step(cfg, params, k_cache, v_cache, tokens, lengths):
+    """One decode step: append `tokens` at positions `lengths`, attend via
+    the Pallas decode kernel over lengths+1 context, return next logits.
+
+    Args:
+      k_cache, v_cache: [L, B, S, H, Dh].
+      tokens:  [B] int32 token to feed this step.
+      lengths: [B] int32 current context length (the new token's position).
+
+    Returns:
+      (logits [B, vocab], new k_cache, new v_cache)
+    """
+    embed, pos, layers, lnf = _unpack(cfg, params)
+    b = tokens.shape[0]
+    positions = jnp.clip(lengths, 0, cfg.max_seq - 1)
+    x = embed[tokens] + pos[positions]  # [B, d]
+    new_ks, new_vs = [], []
+    # Scatter via one-hot blend. (§Perf note: a per-sequence
+    # dynamic_update_slice row-write was tried and measured *slower* on
+    # the CPU backend — XLA materializes a full cache copy for the scatter
+    # and loses the fusion it finds for the blend; see EXPERIMENTS.md.)
+    onehot = jax.nn.one_hot(positions, cfg.max_seq, dtype=jnp.float32)  # [B, S]
+    for li, layer in enumerate(layers):
+        h = _rmsnorm(x, layer["ln1"])
+        q = _split_heads(h @ layer["wq"], cfg)  # [B,H,Dh]
+        k_new = _split_heads(h @ layer["wk"], cfg)  # [B,H,Dh]
+        v_new = _split_heads(h @ layer["wv"], cfg)
+        # Scatter the new K/V into position `lengths[b]` for each sequence.
+        k_l = k_cache[li] * (1.0 - onehot[:, :, None, None]) + onehot[:, :, None, None] * k_new[:, None, :, :]
+        v_l = v_cache[li] * (1.0 - onehot[:, :, None, None]) + onehot[:, :, None, None] * v_new[:, None, :, :]
+        # L1 Pallas kernel: attend over the (lengths+1)-long context.
+        attn = decode_attention(q, k_l, v_l, lengths + 1)  # [B,H,Dh]
+        x = x + attn.reshape(b, cfg.d_model) @ layer["wo"]
+        h2 = _rmsnorm(x, layer["ln2"])
+        x = x + jax.nn.gelu(h2 @ layer["w1"]) @ layer["w2"]
+        new_ks.append(k_l)
+        new_vs.append(v_l)
+    x = _rmsnorm(x, lnf)
+    logits = x @ embed.T
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+# ------------------------------------------------------------------ aging
+
+
+def aging_step(dvth, adf, tau, f0, n=1.0 / 6.0, vdd=1.0, vth=0.3):
+    """Cluster-wide NBTI update (L1 kernel): see kernels/aging_update.py."""
+    from .kernels.aging_update import nbti_update
+
+    return nbti_update(dvth, adf, tau, f0, n=n, vdd=vdd, vth=vth)
+
+
+# ------------------------------------------------------------ chunked decode
+
+
+def decode_chunk(cfg, params, k_cache, v_cache, tokens, lengths, remaining, n_steps=8):
+    """Run `n_steps` greedy decode steps inside one XLA computation.
+
+    §Perf optimization: the PJRT runtime pays a host<->device KV-cache
+    round trip per dispatch (this XLA build returns tuples as a single
+    host-materialized buffer), so the serving stack decodes in chunks —
+    one dispatch per `n_steps` tokens instead of per token.
+
+    Slots with `remaining <= 0` are frozen: their length stops advancing,
+    their cache position is rewritten harmlessly in place, and their
+    output positions are filled with -1 sentinels.
+
+    Returns:
+      (out_tokens [B, n_steps] int32 (-1 where inactive),
+       k_cache, v_cache, new_lengths, new_remaining)
+    """
+    def body(i, carry):
+        k, v, cur, lens, rem, out = carry
+        logits, k2, v2 = decode_step(cfg, params, k, v, cur, lens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        active = rem > 0
+        nxt = jnp.where(active, nxt, cur)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, jnp.where(active, nxt, -1)[:, None], i, axis=1
+        )
+        lens2 = jnp.where(active, jnp.minimum(lens + 1, cfg.max_seq - 1), lens)
+        rem2 = jnp.where(active, rem - 1, rem)
+        return (k2, v2, nxt, lens2, rem2, out)
+
+    out0 = jnp.full((cfg.batch, n_steps), -1, jnp.int32)
+    k, v, cur, lens, rem, out = jax.lax.fori_loop(
+        0, n_steps, body, (k_cache, v_cache, tokens, lengths, remaining, out0)
+    )
+    del cur
+    return out, k, v, lens, rem

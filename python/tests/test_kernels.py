@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+ref.py. This is the core correctness signal for the kernel layer.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.aging_update import nbti_update
+from compile.kernels.attention import decode_attention
+from compile.kernels.ref import decode_attention_ref, freq_from_dvth_ref, nbti_update_ref
+
+# ----------------------------------------------------------------- attention
+
+
+def _attn_case(b, s, h, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    return q, k, v, lengths
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    s=st.sampled_from([1, 2, 8, 17, 32]),
+    h=st.integers(1, 4),
+    d=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_decode_attention_matches_ref(b, s, h, d, seed):
+    q, k, v, lengths = _attn_case(b, s, h, d, jnp.float32, seed)
+    out = decode_attention(q, k, v, lengths)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_dtypes(dtype):
+    q, k, v, lengths = _attn_case(2, 16, 2, 8, dtype, 7)
+    out = decode_attention(q, k, v, lengths)
+    ref = decode_attention_ref(q, k, v, lengths)
+    assert out.dtype == jnp.float32  # accumulates in f32
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+def test_decode_attention_length_one_is_value():
+    # With a single valid position, attention must return v[:, 0].
+    q, k, v, _ = _attn_case(3, 8, 2, 4, jnp.float32, 1)
+    lengths = jnp.ones((3,), jnp.int32)
+    out = decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(out, np.swapaxes(np.asarray(v[:, 0]), 1, 1), rtol=1e-6)
+
+
+def test_decode_attention_ignores_padding():
+    # Garbage beyond `lengths` must not change the output.
+    q, k, v, lengths = _attn_case(2, 16, 2, 8, jnp.float32, 3)
+    out1 = decode_attention(q, k, v, lengths)
+    mask = (np.arange(16)[None, :, None, None] >= np.asarray(lengths)[:, None, None, None])
+    k2 = jnp.asarray(np.where(mask, 1e6, np.asarray(k)), jnp.float32)
+    v2 = jnp.asarray(np.where(mask, -1e6, np.asarray(v)), jnp.float32)
+    out2 = decode_attention(q, k2, v2, lengths)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_probs_convexity():
+    # Output is a convex combination of values: bounded by per-head extrema.
+    q, k, v, lengths = _attn_case(2, 12, 3, 8, jnp.float32, 11)
+    out = np.asarray(decode_attention(q, k, v, lengths))
+    v_np = np.asarray(v)
+    for b in range(2):
+        valid = v_np[b, : int(lengths[b])]  # [s, h, d]
+        assert (out[b] <= valid.max(axis=0) + 1e-5).all()
+        assert (out[b] >= valid.min(axis=0) - 1e-5).all()
+
+
+# ----------------------------------------------------------------- aging
+
+
+def _aging_case(m, c, seed, frac_halted=0.3):
+    rng = np.random.default_rng(seed)
+    dvth = jnp.asarray(rng.uniform(0.0, 0.1, (m, c)), jnp.float32)
+    adf = jnp.asarray(rng.uniform(1e-3, 1e-2, (m, c)), jnp.float32)
+    tau = rng.uniform(0.1, 1e5, (m, c)) * (rng.uniform(size=(m, c)) > frac_halted)
+    tau = jnp.asarray(tau, jnp.float32)
+    f0 = jnp.asarray(rng.uniform(2.3, 2.8, (m, c)), jnp.float32)
+    return dvth, adf, tau, f0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 30),
+    c=st.sampled_from([1, 8, 40, 80]),
+    seed=st.integers(0, 2**31),
+)
+def test_nbti_update_matches_ref(m, c, seed):
+    dvth, adf, tau, f0 = _aging_case(m, c, seed)
+    new_dvth, f = nbti_update(dvth, adf, tau, f0)
+    ref_dvth = nbti_update_ref(dvth, adf, tau, 1.0 / 6.0)
+    ref_f = freq_from_dvth_ref(f0, ref_dvth, 1.0, 0.3)
+    np.testing.assert_allclose(new_dvth, ref_dvth, rtol=1e-6)
+    np.testing.assert_allclose(f, ref_f, rtol=1e-6)
+
+
+def test_nbti_halted_cores_frozen():
+    dvth, adf, _, f0 = _aging_case(4, 16, 5)
+    tau = jnp.zeros((4, 16), jnp.float32)  # everything in C6
+    new_dvth, f = nbti_update(dvth, adf, tau, f0)
+    np.testing.assert_allclose(new_dvth, dvth, rtol=0, atol=0)
+    np.testing.assert_allclose(f, freq_from_dvth_ref(f0, dvth, 1.0, 0.3), rtol=1e-6)
+
+
+def test_nbti_monotone_in_tau():
+    dvth, adf, _, _ = _aging_case(2, 8, 9)
+    f0 = jnp.full((2, 8), 2.6, jnp.float32)
+    tau_small = jnp.full((2, 8), 10.0, jnp.float32)
+    tau_big = jnp.full((2, 8), 1e6, jnp.float32)
+    d_small, f_small = nbti_update(dvth, adf, tau_small, f0)
+    d_big, f_big = nbti_update(dvth, adf, tau_big, f0)
+    assert (np.asarray(d_big) > np.asarray(d_small)).all()
+    assert (np.asarray(f_big) < np.asarray(f_small)).all()
+
+
+def test_nbti_composition_matches_single_step():
+    # Two half-intervals == one full interval (the recursion's key law).
+    dvth, adf, _, f0 = _aging_case(3, 10, 13, frac_halted=0.0)
+    tau = jnp.full((3, 10), 5e4, jnp.float32)
+    half, _ = nbti_update(dvth, adf, tau / 2, f0)
+    twice, _ = nbti_update(half, adf, tau / 2, f0)
+    once, _ = nbti_update(dvth, adf, tau, f0)
+    np.testing.assert_allclose(twice, once, rtol=1e-4)

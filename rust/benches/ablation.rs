@@ -1,0 +1,78 @@
+//! Ablation bench: how much of the proposed technique's gain comes from
+//! each mechanism?
+//!
+//!   linux             — age-oblivious placement, no idling (baseline)
+//!   least-aged        — even-out only, via executed-work estimate
+//!   proposed-taskmap  — Algorithm 1 only (idle-score even-out, no C6)
+//!   proposed          — Algorithm 1 + Algorithm 2 (even-out + age halting)
+//!
+//! Expected: Alg. 1 alone ≈ least-aged (even-out without halting barely
+//! moves mean degradation); adding Selective Core Idling delivers the
+//! carbon headline — supporting the paper's Table 3 claim that *dynamic
+//! age-halting* is the distinguishing capability.
+//!
+//! Run: `cargo bench --bench ablation`
+
+use carbon_sim::carbon::EmbodiedModel;
+use carbon_sim::cluster::Cluster;
+use carbon_sim::experiments::Scale;
+use carbon_sim::util::stats::Summary;
+
+fn main() {
+    let mut scale = match std::env::var("CARBON_SIM_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::smoke(),
+        _ => Scale::paper(),
+    };
+    if let Ok(d) = std::env::var("CARBON_SIM_BENCH_DURATION") {
+        scale.duration_s = d.parse().expect("numeric duration");
+    }
+    let variants =
+        ["linux", "least-aged", "proposed-taskmap", "proposed", "proposed-telemetry"];
+    let cores = scale.core_counts[0];
+    let rate = scale.rates[scale.rates.len() / 2];
+    let trace = scale.trace(rate);
+    let f0 = scale.config(cores, "linux").sample_f0();
+    let model = EmbodiedModel::paper_default();
+
+    println!("ablation @ {rate} rps, {cores}-core VMs, {}s trace", scale.duration_s);
+    println!(
+        "{:<18} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "variant", "fred_p50_mhz", "cv_p50", "red%@p50", "idle_p90", "oversub_p1"
+    );
+    let mut linux_fred_p50 = 0.0;
+    let mut rows = Vec::new();
+    for pol in variants {
+        let mut cfg = scale.config(cores, pol);
+        cfg.f0_override = Some(f0.clone());
+        let r = Cluster::new(cfg).run(&trace);
+        let fred = Summary::of(&r.mean_fred_per_machine());
+        let cv = Summary::of(&r.freq_cv_per_machine());
+        let idle = Summary::of(&r.pooled_idle_samples());
+        if pol == "linux" {
+            linux_fred_p50 = fred.p50;
+        }
+        let red = model.reduction_pct(linux_fred_p50, fred.p50);
+        println!(
+            "{:<18} {:>12.4} {:>12.6} {:>12.2} {:>12.3} {:>12.3}",
+            pol,
+            fred.p50 * 1e3,
+            cv.p50,
+            red,
+            idle.p90,
+            idle.p1
+        );
+        rows.push((pol, fred.p50, cv.p50, red));
+    }
+    // Shape assertions.
+    let get = |p: &str| rows.iter().find(|r| r.0 == p).unwrap().clone();
+    let (_, fred_tm, cv_tm, red_tm) = get("proposed-taskmap");
+    let (_, fred_full, _, red_full) = get("proposed");
+    let (_, fred_linux, cv_linux, _) = get("linux");
+    assert!(
+        red_full > red_tm + 10.0,
+        "age halting must dominate the carbon gain ({red_full:.1}% vs {red_tm:.1}%)"
+    );
+    assert!(fred_full < fred_tm && fred_tm <= fred_linux * 1.02);
+    assert!(cv_tm <= cv_linux * 1.01, "Alg 1 must not worsen unevenness");
+    println!("\nablation shape: OK (Alg 2's dynamic age-halting carries the carbon reduction)");
+}

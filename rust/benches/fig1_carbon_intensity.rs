@@ -1,0 +1,22 @@
+//! Fig. 1 reproduction bench: A100x4 inference-server yearly carbon by
+//! grid energy source — the motivation that CPU embodied carbon dominates
+//! under renewables.
+//!
+//! Run: `cargo bench --bench fig1_carbon_intensity`
+
+use carbon_sim::carbon::ServerPowerModel;
+use carbon_sim::experiments::fig1;
+
+fn main() {
+    let rows = fig1::run(&ServerPowerModel::a100x4());
+    fig1::print(&rows);
+    let wind = rows.iter().find(|r| r.source == "wind").unwrap();
+    let coal = rows.iter().find(|r| r.source == "coal").unwrap();
+    println!(
+        "\nshape: cpu-embodied share {:.1}% under wind vs {:.1}% under coal",
+        wind.cpu_share * 100.0,
+        coal.cpu_share * 100.0
+    );
+    assert!(wind.cpu_share > 0.25 && coal.cpu_share < 0.05, "fig1 shape violated");
+    println!("fig1 shape: OK (embodied dominates under low-carbon energy)");
+}

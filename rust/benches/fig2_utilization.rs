@@ -1,0 +1,32 @@
+//! Fig. 2 reproduction bench: per-machine concurrent inference-task
+//! distributions (the motivating observation study — O1 low means,
+//! O2 occasional bursts).
+//!
+//! Run: `cargo bench --bench fig2_utilization`
+
+use carbon_sim::experiments::{fig2, Scale};
+
+fn main() {
+    let mut scale = match std::env::var("CARBON_SIM_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::smoke(),
+        _ => Scale::paper(),
+    };
+    if let Ok(d) = std::env::var("CARBON_SIM_BENCH_DURATION") {
+        scale.duration_s = d.parse().expect("numeric duration");
+    }
+    let cores = scale.core_counts[0];
+    let t0 = std::time::Instant::now();
+    let levels = fig2::run(&scale, cores);
+    fig2::print(&levels);
+    println!("\nfig2 wall: {:.1}s", t0.elapsed().as_secs_f64());
+    let violations = fig2::check_shape(&levels, cores);
+    if violations.is_empty() {
+        println!("fig2 shape: OK (O1 underutilized means, O2 bursts present)");
+    } else {
+        println!("fig2 shape VIOLATIONS:");
+        for v in &violations {
+            println!("  {v}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,19 @@
+//! Fig. 4 / Table 1 reproduction bench: core temperatures of a 12-core
+//! CPU when 6 cores toggle into C6 mid-experiment. Plateaus must match
+//! the Table 1 steady states (54 / 51.08 / 48 °C).
+//!
+//! Run: `cargo bench --bench fig4_temperature`
+
+use carbon_sim::experiments::fig4;
+
+fn main() {
+    let r = fig4::run(600.0, 120.0, 420.0, 1.0);
+    fig4::print(&r);
+    // Assert the plateaus.
+    let during = r.points.iter().find(|p| (p.t_s - 400.0).abs() < 0.5).unwrap();
+    let after = r.points.last().unwrap();
+    assert!((during.toggled_group_c - 48.0).abs() < 0.1, "C6 plateau");
+    assert!((during.active_group_c - 54.0).abs() < 0.1, "C0 allocated plateau");
+    assert!((after.toggled_group_c - 54.0).abs() < 0.25, "rewake plateau");
+    println!("\nfig4 shape: OK (plateaus at Table 1 values: 54 / 48 °C, smooth transients)");
+}

@@ -1,0 +1,39 @@
+//! Fig. 6 reproduction bench: CV-of-frequency and mean-degradation
+//! management performance across throughputs, policies, and VM core
+//! counts (paper §6.2, Fig. 6a/6b).
+//!
+//! Run: `cargo bench --bench fig6_aging`
+//! Scale via env: CARBON_SIM_BENCH_DURATION (s, default 120),
+//! CARBON_SIM_BENCH_SCALE=smoke for a quick pass.
+
+use carbon_sim::experiments::{fig6, run_matrix, Scale};
+
+fn main() {
+    let mut scale = match std::env::var("CARBON_SIM_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::smoke(),
+        _ => Scale::paper(),
+    };
+    if let Ok(d) = std::env::var("CARBON_SIM_BENCH_DURATION") {
+        scale.duration_s = d.parse().expect("numeric duration");
+    }
+    let t0 = std::time::Instant::now();
+    let cells = run_matrix(&scale);
+    let rows = fig6::rows(&cells, 2.6);
+    fig6::print(&rows);
+    let violations = fig6::check_shape(&rows);
+    let events: u64 = cells.iter().flat_map(|c| c.results.iter()).map(|r| r.events_processed).sum();
+    println!(
+        "\nfig6: {} runs, {events} events, {:.1}s wall",
+        cells.len() * 3,
+        t0.elapsed().as_secs_f64()
+    );
+    if violations.is_empty() {
+        println!("fig6 shape: OK (proposed > baselines on freq perf; least-aged >= linux on CV)");
+    } else {
+        println!("fig6 shape VIOLATIONS:");
+        for v in &violations {
+            println!("  {v}");
+        }
+        std::process::exit(1);
+    }
+}

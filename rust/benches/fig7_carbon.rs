@@ -1,0 +1,47 @@
+//! Fig. 7 reproduction bench: estimated yearly cluster CPU-embodied
+//! carbon per policy/throughput, via the lifetime-extension model
+//! (3-year refresh, 278.3 kgCO₂eq per server CPU complex).
+//!
+//! Paper headline: proposed cuts yearly emissions 37.67 % @p99 of mean
+//! frequency degradation (49.01 % @p50). Shape target: proposed shows a
+//! large reduction; least-aged ≈ linux.
+//!
+//! Run: `cargo bench --bench fig7_carbon`
+
+use carbon_sim::carbon::EmbodiedModel;
+use carbon_sim::experiments::{fig7, run_matrix, Scale};
+
+fn main() {
+    let mut scale = match std::env::var("CARBON_SIM_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::smoke(),
+        _ => Scale::paper(),
+    };
+    if let Ok(d) = std::env::var("CARBON_SIM_BENCH_DURATION") {
+        scale.duration_s = d.parse().expect("numeric duration");
+    }
+    let t0 = std::time::Instant::now();
+    let cells = run_matrix(&scale);
+    let rows = fig7::rows(&cells, &EmbodiedModel::paper_default());
+    fig7::print(&rows);
+    // Aggregate headline: mean reduction across the sweep for `proposed`.
+    let reds: Vec<f64> =
+        rows.iter().filter(|r| r.policy == "proposed").map(|r| r.reduction_pct_p99).collect();
+    let reds50: Vec<f64> =
+        rows.iter().filter(|r| r.policy == "proposed").map(|r| r.reduction_pct_p50).collect();
+    println!(
+        "\nheadline: proposed mean reduction {:.2}% @p99 (paper: 37.67%), {:.2}% @p50 (paper: 49.01%)",
+        carbon_sim::util::stats::mean(&reds),
+        carbon_sim::util::stats::mean(&reds50),
+    );
+    println!("fig7 wall: {:.1}s", t0.elapsed().as_secs_f64());
+    let violations = fig7::check_shape(&rows);
+    if violations.is_empty() {
+        println!("fig7 shape: OK (proposed large reduction; least-aged minimal)");
+    } else {
+        println!("fig7 shape VIOLATIONS:");
+        for v in &violations {
+            println!("  {v}");
+        }
+        std::process::exit(1);
+    }
+}

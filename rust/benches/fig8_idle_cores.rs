@@ -1,0 +1,49 @@
+//! Fig. 8 reproduction bench: normalized idle-core distributions per
+//! policy (positive = underutilization, negative = oversubscription).
+//!
+//! Shape targets: baselines pile up near +1.0; proposed sits near 0 with
+//! ≥77 % lower p90 underutilization and oversubscription bounded at −0.1.
+//!
+//! Run: `cargo bench --bench fig8_idle_cores`
+
+use carbon_sim::experiments::{fig8, run_matrix, Scale};
+
+fn main() {
+    let mut scale = match std::env::var("CARBON_SIM_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Scale::smoke(),
+        _ => Scale::paper(),
+    };
+    if let Ok(d) = std::env::var("CARBON_SIM_BENCH_DURATION") {
+        scale.duration_s = d.parse().expect("numeric duration");
+    }
+    let t0 = std::time::Instant::now();
+    let cells = run_matrix(&scale);
+    let rows = fig8::rows(&cells);
+    fig8::print(&rows);
+    // Underutilization-reduction headline (p90 vs linux, averaged).
+    let mut reductions = Vec::new();
+    for r in rows.iter().filter(|r| r.policy == "proposed") {
+        let linux = rows
+            .iter()
+            .find(|x| x.cores == r.cores && x.rate == r.rate && x.policy == "linux")
+            .unwrap();
+        if linux.idle.p90 > 0.0 {
+            reductions.push((1.0 - r.idle.p90 / linux.idle.p90) * 100.0);
+        }
+    }
+    println!(
+        "\nheadline: proposed reduces p90 underutilization by {:.1}% (paper: ≥77%)",
+        carbon_sim::util::stats::mean(&reductions)
+    );
+    println!("fig8 wall: {:.1}s", t0.elapsed().as_secs_f64());
+    let violations = fig8::check_shape(&rows);
+    if violations.is_empty() {
+        println!("fig8 shape: OK");
+    } else {
+        println!("fig8 shape VIOLATIONS:");
+        for v in &violations {
+            println!("  {v}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,120 @@
+//! §Perf micro/macro benchmarks of the simulator hot path.
+//!
+//! Targets (DESIGN.md §Perf): ≥1M simulated CPU-task events/s end-to-end
+//! single-thread; per-operation costs below that imply:
+//!   pick_core (Alg. 1)         < ~200 ns on a 40-core working set
+//!   dvth_step (NBTI recursion) < ~50 ns
+//!   adjust (Alg. 2)            < ~2 µs on 40 cores
+//!   event queue push+pop       < ~100 ns
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use carbon_sim::cluster::{Cluster, ClusterConfig};
+use carbon_sim::cpu::{AgingParams, CpuPackage, TemperatureModel};
+use carbon_sim::policy::{by_name, CoreManager};
+use carbon_sim::sim::EventQueue;
+use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
+use carbon_sim::util::bench::{bench, section};
+use carbon_sim::util::rng::Rng;
+
+fn pkg(n: usize) -> CpuPackage {
+    CpuPackage::uniform(n, AgingParams::paper_default(), TemperatureModel::paper_default())
+}
+
+fn main() {
+    section("L3 micro: NBTI recursion");
+    let aging = AgingParams::paper_default();
+    let adf = aging.adf(327.15, 1.0);
+    let mut dvth = 0.0f64;
+    bench("dvth_step", 0.5, || {
+        dvth = aging.dvth_step(std::hint::black_box(dvth.min(0.1)), adf, 0.001);
+    });
+
+    section("L3 micro: policy decisions (40-core CPU, half loaded)");
+    for pol in ["proposed", "linux", "least-aged"] {
+        let mut mgr = CoreManager::new(pkg(40), by_name(pol).unwrap(), Rng::new(1));
+        for t in 0..20u64 {
+            mgr.start_task(t, 0.0);
+        }
+        let mut next = 100u64;
+        let mut now = 1.0;
+        bench(&format!("start+finish task [{pol}]"), 0.5, || {
+            now += 0.001;
+            mgr.start_task(next, now);
+            mgr.finish_task(next, now + 0.0005);
+            next += 1;
+        });
+    }
+
+    section("L3 micro: Selective Core Idling (Alg. 2)");
+    let mut mgr = CoreManager::new(pkg(40), by_name("proposed").unwrap(), Rng::new(1));
+    for t in 0..10u64 {
+        mgr.start_task(t, 0.0);
+    }
+    let mut now = 1.0;
+    bench("adjust (40 cores)", 0.5, || {
+        now += 1.0;
+        mgr.adjust(now);
+    });
+    let mut mgr80 = CoreManager::new(pkg(80), by_name("proposed").unwrap(), Rng::new(1));
+    let mut now80 = 1.0;
+    bench("adjust (80 cores)", 0.5, || {
+        now80 += 1.0;
+        mgr80.adjust(now80);
+    });
+
+    section("L3 micro: event queue");
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut i = 0u64;
+    bench("push+pop", 0.5, || {
+        q.push_in(1.0 + (i % 7) as f64, i);
+        if q.len() > 64 {
+            q.pop();
+        }
+        i += 1;
+    });
+
+    section("L3 macro: end-to-end simulator throughput");
+    for pol in ["proposed", "linux"] {
+        let trace = AzureTraceGen::new(TraceParams {
+            rate_rps: 80.0,
+            duration_s: 30.0,
+            workload: Workload::Mixed,
+            seed: 5,
+        })
+        .generate();
+        let cfg = ClusterConfig { policy: pol.into(), ..ClusterConfig::default() };
+        let t0 = std::time::Instant::now();
+        let result = Cluster::new(cfg).run(&trace);
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "bench sim 22x40 @80rps x30s [{pol:<10}] {:>12.0} events/s  ({} events, {:.2}s wall)",
+            result.events_processed as f64 / wall,
+            result.events_processed,
+            wall
+        );
+    }
+
+    section("PJRT macro: aging_step artifact (if built)");
+    match pjrt_bench() {
+        Ok(()) => {}
+        Err(e) => println!("skipped: {e:#} (run `make artifacts`)"),
+    }
+}
+
+fn pjrt_bench() -> anyhow::Result<()> {
+    use carbon_sim::runtime::{AgingStepPjrt, Runtime};
+    let dir = Runtime::default_artifacts_dir();
+    anyhow::ensure!(Runtime::artifacts_available(&dir), "artifacts not found in {dir:?}");
+    let rt = Runtime::cpu(dir)?;
+    let step = AgingStepPjrt::load(&rt)?;
+    let n = step.machines * step.cores;
+    let dvth = vec![0.01f32; n];
+    let adf = vec![0.005f32; n];
+    let tau = vec![100f32; n];
+    let f0 = vec![2.6f32; n];
+    bench(&format!("aging_step PJRT ({}x{})", step.machines, step.cores), 1.0, || {
+        step.step(&dvth, &adf, &tau, &f0).expect("step");
+    });
+    Ok(())
+}

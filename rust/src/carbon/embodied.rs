@@ -1,0 +1,136 @@
+//! Embodied-carbon amortization — the Fig. 7 estimate.
+//!
+//! The paper takes a stock Linux inference server's hardware refresh
+//! cycle as **3 years** and its CPU-complex embodied carbon as
+//! **278.3 kgCO₂eq** over that lifespan (Li'24). Delaying aging effects
+//! lets the operator extend the refresh cycle; the paper maps aging
+//! performance to lifetime with a **linear model**: a technique whose
+//! mean frequency degradation (at a chosen cluster percentile) is k×
+//! smaller than the linux baseline's supports a k× longer refresh cycle.
+//! Yearly embodied emissions then shrink from `E/3` to `E/(3k)`.
+
+use crate::util::stats;
+
+/// Embodied model parameters (paper defaults from Li'24).
+#[derive(Clone, Copy, Debug)]
+pub struct EmbodiedModel {
+    /// CPU-complex embodied carbon per server (kgCO₂eq).
+    pub cpu_embodied_kg: f64,
+    /// Baseline hardware refresh cycle (years).
+    pub base_lifetime_yr: f64,
+}
+
+impl EmbodiedModel {
+    pub fn paper_default() -> EmbodiedModel {
+        EmbodiedModel { cpu_embodied_kg: 278.3, base_lifetime_yr: 3.0 }
+    }
+
+    /// Yearly embodied emissions for one server at a given lifetime.
+    #[inline]
+    pub fn yearly_kg(&self, lifetime_yr: f64) -> f64 {
+        assert!(lifetime_yr > 0.0);
+        self.cpu_embodied_kg / lifetime_yr
+    }
+
+    /// Lifetime extension factor implied by the linear model:
+    /// `k = fred_baseline / fred_technique` (≥ 1 when the technique ages
+    /// the CPU slower). Degradations must be positive.
+    #[inline]
+    pub fn extension_factor(&self, fred_baseline: f64, fred_technique: f64) -> f64 {
+        if fred_technique <= 0.0 {
+            // No measurable aging: cap at a generous bound instead of ∞.
+            return 10.0;
+        }
+        (fred_baseline / fred_technique).max(1e-3)
+    }
+
+    /// Extended lifetime (years) for a technique vs the baseline.
+    #[inline]
+    pub fn extended_lifetime_yr(&self, fred_baseline: f64, fred_technique: f64) -> f64 {
+        self.base_lifetime_yr * self.extension_factor(fred_baseline, fred_technique)
+    }
+
+    /// Yearly embodied emissions (kg/server/yr) for a technique whose
+    /// mean-frequency-degradation percentile is `fred_technique`, against
+    /// the linux baseline's `fred_baseline`.
+    pub fn yearly_kg_for(&self, fred_baseline: f64, fred_technique: f64) -> f64 {
+        self.yearly_kg(self.extended_lifetime_yr(fred_baseline, fred_technique))
+    }
+
+    /// Percent reduction in yearly embodied emissions vs the baseline.
+    pub fn reduction_pct(&self, fred_baseline: f64, fred_technique: f64) -> f64 {
+        let base = self.yearly_kg(self.base_lifetime_yr);
+        let tech = self.yearly_kg_for(fred_baseline, fred_technique);
+        (1.0 - tech / base) * 100.0
+    }
+}
+
+/// Fig. 7 helper: yearly cluster emissions from per-machine mean
+/// frequency degradations, estimated at percentile `pct`.
+pub fn cluster_yearly_kg(
+    model: &EmbodiedModel,
+    fred_baseline_per_machine: &[f64],
+    fred_technique_per_machine: &[f64],
+    pct: f64,
+    n_machines: usize,
+) -> f64 {
+    let base_p = stats::percentile(fred_baseline_per_machine, pct);
+    let tech_p = stats::percentile(fred_technique_per_machine, pct);
+    model.yearly_kg_for(base_p, tech_p) * n_machines as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_yearly_is_third_of_total() {
+        let m = EmbodiedModel::paper_default();
+        assert!((m.yearly_kg(3.0) - 278.3 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn halved_degradation_doubles_lifetime() {
+        let m = EmbodiedModel::paper_default();
+        assert!((m.extended_lifetime_yr(0.2, 0.1) - 6.0).abs() < 1e-12);
+        assert!((m.yearly_kg_for(0.2, 0.1) - 278.3 / 6.0).abs() < 1e-9);
+        assert!((m.reduction_pct(0.2, 0.1) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equal_degradation_no_reduction() {
+        let m = EmbodiedModel::paper_default();
+        assert!(m.reduction_pct(0.1, 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worse_technique_increases_emissions() {
+        let m = EmbodiedModel::paper_default();
+        assert!(m.reduction_pct(0.1, 0.2) < 0.0);
+    }
+
+    #[test]
+    fn zero_degradation_capped() {
+        let m = EmbodiedModel::paper_default();
+        assert!((m.extension_factor(0.1, 0.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_headline_numbers_are_reachable() {
+        // A 37.67% reduction corresponds to a 1/(1-0.3767) ≈ 1.604×
+        // degradation gap — verify the model arithmetic reproduces it.
+        let m = EmbodiedModel::paper_default();
+        let k = 1.0 / (1.0 - 0.3767);
+        let red = m.reduction_pct(k, 1.0);
+        assert!((red - 37.67).abs() < 0.01, "red={red}");
+    }
+
+    #[test]
+    fn cluster_scaling() {
+        let m = EmbodiedModel::paper_default();
+        let base = vec![0.2; 22];
+        let tech = vec![0.1; 22];
+        let total = cluster_yearly_kg(&m, &base, &tech, 99.0, 22);
+        assert!((total - 22.0 * 278.3 / 6.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,8 @@
+//! Carbon accounting: embodied amortization (Fig. 7) and the
+//! operational-vs-embodied breakdown of an inference server (Fig. 1).
+
+pub mod embodied;
+pub mod operational;
+
+pub use embodied::EmbodiedModel;
+pub use operational::{grid_intensities, ServerPowerModel};

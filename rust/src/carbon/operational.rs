@@ -1,0 +1,120 @@
+//! Operational-vs-embodied carbon of an inference server — the Fig. 1
+//! motivation: as grid carbon intensity falls (renewables), operational
+//! carbon diminishes and the **CPU-complex embodied** share dominates.
+//!
+//! Model follows Li'24's A100x4 inference-server breakdown: GPU dominates
+//! power (operational), while CPU die + mainboard dominate embodied.
+
+/// Power + embodied model of one GPU inference server.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerPowerModel {
+    pub n_gpus: usize,
+    /// Per-GPU average draw while serving (W).
+    pub gpu_avg_w: f64,
+    /// CPU + platform (board, NICs, fans) average draw (W).
+    pub platform_avg_w: f64,
+    /// Embodied carbon of the CPU complex: die + mainboard (kgCO₂eq).
+    pub cpu_embodied_kg: f64,
+    /// Embodied carbon of the GPUs (kgCO₂eq, total).
+    pub gpu_embodied_kg: f64,
+    /// Other embodied (DRAM, SSD, chassis) (kgCO₂eq).
+    pub other_embodied_kg: f64,
+    /// Amortization lifetime (years).
+    pub lifetime_yr: f64,
+}
+
+impl ServerPowerModel {
+    /// A100x4 server per Li'24 (Fig. 1's configuration).
+    pub fn a100x4() -> ServerPowerModel {
+        ServerPowerModel {
+            n_gpus: 4,
+            gpu_avg_w: 300.0,
+            platform_avg_w: 350.0,
+            cpu_embodied_kg: 278.3,
+            gpu_embodied_kg: 4.0 * 40.0,
+            other_embodied_kg: 80.0,
+            lifetime_yr: 3.0,
+        }
+    }
+
+    /// Average server power (kW) while running a per-second inference load.
+    pub fn avg_power_kw(&self) -> f64 {
+        (self.n_gpus as f64 * self.gpu_avg_w + self.platform_avg_w) / 1000.0
+    }
+
+    /// Yearly operational carbon (kgCO₂eq/yr) at a grid carbon intensity
+    /// `ci_g_per_kwh` (gCO₂eq per kWh).
+    pub fn yearly_operational_kg(&self, ci_g_per_kwh: f64) -> f64 {
+        self.avg_power_kw() * 24.0 * 365.0 * ci_g_per_kwh / 1000.0
+    }
+
+    /// Yearly embodied carbon split: (cpu, gpu, other) in kg/yr.
+    pub fn yearly_embodied_kg(&self) -> (f64, f64, f64) {
+        (
+            self.cpu_embodied_kg / self.lifetime_yr,
+            self.gpu_embodied_kg / self.lifetime_yr,
+            self.other_embodied_kg / self.lifetime_yr,
+        )
+    }
+
+    /// Fraction of total yearly carbon that is CPU-embodied, at `ci`.
+    pub fn cpu_embodied_share(&self, ci_g_per_kwh: f64) -> f64 {
+        let op = self.yearly_operational_kg(ci_g_per_kwh);
+        let (cpu, gpu, other) = self.yearly_embodied_kg();
+        cpu / (op + cpu + gpu + other)
+    }
+}
+
+/// Named grid carbon intensities (gCO₂eq/kWh, IPCC lifecycle medians) —
+/// the Fig. 1 x-axis.
+pub fn grid_intensities() -> Vec<(&'static str, f64)> {
+    vec![
+        ("wind", 11.0),
+        ("nuclear", 12.0),
+        ("hydro", 24.0),
+        ("solar", 41.0),
+        ("gas", 490.0),
+        ("coal", 820.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_math() {
+        let s = ServerPowerModel::a100x4();
+        assert!((s.avg_power_kw() - 1.55).abs() < 1e-12);
+    }
+
+    #[test]
+    fn operational_scales_with_intensity() {
+        let s = ServerPowerModel::a100x4();
+        let lo = s.yearly_operational_kg(11.0);
+        let hi = s.yearly_operational_kg(820.0);
+        assert!((hi / lo - 820.0 / 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig1_shape_cpu_embodied_dominates_under_renewables() {
+        // The paper's Fig. 1 claim: with low-carbon energy, CPU embodied
+        // becomes the dominant aspect; with coal it is negligible.
+        let s = ServerPowerModel::a100x4();
+        let share_wind = s.cpu_embodied_share(11.0);
+        let share_coal = s.cpu_embodied_share(820.0);
+        assert!(share_wind > 0.25, "wind share={share_wind}");
+        assert!(share_coal < 0.05, "coal share={share_coal}");
+        // And CPU embodied > GPU embodied (Li'24).
+        let (cpu, gpu, _) = s.yearly_embodied_kg();
+        assert!(cpu > gpu);
+    }
+
+    #[test]
+    fn intensities_sorted_ascending() {
+        let g = grid_intensities();
+        for w in g.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! One inference server: a GPU instance (prompt or token role under phase
+//! splitting) plus the multi-core CPU its inference tasks run on.
+
+use std::collections::VecDeque;
+
+use crate::cpu::CpuPackage;
+use crate::model::KvMemory;
+use crate::policy::{CoreManager, CorePolicy};
+use crate::util::rng::Rng;
+
+/// Phase-splitting role (Splitwise): prompt machines run prefills, token
+/// machines run continuous-batched decode iterations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Prompt,
+    Token,
+}
+
+/// A cluster machine.
+pub struct Machine {
+    pub id: usize,
+    pub role: Role,
+    /// The aging-aware (or baseline) CPU core manager.
+    pub mgr: CoreManager,
+    /// KV-cache memory pool (token machines).
+    pub kv: KvMemory,
+
+    // ---- prompt-instance state ----
+    /// FIFO of requests waiting for a prefill slot.
+    pub prompt_queue: VecDeque<usize>,
+    /// Request currently in prefill, if any.
+    pub prompt_busy: Option<usize>,
+
+    // ---- token-instance state ----
+    /// Requests in the continuous batch.
+    pub batch: Vec<usize>,
+    /// Requests whose KV arrived but which have not been admitted yet.
+    pub pending: VecDeque<usize>,
+    /// Whether an iteration is currently in flight.
+    pub iterating: bool,
+
+    // ---- interconnect state (ingress link serialization) ----
+    pub link_busy_until: f64,
+}
+
+impl Machine {
+    pub fn new(
+        id: usize,
+        role: Role,
+        cpu: CpuPackage,
+        policy: Box<dyn CorePolicy>,
+        kv_capacity_tokens: u64,
+        rng: Rng,
+    ) -> Machine {
+        Machine {
+            id,
+            role,
+            mgr: CoreManager::new(cpu, policy, rng),
+            kv: KvMemory::new(kv_capacity_tokens),
+            prompt_queue: VecDeque::new(),
+            prompt_busy: None,
+            batch: Vec::new(),
+            pending: VecDeque::new(),
+            iterating: false,
+            link_busy_until: 0.0,
+        }
+    }
+
+    /// Load proxy used by the cluster scheduler: queued + running work.
+    pub fn sched_load(&self) -> usize {
+        match self.role {
+            Role::Prompt => self.prompt_queue.len() + usize::from(self.prompt_busy.is_some()),
+            Role::Token => self.batch.len() + self.pending.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::{AgingParams, TemperatureModel};
+    use crate::policy;
+
+    fn machine(role: Role) -> Machine {
+        let cpu = CpuPackage::uniform(
+            4,
+            AgingParams::paper_default(),
+            TemperatureModel::paper_default(),
+        );
+        Machine::new(0, role, cpu, policy::by_name("proposed").unwrap(), 1000, Rng::new(1))
+    }
+
+    #[test]
+    fn sched_load_prompt() {
+        let mut m = machine(Role::Prompt);
+        assert_eq!(m.sched_load(), 0);
+        m.prompt_queue.push_back(1);
+        m.prompt_busy = Some(0);
+        assert_eq!(m.sched_load(), 2);
+    }
+
+    #[test]
+    fn sched_load_token() {
+        let mut m = machine(Role::Token);
+        m.batch.push(0);
+        m.batch.push(1);
+        m.pending.push_back(2);
+        assert_eq!(m.sched_load(), 3);
+    }
+}

@@ -1,0 +1,547 @@
+//! The LLM inference cluster simulator — our from-scratch splitwise-sim.
+//!
+//! Models the paper's experimental cluster (§6.1): 22 H100 machines under
+//! Splitwise phase splitting (5 prompt + 17 token instances), a
+//! JSQ cluster-level scheduler, ORCA-style continuous batching on token
+//! machines, KV-cache flows over the interconnect, and — the point of the
+//! exercise — the CPU inference tasks of Table 2, each pinned to a core by
+//! the configured management policy while the NBTI model ages every C0
+//! core.
+//!
+//! Event flow per request:
+//!
+//! ```text
+//! Arrive ──(submit/submit_chain/submit_task CPU tasks)──▶ prompt queue
+//!   └─▶ prefill (alloc_memory) ──▶ PromptDone (finish_task, submit_flow)
+//!         └─▶ KV flow over link ──▶ FlowDone (flow_completion + finish_flow
+//!               + alloc_memory on token machine; free_memory on prompt)
+//!               └─▶ continuous batch ──▶ IterDone* (start_iteration each)
+//!                     └─▶ completion (finish_task, finish_request, free_memory)
+//! ```
+
+pub mod machine;
+pub mod tasks;
+
+pub use machine::{Machine, Role};
+pub use tasks::{TaskKind, ALL_TASK_KINDS};
+
+use crate::cpu::{AgingParams, CpuPackage, ProcVarParams, ProcVarSampler, TemperatureModel};
+use crate::metrics::{Collector, SimResult};
+use crate::model::PerfModel;
+use crate::policy;
+use crate::sim::EventQueue;
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+
+/// Cluster configuration (the paper's §6.1 setup by default).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Prompt (prefill) machines. Paper: 5.
+    pub n_prompt: usize,
+    /// Token (decode) machines. Paper: 17.
+    pub n_token: usize,
+    /// CPU cores per machine. Paper evaluates 40 and 80.
+    pub cores_per_cpu: usize,
+    /// Core-management policy: "proposed" | "linux" | "least-aged".
+    pub policy: String,
+    /// Metrics sampling period (s).
+    pub sample_period_s: f64,
+    /// Continuous-batching cap per token machine.
+    pub max_batch: usize,
+    /// KV capacity per token machine, in tokens.
+    pub kv_capacity_tokens: u64,
+    /// RNG seed (shared by process variation and task-duration sampling).
+    pub seed: u64,
+    /// Optional pre-sampled per-machine initial core frequencies. Used to
+    /// run *paired* policy comparisons on identical silicon.
+    pub f0_override: Option<Vec<Vec<f64>>>,
+    pub aging: AgingParams,
+    pub temps: TemperatureModel,
+    pub procvar: ProcVarParams,
+    pub perf: PerfModel,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_prompt: 5,
+            n_token: 17,
+            cores_per_cpu: 40,
+            policy: "proposed".into(),
+            sample_period_s: 0.1,
+            max_batch: 64,
+            kv_capacity_tokens: 400_000,
+            seed: 42,
+            f0_override: None,
+            aging: AgingParams::paper_default(),
+            temps: TemperatureModel::paper_default(),
+            procvar: ProcVarParams::paper_default(),
+            perf: PerfModel::h100_70b(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn n_machines(&self) -> usize {
+        self.n_prompt + self.n_token
+    }
+
+    /// Sample the per-machine initial core frequencies this config implies
+    /// (or return the override). Use this to build the shared silicon for
+    /// paired experiments.
+    pub fn sample_f0(&self) -> Vec<Vec<f64>> {
+        if let Some(f0) = &self.f0_override {
+            assert_eq!(f0.len(), self.n_machines(), "f0 override machine count");
+            return f0.clone();
+        }
+        let sampler = ProcVarSampler::new(self.procvar);
+        let mut rng = Rng::new(self.seed ^ 0x5EED_F0F0);
+        (0..self.n_machines()).map(|_| sampler.sample_chip(&mut rng, self.cores_per_cpu)).collect()
+    }
+}
+
+/// Per-request simulation state.
+#[derive(Clone, Debug)]
+struct ReqState {
+    arrival_s: f64,
+    prompt_tokens: u32,
+    output_tokens: u32,
+    prompt_machine: usize,
+    token_machine: usize,
+    /// Output tokens still to generate.
+    remaining: u32,
+    /// Context tokens currently held (prompt + generated so far).
+    ctx_tokens: u64,
+    ttft_s: Option<f64>,
+    done_s: Option<f64>,
+}
+
+/// Simulator events.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// Request `idx` arrives at the cluster scheduler.
+    Arrive(usize),
+    /// The prefill running on prompt machine `m` finished.
+    PromptDone(usize),
+    /// Request `idx`'s KV flow reached its token machine.
+    FlowDone(usize),
+    /// A decode iteration on token machine `m` finished.
+    IterDone(usize),
+    /// CPU inference task finished on machine `m`.
+    TaskDone { m: usize, task: u64 },
+    /// Selective Core Idling tick on machine `m`.
+    Adjust(usize),
+    /// Metrics sampling tick (all machines).
+    Sample,
+}
+
+/// The cluster simulator.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub machines: Vec<Machine>,
+    reqs: Vec<ReqState>,
+    q: EventQueue<Ev>,
+    rng: Rng,
+    next_task: u64,
+    completed: usize,
+    arrivals_pending: usize,
+    pub collector: Collector,
+    /// Per-machine per-kind spawn counts (diagnostics / Table 2 evidence).
+    pub task_spawns: Vec<u64>,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Cluster {
+        let f0 = cfg.sample_f0();
+        let mut rng = Rng::new(cfg.seed);
+        let machines: Vec<Machine> = (0..cfg.n_machines())
+            .map(|id| {
+                let role = if id < cfg.n_prompt { Role::Prompt } else { Role::Token };
+                let cpu = CpuPackage::new(f0[id].clone(), cfg.aging, cfg.temps);
+                let pol = policy::by_name(&cfg.policy).expect("valid policy name");
+                Machine::new(id, role, cpu, pol, cfg.kv_capacity_tokens, rng.fork(id as u64))
+            })
+            .collect();
+        let n = cfg.n_machines();
+        Cluster {
+            cfg,
+            machines,
+            reqs: Vec::new(),
+            q: EventQueue::new(),
+            rng,
+            next_task: 0,
+            completed: 0,
+            arrivals_pending: 0,
+            collector: Collector::new(n),
+            task_spawns: vec![0; ALL_TASK_KINDS.len()],
+        }
+    }
+
+    /// Run the trace to completion and report results.
+    pub fn run(&mut self, trace: &Trace) -> SimResult {
+        let wall_start = std::time::Instant::now();
+        // Seed request states + arrival events.
+        self.reqs = trace
+            .requests
+            .iter()
+            .map(|r| ReqState {
+                arrival_s: r.arrival_s,
+                prompt_tokens: r.prompt_tokens,
+                output_tokens: r.output_tokens,
+                prompt_machine: usize::MAX,
+                token_machine: usize::MAX,
+                remaining: r.output_tokens,
+                ctx_tokens: 0,
+                ttft_s: None,
+                done_s: None,
+            })
+            .collect();
+        self.arrivals_pending = self.reqs.len();
+        for (idx, r) in trace.requests.iter().enumerate() {
+            self.q.push(r.arrival_s, Ev::Arrive(idx));
+        }
+        // Periodic hooks.
+        let adjust_period =
+            policy::by_name(&self.cfg.policy).expect("valid policy").adjust_period_s();
+        if let Some(p) = adjust_period {
+            for m in 0..self.machines.len() {
+                self.q.push(p, Ev::Adjust(m));
+            }
+        }
+        self.q.push(self.cfg.sample_period_s, Ev::Sample);
+
+        // Main loop: drain until every request completed.
+        while let Some((now, ev)) = self.q.pop() {
+            self.handle(now, ev, adjust_period);
+            if self.completed == self.reqs.len() && self.arrivals_pending == 0 {
+                break;
+            }
+        }
+        let end = self.q.now();
+
+        // Final aging snapshot.
+        let f0: Vec<Vec<f64>> =
+            self.machines.iter().map(|m| m.mgr.cpu.cores.iter().map(|c| c.f0_ghz).collect()).collect();
+        let freq: Vec<Vec<f64>> =
+            self.machines.iter_mut().map(|m| m.mgr.cpu.frequencies(end)).collect();
+
+        SimResult {
+            policy: self.cfg.policy.clone(),
+            rate_rps: trace.rate_rps(),
+            cores_per_cpu: self.cfg.cores_per_cpu,
+            duration_s: end,
+            completed_requests: self.completed,
+            events_processed: self.q.processed(),
+            wall_time_s: wall_start.elapsed().as_secs_f64(),
+            f0,
+            freq,
+            collector: std::mem::replace(&mut self.collector, Collector::new(0)),
+        }
+    }
+
+    // ------------------------------------------------------------ events
+
+    fn handle(&mut self, now: f64, ev: Ev, adjust_period: Option<f64>) {
+        match ev {
+            Ev::Arrive(idx) => self.on_arrive(now, idx),
+            Ev::PromptDone(m) => self.on_prompt_done(now, m),
+            Ev::FlowDone(idx) => self.on_flow_done(now, idx),
+            Ev::IterDone(m) => self.on_iter_done(now, m),
+            Ev::TaskDone { m, task } => self.machines[m].mgr.finish_task(task, now),
+            Ev::Adjust(m) => {
+                self.machines[m].mgr.adjust(now);
+                if let Some(p) = adjust_period {
+                    if !self.finished() {
+                        self.q.push(now + p, Ev::Adjust(m));
+                    }
+                }
+            }
+            Ev::Sample => {
+                self.on_sample(now);
+                if !self.finished() {
+                    self.q.push(now + self.cfg.sample_period_s, Ev::Sample);
+                }
+            }
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.arrivals_pending == 0 && self.completed == self.reqs.len()
+    }
+
+    fn on_arrive(&mut self, now: f64, idx: usize) {
+        self.arrivals_pending -= 1;
+        // Cluster-level scheduler: JSQ over prompt machines, then the
+        // least-loaded token machine (Splitwise's pairing step).
+        let pm = self.least_loaded(Role::Prompt);
+        let tm = self.least_loaded(Role::Token);
+        self.reqs[idx].prompt_machine = pm;
+        self.reqs[idx].token_machine = tm;
+        // Scheduler bookkeeping burns CPU on the chosen prompt machine.
+        self.spawn_task(now, pm, TaskKind::Submit);
+        self.spawn_task(now, pm, TaskKind::SubmitChain);
+        self.spawn_task(now, pm, TaskKind::SubmitTask);
+        self.machines[pm].prompt_queue.push_back(idx);
+        self.try_start_prompt(now, pm);
+    }
+
+    fn least_loaded(&self, role: Role) -> usize {
+        self.machines
+            .iter()
+            .filter(|m| m.role == role)
+            .min_by_key(|m| m.sched_load())
+            .expect("at least one machine per role")
+            .id
+    }
+
+    fn try_start_prompt(&mut self, now: f64, m: usize) {
+        if self.machines[m].prompt_busy.is_some() {
+            return;
+        }
+        let Some(idx) = self.machines[m].prompt_queue.pop_front() else {
+            return;
+        };
+        self.machines[m].prompt_busy = Some(idx);
+        self.spawn_task(now, m, TaskKind::AllocMemory);
+        let dur = self.cfg.perf.prompt_time_s(self.reqs[idx].prompt_tokens);
+        self.q.push(now + dur, Ev::PromptDone(m));
+    }
+
+    fn on_prompt_done(&mut self, now: f64, m: usize) {
+        let idx = self.machines[m].prompt_busy.take().expect("prompt machine was busy");
+        self.reqs[idx].ttft_s = Some(now - self.reqs[idx].arrival_s);
+        self.spawn_task(now, m, TaskKind::FinishTask);
+        self.spawn_task(now, m, TaskKind::SubmitFlow);
+        // KV flow to the token machine: serialize on its ingress link.
+        let tm = self.reqs[idx].token_machine;
+        let xfer = self.cfg.perf.kv_transfer_s(self.reqs[idx].prompt_tokens);
+        let start = self.machines[tm].link_busy_until.max(now);
+        let done = start + xfer;
+        self.machines[tm].link_busy_until = done;
+        self.q.push(done, Ev::FlowDone(idx));
+        // Prompt-side KV is freed once the flow leaves.
+        self.spawn_task(now, m, TaskKind::FreeMemory);
+        // Pull the next queued prefill.
+        self.try_start_prompt(now, m);
+    }
+
+    fn on_flow_done(&mut self, now: f64, idx: usize) {
+        let tm = self.reqs[idx].token_machine;
+        self.spawn_task(now, tm, TaskKind::FlowCompletion);
+        self.spawn_task(now, tm, TaskKind::FinishFlow);
+        self.spawn_task(now, tm, TaskKind::AllocMemory);
+        self.reqs[idx].ctx_tokens = self.reqs[idx].prompt_tokens as u64;
+        self.machines[tm].pending.push_back(idx);
+        if !self.machines[tm].iterating {
+            self.start_iteration(now, tm);
+        }
+    }
+
+    /// Admit pending requests (KV permitting) and run one decode iteration.
+    fn start_iteration(&mut self, now: f64, m: usize) {
+        // Admission: batch cap + KV capacity.
+        while self.machines[m].batch.len() < self.cfg.max_batch {
+            let Some(&idx) = self.machines[m].pending.front() else {
+                break;
+            };
+            let need = self.reqs[idx].ctx_tokens + self.reqs[idx].output_tokens as u64;
+            if !self.machines[m].kv.fits(need) {
+                break;
+            }
+            self.machines[m].kv.alloc(need);
+            self.machines[m].pending.pop_front();
+            self.machines[m].batch.push(idx);
+        }
+        if self.machines[m].batch.is_empty() {
+            self.machines[m].iterating = false;
+            return;
+        }
+        self.machines[m].iterating = true;
+        self.spawn_task(now, m, TaskKind::StartIteration);
+        let batch = self.machines[m].batch.len();
+        let ctx: u64 = self.machines[m].batch.iter().map(|&i| self.reqs[i].ctx_tokens).sum();
+        let dur = self.cfg.perf.iter_time_s(batch, ctx);
+        self.q.push(now + dur, Ev::IterDone(m));
+    }
+
+    fn on_iter_done(&mut self, now: f64, m: usize) {
+        // Each batched request produced one token.
+        let batch = std::mem::take(&mut self.machines[m].batch);
+        for idx in batch {
+            self.reqs[idx].remaining -= 1;
+            self.reqs[idx].ctx_tokens += 1;
+            if self.reqs[idx].remaining == 0 {
+                // Request complete.
+                self.reqs[idx].done_s = Some(now);
+                let r = &self.reqs[idx];
+                self.collector.record_request(
+                    r.ttft_s.unwrap_or(0.0),
+                    now - r.arrival_s,
+                );
+                let reserve = r.prompt_tokens as u64 + r.output_tokens as u64;
+                self.machines[m].kv.free(reserve);
+                self.completed += 1;
+                self.spawn_task(now, m, TaskKind::FinishTask);
+                self.spawn_task(now, m, TaskKind::FinishRequest);
+                self.spawn_task(now, m, TaskKind::FreeMemory);
+            } else {
+                self.machines[m].batch.push(idx);
+            }
+        }
+        self.start_iteration(now, m);
+    }
+
+    fn on_sample(&mut self, now: f64) {
+        let dt = self.cfg.sample_period_s;
+        for m in 0..self.machines.len() {
+            let cpu = &self.machines[m].mgr.cpu;
+            let running = cpu.running_tasks();
+            let active = cpu.active_count();
+            self.collector.sample_machine(m, running, cpu.normalized_idle());
+            self.collector.integrate(m, dt, running, active);
+        }
+        self.collector.last_integral_t = now;
+    }
+
+    // ------------------------------------------------------------ tasks
+
+    /// Spawn one CPU inference task of `kind` on machine `m`: route it
+    /// through the core manager (Algorithm 1 for the proposed policy) and
+    /// schedule its completion, stretched by the core's aging slowdown or
+    /// the time-sharing penalty when oversubscribed.
+    fn spawn_task(&mut self, now: f64, m: usize, kind: TaskKind) {
+        let task = self.next_task;
+        self.next_task += 1;
+        self.task_spawns[ALL_TASK_KINDS.iter().position(|&k| k == kind).unwrap()] += 1;
+        let base = kind.sample_duration_s(&mut self.rng);
+        let mach = &mut self.machines[m];
+        // Event-driven Fig. 8 sample: idle-core availability at the moment
+        // this task asks for a core (before any emergency wake).
+        self.collector.sample_idle_event(m, mach.mgr.cpu.normalized_idle_for_extra_task());
+        let dur = match mach.mgr.start_task(task, now) {
+            Some(core) => base * mach.mgr.cpu.slowdown(core),
+            None => {
+                // Time-shared execution across the working set.
+                let cpu = &mach.mgr.cpu;
+                let factor =
+                    (cpu.running_tasks() as f64 / cpu.active_count().max(1) as f64).max(1.0);
+                base * factor
+            }
+        };
+        self.q.push(now + dur, Ev::TaskDone { m, task });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::azure::{AzureTraceGen, TraceParams, Workload};
+
+    fn small_cfg(policy: &str) -> ClusterConfig {
+        ClusterConfig {
+            n_prompt: 2,
+            n_token: 3,
+            cores_per_cpu: 16,
+            policy: policy.into(),
+            seed: 7,
+            ..ClusterConfig::default()
+        }
+    }
+
+    fn small_trace(rate: f64, dur: f64) -> Trace {
+        AzureTraceGen::new(TraceParams {
+            rate_rps: rate,
+            duration_s: dur,
+            workload: Workload::Mixed,
+            seed: 3,
+        })
+        .generate()
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        for pol in crate::policy::ALL_POLICIES {
+            let mut c = Cluster::new(small_cfg(pol));
+            let t = small_trace(5.0, 20.0);
+            let r = c.run(&t);
+            assert_eq!(r.completed_requests, t.requests.len(), "policy {pol}");
+            assert!(r.duration_s >= t.requests.last().unwrap().arrival_s);
+            assert!(r.events_processed > 100);
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let run = || {
+            let mut c = Cluster::new(small_cfg("proposed"));
+            c.run(&small_trace(5.0, 15.0))
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.duration_s, b.duration_s);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.freq, b.freq);
+    }
+
+    #[test]
+    fn latencies_recorded_and_positive() {
+        let mut c = Cluster::new(small_cfg("proposed"));
+        let t = small_trace(5.0, 20.0);
+        let r = c.run(&t);
+        assert_eq!(r.collector.e2e.len(), t.requests.len());
+        for (&ttft, &e2e) in r.collector.ttft.iter().zip(r.collector.e2e.iter()) {
+            assert!(ttft > 0.0);
+            assert!(e2e >= ttft);
+        }
+    }
+
+    #[test]
+    fn proposed_idles_cores_baselines_do_not() {
+        let t = small_trace(3.0, 20.0);
+        let r_prop = Cluster::new(small_cfg("proposed")).run(&t);
+        let r_linux = Cluster::new(small_cfg("linux")).run(&t);
+        // Baselines: normalized idle ~ 1 (all cores active, few tasks).
+        let linux_idle = crate::util::stats::mean(&r_linux.pooled_idle_samples());
+        let prop_idle = crate::util::stats::mean(&r_prop.pooled_idle_samples());
+        assert!(linux_idle > 0.7, "linux idle={linux_idle}");
+        assert!(prop_idle < linux_idle * 0.5, "proposed idle={prop_idle} linux={linux_idle}");
+    }
+
+    #[test]
+    fn proposed_ages_less() {
+        let t = small_trace(5.0, 30.0);
+        let mut cfg_a = small_cfg("proposed");
+        let mut cfg_b = small_cfg("linux");
+        // Paired silicon.
+        let f0 = cfg_a.sample_f0();
+        cfg_a.f0_override = Some(f0.clone());
+        cfg_b.f0_override = Some(f0);
+        let r_prop = Cluster::new(cfg_a).run(&t);
+        let r_linux = Cluster::new(cfg_b).run(&t);
+        let fred_prop = crate::util::stats::mean(&r_prop.mean_fred_per_machine());
+        let fred_linux = crate::util::stats::mean(&r_linux.mean_fred_per_machine());
+        assert!(
+            fred_prop < fred_linux * 0.9,
+            "proposed fred={fred_prop} linux fred={fred_linux}"
+        );
+    }
+
+    #[test]
+    fn kv_never_leaks() {
+        let mut c = Cluster::new(small_cfg("proposed"));
+        let t = small_trace(8.0, 15.0);
+        c.run(&t);
+        for m in &c.machines {
+            assert_eq!(m.kv.used_tokens, 0, "machine {} leaked KV", m.id);
+            assert!(m.batch.is_empty() && m.pending.is_empty());
+        }
+    }
+
+    #[test]
+    fn all_task_kinds_spawned() {
+        let mut c = Cluster::new(small_cfg("proposed"));
+        c.run(&small_trace(10.0, 20.0));
+        for (i, &count) in c.task_spawns.iter().enumerate() {
+            assert!(count > 0, "task kind {} never spawned", ALL_TASK_KINDS[i].name());
+        }
+    }
+}

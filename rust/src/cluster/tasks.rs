@@ -1,0 +1,138 @@
+//! The CPU inference-task taxonomy — Table 2 of the paper.
+//!
+//! Each entry corresponds to a class/function of the original
+//! splitwise-sim whose CPU cost the paper models; every spawn of one of
+//! these becomes a `assign_core_to_cpu_task` call into the core manager.
+//! Durations are sampled from mildly dispersed log-normals around
+//! published-order-of-magnitude means (scheduler bookkeeping is
+//! single-digit milliseconds); the simulator stretches them by the
+//! executing core's aging slowdown (§5).
+
+use crate::util::rng::Rng;
+
+/// Table 2: tasks modeled as inference tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// `Executor.finish_flow`
+    FinishFlow,
+    /// `Executor.finish_request`
+    FinishRequest,
+    /// `Executor.finish_task`
+    FinishTask,
+    /// `Executor.submit`
+    Submit,
+    /// `Executor.submit_chain`
+    SubmitChain,
+    /// `Executor.submit_flow`
+    SubmitFlow,
+    /// `Executor.submit_task`
+    SubmitTask,
+    /// `Instance.alloc_memory`
+    AllocMemory,
+    /// `Instance.free_memory`
+    FreeMemory,
+    /// `ORCAInstance.start_iteration`
+    StartIteration,
+    /// `Link.flow_completion`
+    FlowCompletion,
+}
+
+pub const ALL_TASK_KINDS: [TaskKind; 11] = [
+    TaskKind::FinishFlow,
+    TaskKind::FinishRequest,
+    TaskKind::FinishTask,
+    TaskKind::Submit,
+    TaskKind::SubmitChain,
+    TaskKind::SubmitFlow,
+    TaskKind::SubmitTask,
+    TaskKind::AllocMemory,
+    TaskKind::FreeMemory,
+    TaskKind::StartIteration,
+    TaskKind::FlowCompletion,
+];
+
+impl TaskKind {
+    /// Mean CPU occupancy in seconds.
+    pub fn mean_duration_s(self) -> f64 {
+        match self {
+            TaskKind::Submit => 0.003,
+            TaskKind::SubmitChain => 0.002,
+            TaskKind::SubmitFlow => 0.002,
+            TaskKind::SubmitTask => 0.003,
+            TaskKind::AllocMemory => 0.0015,
+            TaskKind::FreeMemory => 0.0012,
+            TaskKind::StartIteration => 0.006,
+            TaskKind::FlowCompletion => 0.0025,
+            TaskKind::FinishTask => 0.002,
+            TaskKind::FinishRequest => 0.004,
+            TaskKind::FinishFlow => 0.0018,
+        }
+    }
+
+    /// Sample an execution time (log-normal, σ = 0.4, clamped to 20× mean
+    /// to keep the event queue sane).
+    pub fn sample_duration_s(self, rng: &mut Rng) -> f64 {
+        let mean = self.mean_duration_s();
+        // For log-normal with median m: mean = m·exp(σ²/2); parameterize by
+        // mean so average CPU load matches the table.
+        let sigma = 0.4;
+        let mu = mean.ln() - sigma * sigma / 2.0;
+        rng.lognormal(mu, sigma).min(mean * 20.0)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::FinishFlow => "finish_flow",
+            TaskKind::FinishRequest => "finish_request",
+            TaskKind::FinishTask => "finish_task",
+            TaskKind::Submit => "submit",
+            TaskKind::SubmitChain => "submit_chain",
+            TaskKind::SubmitFlow => "submit_flow",
+            TaskKind::SubmitTask => "submit_task",
+            TaskKind::AllocMemory => "alloc_memory",
+            TaskKind::FreeMemory => "free_memory",
+            TaskKind::StartIteration => "start_iteration",
+            TaskKind::FlowCompletion => "flow_completion",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn sampled_mean_tracks_nominal() {
+        let mut rng = Rng::new(1);
+        for kind in ALL_TASK_KINDS {
+            let xs: Vec<f64> = (0..20_000).map(|_| kind.sample_duration_s(&mut rng)).collect();
+            let m = stats::mean(&xs);
+            let target = kind.mean_duration_s();
+            assert!(
+                (m - target).abs() / target < 0.05,
+                "{}: mean {m} vs nominal {target}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn durations_positive_and_bounded() {
+        let mut rng = Rng::new(2);
+        for kind in ALL_TASK_KINDS {
+            for _ in 0..1000 {
+                let d = kind.sample_duration_s(&mut rng);
+                assert!(d > 0.0 && d <= kind.mean_duration_s() * 20.0);
+            }
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<&str> = ALL_TASK_KINDS.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ALL_TASK_KINDS.len());
+    }
+}

@@ -1,0 +1,256 @@
+//! Configuration system: JSON config files for cluster simulations and
+//! experiment sweeps, with defaults, validation, and round-tripping.
+//!
+//! Every CLI entry point accepts `--config <file.json>`; flags override
+//! file values, which override the paper defaults. See `configs/` for
+//! annotated examples (`paper.json` is exactly the §6.1 setup).
+
+use std::path::Path;
+
+use crate::cluster::ClusterConfig;
+use crate::cpu::{AgingParams, ProcVarParams};
+use crate::experiments::Scale;
+use crate::model::PerfModel;
+use crate::trace::azure::Workload;
+use crate::util::json::{parse, Value};
+
+/// Load a [`ClusterConfig`] from a JSON file. Unknown keys are rejected
+/// (typo protection); missing keys keep the paper defaults.
+pub fn cluster_from_file(path: &Path) -> Result<ClusterConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+    let v = parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+    cluster_from_value(&v)
+}
+
+const CLUSTER_KEYS: &[&str] = &[
+    "n_prompt",
+    "n_token",
+    "cores_per_cpu",
+    "policy",
+    "sample_period_s",
+    "max_batch",
+    "kv_capacity_tokens",
+    "seed",
+    "aging",
+    "procvar",
+    "perf",
+];
+
+/// Build a [`ClusterConfig`] from a parsed JSON object.
+pub fn cluster_from_value(v: &Value) -> Result<ClusterConfig, String> {
+    let obj = v.as_obj().ok_or("cluster config must be a JSON object")?;
+    for key in obj.keys() {
+        if !CLUSTER_KEYS.contains(&key.as_str()) {
+            return Err(format!(
+                "unknown cluster config key '{key}' (known: {CLUSTER_KEYS:?})"
+            ));
+        }
+    }
+    let mut cfg = ClusterConfig {
+        n_prompt: v.usize_or("n_prompt", 5),
+        n_token: v.usize_or("n_token", 17),
+        cores_per_cpu: v.usize_or("cores_per_cpu", 40),
+        policy: v.str_or("policy", "proposed").to_string(),
+        sample_period_s: v.f64_or("sample_period_s", 0.1),
+        max_batch: v.usize_or("max_batch", 64),
+        kv_capacity_tokens: v.f64_or("kv_capacity_tokens", 400_000.0) as u64,
+        seed: v.f64_or("seed", 42.0) as u64,
+        ..ClusterConfig::default()
+    };
+    if let Some(a) = v.get("aging") {
+        cfg.aging = aging_from_value(a)?;
+    }
+    if let Some(p) = v.get("procvar") {
+        cfg.procvar = procvar_from_value(p)?;
+    }
+    if let Some(p) = v.get("perf") {
+        cfg.perf = perf_from_value(p)?;
+    }
+    validate_cluster(&cfg)?;
+    Ok(cfg)
+}
+
+fn aging_from_value(v: &Value) -> Result<AgingParams, String> {
+    let mut a = AgingParams::paper_default();
+    a.vdd = v.f64_or("vdd", a.vdd);
+    a.vth = v.f64_or("vth", a.vth);
+    a.n = v.f64_or("n", a.n);
+    a.e0_ev = v.f64_or("e0_ev", a.e0_ev);
+    a.beta_ev = v.f64_or("beta_ev", a.beta_ev);
+    a.unallocated_stress = v.f64_or("unallocated_stress", a.unallocated_stress);
+    a.f_nominal_ghz = v.f64_or("f_nominal_ghz", a.f_nominal_ghz);
+    // Re-derive K unless explicitly pinned.
+    let mut recalib = AgingParams { k: 0.0, ..a };
+    recalib.calib_lifetime_s = v.f64_or("calib_lifetime_s", a.calib_lifetime_s);
+    recalib.calib_reduction = v.f64_or("calib_reduction", a.calib_reduction);
+    recalib.k = {
+        // Same closed form as paper_default.
+        let target = recalib.calib_reduction * (recalib.vdd - recalib.vth);
+        let kb_t = crate::cpu::aging::K_B_EV * recalib.calib_temp_k;
+        let exp_terms = (-recalib.e0_ev / kb_t).exp() * (recalib.beta_ev / kb_t).exp();
+        target / (exp_terms * recalib.calib_lifetime_s.powf(recalib.n))
+    };
+    if let Some(k) = v.get("k").and_then(Value::as_f64) {
+        recalib.k = k;
+    }
+    if recalib.vdd <= recalib.vth {
+        return Err("aging: vdd must exceed vth".into());
+    }
+    if !(0.0..=1.0).contains(&recalib.unallocated_stress) || recalib.unallocated_stress <= 0.0 {
+        return Err("aging: unallocated_stress must be in (0, 1]".into());
+    }
+    Ok(recalib)
+}
+
+fn procvar_from_value(v: &Value) -> Result<ProcVarParams, String> {
+    let mut p = ProcVarParams::paper_default();
+    p.n_chip = v.usize_or("n_chip", p.n_chip);
+    p.alpha = v.f64_or("alpha", p.alpha);
+    p.sigma_rel = v.f64_or("sigma_rel", p.sigma_rel);
+    p.k_prime = v.f64_or("k_prime", p.k_prime);
+    p.f_nominal_ghz = v.f64_or("f_nominal_ghz", p.f_nominal_ghz);
+    if p.n_chip == 0 || p.sigma_rel < 0.0 || p.sigma_rel > 0.5 {
+        return Err("procvar: n_chip > 0 and sigma_rel in [0, 0.5] required".into());
+    }
+    Ok(p)
+}
+
+fn perf_from_value(v: &Value) -> Result<PerfModel, String> {
+    let mut m = PerfModel::h100_70b();
+    m.prompt_base_s = v.f64_or("prompt_base_s", m.prompt_base_s);
+    m.prompt_per_token_s = v.f64_or("prompt_per_token_s", m.prompt_per_token_s);
+    m.iter_base_s = v.f64_or("iter_base_s", m.iter_base_s);
+    m.iter_per_seq_s = v.f64_or("iter_per_seq_s", m.iter_per_seq_s);
+    m.iter_per_ctx_token_s = v.f64_or("iter_per_ctx_token_s", m.iter_per_ctx_token_s);
+    m.kv_bytes_per_token = v.f64_or("kv_bytes_per_token", m.kv_bytes_per_token);
+    m.link_bytes_per_s = v.f64_or("link_bytes_per_s", m.link_bytes_per_s);
+    m.link_latency_s = v.f64_or("link_latency_s", m.link_latency_s);
+    if m.prompt_base_s < 0.0 || m.iter_base_s <= 0.0 || m.link_bytes_per_s <= 0.0 {
+        return Err("perf: nonpositive timing parameters".into());
+    }
+    Ok(m)
+}
+
+fn validate_cluster(cfg: &ClusterConfig) -> Result<(), String> {
+    if cfg.n_prompt == 0 || cfg.n_token == 0 {
+        return Err("cluster needs at least one prompt and one token machine".into());
+    }
+    if cfg.cores_per_cpu == 0 {
+        return Err("cores_per_cpu must be positive".into());
+    }
+    if cfg.max_batch == 0 {
+        return Err("max_batch must be positive".into());
+    }
+    crate::policy::by_name(&cfg.policy).map(|_| ())?;
+    if cfg.sample_period_s <= 0.0 {
+        return Err("sample_period_s must be positive".into());
+    }
+    Ok(())
+}
+
+/// Load an experiment [`Scale`] from a JSON file.
+pub fn scale_from_file(path: &Path) -> Result<Scale, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+    let v = parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+    scale_from_value(&v)
+}
+
+pub fn scale_from_value(v: &Value) -> Result<Scale, String> {
+    let mut s = Scale::paper();
+    if let Some(rates) = v.get("rates").and_then(Value::as_arr) {
+        s.rates = rates.iter().filter_map(Value::as_f64).collect();
+    }
+    if let Some(cores) = v.get("core_counts").and_then(Value::as_arr) {
+        s.core_counts = cores.iter().filter_map(Value::as_usize).collect();
+    }
+    s.duration_s = v.f64_or("duration_s", s.duration_s);
+    s.n_prompt = v.usize_or("n_prompt", s.n_prompt);
+    s.n_token = v.usize_or("n_token", s.n_token);
+    s.seed = v.f64_or("seed", s.seed as f64) as u64;
+    if let Some(w) = v.get("workload").and_then(Value::as_str) {
+        s.workload = Workload::parse(w)?;
+    }
+    if s.rates.is_empty() || s.core_counts.is_empty() || s.duration_s <= 0.0 {
+        return Err("scale: rates, core_counts and duration_s must be non-empty/positive".into());
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_object_gives_paper_defaults() {
+        let cfg = cluster_from_value(&parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.n_prompt, 5);
+        assert_eq!(cfg.n_token, 17);
+        assert_eq!(cfg.cores_per_cpu, 40);
+        assert_eq!(cfg.policy, "proposed");
+    }
+
+    #[test]
+    fn overrides_apply_and_k_recalibrates() {
+        let v = parse(
+            r#"{"cores_per_cpu": 80, "policy": "least-aged",
+                "aging": {"unallocated_stress": 0.5, "calib_reduction": 0.2}}"#,
+        )
+        .unwrap();
+        let cfg = cluster_from_value(&v).unwrap();
+        assert_eq!(cfg.cores_per_cpu, 80);
+        assert_eq!(cfg.policy, "least-aged");
+        assert_eq!(cfg.aging.unallocated_stress, 0.5);
+        // K must satisfy the new 20%-in-10-years calibration.
+        let adf = cfg.aging.adf(cfg.aging.calib_temp_k, 1.0);
+        let dvth = cfg.aging.dvth_step(0.0, adf, cfg.aging.calib_lifetime_s);
+        assert!((cfg.aging.rel_reduction(dvth) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let v = parse(r#"{"cores_per_cpuu": 80}"#).unwrap();
+        let err = cluster_from_value(&v).unwrap_err();
+        assert!(err.contains("unknown cluster config key"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        for bad in [
+            r#"{"n_prompt": 0}"#,
+            r#"{"policy": "nope"}"#,
+            r#"{"aging": {"vdd": 0.2}}"#,
+            r#"{"aging": {"unallocated_stress": 0.0}}"#,
+            r#"{"procvar": {"sigma_rel": 0.9}}"#,
+            r#"{"perf": {"iter_base_s": 0.0}}"#,
+        ] {
+            assert!(cluster_from_value(&parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn scale_parsing() {
+        let v = parse(
+            r#"{"rates": [20, 40], "core_counts": [16], "duration_s": 30,
+                "workload": "conv", "seed": 9}"#,
+        )
+        .unwrap();
+        let s = scale_from_value(&v).unwrap();
+        assert_eq!(s.rates, vec![20.0, 40.0]);
+        assert_eq!(s.core_counts, vec![16]);
+        assert_eq!(s.workload, Workload::Conversation);
+        assert_eq!(s.seed, 9);
+        assert!(scale_from_value(&parse(r#"{"rates": []}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_missing_file() {
+        let dir = std::env::temp_dir().join("carbon_sim_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"seed": 123, "cores_per_cpu": 8}"#).unwrap();
+        let cfg = cluster_from_file(&p).unwrap();
+        assert_eq!(cfg.seed, 123);
+        assert_eq!(cfg.cores_per_cpu, 8);
+        assert!(cluster_from_file(Path::new("/nonexistent.json")).is_err());
+    }
+}

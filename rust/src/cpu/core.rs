@@ -1,0 +1,281 @@
+//! A single CPU core: C-state machine, allocation status, idle history,
+//! and lazily-advanced NBTI aging state.
+//!
+//! Aging is accounted lazily: a core's ΔVth is advanced only when its
+//! configuration (C-state or allocation) is about to change, or when a
+//! caller explicitly snapshots frequencies. Between changes the core sits
+//! at a constant (temperature, stress) operating point, so one recursion
+//! step per interval is exact — this is what makes the simulator hot path
+//! cheap (§Perf).
+
+use super::aging::AgingParams;
+use super::temperature::TemperatureModel;
+
+/// CPU core idle state. The paper's technique only distinguishes the
+/// shallow-active and deepest-idle states (C0 vs C6, per the Linux cpuidle
+/// framework): C6 clock- and power-gates the core, halting aging.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CState {
+    /// Active: executing instructions (allocated inference task or OS
+    /// system tasks time-sharing the core). The core ages.
+    C0,
+    /// Deep idle: power gated. The core does not age and cannot take work.
+    C6,
+}
+
+/// Rolling window of the last 8 idle durations — the same depth the Linux
+/// menu governor keeps, and the age-estimation signal of Algorithm 1.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IdleHistory {
+    buf: [f64; 8],
+    len: usize,
+    pos: usize,
+}
+
+impl IdleHistory {
+    pub fn push(&mut self, duration: f64) {
+        self.buf[self.pos] = duration;
+        self.pos = (self.pos + 1) % 8;
+        if self.len < 8 {
+            self.len += 1;
+        }
+    }
+
+    /// Sum of the recorded idle durations — Algorithm 1's `idle_score`.
+    pub fn score(&self) -> f64 {
+        self.buf[..self.len].iter().sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Per-core state.
+#[derive(Clone, Debug)]
+pub struct Core {
+    pub id: usize,
+    /// Initial (process-variation) frequency in GHz.
+    pub f0_ghz: f64,
+    /// Accumulated NBTI threshold-voltage shift (V).
+    pub dvth: f64,
+    pub state: CState,
+    /// Inference task currently pinned to this core.
+    pub task: Option<u64>,
+    /// Recent idle durations (Algorithm 1 input).
+    pub idle_history: IdleHistory,
+    /// When the core last became task-free (for idle-history accounting).
+    idle_since: f64,
+    /// Last simulation time `dvth` was advanced to.
+    last_update: f64,
+    /// Cumulative seconds with a task allocated (least-aged's work proxy).
+    pub busy_time: f64,
+    /// Cumulative seconds in C0.
+    pub active_time: f64,
+    /// Cumulative seconds in C6 (age-halted).
+    pub c6_time: f64,
+}
+
+impl Core {
+    pub fn new(id: usize, f0_ghz: f64) -> Core {
+        Core {
+            id,
+            f0_ghz,
+            dvth: 0.0,
+            state: CState::C0,
+            task: None,
+            idle_history: IdleHistory::default(),
+            idle_since: 0.0,
+            last_update: 0.0,
+            busy_time: 0.0,
+            active_time: 0.0,
+            c6_time: 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn is_allocated(&self) -> bool {
+        self.task.is_some()
+    }
+
+    /// Advance aging to `now` under the current configuration.
+    ///
+    /// C0 intervals stress the core at the Table-1 temperature for its
+    /// allocation status (worst-case stress Y = 1, per §3.2); C6 intervals
+    /// are age-halted and only accumulate wall-clock bookkeeping.
+    pub fn advance(&mut self, now: f64, aging: &AgingParams, temps: &TemperatureModel) {
+        debug_assert!(
+            now >= self.last_update - 1e-9,
+            "time went backwards: {} < {}",
+            now,
+            self.last_update
+        );
+        let tau = (now - self.last_update).max(0.0);
+        if tau == 0.0 {
+            return;
+        }
+        match self.state {
+            CState::C0 => {
+                let temp_k = temps.steady_k(self.state, self.is_allocated());
+                let stress = if self.is_allocated() { 1.0 } else { aging.unallocated_stress };
+                let adf = aging.adf(temp_k, stress);
+                self.dvth = aging.dvth_step(self.dvth, adf, tau);
+                self.active_time += tau;
+                if self.is_allocated() {
+                    self.busy_time += tau;
+                }
+            }
+            CState::C6 => {
+                // Age halted: dvth frozen.
+                self.c6_time += tau;
+            }
+        }
+        self.last_update = now;
+    }
+
+    /// Pin a task to this core. Must be free and active.
+    pub fn assign(&mut self, task: u64, now: f64, aging: &AgingParams, temps: &TemperatureModel) {
+        debug_assert!(self.task.is_none(), "core {} already allocated", self.id);
+        debug_assert_eq!(self.state, CState::C0, "cannot assign to a deep-idle core");
+        self.advance(now, aging, temps);
+        // Close out the idle period that ends now.
+        self.idle_history.push((now - self.idle_since).max(0.0));
+        self.task = Some(task);
+    }
+
+    /// Release the task pinned to this core.
+    pub fn release(&mut self, now: f64, aging: &AgingParams, temps: &TemperatureModel) -> u64 {
+        debug_assert!(self.task.is_some(), "core {} has no task", self.id);
+        self.advance(now, aging, temps);
+        self.idle_since = now;
+        self.task.take().unwrap()
+    }
+
+    /// Switch C-state. Putting an allocated core to C6 is a logic error.
+    pub fn set_state(
+        &mut self,
+        state: CState,
+        now: f64,
+        aging: &AgingParams,
+        temps: &TemperatureModel,
+    ) {
+        if state == self.state {
+            return;
+        }
+        debug_assert!(
+            !(state == CState::C6 && self.is_allocated()),
+            "cannot deep-idle allocated core {}",
+            self.id
+        );
+        self.advance(now, aging, temps);
+        self.state = state;
+    }
+
+    /// Current frequency in GHz, *as of the last advance*. Call
+    /// [`Core::advance`] first for an up-to-date value.
+    #[inline]
+    pub fn freq_ghz(&self, aging: &AgingParams) -> f64 {
+        aging.freq_ghz(self.f0_ghz, self.dvth)
+    }
+
+    /// Absolute frequency reduction since t=0 (GHz).
+    #[inline]
+    pub fn freq_reduction_ghz(&self, aging: &AgingParams) -> f64 {
+        self.f0_ghz - self.freq_ghz(aging)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::temperature::TemperatureModel;
+
+    fn fixtures() -> (AgingParams, TemperatureModel) {
+        (AgingParams::paper_default(), TemperatureModel::paper_default())
+    }
+
+    #[test]
+    fn idle_history_window_of_eight() {
+        let mut h = IdleHistory::default();
+        for i in 1..=10 {
+            h.push(i as f64);
+        }
+        // Only 3..=10 retained.
+        assert_eq!(h.len(), 8);
+        assert!((h.score() - (3..=10).sum::<i64>() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn c0_ages_c6_does_not() {
+        let (aging, temps) = fixtures();
+        let mut active = Core::new(0, 2.6);
+        let mut idle = Core::new(1, 2.6);
+        idle.set_state(CState::C6, 0.0, &aging, &temps);
+        active.advance(3600.0, &aging, &temps);
+        idle.advance(3600.0, &aging, &temps);
+        assert!(active.dvth > 0.0);
+        assert_eq!(idle.dvth, 0.0);
+        assert_eq!(idle.c6_time, 3600.0);
+        assert_eq!(active.active_time, 3600.0);
+    }
+
+    #[test]
+    fn allocated_ages_faster_than_unallocated() {
+        let (aging, temps) = fixtures();
+        let mut busy = Core::new(0, 2.6);
+        let mut free = Core::new(1, 2.6);
+        busy.assign(1, 0.0, &aging, &temps);
+        busy.advance(3600.0, &aging, &temps);
+        free.advance(3600.0, &aging, &temps);
+        assert!(busy.dvth > free.dvth);
+        assert_eq!(busy.busy_time, 3600.0);
+        assert_eq!(free.busy_time, 0.0);
+    }
+
+    #[test]
+    fn assign_release_tracks_idle_history() {
+        let (aging, temps) = fixtures();
+        let mut c = Core::new(0, 2.6);
+        c.assign(10, 5.0, &aging, &temps); // idle 0..5
+        let t = c.release(8.0, &aging, &temps);
+        assert_eq!(t, 10);
+        c.assign(11, 12.0, &aging, &temps); // idle 8..12
+        assert_eq!(c.idle_history.len(), 2);
+        assert!((c.idle_history.score() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn freq_decreases_with_age() {
+        let (aging, temps) = fixtures();
+        let mut c = Core::new(0, 2.6);
+        let f_start = c.freq_ghz(&aging);
+        c.advance(86_400.0, &aging, &temps);
+        assert!(c.freq_ghz(&aging) < f_start);
+        assert!(c.freq_reduction_ghz(&aging) > 0.0);
+    }
+
+    #[test]
+    fn set_state_roundtrip_accumulates_times() {
+        let (aging, temps) = fixtures();
+        let mut c = Core::new(0, 2.6);
+        c.set_state(CState::C6, 10.0, &aging, &temps);
+        c.set_state(CState::C0, 30.0, &aging, &temps);
+        c.advance(35.0, &aging, &temps);
+        assert_eq!(c.c6_time, 20.0);
+        assert!((c.active_time - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn cannot_deep_idle_allocated() {
+        let (aging, temps) = fixtures();
+        let mut c = Core::new(0, 2.6);
+        c.assign(1, 0.0, &aging, &temps);
+        c.set_state(CState::C6, 1.0, &aging, &temps);
+    }
+}

@@ -1,0 +1,24 @@
+//! CPU substrate: cores, C-states, temperatures, NBTI aging, and
+//! manufacturing process variation — the paper's §3 system model.
+//!
+//! * [`aging`] — reaction–diffusion NBTI model (`ΔVth` recursion, ADF,
+//!   frequency degradation), calibrated against the 22 nm 30 %-in-10-years
+//!   datum.
+//! * [`temperature`] — Table 1 steady states + the Fig. 4 thermal
+//!   transient.
+//! * [`procvar`] — spatially-correlated process variation producing each
+//!   core's initial frequency `f0`.
+//! * [`core`] — a single core's state machine and lazy aging accounting.
+//! * [`package`] — the multi-core CPU the management policies operate on.
+
+pub mod aging;
+pub mod core;
+pub mod package;
+pub mod procvar;
+pub mod temperature;
+
+pub use aging::AgingParams;
+pub use core::{CState, Core, IdleHistory};
+pub use package::CpuPackage;
+pub use procvar::{ProcVarParams, ProcVarSampler};
+pub use temperature::{TemperatureModel, TransientThermal};

@@ -1,0 +1,278 @@
+//! The multi-core CPU package: the unit the paper's technique manages.
+//!
+//! Owns the per-core states of one inference server's CPU plus the list of
+//! currently *oversubscribed* tasks — tasks that arrived while no active
+//! free core existed. Oversubscribed tasks still execute (time-shared by
+//! the OS) but degrade service quality; Algorithm 2 consumes their count
+//! and the Fig. 8 metric integrates them.
+
+use std::collections::HashMap;
+
+use super::aging::AgingParams;
+use super::core::{CState, Core};
+use super::temperature::TemperatureModel;
+
+/// A multi-core CPU with aging state.
+#[derive(Clone, Debug)]
+pub struct CpuPackage {
+    pub cores: Vec<Core>,
+    pub aging: AgingParams,
+    pub temps: TemperatureModel,
+    /// task id -> core index, for O(1) release.
+    task_core: HashMap<u64, usize>,
+    /// Tasks executing without a dedicated core (oversubscription).
+    pub oversub: Vec<u64>,
+    /// Cached count of cores in C0 (§Perf: the hot path queries counts on
+    /// every task spawn; scanning all cores was the top profile entry).
+    active_cnt: usize,
+}
+
+impl CpuPackage {
+    /// Build a package from per-core initial frequencies (GHz).
+    pub fn new(f0_ghz: Vec<f64>, aging: AgingParams, temps: TemperatureModel) -> CpuPackage {
+        let cores: Vec<Core> =
+            f0_ghz.into_iter().enumerate().map(|(i, f)| Core::new(i, f)).collect();
+        let active_cnt = cores.len();
+        CpuPackage { cores, aging, temps, task_core: HashMap::new(), oversub: Vec::new(), active_cnt }
+    }
+
+    /// Homogeneous package at the nominal frequency (tests, quickstart).
+    pub fn uniform(n_cores: usize, aging: AgingParams, temps: TemperatureModel) -> CpuPackage {
+        CpuPackage::new(vec![aging.f_nominal_ghz; n_cores], aging, temps)
+    }
+
+    #[inline]
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Number of cores in C0 (the *working set* plus any active-but-free).
+    #[inline]
+    pub fn active_count(&self) -> usize {
+        debug_assert_eq!(
+            self.active_cnt,
+            self.cores.iter().filter(|c| c.state == CState::C0).count()
+        );
+        self.active_cnt
+    }
+
+    /// Number of cores in C6.
+    #[inline]
+    pub fn c6_count(&self) -> usize {
+        self.n_cores() - self.active_cnt
+    }
+
+    /// Number of cores with a pinned task.
+    pub fn allocated_count(&self) -> usize {
+        self.task_core.len()
+    }
+
+    /// Total running inference tasks = pinned + oversubscribed.
+    pub fn running_tasks(&self) -> usize {
+        self.task_core.len() + self.oversub.len()
+    }
+
+    /// Indices of active, unallocated cores (assignment candidates).
+    pub fn free_active_cores(&self) -> impl Iterator<Item = &Core> {
+        self.cores.iter().filter(|c| c.state == CState::C0 && c.task.is_none())
+    }
+
+    #[inline]
+    pub fn has_free_active_core(&self) -> bool {
+        // Allocated cores are always C0, so the difference counts free
+        // active cores directly.
+        self.active_cnt > self.task_core.len()
+    }
+
+    /// Number of free active cores, O(1).
+    #[inline]
+    pub fn free_active_count(&self) -> usize {
+        self.active_cnt - self.task_core.len()
+    }
+
+    /// Pin `task` to `core_idx`.
+    pub fn assign(&mut self, core_idx: usize, task: u64, now: f64) {
+        let (aging, temps) = (self.aging, self.temps);
+        self.cores[core_idx].assign(task, now, &aging, &temps);
+        self.task_core.insert(task, core_idx);
+    }
+
+    /// Record `task` as oversubscribed (no dedicated core available).
+    pub fn push_oversub(&mut self, task: u64) {
+        self.oversub.push(task);
+    }
+
+    /// Finish a task wherever it runs. Returns the freed core index when
+    /// the task had a dedicated core.
+    pub fn finish_task(&mut self, task: u64, now: f64) -> Option<usize> {
+        if let Some(core_idx) = self.task_core.remove(&task) {
+            let (aging, temps) = (self.aging, self.temps);
+            self.cores[core_idx].release(now, &aging, &temps);
+            Some(core_idx)
+        } else if let Some(pos) = self.oversub.iter().position(|&t| t == task) {
+            self.oversub.swap_remove(pos);
+            None
+        } else {
+            panic!("finish_task: unknown task {task}");
+        }
+    }
+
+    /// Which core runs `task`, if it has a dedicated one.
+    pub fn task_core_of(&self, task: u64) -> Option<usize> {
+        self.task_core.get(&task).copied()
+    }
+
+    /// Pop one pending oversubscribed task (FIFO), if any.
+    pub fn pop_oversub(&mut self) -> Option<u64> {
+        if self.oversub.is_empty() {
+            None
+        } else {
+            Some(self.oversub.remove(0))
+        }
+    }
+
+    /// Switch a core's C-state.
+    pub fn set_state(&mut self, core_idx: usize, state: CState, now: f64) {
+        let (aging, temps) = (self.aging, self.temps);
+        let before = self.cores[core_idx].state;
+        self.cores[core_idx].set_state(state, now, &aging, &temps);
+        match (before, state) {
+            (CState::C0, CState::C6) => self.active_cnt -= 1,
+            (CState::C6, CState::C0) => self.active_cnt += 1,
+            _ => {}
+        }
+    }
+
+    /// Advance aging of every core to `now` (metrics snapshots; also the
+    /// paper's periodic "accurate frequency from aging sensors" moment).
+    pub fn advance_all(&mut self, now: f64) {
+        let (aging, temps) = (self.aging, self.temps);
+        for c in &mut self.cores {
+            c.advance(now, &aging, &temps);
+        }
+    }
+
+    /// Per-core frequencies (GHz) as of `now`.
+    pub fn frequencies(&mut self, now: f64) -> Vec<f64> {
+        self.advance_all(now);
+        let aging = self.aging;
+        self.cores.iter().map(|c| c.freq_ghz(&aging)).collect()
+    }
+
+    /// Per-core absolute frequency reductions (GHz) as of `now`.
+    pub fn freq_reductions(&mut self, now: f64) -> Vec<f64> {
+        self.advance_all(now);
+        let aging = self.aging;
+        self.cores.iter().map(|c| c.freq_reduction_ghz(&aging)).collect()
+    }
+
+    /// Relative execution-time dilation for a task on `core_idx`:
+    /// `f_nominal / f_core` (≥ ~1 once aged). The simulator stretches CPU
+    /// task durations by this factor (§5: "execution time ... adjusted
+    /// according to the operating frequency").
+    pub fn slowdown(&self, core_idx: usize) -> f64 {
+        let f = self.cores[core_idx].freq_ghz(&self.aging);
+        if f <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.aging.f_nominal_ghz / f
+        }
+    }
+
+    /// Normalized idle cores — the Fig. 8 x-axis:
+    /// `(active − running_tasks) / N`. Positive = underutilization,
+    /// negative = oversubscription.
+    pub fn normalized_idle(&self) -> f64 {
+        (self.active_count() as f64 - self.running_tasks() as f64) / self.n_cores() as f64
+    }
+
+    /// Normalized idle as seen by a task that is about to be placed
+    /// (itself included in the running count).
+    pub fn normalized_idle_for_extra_task(&self) -> f64 {
+        (self.active_count() as f64 - (self.running_tasks() + 1) as f64) / self.n_cores() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkg(n: usize) -> CpuPackage {
+        CpuPackage::uniform(n, AgingParams::paper_default(), TemperatureModel::paper_default())
+    }
+
+    #[test]
+    fn counts_track_assignments() {
+        let mut p = pkg(4);
+        assert_eq!(p.active_count(), 4);
+        assert_eq!(p.allocated_count(), 0);
+        p.assign(0, 100, 0.0);
+        p.assign(2, 101, 0.0);
+        assert_eq!(p.allocated_count(), 2);
+        assert_eq!(p.running_tasks(), 2);
+        assert_eq!(p.free_active_cores().count(), 2);
+        let freed = p.finish_task(100, 1.0);
+        assert_eq!(freed, Some(0));
+        assert_eq!(p.allocated_count(), 1);
+    }
+
+    #[test]
+    fn oversub_lifecycle() {
+        let mut p = pkg(2);
+        p.assign(0, 1, 0.0);
+        p.assign(1, 2, 0.0);
+        p.push_oversub(3);
+        assert_eq!(p.running_tasks(), 3);
+        assert!((p.normalized_idle() - (-0.5)).abs() < 1e-12);
+        assert_eq!(p.finish_task(3, 1.0), None);
+        assert_eq!(p.running_tasks(), 2);
+    }
+
+    #[test]
+    fn pop_oversub_fifo() {
+        let mut p = pkg(1);
+        p.push_oversub(7);
+        p.push_oversub(8);
+        assert_eq!(p.pop_oversub(), Some(7));
+        assert_eq!(p.pop_oversub(), Some(8));
+        assert_eq!(p.pop_oversub(), None);
+    }
+
+    #[test]
+    fn c6_removes_from_working_set() {
+        let mut p = pkg(4);
+        p.set_state(3, CState::C6, 0.0);
+        assert_eq!(p.active_count(), 3);
+        assert_eq!(p.c6_count(), 1);
+        assert!((p.normalized_idle() - 0.75).abs() < 1e-12);
+        p.set_state(3, CState::C0, 5.0);
+        assert_eq!(p.active_count(), 4);
+    }
+
+    #[test]
+    fn frequencies_degrade_over_time() {
+        let mut p = pkg(2);
+        p.assign(0, 1, 0.0);
+        let fs = p.frequencies(36_000.0);
+        // Allocated core 0 degraded more than free core 1.
+        assert!(fs[0] < fs[1]);
+        assert!(fs[1] < p.aging.f_nominal_ghz);
+        let reds = p.freq_reductions(36_000.0);
+        assert!(reds[0] > reds[1]);
+    }
+
+    #[test]
+    fn slowdown_grows_with_age() {
+        let mut p = pkg(1);
+        assert!((p.slowdown(0) - 1.0).abs() < 1e-12);
+        p.advance_all(864_000.0);
+        assert!(p.slowdown(0) > 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown task")]
+    fn finishing_unknown_task_panics() {
+        let mut p = pkg(1);
+        p.finish_task(42, 0.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Manufacturing process-variation model for initial core frequencies —
+//! §3.2 of the paper, following Raghunathan'13 ("Cherry-picking").
+//!
+//! The chip is an `N_chip × N_chip` grid; each cell `kl` carries a
+//! Gaussian random variable `p_kl` with spatial correlation
+//! `ρ_ij,kl = exp(−α·sqrt((i−k)² + (j−l)²))`. Critical paths live inside
+//! cells, and a core's initial frequency is
+//! `f0 = K' · min_{kl ∈ core cells}(1 / p_kl)`.
+//!
+//! The mean of `p` is solved such that a variation-free chip
+//! (`p ≡ mean`) yields exactly the nominal frequency: `mean = K'/f_nom`
+//! (the paper's normalization). Correlated samples are drawn via a
+//! Cholesky factor of the grid covariance, computed once and reused for
+//! every chip in the cluster.
+
+use crate::util::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Parameters of the process-variation model.
+#[derive(Clone, Copy, Debug)]
+pub struct ProcVarParams {
+    /// Grid dimension N_chip (paper: 10).
+    pub n_chip: usize,
+    /// Spatial correlation decay rate α (paper: set per Raghunathan'13).
+    pub alpha: f64,
+    /// Relative standard deviation of `p` (σ/μ).
+    pub sigma_rel: f64,
+    /// Technology constant K' (paper: 1).
+    pub k_prime: f64,
+    /// Nominal frequency (GHz) of a variation-free core.
+    pub f_nominal_ghz: f64,
+}
+
+impl ProcVarParams {
+    pub fn paper_default() -> ProcVarParams {
+        ProcVarParams {
+            n_chip: 10,
+            alpha: 0.5,
+            sigma_rel: 0.04,
+            k_prime: 1.0,
+            f_nominal_ghz: 2.6,
+        }
+    }
+}
+
+/// Sampler producing per-core initial frequencies for whole chips.
+pub struct ProcVarSampler {
+    pub params: ProcVarParams,
+    /// Cholesky factor of the grid covariance (n_chip² × n_chip²).
+    chol: Matrix,
+    mean_p: f64,
+}
+
+impl ProcVarSampler {
+    pub fn new(params: ProcVarParams) -> ProcVarSampler {
+        let n = params.n_chip * params.n_chip;
+        let mean_p = params.k_prime / params.f_nominal_ghz;
+        let sigma = params.sigma_rel * mean_p;
+        let mut cov = Matrix::zeros(n);
+        for a in 0..n {
+            let (i, j) = (a / params.n_chip, a % params.n_chip);
+            for b in 0..n {
+                let (k, l) = (b / params.n_chip, b % params.n_chip);
+                let d = (((i as f64 - k as f64).powi(2)) + ((j as f64 - l as f64).powi(2))).sqrt();
+                let rho = (-params.alpha * d).exp();
+                cov.set(a, b, sigma * sigma * rho);
+            }
+        }
+        let chol = cov.cholesky().expect("grid covariance must be SPD");
+        ProcVarSampler { params, chol, mean_p }
+    }
+
+    /// Draw the correlated grid variables `p_kl` for one chip.
+    pub fn sample_grid(&self, rng: &mut Rng) -> Vec<f64> {
+        let n = self.params.n_chip * self.params.n_chip;
+        let z: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let corr = self.chol.lower_matvec(&z);
+        corr.iter()
+            .map(|&c| {
+                let p = self.mean_p + c;
+                // Physical guard: p is a path-delay proxy, strictly positive.
+                p.max(self.mean_p * 0.5)
+            })
+            .collect()
+    }
+
+    /// Sample initial frequencies (GHz) for a chip with `n_cores` cores.
+    ///
+    /// Grid cells are assigned to cores in contiguous runs (cores are
+    /// physically contiguous regions); each core's f0 is `K'·min(1/p)`
+    /// over its cells, i.e. its slowest critical path.
+    pub fn sample_chip(&self, rng: &mut Rng, n_cores: usize) -> Vec<f64> {
+        assert!(n_cores > 0);
+        let grid = self.sample_grid(rng);
+        let n_cells = grid.len();
+        let cells_per_core = (n_cells / n_cores).max(1);
+        (0..n_cores)
+            .map(|c| {
+                let start = (c * cells_per_core) % n_cells;
+                let mut worst_p: f64 = 0.0;
+                for off in 0..cells_per_core {
+                    let p = grid[(start + off) % n_cells];
+                    if p > worst_p {
+                        worst_p = p;
+                    }
+                }
+                self.params.k_prime / worst_p
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn sampler() -> ProcVarSampler {
+        ProcVarSampler::new(ProcVarParams::paper_default())
+    }
+
+    #[test]
+    fn variation_free_chip_is_nominal() {
+        // Directly check the normalization: p == mean ⇒ f0 == nominal.
+        let s = sampler();
+        let f0 = s.params.k_prime / s.mean_p;
+        assert!((f0 - s.params.f_nominal_ghz).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frequencies_near_nominal() {
+        let s = sampler();
+        let mut rng = Rng::new(42);
+        let f0 = s.sample_chip(&mut rng, 40);
+        assert_eq!(f0.len(), 40);
+        for &f in &f0 {
+            assert!(f > 1.8 && f < 3.4, "f0={f} out of plausible band");
+        }
+        // min-of-cells biases f0 slightly below nominal on average.
+        let m = stats::mean(&f0);
+        assert!(m < s.params.f_nominal_ghz * 1.02);
+        assert!(m > s.params.f_nominal_ghz * 0.85);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = sampler();
+        let a = s.sample_chip(&mut Rng::new(7), 80);
+        let b = s.sample_chip(&mut Rng::new(7), 80);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chips_differ_across_draws() {
+        let s = sampler();
+        let mut rng = Rng::new(7);
+        let a = s.sample_chip(&mut rng, 40);
+        let b = s.sample_chip(&mut rng, 40);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn cv_scales_with_sigma() {
+        let mut lo = ProcVarParams::paper_default();
+        lo.sigma_rel = 0.01;
+        let mut hi = ProcVarParams::paper_default();
+        hi.sigma_rel = 0.08;
+        let (s_lo, s_hi) = (ProcVarSampler::new(lo), ProcVarSampler::new(hi));
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        // Average CV over several chips.
+        let cv = |s: &ProcVarSampler, r: &mut Rng| -> f64 {
+            let cvs: Vec<f64> =
+                (0..20).map(|_| stats::coeff_of_variation(&s.sample_chip(r, 40))).collect();
+            stats::mean(&cvs)
+        };
+        assert!(cv(&s_hi, &mut r2) > 2.0 * cv(&s_lo, &mut r1));
+    }
+
+    #[test]
+    fn neighbor_cells_more_correlated_than_distant() {
+        let s = sampler();
+        let mut rng = Rng::new(9);
+        let n = 4000;
+        let mut near = (0.0, 0.0, 0.0, 0.0, 0.0); // sums for corr(cell0, cell1)
+        let mut far = (0.0, 0.0, 0.0, 0.0, 0.0); // sums for corr(cell0, cell99)
+        for _ in 0..n {
+            let g = s.sample_grid(&mut rng);
+            let (a, b, c) = (g[0], g[1], g[99]);
+            near = (near.0 + a, near.1 + b, near.2 + a * b, near.3 + a * a, near.4 + b * b);
+            far = (far.0 + a, far.1 + c, far.2 + a * c, far.3 + a * a, far.4 + c * c);
+        }
+        let corr = |(sx, sy, sxy, sxx, syy): (f64, f64, f64, f64, f64)| {
+            let nf = n as f64;
+            let cov = sxy / nf - (sx / nf) * (sy / nf);
+            let vx = sxx / nf - (sx / nf).powi(2);
+            let vy = syy / nf - (sy / nf).powi(2);
+            cov / (vx * vy).sqrt()
+        };
+        assert!(corr(near) > corr(far) + 0.2, "near={} far={}", corr(near), corr(far));
+    }
+}

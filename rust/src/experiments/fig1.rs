@@ -1,0 +1,74 @@
+//! Fig. 1 — "Carbon footprint of A100x4 GPU server running per second
+//! inference application when powered by energy sources with different
+//! carbon intensity": yearly operational vs embodied carbon per energy
+//! source, showing CPU embodied dominating under renewables.
+
+use crate::carbon::{grid_intensities, ServerPowerModel};
+
+#[derive(Clone, Debug)]
+pub struct Fig1Row {
+    pub source: &'static str,
+    pub ci_g_per_kwh: f64,
+    pub operational_kg_yr: f64,
+    pub cpu_embodied_kg_yr: f64,
+    pub gpu_embodied_kg_yr: f64,
+    pub other_embodied_kg_yr: f64,
+    pub cpu_share: f64,
+}
+
+pub fn run(model: &ServerPowerModel) -> Vec<Fig1Row> {
+    grid_intensities()
+        .into_iter()
+        .map(|(source, ci)| {
+            let (cpu, gpu, other) = model.yearly_embodied_kg();
+            Fig1Row {
+                source,
+                ci_g_per_kwh: ci,
+                operational_kg_yr: model.yearly_operational_kg(ci),
+                cpu_embodied_kg_yr: cpu,
+                gpu_embodied_kg_yr: gpu,
+                other_embodied_kg_yr: other,
+                cpu_share: model.cpu_embodied_share(ci),
+            }
+        })
+        .collect()
+}
+
+pub fn print(rows: &[Fig1Row]) {
+    println!("\nFig 1 — A100x4 server yearly carbon by energy source (kgCO2eq/yr)");
+    println!(
+        "{:<10} {:>10} {:>14} {:>14} {:>14} {:>14} {:>10}",
+        "source", "gCO2/kWh", "operational", "cpu_embodied", "gpu_embodied", "other_embodied",
+        "cpu_share"
+    );
+    for r in rows {
+        println!(
+            "{:<10} {:>10.0} {:>14.1} {:>14.1} {:>14.1} {:>14.1} {:>9.1}%",
+            r.source,
+            r.ci_g_per_kwh,
+            r.operational_kg_yr,
+            r.cpu_embodied_kg_yr,
+            r.gpu_embodied_kg_yr,
+            r.other_embodied_kg_yr,
+            r.cpu_share * 100.0
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embodied_flat_operational_scales() {
+        let rows = run(&ServerPowerModel::a100x4());
+        assert_eq!(rows.len(), 6);
+        for w in rows.windows(2) {
+            assert!(w[1].operational_kg_yr > w[0].operational_kg_yr);
+            assert_eq!(w[0].cpu_embodied_kg_yr, w[1].cpu_embodied_kg_yr);
+        }
+        // Under wind, CPU embodied share is substantial; under coal, tiny.
+        assert!(rows[0].cpu_share > 0.25);
+        assert!(rows.last().unwrap().cpu_share < 0.05);
+    }
+}

@@ -1,0 +1,110 @@
+//! Fig. 2 — "Distributions of running inference tasks in an LLM inference
+//! cluster of 22 H100 machines".
+//!
+//! The motivating observation (§2.2): with each CPU task on a dedicated
+//! core (stock allocation), per-machine concurrent task counts have **low
+//! means** (O1: underutilization) with **occasional bursts** (O2: the
+//! reason for high core counts). One subplot per throughput level; here,
+//! one row per machine with a text violin.
+
+use super::Scale;
+use crate::cluster::Cluster;
+use crate::util::stats::{Histogram, Summary};
+
+#[derive(Clone, Debug)]
+pub struct Fig2Machine {
+    pub machine: usize,
+    pub role: &'static str,
+    pub tasks: Summary,
+    pub sparkline: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig2Level {
+    pub rate: f64,
+    pub machines: Vec<Fig2Machine>,
+}
+
+/// Run the Fig. 2 observation study: stock (`linux`) placement, every
+/// task on a dedicated core, at each throughput level.
+pub fn run(scale: &Scale, cores: usize) -> Vec<Fig2Level> {
+    let mut levels = Vec::new();
+    for &rate in &scale.rates {
+        let trace = scale.trace(rate);
+        let cfg = scale.config(cores, "linux");
+        let mut cluster = Cluster::new(cfg);
+        let result = cluster.run(&trace);
+        let machines = (0..result.collector.n_machines)
+            .map(|m| {
+                let samples = &result.collector.task_samples[m];
+                let mut h = Histogram::new(0.0, 40.0, 40);
+                for &s in samples {
+                    h.add(s);
+                }
+                Fig2Machine {
+                    machine: m,
+                    role: if m < scale.n_prompt { "prompt" } else { "token" },
+                    tasks: Summary::of(samples),
+                    sparkline: h.sparkline(),
+                }
+            })
+            .collect();
+        levels.push(Fig2Level { rate, machines });
+    }
+    levels
+}
+
+pub fn print(levels: &[Fig2Level]) {
+    for level in levels {
+        println!("\nFig 2 — concurrent inference tasks per machine @ {} rps", level.rate);
+        println!(
+            "{:<10} {:<8} {:>8} {:>8} {:>8} {:>8}  {}",
+            "machine", "role", "mean", "p50", "p99", "max", "distribution [0..40 tasks]"
+        );
+        for m in &level.machines {
+            println!(
+                "{:<10} {:<8} {:>8.2} {:>8.1} {:>8.1} {:>8.0}  |{}|",
+                m.machine, m.role, m.tasks.mean, m.tasks.p50, m.tasks.p99, m.tasks.max, m.sparkline
+            );
+        }
+    }
+}
+
+/// The two key observations as checks: O1 low means, O2 bursts.
+pub fn check_shape(levels: &[Fig2Level], cores: usize) -> Vec<String> {
+    let mut violations = Vec::new();
+    for level in levels {
+        for m in &level.machines {
+            // O1: cores are mostly underutilized — mean ≪ core count.
+            if m.tasks.mean > cores as f64 * 0.5 {
+                violations.push(format!(
+                    "rate={} machine={}: mean {} not ≪ {} cores",
+                    level.rate, m.machine, m.tasks.mean, cores
+                ));
+            }
+        }
+        // O2: bursts exist — some machine's max well above its mean.
+        let burst = level.machines.iter().any(|m| m.tasks.max >= (3.0 * m.tasks.mean).max(4.0));
+        if !burst {
+            violations.push(format!("rate={}: no burst observed", level.rate));
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observations_hold_on_smoke_scale() {
+        let mut scale = Scale::smoke();
+        scale.duration_s = 30.0;
+        scale.rates = vec![10.0];
+        let levels = run(&scale, 16);
+        assert_eq!(levels.len(), 1);
+        assert_eq!(levels[0].machines.len(), 4);
+        let violations = check_shape(&levels, 16);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+}

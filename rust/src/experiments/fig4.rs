@@ -1,0 +1,94 @@
+//! Fig. 4 — "Changes in operating temperature when 6 out of 12 cores set
+//! to deep idle in an Intel Xeon CPU" (Table 1's measurement experiment).
+//!
+//! Our substitute for the authors' hardware campaign: a first-order
+//! thermal model per core, driven through the same schedule — all 12
+//! cores 100 % utilized, then 6 cores parked in C6 mid-experiment, then
+//! woken again. The steady plateaus must land on Table 1's values.
+
+use crate::cpu::{CState, TemperatureModel, TransientThermal};
+
+#[derive(Clone, Debug)]
+pub struct Fig4Point {
+    pub t_s: f64,
+    /// Mean temperature of the always-active (allocated) group.
+    pub active_group_c: f64,
+    /// Mean temperature of the toggled group.
+    pub toggled_group_c: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig4Result {
+    pub points: Vec<Fig4Point>,
+    pub idle_start_s: f64,
+    pub idle_end_s: f64,
+}
+
+/// Simulate the 12-core experiment: toggle 6 cores to C6 during
+/// [idle_start, idle_end).
+pub fn run(duration_s: f64, idle_start_s: f64, idle_end_s: f64, dt_s: f64) -> Fig4Result {
+    let temps = TemperatureModel::paper_default();
+    let tau = 30.0;
+    let mut active: Vec<TransientThermal> =
+        (0..6).map(|_| TransientThermal::new(temps.active_allocated_c, tau)).collect();
+    let mut toggled: Vec<TransientThermal> =
+        (0..6).map(|_| TransientThermal::new(temps.active_allocated_c, tau)).collect();
+    let mut points = Vec::new();
+    let mut t = 0.0;
+    while t <= duration_s {
+        let toggled_state =
+            if t >= idle_start_s && t < idle_end_s { CState::C6 } else { CState::C0 };
+        // Allocated cores hold the Table-1 allocated target; toggled cores
+        // chase their state's target.
+        let target_toggled = temps.steady_c(toggled_state, toggled_state == CState::C0);
+        for c in &mut active {
+            c.step(temps.active_allocated_c, dt_s);
+        }
+        for c in &mut toggled {
+            c.step(target_toggled, dt_s);
+        }
+        points.push(Fig4Point {
+            t_s: t,
+            active_group_c: active.iter().map(|c| c.temp_c).sum::<f64>() / 6.0,
+            toggled_group_c: toggled.iter().map(|c| c.temp_c).sum::<f64>() / 6.0,
+        });
+        t += dt_s;
+    }
+    Fig4Result { points, idle_start_s, idle_end_s }
+}
+
+pub fn print(r: &Fig4Result) {
+    println!("\nFig 4 — core temperatures, 6/12 cores toggled to C6 during [{}, {}) s", r.idle_start_s, r.idle_end_s);
+    println!("{:<10} {:>16} {:>16}", "t_s", "active_group_C", "toggled_group_C");
+    for p in r.points.iter().step_by((r.points.len() / 30).max(1)) {
+        println!("{:<10.0} {:>16.2} {:>16.2}", p.t_s, p.active_group_c, p.toggled_group_c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plateaus_match_table1() {
+        let r = run(600.0, 120.0, 420.0, 1.0);
+        // Just before idling: both groups at 54.
+        let before = r.points.iter().find(|p| p.t_s == 119.0).unwrap();
+        assert!((before.toggled_group_c - 54.0).abs() < 0.1);
+        // Deep in the idle window: toggled at 48, active still 54.
+        let during = r.points.iter().find(|p| p.t_s == 400.0).unwrap();
+        assert!((during.toggled_group_c - 48.0).abs() < 0.1, "{}", during.toggled_group_c);
+        assert!((during.active_group_c - 54.0).abs() < 0.1);
+        // After waking: back to 54 (allocated).
+        let after = r.points.last().unwrap();
+        assert!((after.toggled_group_c - 54.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn transition_is_smooth_not_step() {
+        let r = run(600.0, 120.0, 420.0, 1.0);
+        let p = r.points.iter().find(|p| p.t_s == 135.0).unwrap();
+        // 15 s after idling with tau=30: partway between 54 and 48.
+        assert!(p.toggled_group_c < 53.0 && p.toggled_group_c > 48.5, "{}", p.toggled_group_c);
+    }
+}

@@ -1,0 +1,59 @@
+//! Fig. 5 — "Behavior of the piecewise Reaction Function (F) for
+//! utilization of the CPU": the F(e) curve over e ∈ [−1, 1].
+
+use crate::policy::ReactionFunction;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fig5Point {
+    pub e: f64,
+    pub f: f64,
+}
+
+pub fn run(steps: usize) -> Vec<Fig5Point> {
+    let rf = ReactionFunction::default();
+    (0..=steps)
+        .map(|i| {
+            let e = -1.0 + 2.0 * i as f64 / steps as f64;
+            Fig5Point { e, f: rf.eval(e) }
+        })
+        .collect()
+}
+
+pub fn print(points: &[Fig5Point]) {
+    println!("\nFig 5 — reaction function F(e)");
+    println!("{:>8} {:>10}  curve", "e", "F(e)");
+    for p in points {
+        let col = ((p.f + 1.0) / 2.0 * 60.0) as usize;
+        let mut line = vec![' '; 61];
+        line[30] = '|';
+        line[col.min(60)] = '*';
+        println!("{:>8.3} {:>10.4}  {}", p.e, p.f, line.iter().collect::<String>());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_spans_domain_and_range() {
+        let pts = run(40);
+        assert_eq!(pts.len(), 41);
+        assert!((pts[0].e + 1.0).abs() < 1e-12);
+        assert!((pts.last().unwrap().e - 1.0).abs() < 1e-12);
+        assert!(pts[0].f < -0.99);
+        assert!(pts.last().unwrap().f > 0.99);
+        // Midpoint is zero.
+        let mid = &pts[20];
+        assert!(mid.e.abs() < 1e-12 && mid.f.abs() < 1e-12);
+    }
+
+    #[test]
+    fn asymmetry_visible_in_curve() {
+        let pts = run(200);
+        // At |e| = 0.2, the oversubscription side reacts harder.
+        let pos = pts.iter().find(|p| (p.e - 0.2).abs() < 1e-9).unwrap();
+        let neg = pts.iter().find(|p| (p.e + 0.2).abs() < 1e-9).unwrap();
+        assert!(neg.f.abs() > pos.f.abs());
+    }
+}

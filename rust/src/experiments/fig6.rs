@@ -1,0 +1,152 @@
+//! Fig. 6 — "Comparison of managing aging effects in CPU".
+//!
+//! Two metrics per (VM core count, throughput, policy), each reported as
+//! cluster percentiles over the 22 machines:
+//!
+//! * **Frequency-CV performance** `1 − CV(f)`: decreases when the
+//!   coefficient of variation of the per-machine core-frequency
+//!   distribution increases (aging unevenness).
+//! * **Frequency performance** `1 − mean(f_red)/f_nom`: decreases when
+//!   mean frequency degradation increases (overall aging).
+//!
+//! Expected shape (paper §6.2): proposed ≫ least-aged > linux on CV
+//! performance; proposed > (least-aged ≈ linux) on frequency performance.
+
+use super::PairedCell;
+use crate::policy::ALL_POLICIES;
+use crate::util::stats::Summary;
+
+/// One row of the Fig. 6 table.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub cores: usize,
+    pub rate: f64,
+    pub policy: String,
+    /// Summary across machines of the per-machine frequency CV.
+    pub cv: Summary,
+    /// Summary across machines of per-machine mean degradation (GHz).
+    pub fred: Summary,
+    /// CV performance at p50/p99 (higher is better).
+    pub cv_perf_p50: f64,
+    pub cv_perf_p99: f64,
+    /// Frequency performance at p50/p99 (higher is better).
+    pub freq_perf_p50: f64,
+    pub freq_perf_p99: f64,
+}
+
+/// Compute Fig. 6 rows from a run matrix.
+pub fn rows(cells: &[PairedCell], f_nominal_ghz: f64) -> Vec<Fig6Row> {
+    let mut out = Vec::new();
+    for cell in cells {
+        for &pol in &ALL_POLICIES {
+            let r = cell.result(pol);
+            let cvs = r.freq_cv_per_machine();
+            let freds = r.mean_fred_per_machine();
+            let cv = Summary::of(&cvs);
+            let fred = Summary::of(&freds);
+            out.push(Fig6Row {
+                cores: cell.cores,
+                rate: cell.rate,
+                policy: pol.to_string(),
+                cv_perf_p50: 1.0 - cv.p50,
+                cv_perf_p99: 1.0 - cv.p99,
+                freq_perf_p50: 1.0 - fred.p50 / f_nominal_ghz,
+                freq_perf_p99: 1.0 - fred.p99 / f_nominal_ghz,
+                cv,
+                fred,
+            });
+        }
+    }
+    out
+}
+
+/// Render the figure as text tables (one per core count), mirroring the
+/// paper's 6a (40 cores) and 6b (80 cores) subplots.
+pub fn print(rows: &[Fig6Row]) {
+    let mut cores_seen: Vec<usize> = rows.iter().map(|r| r.cores).collect();
+    cores_seen.sort_unstable();
+    cores_seen.dedup();
+    for cores in cores_seen {
+        println!("\nFig 6 — VM cores = {cores}  (higher = better)");
+        println!(
+            "{:<8} {:<12} {:>14} {:>14} {:>16} {:>16} {:>12} {:>14}",
+            "rate", "policy", "cv_perf_p50", "cv_perf_p99", "freq_perf_p50", "freq_perf_p99",
+            "cv_p50", "fred_p50_mhz"
+        );
+        for r in rows.iter().filter(|r| r.cores == cores) {
+            println!(
+                "{:<8} {:<12} {:>14.6} {:>14.6} {:>16.9} {:>16.9} {:>12.6} {:>14.6}",
+                r.rate,
+                r.policy,
+                r.cv_perf_p50,
+                r.cv_perf_p99,
+                r.freq_perf_p50,
+                r.freq_perf_p99,
+                r.cv.p50,
+                r.fred.p50 * 1000.0
+            );
+        }
+    }
+}
+
+/// Sanity assertions on the paper's expected ordering; returns a list of
+/// violations (empty = shape reproduced).
+pub fn check_shape(rows: &[Fig6Row]) -> Vec<String> {
+    let mut violations = Vec::new();
+    // Group rows by (cores, rate).
+    let mut keys: Vec<(usize, u64)> = rows.iter().map(|r| (r.cores, r.rate as u64)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    for (cores, rate) in keys {
+        let find = |pol: &str| {
+            rows.iter()
+                .find(|r| r.cores == cores && r.rate as u64 == rate && r.policy == pol)
+                .unwrap()
+        };
+        let (linux, least, prop) = (find("linux"), find("least-aged"), find("proposed"));
+        if prop.freq_perf_p50 <= linux.freq_perf_p50 {
+            violations.push(format!(
+                "cores={cores} rate={rate}: proposed freq perf {:.9} !> linux {:.9}",
+                prop.freq_perf_p50, linux.freq_perf_p50
+            ));
+        }
+        if prop.freq_perf_p50 <= least.freq_perf_p50 {
+            violations.push(format!(
+                "cores={cores} rate={rate}: proposed freq perf {:.9} !> least-aged {:.9}",
+                prop.freq_perf_p50, least.freq_perf_p50
+            ));
+        }
+        // least-aged evens out aging better than linux (CV performance).
+        if least.cv_perf_p50 < linux.cv_perf_p50 * 0.999 {
+            violations.push(format!(
+                "cores={cores} rate={rate}: least-aged cv perf {:.6} < linux {:.6}",
+                least.cv_perf_p50, linux.cv_perf_p50
+            ));
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::{run_matrix, Scale};
+
+    #[test]
+    fn rows_and_shape_on_smoke_scale() {
+        let mut scale = Scale::smoke();
+        scale.duration_s = 20.0;
+        scale.rates = vec![8.0];
+        let cells = run_matrix(&scale);
+        let rows = rows(&cells, 2.6);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.cv.p50 >= 0.0);
+            assert!(r.fred.p50 > 0.0, "{}: no aging measured", r.policy);
+            assert!(r.freq_perf_p50 < 1.0);
+        }
+        // Core ordering claim: proposed degrades least.
+        let violations = check_shape(&rows);
+        assert!(violations.is_empty(), "shape violations: {violations:?}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Fig. 8 — "Comparison of utilization of available cores for running
+//! tasks": distributions of **normalized idle CPU cores**
+//! `(active − running_tasks)/N` sampled across the cluster.
+//!
+//! Positive = underutilization (active cores with nothing pinned),
+//! negative = oversubscription. Expected shape: baselines pile up near
+//! +1.0 (p1–p90 close to 1); the proposed technique sits near 0 — at
+//! least a 77 % smaller p90 — with bounded oversubscription (p1 ≥ −0.1).
+
+use super::PairedCell;
+use crate::policy::ALL_POLICIES;
+use crate::util::stats::{Histogram, Summary};
+
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub cores: usize,
+    pub rate: f64,
+    pub policy: String,
+    /// Distribution of pooled normalized-idle samples.
+    pub idle: Summary,
+    /// Text-mode violin over [−0.2, 1.0].
+    pub sparkline: String,
+}
+
+pub fn rows(cells: &[PairedCell]) -> Vec<Fig8Row> {
+    let mut out = Vec::new();
+    for cell in cells {
+        for &pol in &ALL_POLICIES {
+            let samples = cell.result(pol).pooled_idle_samples();
+            let mut h = Histogram::new(-0.2, 1.0, 48);
+            for &s in &samples {
+                h.add(s);
+            }
+            out.push(Fig8Row {
+                cores: cell.cores,
+                rate: cell.rate,
+                policy: pol.to_string(),
+                idle: Summary::of(&samples),
+                sparkline: h.sparkline(),
+            });
+        }
+    }
+    out
+}
+
+pub fn print(rows: &[Fig8Row]) {
+    println!("\nFig 8 — normalized idle cores (negative = oversubscription)");
+    println!(
+        "{:<8} {:<8} {:<12} {:>8} {:>8} {:>8} {:>8} {:>8}  {}",
+        "cores", "rate", "policy", "p1", "p50", "p90", "p99", "mean", "distribution [-0.2 .. 1.0]"
+    );
+    for r in rows {
+        println!(
+            "{:<8} {:<8} {:<12} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}  |{}|",
+            r.cores, r.rate, r.policy, r.idle.p1, r.idle.p50, r.idle.p90, r.idle.p99, r.idle.mean,
+            r.sparkline
+        );
+    }
+}
+
+/// Shape checks for the paper's claims.
+pub fn check_shape(rows: &[Fig8Row]) -> Vec<String> {
+    let mut violations = Vec::new();
+    for r in rows {
+        match r.policy.as_str() {
+            "linux" | "least-aged" => {
+                // No oversubscription; heavy underutilization.
+                if r.idle.p1 < 0.0 {
+                    violations.push(format!("{} oversubscribed (p1={})", r.policy, r.idle.p1));
+                }
+                if r.idle.p90 < 0.5 {
+                    violations.push(format!(
+                        "{} p90={:.3} not near 1.0 at cores={} rate={}",
+                        r.policy, r.idle.p90, r.cores, r.rate
+                    ));
+                }
+            }
+            "proposed" => {
+                let linux = rows
+                    .iter()
+                    .find(|x| x.cores == r.cores && x.rate == r.rate && x.policy == "linux")
+                    .unwrap();
+                // ≥77% underutilization reduction at p90 (paper: ≥77.8%).
+                if r.idle.p90 > linux.idle.p90 * 0.35 {
+                    violations.push(format!(
+                        "proposed p90={:.3} not ≪ linux p90={:.3} (cores={} rate={})",
+                        r.idle.p90, linux.idle.p90, r.cores, r.rate
+                    ));
+                }
+                // Oversubscription bounded: p1 ≥ −0.1 ("below 10%").
+                if r.idle.p1 < -0.101 {
+                    violations.push(format!(
+                        "proposed oversubscription p1={:.3} exceeds 10% (cores={} rate={})",
+                        r.idle.p1, r.cores, r.rate
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::{run_matrix, Scale};
+
+    #[test]
+    fn smoke_scale_idle_distributions() {
+        let mut scale = Scale::smoke();
+        scale.duration_s = 30.0;
+        scale.rates = vec![8.0];
+        scale.core_counts = vec![16];
+        let cells = run_matrix(&scale);
+        let rows = rows(&cells);
+        assert_eq!(rows.len(), 3);
+        let violations = check_shape(&rows);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+}

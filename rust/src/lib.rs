@@ -1,0 +1,28 @@
+//! carbon-sim: reproduction of "Aging-aware CPU Core Management for
+//! Embodied Carbon Amortization in Cloud LLM Inference" (Hewage et al.,
+//! 2025) as a Rust + JAX + Pallas three-layer system.
+//!
+//! * [`cpu`] — NBTI aging, process variation, C-states (the §3 system model).
+//! * [`policy`] — the proposed technique (Algorithms 1–2) and baselines.
+//! * [`cluster`] — the from-scratch splitwise-sim equivalent (§5).
+//! * [`trace`] — Azure-like trace synthesis and replay (§6.1.2).
+//! * [`carbon`] — embodied/operational carbon accounting (Figs. 1 and 7).
+//! * [`experiments`] — one runner per paper figure.
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts.
+//! * [`serving`] — the real mini serving stack (end-to-end example).
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+
+pub mod carbon;
+pub mod cluster;
+pub mod config;
+pub mod cpu;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod policy;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,387 @@
+//! carbon-sim CLI launcher.
+//!
+//! Subcommands:
+//!   simulate    run the cluster simulator on a (synthetic or file) trace
+//!   figure      regenerate a paper figure (1, 2, 4, 5, 6, 7, 8)
+//!   trace-gen   synthesize an Azure-like trace to a JSONL file
+//!   serve       run the real PJRT serving stack on sample prompts
+//!   aging-demo  print NBTI aging curves for core schedules
+//!
+//! Run `carbon-sim <subcommand> --help` for options.
+
+use std::path::Path;
+
+use carbon_sim::carbon::{EmbodiedModel, ServerPowerModel};
+use carbon_sim::cluster::{Cluster, ClusterConfig};
+use carbon_sim::cpu::{AgingParams, TemperatureModel};
+use carbon_sim::experiments::{self, Scale};
+use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
+use carbon_sim::util::cli::Cli;
+use carbon_sim::util::stats::Summary;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, rest)) => (c.as_str(), rest.to_vec()),
+        None => {
+            eprintln!("{}", top_usage());
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd {
+        "simulate" => cmd_simulate(&rest),
+        "figure" => cmd_figure(&rest),
+        "trace-gen" => cmd_trace_gen(&rest),
+        "serve" => cmd_serve(&rest),
+        "aging-demo" => cmd_aging_demo(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n\n{}", top_usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn top_usage() -> String {
+    "carbon-sim — aging-aware CPU core management for LLM inference (paper reproduction)\n\n\
+     Subcommands:\n\
+     \x20 simulate     run the cluster simulator\n\
+     \x20 figure       regenerate a paper figure (--fig 1|2|4|5|6|7|8)\n\
+     \x20 trace-gen    synthesize an Azure-like trace (JSONL)\n\
+     \x20 serve        run the PJRT serving stack (needs `make artifacts`)\n\
+     \x20 aging-demo   print NBTI aging curves\n"
+        .to_string()
+}
+
+fn parse_or_exit(cli: &Cli, rest: &[String]) -> carbon_sim::util::cli::Args {
+    match cli.parse(rest) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+// ----------------------------------------------------------------- simulate
+
+fn cmd_simulate(rest: &[String]) -> i32 {
+    let cli = Cli::new("carbon-sim simulate", "run the LLM cluster simulator")
+        .opt("policy", "", "core policy: proposed | linux | least-aged (default: proposed)")
+        .opt("rate", "60", "request rate (rps)")
+        .opt("duration", "60", "trace duration (s)")
+        .opt("cores", "", "CPU cores per machine (default: 40)")
+        .opt("prompt-machines", "", "prompt (prefill) machines (default: 5)")
+        .opt("token-machines", "", "token (decode) machines (default: 17)")
+        .opt("workload", "mixed", "workload: conv | code | mixed")
+        .opt("trace", "", "replay a JSONL trace file instead of synthesizing")
+        .opt("config", "", "JSON cluster config file (see configs/; flags override)")
+        .opt("seed", "", "RNG seed (default: 42)")
+        .flag("pjrt-aging", "cross-check final aging through the PJRT aging_step artifact");
+    let a = parse_or_exit(&cli, rest);
+
+    let workload = match Workload::parse(&a.str_or("workload", "mixed")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let trace = if a.str_or("trace", "").is_empty() {
+        AzureTraceGen::new(TraceParams {
+            rate_rps: a.f64_or("rate", 60.0),
+            duration_s: a.f64_or("duration", 60.0),
+            workload,
+            seed: a.u64_or("seed", 42),
+        })
+        .generate()
+    } else {
+        match carbon_sim::trace::loader::load(Path::new(&a.str_or("trace", ""))) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("trace load failed: {e}");
+                return 1;
+            }
+        }
+    };
+
+    let base = match a.str_or("config", "").as_str() {
+        "" => ClusterConfig::default(),
+        path => match carbon_sim::config::cluster_from_file(Path::new(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        },
+    };
+    // Flags override the config file, which overrides paper defaults.
+    // (Empty-string CLI defaults fail to parse and fall through to `base`.)
+    let policy_flag = a.str_or("policy", "");
+    let cfg = ClusterConfig {
+        n_prompt: a.usize_or("prompt-machines", base.n_prompt),
+        n_token: a.usize_or("token-machines", base.n_token),
+        cores_per_cpu: a.usize_or("cores", base.cores_per_cpu),
+        policy: if policy_flag.is_empty() { base.policy.clone() } else { policy_flag },
+        seed: a.u64_or("seed", base.seed),
+        ..base
+    };
+    let mut cluster = Cluster::new(cfg);
+    let result = cluster.run(&trace);
+
+    println!(
+        "── simulation ({} @ {:.0} rps, {} cores) ──",
+        result.policy, result.rate_rps, result.cores_per_cpu
+    );
+    println!("requests completed  {:>12}", result.completed_requests);
+    println!("sim duration        {:>12.1} s", result.duration_s);
+    println!("events processed    {:>12}", result.events_processed);
+    println!(
+        "wall time           {:>12.2} s  ({:.1}M events/s)",
+        result.wall_time_s,
+        result.events_processed as f64 / result.wall_time_s / 1e6
+    );
+    let ttft = result.ttft_summary();
+    let e2e = result.e2e_summary();
+    println!("TTFT  p50/p99       {:>9.3} / {:.3} s", ttft.p50, ttft.p99);
+    println!("E2E   p50/p99       {:>9.3} / {:.3} s", e2e.p50, e2e.p99);
+    let cv = Summary::of(&result.freq_cv_per_machine());
+    let fred = Summary::of(&result.mean_fred_per_machine());
+    println!("freq CV  p50/p99    {:>9.5} / {:.5}", cv.p50, cv.p99);
+    println!("mean fred p50/p99   {:>9.3} / {:.3} MHz", fred.p50 * 1e3, fred.p99 * 1e3);
+    let idle = Summary::of(&result.pooled_idle_samples());
+    println!("norm idle p1/p50/p90 {:>8.3} / {:.3} / {:.3}", idle.p1, idle.p50, idle.p90);
+    println!("oversub fraction    {:>12.4}", result.oversub_fraction());
+
+    if a.flag("pjrt-aging") {
+        match pjrt_aging_check(&result) {
+            Ok(max_err) => println!("pjrt aging_step cross-check: max |Δf| = {max_err:.3e} GHz ✓"),
+            Err(e) => {
+                eprintln!("pjrt aging check failed: {e:#}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+/// Re-run the final frequency computation through the PJRT aging artifact
+/// and compare with the simulator's pure-Rust values.
+fn pjrt_aging_check(result: &carbon_sim::metrics::SimResult) -> anyhow::Result<f64> {
+    use carbon_sim::runtime::{AgingStepPjrt, Runtime};
+    let rt = Runtime::cpu(Runtime::default_artifacts_dir())?;
+    let step = AgingStepPjrt::load(&rt)?;
+    let aging = AgingParams::paper_default();
+    let temps = TemperatureModel::paper_default();
+    let m = step.machines.min(result.f0.len());
+    let c = step.cores.min(result.f0[0].len());
+    // tau = 0 keeps the accumulated dvth frozen; the kernel then reports
+    // f = f0 (1 - dvth/(vdd - vth)) which must match the simulator.
+    let mut dvth = vec![0f32; step.machines * step.cores];
+    let mut f0 = vec![2.6f32; step.machines * step.cores];
+    let adf = vec![
+        aging.adf(temps.steady_k(carbon_sim::cpu::CState::C0, true), 1.0) as f32;
+        step.machines * step.cores
+    ];
+    let tau = vec![0f32; step.machines * step.cores];
+    for i in 0..m {
+        for j in 0..c {
+            let core_f0 = result.f0[i][j];
+            let core_f = result.freq[i][j];
+            f0[i * step.cores + j] = core_f0 as f32;
+            // Invert Eq. (1) to recover dvth from the simulator's result.
+            dvth[i * step.cores + j] = ((1.0 - core_f / core_f0) * (aging.vdd - aging.vth)) as f32;
+        }
+    }
+    let (_, freqs) = step.step(&dvth, &adf, &tau, &f0)?;
+    let mut max_err = 0f64;
+    for i in 0..m {
+        for j in 0..c {
+            let err = (freqs[i * step.cores + j] as f64 - result.freq[i][j]).abs();
+            max_err = max_err.max(err);
+        }
+    }
+    anyhow::ensure!(max_err < 1e-5, "PJRT/Rust aging mismatch: {max_err}");
+    Ok(max_err)
+}
+
+// ----------------------------------------------------------------- figure
+
+fn cmd_figure(rest: &[String]) -> i32 {
+    let cli = Cli::new("carbon-sim figure", "regenerate a paper figure")
+        .opt("fig", "6", "figure number: 1 | 2 | 4 | 5 | 6 | 7 | 8")
+        .opt("scale", "paper", "experiment scale: paper | smoke")
+        .opt("duration", "0", "override trace duration (s); 0 = scale default");
+    let a = parse_or_exit(&cli, rest);
+    let mut scale = match a.str_or("scale", "paper").as_str() {
+        "paper" => Scale::paper(),
+        "smoke" => Scale::smoke(),
+        other => {
+            eprintln!("unknown scale '{other}'");
+            return 2;
+        }
+    };
+    let dur = a.f64_or("duration", 0.0);
+    if dur > 0.0 {
+        scale.duration_s = dur;
+    }
+    match a.str_or("fig", "6").as_str() {
+        "1" => experiments::fig1::print(&experiments::fig1::run(&ServerPowerModel::a100x4())),
+        "2" => {
+            let levels = experiments::fig2::run(&scale, scale.core_counts[0]);
+            experiments::fig2::print(&levels);
+        }
+        "4" => experiments::fig4::print(&experiments::fig4::run(600.0, 120.0, 420.0, 1.0)),
+        "5" => experiments::fig5::print(&experiments::fig5::run(40)),
+        "6" => {
+            let cells = experiments::run_matrix(&scale);
+            experiments::fig6::print(&experiments::fig6::rows(&cells, 2.6));
+        }
+        "7" => {
+            let cells = experiments::run_matrix(&scale);
+            experiments::fig7::print(&experiments::fig7::rows(
+                &cells,
+                &EmbodiedModel::paper_default(),
+            ));
+        }
+        "8" => {
+            let cells = experiments::run_matrix(&scale);
+            experiments::fig8::print(&experiments::fig8::rows(&cells));
+        }
+        other => {
+            eprintln!("unknown figure '{other}'");
+            return 2;
+        }
+    }
+    0
+}
+
+// ----------------------------------------------------------------- trace-gen
+
+fn cmd_trace_gen(rest: &[String]) -> i32 {
+    let cli = Cli::new("carbon-sim trace-gen", "synthesize an Azure-like JSONL trace")
+        .opt("rate", "60", "request rate (rps)")
+        .opt("duration", "120", "duration (s)")
+        .opt("workload", "mixed", "conv | code | mixed")
+        .opt("seed", "42", "RNG seed")
+        .opt("out", "trace.jsonl", "output path");
+    let a = parse_or_exit(&cli, rest);
+    let workload = match Workload::parse(&a.str_or("workload", "mixed")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let trace = AzureTraceGen::new(TraceParams {
+        rate_rps: a.f64_or("rate", 60.0),
+        duration_s: a.f64_or("duration", 120.0),
+        workload,
+        seed: a.u64_or("seed", 42),
+    })
+    .generate();
+    let out = a.str_or("out", "trace.jsonl");
+    match carbon_sim::trace::loader::save(&trace, Path::new(&out)) {
+        Ok(()) => {
+            println!(
+                "wrote {} requests ({:.1} rps) to {out}",
+                trace.requests.len(),
+                trace.rate_rps()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+// ----------------------------------------------------------------- serve
+
+fn cmd_serve(rest: &[String]) -> i32 {
+    let cli = Cli::new("carbon-sim serve", "run the PJRT serving stack (needs `make artifacts`)")
+        .opt("requests", "16", "number of sample requests")
+        .opt("max-new", "32", "max new tokens per request")
+        .opt("policy", "proposed", "shadow core-management policy")
+        .opt("cores", "40", "shadow CPU cores")
+        .opt("artifacts", "", "artifacts dir (default: ./artifacts)");
+    let a = parse_or_exit(&cli, rest);
+    let mut cfg = carbon_sim::serving::ServerConfig {
+        policy: a.str_or("policy", "proposed"),
+        shadow_cores: a.usize_or("cores", 40),
+        ..Default::default()
+    };
+    let art = a.str_or("artifacts", "");
+    if !art.is_empty() {
+        cfg.artifacts_dir = art.into();
+    }
+    let server = match carbon_sim::serving::Server::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server start failed: {e:#}\nhint: run `make artifacts` first");
+            return 1;
+        }
+    };
+    let n = a.usize_or("requests", 16);
+    let max_new = a.usize_or("max-new", 32);
+    let prompts = [
+        "Summarize the maintenance schedule for rack 12.",
+        "Write a haiku about silicon aging.",
+        "Explain NBTI to a new SRE.",
+        "What is the carbon footprint of this cluster?",
+    ];
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            server.submit(carbon_sim::serving::ServeRequest {
+                id: i as u64,
+                prompt: prompts[i % prompts.len()].to_string(),
+                max_new_tokens: max_new,
+            })
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        if i < 3 {
+            println!(
+                "req {:>3}: {} prompt toks -> {} gen toks, ttft {:.1} ms, e2e {:.1} ms",
+                resp.id,
+                resp.prompt_tokens,
+                resp.generated_tokens,
+                resp.ttft_s * 1e3,
+                resp.e2e_s * 1e3
+            );
+        }
+    }
+    server.shutdown().print();
+    0
+}
+
+// ----------------------------------------------------------------- aging-demo
+
+fn cmd_aging_demo(rest: &[String]) -> i32 {
+    let cli =
+        Cli::new("carbon-sim aging-demo", "print NBTI aging curves").opt("years", "10", "horizon");
+    let a = parse_or_exit(&cli, rest);
+    let years = a.f64_or("years", 10.0);
+    let aging = AgingParams::paper_default();
+    let temps = TemperatureModel::paper_default();
+    println!("NBTI frequency degradation vs schedule (f0 = {} GHz)", aging.f_nominal_ghz);
+    println!(
+        "{:>6} {:>14} {:>14} {:>14}",
+        "year", "always-on(%)", "50%-halted(%)", "90%-halted(%)"
+    );
+    for step in 1..=(years as usize) {
+        let t = step as f64 * carbon_sim::cpu::aging::SECONDS_PER_YEAR;
+        let adf = aging.adf(temps.steady_k(carbon_sim::cpu::CState::C0, true), 1.0);
+        let on = aging.rel_reduction(aging.dvth_step(0.0, adf, t));
+        let half = aging.rel_reduction(aging.dvth_step(0.0, adf, t * 0.5));
+        let tenth = aging.rel_reduction(aging.dvth_step(0.0, adf, t * 0.1));
+        println!("{:>6} {:>14.2} {:>14.2} {:>14.2}", step, on * 100.0, half * 100.0, tenth * 100.0);
+    }
+    0
+}

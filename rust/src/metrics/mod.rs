@@ -1,0 +1,205 @@
+//! Metrics collection for simulation runs.
+//!
+//! Gathers exactly what the paper's evaluation consumes:
+//!
+//! * per-machine concurrent inference-task samples (Fig. 2 violins),
+//! * per-machine normalized idle-core samples (Fig. 8; positive =
+//!   underutilization, negative = oversubscription),
+//! * the oversubscription integral `T_oversub` (§3.3),
+//! * end-of-run per-core frequencies → CV + mean degradation (Fig. 6),
+//! * request service-quality stats (TTFT / E2E latency).
+
+use crate::util::stats::{self, Summary};
+
+/// Raw sample streams captured during a run.
+#[derive(Clone, Debug)]
+pub struct Collector {
+    pub n_machines: usize,
+    /// Per machine: sampled concurrent running inference tasks.
+    pub task_samples: Vec<Vec<f64>>,
+    /// Per machine: sampled normalized idle cores.
+    pub idle_samples: Vec<Vec<f64>>,
+    /// Per machine: ∫ u(T−(N−N_idle))·(T−(N−N_idle)) dt  (task-seconds).
+    pub oversub_integral: Vec<f64>,
+    /// Per machine: ∫ active_core_count dt (core-seconds in C0).
+    pub active_core_seconds: Vec<f64>,
+    pub last_integral_t: f64,
+    /// Time-to-first-token per request (s).
+    pub ttft: Vec<f64>,
+    /// End-to-end latency per request (s).
+    pub e2e: Vec<f64>,
+}
+
+impl Collector {
+    pub fn new(n_machines: usize) -> Collector {
+        Collector {
+            n_machines,
+            task_samples: vec![Vec::new(); n_machines],
+            idle_samples: vec![Vec::new(); n_machines],
+            oversub_integral: vec![0.0; n_machines],
+            active_core_seconds: vec![0.0; n_machines],
+            last_integral_t: 0.0,
+            ttft: Vec::new(),
+            e2e: Vec::new(),
+        }
+    }
+
+    /// Record one periodic sampling instant for machine `m`.
+    pub fn sample_machine(&mut self, m: usize, running_tasks: usize, norm_idle: f64) {
+        self.task_samples[m].push(running_tasks as f64);
+        self.idle_samples[m].push(norm_idle);
+    }
+
+    /// Record an event-driven idle sample (taken at task-allocation
+    /// instants, like the paper's per-task measurement points — this is
+    /// what exposes transient oversubscription in Fig. 8).
+    pub fn sample_idle_event(&mut self, m: usize, norm_idle: f64) {
+        self.idle_samples[m].push(norm_idle);
+    }
+
+    /// Advance the time integrals by `dt` given machine `m`'s state.
+    pub fn integrate(&mut self, m: usize, dt: f64, running_tasks: usize, active_cores: usize) {
+        let over = running_tasks as f64 - active_cores as f64;
+        if over > 0.0 {
+            self.oversub_integral[m] += over * dt;
+        }
+        self.active_core_seconds[m] += active_cores as f64 * dt;
+    }
+
+    pub fn record_request(&mut self, ttft_s: f64, e2e_s: f64) {
+        self.ttft.push(ttft_s);
+        self.e2e.push(e2e_s);
+    }
+}
+
+/// End-of-run results: everything the experiment harness and benches need.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub policy: String,
+    pub rate_rps: f64,
+    pub cores_per_cpu: usize,
+    pub duration_s: f64,
+    pub completed_requests: usize,
+    pub events_processed: u64,
+    pub wall_time_s: f64,
+
+    /// Per machine, per core: initial frequency (GHz).
+    pub f0: Vec<Vec<f64>>,
+    /// Per machine, per core: final frequency (GHz).
+    pub freq: Vec<Vec<f64>>,
+
+    pub collector: Collector,
+}
+
+impl SimResult {
+    /// Per-machine coefficient of variation of the final core-frequency
+    /// distribution (the Fig. 6 aging-unevenness metric).
+    pub fn freq_cv_per_machine(&self) -> Vec<f64> {
+        self.freq.iter().map(|f| stats::coeff_of_variation(f)).collect()
+    }
+
+    /// Per-machine mean frequency degradation in GHz (Fig. 6 / Fig. 7
+    /// input): mean over cores of `f0 − f(t_end)`.
+    pub fn mean_fred_per_machine(&self) -> Vec<f64> {
+        self.f0
+            .iter()
+            .zip(self.freq.iter())
+            .map(|(f0s, fs)| {
+                let reds: Vec<f64> = f0s.iter().zip(fs.iter()).map(|(a, b)| a - b).collect();
+                stats::mean(&reds)
+            })
+            .collect()
+    }
+
+    /// All normalized-idle samples pooled across machines (Fig. 8).
+    pub fn pooled_idle_samples(&self) -> Vec<f64> {
+        self.collector.idle_samples.iter().flatten().copied().collect()
+    }
+
+    /// All task-count samples pooled (Fig. 2 aggregate view).
+    pub fn pooled_task_samples(&self) -> Vec<f64> {
+        self.collector.task_samples.iter().flatten().copied().collect()
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.collector.ttft)
+    }
+
+    pub fn e2e_summary(&self) -> Summary {
+        Summary::of(&self.collector.e2e)
+    }
+
+    /// Fraction of total core-seconds spent oversubscribed, cluster-wide.
+    pub fn oversub_fraction(&self) -> f64 {
+        let over: f64 = self.collector.oversub_integral.iter().sum();
+        let active: f64 = self.collector.active_core_seconds.iter().sum();
+        if active == 0.0 {
+            0.0
+        } else {
+            over / active
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result_with_freqs(f0: Vec<Vec<f64>>, freq: Vec<Vec<f64>>) -> SimResult {
+        SimResult {
+            policy: "test".into(),
+            rate_rps: 0.0,
+            cores_per_cpu: 2,
+            duration_s: 1.0,
+            completed_requests: 0,
+            events_processed: 0,
+            wall_time_s: 0.0,
+            f0,
+            freq,
+            collector: Collector::new(1),
+        }
+    }
+
+    #[test]
+    fn cv_and_fred_per_machine() {
+        let r = result_with_freqs(
+            vec![vec![2.6, 2.6], vec![2.6, 2.6]],
+            vec![vec![2.5, 2.5], vec![2.6, 2.4]],
+        );
+        let cv = r.freq_cv_per_machine();
+        assert!(cv[0] < 1e-12); // uniform degradation -> zero CV
+        assert!(cv[1] > 0.01); // uneven -> positive CV
+        let fred = r.mean_fred_per_machine();
+        assert!((fred[0] - 0.1).abs() < 1e-12);
+        assert!((fred[1] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn integrate_only_counts_oversubscription() {
+        let mut c = Collector::new(1);
+        c.integrate(0, 1.0, 5, 8); // underutilized: no oversub
+        assert_eq!(c.oversub_integral[0], 0.0);
+        c.integrate(0, 2.0, 10, 8); // 2 tasks over for 2 s
+        assert!((c.oversub_integral[0] - 4.0).abs() < 1e-12);
+        assert!((c.active_core_seconds[0] - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_appends() {
+        let mut c = Collector::new(2);
+        c.sample_machine(0, 3, 0.5);
+        c.sample_machine(1, 7, -0.1);
+        assert_eq!(c.task_samples[0], vec![3.0]);
+        assert_eq!(c.idle_samples[1], vec![-0.1]);
+    }
+
+    #[test]
+    fn pooled_views() {
+        let mut r = result_with_freqs(vec![vec![2.6]], vec![vec![2.6]]);
+        r.collector = Collector::new(2);
+        r.collector.sample_machine(0, 1, 0.2);
+        r.collector.sample_machine(1, 2, 0.4);
+        assert_eq!(r.pooled_idle_samples(), vec![0.2, 0.4]);
+        assert_eq!(r.pooled_task_samples(), vec![1.0, 2.0]);
+    }
+}

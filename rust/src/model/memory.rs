@@ -1,0 +1,85 @@
+//! KV-cache memory accounting for a token (decode) instance.
+//!
+//! Continuous batching admits a request only when its context fits in the
+//! GPU-memory KV budget; completed requests free their tokens. Token
+//! counts, not bytes, are the unit (bytes = tokens × `kv_bytes_per_token`).
+
+/// Token-granular KV memory pool.
+#[derive(Clone, Copy, Debug)]
+pub struct KvMemory {
+    pub capacity_tokens: u64,
+    pub used_tokens: u64,
+    /// High-water mark for reporting.
+    pub peak_tokens: u64,
+}
+
+impl KvMemory {
+    pub fn new(capacity_tokens: u64) -> KvMemory {
+        KvMemory { capacity_tokens, used_tokens: 0, peak_tokens: 0 }
+    }
+
+    /// Would an allocation of `tokens` fit right now?
+    #[inline]
+    pub fn fits(&self, tokens: u64) -> bool {
+        self.used_tokens + tokens <= self.capacity_tokens
+    }
+
+    /// Reserve `tokens`. Returns false (and does nothing) if it won't fit.
+    pub fn alloc(&mut self, tokens: u64) -> bool {
+        if !self.fits(tokens) {
+            return false;
+        }
+        self.used_tokens += tokens;
+        self.peak_tokens = self.peak_tokens.max(self.used_tokens);
+        true
+    }
+
+    /// Release `tokens`.
+    pub fn free(&mut self, tokens: u64) {
+        debug_assert!(tokens <= self.used_tokens, "KV underflow: free {tokens} of {}", self.used_tokens);
+        self.used_tokens = self.used_tokens.saturating_sub(tokens);
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_tokens == 0 {
+            0.0
+        } else {
+            self.used_tokens as f64 / self.capacity_tokens as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut kv = KvMemory::new(1000);
+        assert!(kv.alloc(400));
+        assert!(kv.alloc(600));
+        assert!(!kv.alloc(1));
+        assert_eq!(kv.used_tokens, 1000);
+        assert_eq!(kv.peak_tokens, 1000);
+        kv.free(500);
+        assert!(kv.alloc(300));
+        assert_eq!(kv.used_tokens, 800);
+        assert_eq!(kv.peak_tokens, 1000);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let mut kv = KvMemory::new(200);
+        kv.alloc(50);
+        assert!((kv.utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failed_alloc_changes_nothing() {
+        let mut kv = KvMemory::new(10);
+        kv.alloc(8);
+        assert!(!kv.alloc(5));
+        assert_eq!(kv.used_tokens, 8);
+    }
+}

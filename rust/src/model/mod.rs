@@ -1,0 +1,132 @@
+//! GPU inference performance + memory model for the simulated cluster.
+//!
+//! Calibrated against the H100 DGX numbers reported in the Splitwise paper
+//! (the same machines the evaluated cluster uses): prompt phases are
+//! compute-bound and scale ~linearly in prompt tokens; decode iterations
+//! are memory-bound, with a base cost plus small per-sequence and
+//! per-context terms; KV-cache state is ~200 KB per token for a 70B-class
+//! model, and transfers ride the InfiniBand fabric at ~200 Gb/s.
+
+pub mod memory;
+
+pub use memory::KvMemory;
+
+/// Latency/size model of the GPU side of one inference server.
+#[derive(Clone, Copy, Debug)]
+pub struct PerfModel {
+    /// Prompt phase: fixed overhead (s).
+    pub prompt_base_s: f64,
+    /// Prompt phase: per-input-token cost (s).
+    pub prompt_per_token_s: f64,
+    /// Decode iteration: fixed overhead (s).
+    pub iter_base_s: f64,
+    /// Decode iteration: per-batched-sequence cost (s).
+    pub iter_per_seq_s: f64,
+    /// Decode iteration: per-context-token cost (s), attention term.
+    pub iter_per_ctx_token_s: f64,
+    /// KV-cache bytes per token of context.
+    pub kv_bytes_per_token: f64,
+    /// Interconnect bandwidth for KV transfers (bytes/s).
+    pub link_bytes_per_s: f64,
+    /// Per-flow fixed latency (s): rendezvous + RDMA setup.
+    pub link_latency_s: f64,
+}
+
+impl PerfModel {
+    /// H100 + 70B-class model defaults (Splitwise-calibrated, chunked
+    /// prefill). Sized so the paper's iso-throughput cluster design holds:
+    /// 5 prompt machines sustain 100 rps (mean prefill ≈ 40 ms) and 17
+    /// token machines sustain the corresponding decode load.
+    pub fn h100_70b() -> PerfModel {
+        PerfModel {
+            prompt_base_s: 0.010,
+            prompt_per_token_s: 2.0e-5,
+            iter_base_s: 0.015,
+            iter_per_seq_s: 0.0004,
+            iter_per_ctx_token_s: 2.0e-7,
+            kv_bytes_per_token: 200_000.0,
+            link_bytes_per_s: 25.0e9, // 200 Gb/s
+            link_latency_s: 0.001,
+        }
+    }
+
+    /// Duration of a prompt (prefill) phase for `n_in` input tokens.
+    #[inline]
+    pub fn prompt_time_s(&self, n_in: u32) -> f64 {
+        self.prompt_base_s + self.prompt_per_token_s * n_in as f64
+    }
+
+    /// Duration of one decode iteration over `batch` sequences with a
+    /// total of `ctx_tokens` context tokens across the batch.
+    #[inline]
+    pub fn iter_time_s(&self, batch: usize, ctx_tokens: u64) -> f64 {
+        self.iter_base_s
+            + self.iter_per_seq_s * batch as f64
+            + self.iter_per_ctx_token_s * ctx_tokens as f64
+    }
+
+    /// KV-cache size for `tokens` tokens of context.
+    #[inline]
+    pub fn kv_bytes(&self, tokens: u32) -> f64 {
+        self.kv_bytes_per_token * tokens as f64
+    }
+
+    /// KV transfer time over the interconnect.
+    #[inline]
+    pub fn kv_transfer_s(&self, tokens: u32) -> f64 {
+        self.link_latency_s + self.kv_bytes(tokens) / self.link_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_scales_linearly() {
+        let m = PerfModel::h100_70b();
+        let t1 = m.prompt_time_s(1024);
+        let t2 = m.prompt_time_s(2048);
+        assert!(t1 > 0.02 && t1 < 0.08, "prefill(1024)={t1}");
+        assert!((t2 - t1 - 1024.0 * m.prompt_per_token_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iteration_in_tens_of_ms() {
+        let m = PerfModel::h100_70b();
+        let t = m.iter_time_s(32, 32 * 1200);
+        assert!(t > 0.02 && t < 0.08, "iter={t}");
+        // Bigger batches take longer but sublinearly per sequence.
+        assert!(m.iter_time_s(64, 64 * 1200) < 2.0 * m.iter_time_s(32, 32 * 1200));
+    }
+
+    #[test]
+    fn iso_throughput_cluster_capacity() {
+        // The paper's cluster (5 prompt + 17 token) must sustain 100 rps:
+        // prompt side: 5 / mean_prefill >= 100 rps at ~1500-token prompts;
+        // token side: 17 machines * batch-64 decode >= ~14k tok/s.
+        let m = PerfModel::h100_70b();
+        let prompt_capacity = 5.0 / m.prompt_time_s(1500);
+        assert!(prompt_capacity > 100.0, "prompt capacity {prompt_capacity} rps");
+        let iter = m.iter_time_s(64, 64 * 1200);
+        let token_capacity = 17.0 * 64.0 / iter;
+        assert!(token_capacity > 14_000.0, "token capacity {token_capacity} tok/s");
+    }
+
+    #[test]
+    fn kv_transfer_sane() {
+        let m = PerfModel::h100_70b();
+        // 1024 tokens * 200 KB = ~205 MB over 25 GB/s ≈ 8 ms + 1 ms latency.
+        let t = m.kv_transfer_s(1024);
+        assert!(t > 0.005 && t < 0.02, "transfer={t}");
+    }
+
+    #[test]
+    fn monotonicity() {
+        let m = PerfModel::h100_70b();
+        assert!(m.prompt_time_s(100) < m.prompt_time_s(200));
+        assert!(m.iter_time_s(1, 100) < m.iter_time_s(2, 100));
+        assert!(m.iter_time_s(2, 100) < m.iter_time_s(2, 50_000));
+        assert!(m.kv_transfer_s(10) < m.kv_transfer_s(1000));
+    }
+}

@@ -1,0 +1,104 @@
+//! The `least-aged` baseline (Zhao'23, "The Case of Unsustainable CPU
+//! Affinity") — §6.1.1.
+//!
+//! Assigns tasks *away* from aged cores using **executed work** (cumulative
+//! busy time) as the aging estimate, avoiding per-task CPU profiling. It
+//! evens out aging across cores better than stock Linux, but keeps every
+//! core in C0 — it has no age-halting mechanism, which is exactly the gap
+//! the paper's Selective Core Idling fills (Table 3's "Dynamic
+//! Age-halting" column).
+
+use super::CorePolicy;
+use crate::cpu::{CState, CpuPackage};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct LeastAgedPolicy;
+
+impl LeastAgedPolicy {
+    pub fn new() -> LeastAgedPolicy {
+        LeastAgedPolicy
+    }
+}
+
+impl CorePolicy for LeastAgedPolicy {
+    fn name(&self) -> &'static str {
+        "least-aged"
+    }
+
+    /// Free active core with the least executed work.
+    fn pick_core(&mut self, cpu: &CpuPackage, _now: f64, _rng: &mut Rng) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for core in &cpu.cores {
+            if core.state != CState::C0 || core.task.is_some() {
+                continue;
+            }
+            match best {
+                None => best = Some((core.busy_time, core.id)),
+                Some((w, _)) if core.busy_time < w => best = Some((core.busy_time, core.id)),
+                _ => {}
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::{AgingParams, TemperatureModel};
+
+    fn pkg(n: usize) -> CpuPackage {
+        CpuPackage::uniform(n, AgingParams::paper_default(), TemperatureModel::paper_default())
+    }
+
+    #[test]
+    fn picks_least_worked_core() {
+        let mut cpu = pkg(3);
+        let mut p = LeastAgedPolicy::new();
+        let mut rng = Rng::new(1);
+        cpu.cores[0].busy_time = 100.0;
+        cpu.cores[1].busy_time = 5.0;
+        cpu.cores[2].busy_time = 50.0;
+        assert_eq!(p.pick_core(&cpu, 0.0, &mut rng), Some(1));
+    }
+
+    #[test]
+    fn balances_work_over_time() {
+        let mut cpu = pkg(4);
+        let mut p = LeastAgedPolicy::new();
+        let mut rng = Rng::new(2);
+        // Sequential 1s tasks: work should spread evenly (round-robin-ish).
+        let mut t_now = 0.0;
+        for t in 0..400u64 {
+            let c = p.pick_core(&cpu, t_now, &mut rng).unwrap();
+            cpu.assign(c, t, t_now);
+            t_now += 1.0;
+            cpu.finish_task(t, t_now);
+        }
+        let works: Vec<f64> = cpu.cores.iter().map(|c| c.busy_time).collect();
+        let max = works.iter().cloned().fold(f64::MIN, f64::max);
+        let min = works.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min <= 1.0 + 1e-9, "works={works:?}");
+    }
+
+    #[test]
+    fn no_age_halting() {
+        let mut cpu = pkg(4);
+        let mut p = LeastAgedPolicy::new();
+        p.adjust(&mut cpu, 10.0);
+        assert_eq!(cpu.active_count(), 4);
+        assert_eq!(cpu.c6_count(), 0);
+        assert_eq!(p.adjust_period_s(), None);
+    }
+
+    #[test]
+    fn none_when_all_busy() {
+        let mut cpu = pkg(2);
+        let mut p = LeastAgedPolicy::new();
+        let mut rng = Rng::new(3);
+        cpu.assign(0, 1, 0.0);
+        cpu.assign(1, 2, 0.0);
+        assert_eq!(p.pick_core(&cpu, 1.0, &mut rng), None);
+    }
+}

@@ -1,0 +1,195 @@
+//! Core-management policies: the paper's proposed technique and the two
+//! baselines it is evaluated against (§6.1.1).
+//!
+//! A policy answers two questions: *which core runs the next inference
+//! task* ([`CorePolicy::pick_core`]) and, optionally, *which cores should
+//! be awake at all* ([`CorePolicy::adjust`], the Selective Core Idling
+//! hook invoked periodically by the simulator / serving stack).
+//!
+//! [`CoreManager`] glues a policy to a [`CpuPackage`] and owns the
+//! oversubscription queue: a task that finds no free active core runs
+//! time-shared (counted in the Fig. 8 metric) until capacity appears.
+
+pub mod least_aged;
+pub mod linux;
+pub mod proposed;
+pub mod reaction;
+
+pub use least_aged::LeastAgedPolicy;
+pub use linux::LinuxPolicy;
+pub use proposed::ProposedPolicy;
+pub use reaction::ReactionFunction;
+
+use crate::cpu::CpuPackage;
+use crate::util::rng::Rng;
+
+/// A CPU core-management policy.
+pub trait CorePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Select an active, unallocated core for a new inference task.
+    /// `None` means the task must oversubscribe the CPU.
+    fn pick_core(&mut self, cpu: &CpuPackage, now: f64, rng: &mut Rng) -> Option<usize>;
+
+    /// Periodic working-set adjustment (Selective Core Idling). Baselines
+    /// keep every core active and leave this as a no-op.
+    fn adjust(&mut self, _cpu: &mut CpuPackage, _now: f64) {}
+
+    /// How often `adjust` should run, if at all.
+    fn adjust_period_s(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Construct a policy by name — the CLI/config entry point.
+pub fn by_name(name: &str) -> Result<Box<dyn CorePolicy>, String> {
+    match name {
+        "proposed" => Ok(Box::new(ProposedPolicy::new())),
+        // Ablation: Task-to-Core Mapping (Alg. 1) without Selective Core
+        // Idling (Alg. 2).
+        "proposed-taskmap" => Ok(Box::new(ProposedPolicy::task_mapping_only())),
+        // Future-work extension (§8): aging-sensor telemetry instead of
+        // the idle-duration age estimate.
+        "proposed-telemetry" => Ok(Box::new(ProposedPolicy::with_telemetry())),
+        "linux" => Ok(Box::new(LinuxPolicy::new())),
+        "least-aged" | "least_aged" => Ok(Box::new(LeastAgedPolicy::new())),
+        other => Err(format!(
+            "unknown policy '{other}' (try: proposed, proposed-taskmap, linux, least-aged)"
+        )),
+    }
+}
+
+/// All policy names, in the order the paper's figures list them.
+pub const ALL_POLICIES: [&str; 3] = ["linux", "least-aged", "proposed"];
+
+/// Binds a policy to a CPU package and manages task lifecycles, including
+/// the oversubscription queue.
+pub struct CoreManager {
+    pub cpu: CpuPackage,
+    pub policy: Box<dyn CorePolicy>,
+    pub rng: Rng,
+    /// Count of task-start events that had to oversubscribe (diagnostics).
+    pub oversub_events: u64,
+}
+
+impl CoreManager {
+    pub fn new(cpu: CpuPackage, policy: Box<dyn CorePolicy>, rng: Rng) -> CoreManager {
+        CoreManager { cpu, policy, rng, oversub_events: 0 }
+    }
+
+    /// `assign_core_to_cpu_task` (§5): route a new inference task through
+    /// the policy. Returns the chosen core, or `None` if oversubscribed.
+    pub fn start_task(&mut self, task: u64, now: f64) -> Option<usize> {
+        match self.policy.pick_core(&self.cpu, now, &mut self.rng) {
+            Some(core) => {
+                self.cpu.assign(core, task, now);
+                Some(core)
+            }
+            None => {
+                // Oversubscription is the latency-critical branch of the
+                // reaction function: trigger Selective Core Idling
+                // immediately (event-driven, on top of the periodic tick)
+                // so deep-idle cores wake before the burst deepens.
+                self.cpu.push_oversub(task);
+                self.oversub_events += 1;
+                self.policy.adjust(&mut self.cpu, now);
+                self.promote_oversub(now);
+                if self.cpu.oversub.contains(&task) {
+                    None
+                } else {
+                    self.cpu.task_core_of(task)
+                }
+            }
+        }
+    }
+
+    /// Finish a task; if it frees a core and oversubscribed tasks are
+    /// waiting, promote one immediately (through the policy, so placement
+    /// stays aging-aware).
+    pub fn finish_task(&mut self, task: u64, now: f64) {
+        let freed = self.cpu.finish_task(task, now);
+        if freed.is_some() {
+            self.promote_oversub(now);
+        }
+    }
+
+    /// `adjust_sleeping_cores` (§5): run Selective Core Idling, then move
+    /// any waiting oversubscribed tasks onto newly woken cores.
+    pub fn adjust(&mut self, now: f64) {
+        self.policy.adjust(&mut self.cpu, now);
+        self.promote_oversub(now);
+    }
+
+    fn promote_oversub(&mut self, now: f64) {
+        while !self.cpu.oversub.is_empty() && self.cpu.has_free_active_core() {
+            if let Some(core) = self.policy.pick_core(&self.cpu, now, &mut self.rng) {
+                let task = self.cpu.pop_oversub().expect("checked non-empty");
+                self.cpu.assign(core, task, now);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::{AgingParams, CpuPackage, TemperatureModel};
+
+    fn mgr(n: usize, policy: &str) -> CoreManager {
+        let cpu = CpuPackage::uniform(
+            n,
+            AgingParams::paper_default(),
+            TemperatureModel::paper_default(),
+        );
+        CoreManager::new(cpu, by_name(policy).unwrap(), Rng::new(1))
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for p in ALL_POLICIES {
+            assert!(by_name(p).is_ok(), "missing policy {p}");
+        }
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn tasks_fill_then_oversubscribe() {
+        for p in ALL_POLICIES {
+            let mut m = mgr(2, p);
+            assert!(m.start_task(1, 0.0).is_some());
+            assert!(m.start_task(2, 0.0).is_some());
+            assert!(m.start_task(3, 0.0).is_none(), "policy {p} should oversubscribe");
+            assert_eq!(m.cpu.running_tasks(), 3);
+            assert_eq!(m.oversub_events, 1);
+        }
+    }
+
+    #[test]
+    fn finishing_promotes_oversubscribed() {
+        for p in ALL_POLICIES {
+            let mut m = mgr(2, p);
+            m.start_task(1, 0.0);
+            m.start_task(2, 0.0);
+            m.start_task(3, 0.0);
+            m.finish_task(1, 1.0);
+            // Task 3 must now own a dedicated core.
+            assert_eq!(m.cpu.oversub.len(), 0, "policy {p}");
+            assert_eq!(m.cpu.allocated_count(), 2, "policy {p}");
+        }
+    }
+
+    #[test]
+    fn unique_core_per_task() {
+        for p in ALL_POLICIES {
+            let mut m = mgr(8, p);
+            let mut picked = Vec::new();
+            for t in 0..8 {
+                let c = m.start_task(t, t as f64 * 0.1).expect("core available");
+                assert!(!picked.contains(&c), "policy {p} double-assigned core {c}");
+                picked.push(c);
+            }
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! The paper's proposed aging-aware policy: **Task-to-Core Mapping**
+//! (Algorithm 1) + **Selective Core Idling** (Algorithm 2).
+//!
+//! Task-to-Core Mapping picks, among the *working set* (C0 cores) without
+//! a task, the core with the highest *idle score* — the sum of its last
+//! eight idle durations. A mostly-idle core has aged least recently, so
+//! stress is spread least-aged-first without reading micro-architectural
+//! aging sensors on the per-task fast path.
+//!
+//! Selective Core Idling runs periodically: it computes the normalized
+//! slack `e = (N − C_slp − T)/N`, feeds it through the asymmetric
+//! [`ReactionFunction`], and converts the output back to a core count.
+//! Surplus cores are parked in C6 **most-aged first**; deficit cores are
+//! woken **least-aged first** — complementing Algorithm 1's even-out
+//! behaviour. Because this path is periodic (not per-task), it is also
+//! where accurate aging values (ΔVth, as an aging sensor would report)
+//! are consulted (§5).
+
+use super::reaction::ReactionFunction;
+use super::CorePolicy;
+use crate::cpu::{CState, CpuPackage};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ProposedPolicy {
+    pub reaction: ReactionFunction,
+    /// Period of the Selective Core Idling loop (seconds).
+    pub adjust_period_s: f64,
+    /// Ablation switch: disable Selective Core Idling entirely, leaving
+    /// only Task-to-Core Mapping (Algorithm 1). Exposed as the
+    /// `proposed-taskmap` policy; the ablation bench quantifies how much
+    /// of the paper's gain comes from age-halting vs even-out.
+    pub enable_idling: bool,
+    /// Future-work extension (§8): use accurate per-core aging telemetry
+    /// (ΔVth, as a core-level aging sensor would report) for Algorithm 1's
+    /// selection instead of the idle-duration estimate. Exposed as the
+    /// `proposed-telemetry` policy; quantifies the headroom left by the
+    /// paper's cheap estimator.
+    pub use_telemetry: bool,
+}
+
+impl ProposedPolicy {
+    pub fn new() -> ProposedPolicy {
+        // 250 ms parking cadence: oversubscription is already handled
+        // event-driven (the reaction function's fast arctan branch fires
+        // the moment a task finds no core), so the periodic tick only
+        // needs to keep up with load *decreases*. 4 Hz tracks the decay
+        // of inference bursts without thrashing C6 transitions (whose
+        // hardware latency is ~100 µs).
+        ProposedPolicy {
+            reaction: ReactionFunction::default(),
+            adjust_period_s: 0.25,
+            enable_idling: true,
+            use_telemetry: false,
+        }
+    }
+
+    /// Algorithm 1 only (ablation).
+    pub fn task_mapping_only() -> ProposedPolicy {
+        ProposedPolicy { enable_idling: false, ..ProposedPolicy::new() }
+    }
+
+    /// Aging-sensor-driven selection (future-work extension).
+    pub fn with_telemetry() -> ProposedPolicy {
+        ProposedPolicy { use_telemetry: true, ..ProposedPolicy::new() }
+    }
+}
+
+impl Default for ProposedPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CorePolicy for ProposedPolicy {
+    fn name(&self) -> &'static str {
+        "proposed"
+    }
+
+    /// Algorithm 1: highest idle score among free working-set cores
+    /// (or lowest measured ΔVth in the telemetry variant).
+    fn pick_core(&mut self, cpu: &CpuPackage, _now: f64, _rng: &mut Rng) -> Option<usize> {
+        if self.use_telemetry {
+            let mut selected: Option<(f64, usize)> = None;
+            for core in &cpu.cores {
+                if core.state != CState::C0 || core.task.is_some() {
+                    continue;
+                }
+                match selected {
+                    None => selected = Some((core.dvth, core.id)),
+                    Some((d, _)) if core.dvth < d => selected = Some((core.dvth, core.id)),
+                    _ => {}
+                }
+            }
+            return selected.map(|(_, id)| id);
+        }
+        let mut selected: Option<usize> = None;
+        let mut selected_score = 0.0f64;
+        for core in &cpu.cores {
+            if core.state != CState::C0 || core.task.is_some() {
+                continue;
+            }
+            let idle_score = core.idle_history.score();
+            if selected.is_none() || idle_score > selected_score {
+                selected = Some(core.id);
+                selected_score = idle_score;
+            }
+        }
+        selected
+    }
+
+    /// Algorithm 2.
+    fn adjust(&mut self, cpu: &mut CpuPackage, now: f64) {
+        if !self.enable_idling {
+            return;
+        }
+        let n = cpu.n_cores();
+        let active = cpu.active_count();
+        let normal_tasks = cpu.allocated_count();
+        let oversub_tasks = cpu.oversub.len();
+
+        let c_slp = n - active;
+        let t_total = (normal_tasks + oversub_tasks).min(n);
+        let e = n as f64 - c_slp as f64 - t_total as f64;
+        let e_prd = e / n as f64;
+        let e_corr = self.reaction.correction(e_prd, n);
+
+        if e_corr > 0 {
+            // Underutilization: park δ cores, most-aged first. Only
+            // active, unallocated cores are candidates.
+            let mut candidates: Vec<(f64, usize)> = cpu
+                .cores
+                .iter()
+                .filter(|c| c.state == CState::C0 && c.task.is_none())
+                .map(|c| (c.dvth, c.id))
+                .collect();
+            // Most aged first.
+            candidates.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let delta = (e_corr as usize).min(candidates.len());
+            for &(_, id) in candidates.iter().take(delta) {
+                cpu.set_state(id, CState::C6, now);
+            }
+        } else if e_corr < 0 {
+            // Oversubscription: wake δ cores, least-aged first.
+            let mut candidates: Vec<(f64, usize)> = cpu
+                .cores
+                .iter()
+                .filter(|c| c.state == CState::C6)
+                .map(|c| (c.dvth, c.id))
+                .collect();
+            candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let delta = ((-e_corr) as usize).min(candidates.len());
+            for &(_, id) in candidates.iter().take(delta) {
+                cpu.set_state(id, CState::C0, now);
+            }
+        }
+    }
+
+    fn adjust_period_s(&self) -> Option<f64> {
+        if self.enable_idling {
+            Some(self.adjust_period_s)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::{AgingParams, TemperatureModel};
+
+    fn pkg(n: usize) -> CpuPackage {
+        CpuPackage::uniform(n, AgingParams::paper_default(), TemperatureModel::paper_default())
+    }
+
+    #[test]
+    fn alg1_prefers_most_idle_core() {
+        let mut cpu = pkg(3);
+        let mut p = ProposedPolicy::new();
+        let mut rng = Rng::new(1);
+        // Give cores different idle histories: core 2 idled longest.
+        cpu.assign(0, 1, 10.0); // idle 0..10
+        cpu.finish_task(1, 11.0);
+        cpu.assign(1, 2, 30.0); // idle 0..30
+        cpu.finish_task(2, 31.0);
+        cpu.assign(2, 3, 90.0); // idle 0..90
+        cpu.finish_task(3, 91.0);
+        let picked = p.pick_core(&cpu, 100.0, &mut rng).unwrap();
+        assert_eq!(picked, 2);
+    }
+
+    #[test]
+    fn alg1_skips_allocated_and_idle_cores() {
+        let mut cpu = pkg(3);
+        let mut p = ProposedPolicy::new();
+        let mut rng = Rng::new(1);
+        cpu.assign(0, 1, 0.0);
+        cpu.set_state(2, CState::C6, 0.0);
+        let picked = p.pick_core(&cpu, 1.0, &mut rng).unwrap();
+        assert_eq!(picked, 1);
+        cpu.assign(1, 2, 1.0);
+        assert!(p.pick_core(&cpu, 2.0, &mut rng).is_none());
+    }
+
+    #[test]
+    fn alg2_idles_surplus_cores() {
+        let mut cpu = pkg(40);
+        let mut p = ProposedPolicy::new();
+        // No tasks at all: e_prd = 1, F ≈ 1 -> 39 cores to C6.
+        p.adjust(&mut cpu, 0.0);
+        assert_eq!(cpu.c6_count(), 39);
+        assert_eq!(cpu.active_count(), 1);
+    }
+
+    #[test]
+    fn alg2_wakes_on_oversubscription() {
+        let mut cpu = pkg(40);
+        let mut p = ProposedPolicy::new();
+        p.adjust(&mut cpu, 0.0); // 1 active core left
+        let free = cpu.free_active_cores().next().unwrap().id;
+        cpu.assign(free, 1, 1.0);
+        for t in 2..8 {
+            cpu.push_oversub(t);
+        }
+        // T = 7, active = 1 -> e = -6/40 -> wake some cores.
+        p.adjust(&mut cpu, 2.0);
+        assert!(cpu.active_count() > 1, "active={}", cpu.active_count());
+        assert!(cpu.c6_count() < 39);
+    }
+
+    #[test]
+    fn alg2_never_idles_allocated_cores() {
+        let mut cpu = pkg(8);
+        let mut p = ProposedPolicy::new();
+        for t in 0..4 {
+            cpu.assign(t as usize, t, 0.0);
+        }
+        p.adjust(&mut cpu, 1.0);
+        for c in &cpu.cores {
+            if c.task.is_some() {
+                assert_eq!(c.state, CState::C0);
+            }
+        }
+        assert_eq!(cpu.allocated_count(), 4);
+    }
+
+    #[test]
+    fn alg2_parks_most_aged_first_wakes_least_aged_first() {
+        let mut cpu = pkg(4);
+        // Fabricate distinct ages.
+        for (i, d) in [0.04, 0.01, 0.03, 0.02].iter().enumerate() {
+            cpu.cores[i].dvth = *d;
+        }
+        let mut p = ProposedPolicy::new();
+        // No tasks: e_prd=1 -> park 3 cores; survivors should be the least aged (core 1).
+        p.adjust(&mut cpu, 0.0);
+        assert_eq!(cpu.active_count(), 1);
+        assert_eq!(cpu.cores[1].state, CState::C0, "least-aged core must stay awake");
+        // Now oversubscribe so it wakes 2: least-aged sleepers first (3 then 2).
+        cpu.assign(1, 100, 1.0);
+        for t in 0..3 {
+            cpu.push_oversub(t);
+        }
+        p.adjust(&mut cpu, 2.0);
+        assert_eq!(cpu.cores[3].state, CState::C0, "least-aged sleeper wakes first");
+    }
+
+    #[test]
+    fn telemetry_variant_picks_least_aged_by_dvth() {
+        let mut cpu = pkg(4);
+        for (i, d) in [0.04, 0.01, 0.03, 0.02].iter().enumerate() {
+            cpu.cores[i].dvth = *d;
+        }
+        // Give the *most aged* core the best idle score to show the two
+        // estimators disagree — telemetry must follow ΔVth.
+        cpu.assign(0, 1, 100.0);
+        cpu.finish_task(1, 101.0);
+        let mut p_est = ProposedPolicy::new();
+        let mut p_tel = ProposedPolicy::with_telemetry();
+        let mut rng = Rng::new(1);
+        assert_eq!(p_tel.pick_core(&cpu, 200.0, &mut rng), Some(1));
+        assert_eq!(p_est.pick_core(&cpu, 200.0, &mut rng), Some(0));
+    }
+
+    #[test]
+    fn taskmap_only_never_idles() {
+        let mut cpu = pkg(8);
+        let mut p = ProposedPolicy::task_mapping_only();
+        p.adjust(&mut cpu, 5.0);
+        assert_eq!(cpu.c6_count(), 0);
+        assert_eq!(p.adjust_period_s(), None);
+    }
+
+    #[test]
+    fn steady_state_working_set_tracks_load() {
+        // With T tasks pinned, repeated adjust converges to a working set
+        // close to T (within the tan() deadband).
+        let mut cpu = pkg(40);
+        let mut p = ProposedPolicy::new();
+        for t in 0..10u64 {
+            let core = p.pick_core(&cpu, 0.0, &mut Rng::new(0)).unwrap();
+            cpu.assign(core, t, 0.0);
+        }
+        for step in 0..50 {
+            p.adjust(&mut cpu, step as f64);
+        }
+        let active = cpu.active_count();
+        assert!((10..=13).contains(&active), "active={active}");
+    }
+}

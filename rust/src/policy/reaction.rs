@@ -1,0 +1,119 @@
+//! The piecewise *reaction function* of Selective Core Idling (Algorithm 2
+//! lines 10–14, Fig. 5).
+//!
+//! Input: the normalized error `e = (N − C_slp − T)/N` (positive =
+//! underutilization, negative = oversubscription). Output in [−1, 1]:
+//!
+//! * `e ≥ 0`: `F(e) = tan(0.785·e)` — sub-unit slope near 0, so the
+//!   controller reacts *slowly* to underutilization (aging is a slow,
+//!   long-term process; no need to rush cores into C6).
+//! * `e < 0`: `F(e) = arctan(1.55·e)` — ~1.55 slope near 0, so it reacts
+//!   *fast* to oversubscription (latency impact is immediate).
+//!
+//! Both branches meet at F(0) = 0 and saturate to ±1 at e = ±1.
+
+/// The paper's reaction-function coefficients.
+#[derive(Clone, Copy, Debug)]
+pub struct ReactionFunction {
+    /// Underutilization branch coefficient (paper: 0.785 ≈ π/4).
+    pub under_coeff: f64,
+    /// Oversubscription branch coefficient (paper: 1.55).
+    pub over_coeff: f64,
+}
+
+impl Default for ReactionFunction {
+    fn default() -> Self {
+        ReactionFunction { under_coeff: 0.785, over_coeff: 1.55 }
+    }
+}
+
+impl ReactionFunction {
+    /// Evaluate F(e) for a normalized error `e ∈ [−1, 1]`.
+    #[inline]
+    pub fn eval(&self, e: f64) -> f64 {
+        if e >= 0.0 {
+            (self.under_coeff * e).tan()
+        } else {
+            (self.over_coeff * e).atan()
+        }
+    }
+
+    /// The integer core-count correction of Algorithm 2 lines 15–17:
+    /// scale back by N and truncate toward zero. Positive = cores to put
+    /// into C6; negative = cores to wake.
+    #[inline]
+    pub fn correction(&self, e_norm: f64, n_cores: usize) -> i64 {
+        (n_cores as f64 * self.eval(e_norm)) as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_points() {
+        let f = ReactionFunction::default();
+        assert_eq!(f.eval(0.0), 0.0);
+        assert!((f.eval(1.0) - 0.785f64.tan()).abs() < 1e-12);
+        assert!((f.eval(-1.0) - (-1.55f64).atan()).abs() < 1e-12);
+        // Saturation near ±1.
+        assert!(f.eval(1.0) > 0.99 && f.eval(1.0) <= 1.0);
+        assert!(f.eval(-1.0) < -0.99 && f.eval(-1.0) >= -1.0);
+    }
+
+    #[test]
+    fn asymmetric_slopes() {
+        // Reacts faster to oversubscription than to underutilization.
+        let f = ReactionFunction::default();
+        let e = 0.05;
+        assert!(f.eval(-e).abs() > f.eval(e).abs());
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        let f = ReactionFunction::default();
+        let mut prev = f.eval(-1.0);
+        let mut x = -1.0;
+        while x <= 1.0 {
+            let y = f.eval(x);
+            assert!(y >= prev - 1e-12, "non-monotone at {x}");
+            prev = y;
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn output_bounded() {
+        let f = ReactionFunction::default();
+        let mut x = -1.0;
+        while x <= 1.0 {
+            let y = f.eval(x);
+            assert!((-1.0..=1.0).contains(&y), "F({x}) = {y} out of range");
+            x += 0.001;
+        }
+    }
+
+    #[test]
+    fn correction_truncates_toward_zero() {
+        let f = ReactionFunction::default();
+        // Small positive error on a 40-core CPU: F(0.025) ≈ 0.0196 -> 0.
+        assert_eq!(f.correction(1.0 / 40.0, 40), 0);
+        // Full underutilization: leaves at least one active core.
+        let c = f.correction(1.0, 40);
+        assert!(c < 40, "must never idle all cores (got {c})");
+        assert_eq!(c, 39);
+        // Full oversubscription wakes almost everything.
+        let w = f.correction(-1.0, 40);
+        assert!(w <= -39);
+    }
+
+    #[test]
+    fn never_idles_final_core() {
+        // Property: for any N ≥ 2 and e ≤ 1, correction < N.
+        for n in [2usize, 4, 12, 40, 80, 128] {
+            let f = ReactionFunction::default();
+            assert!(f.correction(1.0, n) < n as i64, "n={n}");
+        }
+    }
+}

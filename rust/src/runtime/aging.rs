@@ -1,0 +1,52 @@
+//! PJRT-backed cluster-wide NBTI aging update.
+//!
+//! Loads `aging_step.hlo.txt` (the lowered Pallas kernel) and runs the
+//! batched `[machines × cores]` ΔVth/frequency refresh through XLA. The
+//! simulator uses the pure-Rust path on its hot loop by default; this
+//! executable is (a) the cross-validation target proving the L1 kernel
+//! and the Rust model agree, and (b) an optional batch path
+//! (`carbon-sim simulate --pjrt-aging`) exercising the full
+//! three-layer stack.
+
+use anyhow::{Context, Result};
+
+use super::Runtime;
+
+/// Compiled aging-step executable.
+pub struct AgingStepPjrt {
+    exe: xla::PjRtLoadedExecutable,
+    pub machines: usize,
+    pub cores: usize,
+}
+
+impl AgingStepPjrt {
+    pub fn load(rt: &Runtime) -> Result<AgingStepPjrt> {
+        let manifest = super::Manifest::load(&rt.artifacts_dir)?;
+        let exe = rt.load_hlo("aging_step.hlo.txt")?;
+        Ok(AgingStepPjrt { exe, machines: manifest.aging.machines, cores: manifest.aging.cores })
+    }
+
+    /// Run one batched update. All slices are `machines*cores` long,
+    /// row-major. Returns `(new_dvth, freq_ghz)`.
+    pub fn step(
+        &self,
+        dvth: &[f32],
+        adf: &[f32],
+        tau: &[f32],
+        f0: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = self.machines * self.cores;
+        anyhow::ensure!(dvth.len() == n && adf.len() == n && tau.len() == n && f0.len() == n);
+        let dims = [self.machines, self.cores];
+        let lit = |data: &[f32]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data)
+                .reshape(&[self.machines as i64, self.cores as i64])
+                .context("reshape literal")?)
+        };
+        let args = [lit(dvth)?, lit(adf)?, lit(tau)?, lit(f0)?];
+        let _ = dims;
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (d, f) = result.to_tuple2().context("aging_step returns a 2-tuple")?;
+        Ok((d.to_vec::<f32>()?, f.to_vec::<f32>()?))
+    }
+}

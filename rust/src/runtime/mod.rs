@@ -1,0 +1,68 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and executes them from Rust. Python is never
+//! on this path — the artifacts are HLO text + a raw weights file.
+//!
+//! * [`weights`] — manifest.json / weights.bin parsing.
+//! * [`served`] — the transformer executables (prefill + decode) with
+//!   device-resident weights.
+//! * [`aging`] — the PJRT-backed cluster-wide NBTI update, cross-validated
+//!   against [`crate::cpu::aging`].
+
+pub mod aging;
+pub mod served;
+pub mod weights;
+
+pub use aging::AgingStepPjrt;
+pub use served::ServedModel;
+pub use weights::{Manifest, ParamEntry};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus artifact-directory context.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifacts directory: `$CARBON_SIM_ARTIFACTS` or `artifacts/`.
+    pub fn default_artifacts_dir() -> PathBuf {
+        std::env::var("CARBON_SIM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Do the artifacts exist? (Tests skip gracefully when they don't.)
+    pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").exists()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts_dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {name}"))
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}

@@ -1,0 +1,196 @@
+//! The served transformer: prefill + decode executables with
+//! device-resident weights.
+//!
+//! Weight tensors are uploaded to the PJRT device once at load time
+//! (`buffer_from_host_buffer`) and passed by reference on every call
+//! (`execute_b`), so the per-request path moves only tokens, lengths and
+//! the KV cache — the same discipline a production server applies.
+
+use anyhow::{Context, Result};
+
+use super::weights::{Manifest, ModelDims};
+use super::Runtime;
+
+/// Prefill output: next-token logits + the populated KV cache.
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+}
+
+/// Decode output: next-token logits + the updated KV cache.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+}
+
+/// Chunked-decode output (§Perf: one dispatch per `chunk` tokens).
+pub struct DecodeChunkOut {
+    /// [B, chunk] generated tokens; −1 marks frozen (budget-exhausted) slots.
+    pub tokens: Vec<i32>,
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+    pub lengths: Vec<i32>,
+    pub remaining: Vec<i32>,
+}
+
+/// The loaded model.
+pub struct ServedModel {
+    rt: Runtime,
+    pub dims: ModelDims,
+    /// Decode steps fused per decode_chunk dispatch (0 = unavailable).
+    pub decode_chunk_steps: usize,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    decode_chunk_exe: Option<xla::PjRtLoadedExecutable>,
+    /// Device-resident parameter buffers, in param_spec order.
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+impl ServedModel {
+    /// Load artifacts (manifest + weights + both executables).
+    pub fn load(rt: Runtime) -> Result<ServedModel> {
+        let manifest = Manifest::load(&rt.artifacts_dir)?;
+        let host_weights = manifest.load_weights(&rt.artifacts_dir)?;
+        let weights = manifest
+            .params
+            .iter()
+            .zip(host_weights.iter())
+            .map(|(p, w)| rt.upload_f32(w, &p.shape))
+            .collect::<Result<Vec<_>>>()
+            .context("uploading weights")?;
+        let prefill_exe = rt.load_hlo("prefill.hlo.txt")?;
+        let decode_exe = rt.load_hlo("decode.hlo.txt")?;
+        let decode_chunk_exe = if manifest.decode_chunk > 0 {
+            Some(rt.load_hlo("decode_chunk.hlo.txt")?)
+        } else {
+            None
+        };
+        Ok(ServedModel {
+            rt,
+            dims: manifest.model,
+            decode_chunk_steps: manifest.decode_chunk,
+            prefill_exe,
+            decode_exe,
+            decode_chunk_exe,
+            weights,
+        })
+    }
+
+    /// Run a prefill over `tokens` ([B, S] row-major, padded) with the
+    /// given per-sequence lengths.
+    pub fn prefill(&self, tokens: &[i32], lengths: &[i32]) -> Result<PrefillOut> {
+        let d = &self.dims;
+        anyhow::ensure!(tokens.len() == d.batch * d.max_seq, "tokens must be B*S");
+        anyhow::ensure!(lengths.len() == d.batch);
+        let tok_buf = self.rt.upload_i32(tokens, &[d.batch, d.max_seq])?;
+        let len_buf = self.rt.upload_i32(lengths, &[d.batch])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let out = self.prefill_exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k, v) = out.to_tuple3().context("prefill returns 3-tuple")?;
+        Ok(PrefillOut {
+            logits: logits.to_vec::<f32>()?,
+            k_cache: k.to_vec::<f32>()?,
+            v_cache: v.to_vec::<f32>()?,
+        })
+    }
+
+    /// Run one decode step. `k_cache`/`v_cache` are the flattened
+    /// [L, B, S, H, Dh] buffers from the previous step/prefill; `tokens`
+    /// the per-sequence token to feed; `lengths` each sequence's current
+    /// context length.
+    pub fn decode(
+        &self,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<DecodeOut> {
+        let d = &self.dims;
+        anyhow::ensure!(k_cache.len() == d.kv_elems() && v_cache.len() == d.kv_elems());
+        anyhow::ensure!(tokens.len() == d.batch && lengths.len() == d.batch);
+        let kv_dims = d.kv_dims();
+        let k_buf = self.rt.upload_f32(k_cache, &kv_dims)?;
+        let v_buf = self.rt.upload_f32(v_cache, &kv_dims)?;
+        let tok_buf = self.rt.upload_i32(tokens, &[d.batch])?;
+        let len_buf = self.rt.upload_i32(lengths, &[d.batch])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let out = self.decode_exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k, v) = out.to_tuple3().context("decode returns 3-tuple")?;
+        Ok(DecodeOut {
+            logits: logits.to_vec::<f32>()?,
+            k_cache: k.to_vec::<f32>()?,
+            v_cache: v.to_vec::<f32>()?,
+        })
+    }
+
+    /// Run one fused chunk of greedy decode steps (§Perf): a single PJRT
+    /// dispatch advances every active slot by up to `decode_chunk_steps`
+    /// tokens, freezing slots whose `remaining` budget hits zero.
+    pub fn decode_chunk(
+        &self,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        lengths: &[i32],
+        remaining: &[i32],
+    ) -> Result<DecodeChunkOut> {
+        let d = &self.dims;
+        let exe = self
+            .decode_chunk_exe
+            .as_ref()
+            .context("decode_chunk artifact not built (re-run `make artifacts`)")?;
+        anyhow::ensure!(k_cache.len() == d.kv_elems() && v_cache.len() == d.kv_elems());
+        anyhow::ensure!(
+            tokens.len() == d.batch && lengths.len() == d.batch && remaining.len() == d.batch
+        );
+        let kv_dims = d.kv_dims();
+        let k_buf = self.rt.upload_f32(k_cache, &kv_dims)?;
+        let v_buf = self.rt.upload_f32(v_cache, &kv_dims)?;
+        let tok_buf = self.rt.upload_i32(tokens, &[d.batch])?;
+        let len_buf = self.rt.upload_i32(lengths, &[d.batch])?;
+        let rem_buf = self.rt.upload_i32(remaining, &[d.batch])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        args.push(&rem_buf);
+        let mut out =
+            exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let parts = out.decompose_tuple().context("decode_chunk returns 5-tuple")?;
+        anyhow::ensure!(parts.len() == 5, "expected 5 outputs, got {}", parts.len());
+        let mut it = parts.into_iter();
+        Ok(DecodeChunkOut {
+            tokens: it.next().unwrap().to_vec::<i32>()?,
+            k_cache: it.next().unwrap().to_vec::<f32>()?,
+            v_cache: it.next().unwrap().to_vec::<f32>()?,
+            lengths: it.next().unwrap().to_vec::<i32>()?,
+            remaining: it.next().unwrap().to_vec::<i32>()?,
+        })
+    }
+
+    /// Greedy next tokens from a logits buffer ([B, vocab] row-major).
+    pub fn argmax_tokens(&self, logits: &[f32]) -> Vec<i32> {
+        let v = self.dims.vocab;
+        logits
+            .chunks_exact(v)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}

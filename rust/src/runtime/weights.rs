@@ -1,0 +1,203 @@
+//! Parse `manifest.json` + `weights.bin` — the parameter contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Value};
+
+/// One parameter tensor's layout in `weights.bin`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements (not bytes).
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Served-model hyperparameters (mirrors python's ModelConfig).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+}
+
+impl ModelDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+    /// KV-cache dims: [L, B, S, H, Dh].
+    pub fn kv_dims(&self) -> Vec<usize> {
+        vec![self.n_layers, self.batch, self.max_seq, self.n_heads, self.head_dim()]
+    }
+    pub fn kv_elems(&self) -> usize {
+        self.kv_dims().iter().product()
+    }
+}
+
+/// Aging-artifact grid dims.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AgingDims {
+    pub machines: usize,
+    pub cores: usize,
+    pub n: f64,
+    pub vdd: f64,
+    pub vth: f64,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: ModelDims,
+    pub params: Vec<ParamEntry>,
+    pub total_floats: usize,
+    pub aging: AgingDims,
+    /// Decode steps fused per dispatch by decode_chunk.hlo.txt (0 when the
+    /// artifact set predates chunked decode).
+    pub decode_chunk: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let cfg = v.get("config").context("manifest missing config")?;
+        let model = ModelDims {
+            vocab: cfg.usize_or("vocab", 0),
+            d_model: cfg.usize_or("d_model", 0),
+            n_heads: cfg.usize_or("n_heads", 0),
+            n_layers: cfg.usize_or("n_layers", 0),
+            d_ff: cfg.usize_or("d_ff", 0),
+            max_seq: cfg.usize_or("max_seq", 0),
+            batch: cfg.usize_or("batch", 0),
+        };
+        if model.vocab == 0 || model.d_model == 0 || model.batch == 0 {
+            bail!("manifest config incomplete: {model:?}");
+        }
+        let params = v
+            .get("params")
+            .and_then(Value::as_arr)
+            .context("manifest missing params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.get("name").and_then(Value::as_str).context("param name")?.to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Value::as_arr)
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p.get("offset").and_then(Value::as_usize).context("param offset")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let ag = v.get("aging").context("manifest missing aging")?;
+        let aging = AgingDims {
+            machines: ag.usize_or("machines", 0),
+            cores: ag.usize_or("cores", 0),
+            n: ag.f64_or("n", 1.0 / 6.0),
+            vdd: ag.f64_or("vdd", 1.0),
+            vth: ag.f64_or("vth", 0.3),
+        };
+        Ok(Manifest {
+            model,
+            params,
+            total_floats: v.usize_or("total_floats", 0),
+            aging,
+            decode_chunk: v.usize_or("decode_chunk", 0),
+        })
+    }
+
+    /// Load weights.bin and slice it per the param table.
+    pub fn load_weights(&self, dir: impl AsRef<Path>) -> Result<Vec<Vec<f32>>> {
+        let path = dir.as_ref().join("weights.bin");
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != self.total_floats * 4 {
+            bail!("weights.bin size {} != manifest total {}", bytes.len(), self.total_floats * 4);
+        }
+        let all: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let end = p.offset + p.n_elems();
+            if end > all.len() {
+                bail!("param {} overruns weights.bin", p.name);
+            }
+            out.push(all[p.offset..end].to_vec());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        let manifest = r#"{
+          "config": {"vocab": 4, "d_model": 2, "n_heads": 1, "n_layers": 1,
+                      "d_ff": 4, "max_seq": 8, "batch": 2},
+          "params": [
+            {"name": "embed", "shape": [4, 2], "offset": 0},
+            {"name": "lnf", "shape": [2], "offset": 8}
+          ],
+          "total_floats": 10,
+          "aging": {"machines": 3, "cores": 5, "n": 0.1666, "vdd": 1.0, "vth": 0.3}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let floats: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights.bin"), bytes).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_and_weights() {
+        let dir = std::env::temp_dir().join("carbon_sim_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 4);
+        assert_eq!(m.model.head_dim(), 2);
+        assert_eq!(m.model.kv_dims(), vec![1, 2, 8, 1, 2]);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.aging.machines, 3);
+        let w = m.load_weights(&dir).unwrap();
+        assert_eq!(w[0], (0..8).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(w[1], vec![8.0, 9.0]);
+    }
+
+    #[test]
+    fn rejects_truncated_weights() {
+        let dir = std::env::temp_dir().join("carbon_sim_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        std::fs::write(dir.join("weights.bin"), [0u8; 8]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.load_weights(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("carbon_sim_no_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

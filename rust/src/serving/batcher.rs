@@ -1,0 +1,128 @@
+//! Dynamic batcher: groups queued requests into model-batch-sized groups
+//! under a latency window — the serving-side analogue of the simulator's
+//! continuous batching (the AOT model has a fixed batch dimension, so
+//! batches are formed up-front; slots that finish early simply stop
+//! decoding).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A request waiting to be batched.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued: Instant,
+}
+
+/// Batch-formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (= the model's batch dimension).
+    pub max_batch: usize,
+    /// How long the head request may wait for companions.
+    pub window: Duration,
+}
+
+/// The batcher state machine. Thread-agnostic: the server loop feeds
+/// [`Batcher::push`] and polls [`Batcher::pop_batch`].
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Batcher<T> {
+        assert!(cfg.max_batch >= 1);
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push_back(Pending { item, enqueued: now });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be released now? Either it is full, or the head
+    /// request has waited out the batching window.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(head) => now.duration_since(head.enqueued) >= self.cfg.window,
+            None => false,
+        }
+    }
+
+    /// Pop up to `max_batch` requests if [`Batcher::ready`].
+    pub fn pop_batch(&mut self, now: Instant) -> Option<Vec<T>> {
+        if !self.ready(now) {
+            return None;
+        }
+        let n = self.queue.len().min(self.cfg.max_batch);
+        Some(self.queue.drain(..n).map(|p| p.item).collect())
+    }
+
+    /// Deadline at which the current head request must be released, if any.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|h| h.enqueued + self.cfg.window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, window: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn releases_full_batch_immediately() {
+        let mut b = Batcher::new(cfg(2, 1000));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        assert!(b.pop_batch(t0).is_none());
+        b.push(2, t0);
+        assert_eq!(b.pop_batch(t0), Some(vec![1, 2]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn releases_partial_batch_after_window() {
+        let mut b = Batcher::new(cfg(4, 10));
+        let t0 = Instant::now();
+        b.push(7, t0);
+        assert!(!b.ready(t0));
+        let later = t0 + Duration::from_millis(11);
+        assert!(b.ready(later));
+        assert_eq!(b.pop_batch(later), Some(vec![7]));
+    }
+
+    #[test]
+    fn batches_preserve_fifo_order() {
+        let mut b = Batcher::new(cfg(3, 0));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(i, t0);
+        }
+        assert_eq!(b.pop_batch(t0), Some(vec![0, 1, 2]));
+        assert_eq!(b.pop_batch(t0), Some(vec![3, 4]));
+    }
+
+    #[test]
+    fn deadline_tracks_head() {
+        let mut b = Batcher::<u32>::new(cfg(4, 50));
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.push(1, t0);
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(50)));
+    }
+}

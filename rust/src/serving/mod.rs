@@ -1,0 +1,416 @@
+//! The real mini serving stack — the end-to-end driver's engine.
+//!
+//! Architecture (all Rust, Python never on this path):
+//!
+//! ```text
+//! client ──submit──▶ Server ──mpsc──▶ worker thread
+//!                                    ├── Batcher (dynamic batching)
+//!                                    ├── ServedModel (PJRT prefill/decode)
+//!                                    ├── ByteTokenizer
+//!                                    └── ShadowCpuManager (Alg. 1 + 2)
+//! ```
+//!
+//! The worker owns the PJRT executables (they are not `Send`-safe to
+//! share) and reports every CPU-side serving task to the shadow core
+//! manager, so the paper's technique runs live against real inference
+//! traffic while the PJRT model produces real tokens.
+
+pub mod batcher;
+pub mod shadow;
+pub mod tokenizer;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use shadow::{ShadowCpuManager, ShadowReport};
+pub use tokenizer::ByteTokenizer;
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cluster::TaskKind;
+use crate::runtime::{Runtime, ServedModel};
+use crate::util::stats::Summary;
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+}
+
+/// The served completion.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub text: String,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    /// Time to first token (prefill completion), seconds.
+    pub ttft_s: f64,
+    /// End-to-end latency, seconds.
+    pub e2e_s: f64,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// Dynamic batching window.
+    pub batch_window: Duration,
+    /// Core-management policy run in shadow mode.
+    pub policy: String,
+    /// Shadow CPU size (cores).
+    pub shadow_cores: usize,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifacts_dir: Runtime::default_artifacts_dir(),
+            batch_window: Duration::from_millis(10),
+            policy: "proposed".into(),
+            shadow_cores: 40,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregate serving report.
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub generated_tokens: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+    pub requests_per_s: f64,
+    pub ttft: Summary,
+    pub e2e: Summary,
+    /// Mean per-iteration decode latency (s).
+    pub decode_step_s: f64,
+    /// Mean prefill latency (s).
+    pub prefill_s: f64,
+    pub shadow: ShadowReport,
+}
+
+impl ServerReport {
+    pub fn print(&self) {
+        println!("── serving report ───────────────────────────────────────");
+        println!("requests            {:>10}", self.requests);
+        println!("batches             {:>10}", self.batches);
+        println!("generated tokens    {:>10}", self.generated_tokens);
+        println!("wall time           {:>10.2} s", self.wall_s);
+        println!("throughput          {:>10.1} tok/s   {:>8.2} req/s", self.tokens_per_s, self.requests_per_s);
+        println!("prefill latency     {:>10.2} ms (mean)", self.prefill_s * 1e3);
+        println!("decode step         {:>10.2} ms (mean)", self.decode_step_s * 1e3);
+        println!("TTFT   p50/p99      {:>10.2} / {:.2} ms", self.ttft.p50 * 1e3, self.ttft.p99 * 1e3);
+        println!("E2E    p50/p99      {:>10.2} / {:.2} ms", self.e2e.p50 * 1e3, self.e2e.p99 * 1e3);
+        let s = &self.shadow;
+        println!("── shadow core manager ({} on {} cores) ──", s.policy, s.n_cores);
+        println!("cpu tasks           {:>10}", s.tasks_started);
+        println!("oversub events      {:>10}", s.oversub_events);
+        println!("C6 (age-halt) time  {:>10.1} %", s.c6_fraction * 100.0);
+        println!("mean ΔVth           {:>10.3e} V", s.mean_dvth);
+        println!("idle p1/p50/p90     {:>7.3} / {:.3} / {:.3}", s.idle.p1, s.idle.p50, s.idle.p90);
+    }
+}
+
+type Job = (ServeRequest, Instant, mpsc::Sender<ServeResponse>);
+
+/// The server: spawns the worker thread that owns the PJRT model.
+pub struct Server {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<ServerReport>>,
+}
+
+impl Server {
+    /// Start the server; blocks until the model is loaded (or fails).
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("carbon-sim-worker".into())
+            .spawn(move || worker_main(cfg, rx, ready_tx))
+            .context("spawning worker")?;
+        ready_rx
+            .recv()
+            .context("worker died during startup")?
+            .map_err(|e| anyhow::anyhow!("model load failed: {e}"))?;
+        Ok(Server { tx: Some(tx), handle: Some(handle) })
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: ServeRequest) -> mpsc::Receiver<ServeResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send((req, Instant::now(), tx))
+            .expect("worker alive");
+        rx
+    }
+
+    /// Drain outstanding work and return the aggregate report.
+    pub fn shutdown(mut self) -> ServerReport {
+        drop(self.tx.take());
+        self.handle.take().expect("not yet shut down").join().expect("worker panicked")
+    }
+}
+
+// ------------------------------------------------------------------ worker
+
+struct SlotState {
+    req: ServeRequest,
+    submitted: Instant,
+    reply: mpsc::Sender<ServeResponse>,
+    prompt_tokens: Vec<i32>,
+    generated: Vec<i32>,
+    ttft_s: f64,
+    done: bool,
+}
+
+fn worker_main(
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Job>,
+    ready_tx: mpsc::Sender<Result<(), String>>,
+) -> ServerReport {
+    let model = match Runtime::cpu(&cfg.artifacts_dir).and_then(ServedModel::load) {
+        Ok(m) => {
+            let _ = ready_tx.send(Ok(()));
+            m
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            // Report is never observed: Server::start fails first.
+            panic!("model load failed: {e:#}");
+        }
+    };
+    let tokenizer = ByteTokenizer::new(model.dims.vocab);
+    let mut shadow = ShadowCpuManager::new(cfg.shadow_cores, &cfg.policy, cfg.seed)
+        .expect("valid shadow policy");
+    let mut batcher: Batcher<Job> = Batcher::new(BatcherConfig {
+        max_batch: model.dims.batch,
+        window: cfg.batch_window,
+    });
+
+    let started = Instant::now();
+    let mut ttfts = Vec::new();
+    let mut e2es = Vec::new();
+    let mut batches = 0usize;
+    let mut requests = 0usize;
+    let mut generated_tokens = 0usize;
+    let mut prefill_times = Vec::new();
+    let mut decode_times = Vec::new();
+    let mut disconnected = false;
+
+    while !(disconnected && batcher.is_empty()) {
+        // Fill the batcher until ready (or the channel closes).
+        while !batcher.ready(Instant::now()) && !disconnected {
+            let timeout = batcher
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(50));
+            match rx.recv_timeout(timeout) {
+                Ok(job) => batcher.push(job, Instant::now()),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if batcher.is_empty() {
+                        continue;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+        }
+        let Some(batch) = batcher.pop_batch(Instant::now()) else {
+            continue;
+        };
+        batches += 1;
+        requests += batch.len();
+        let (gen, pf_s, dc_s) =
+            process_batch(&model, &tokenizer, &mut shadow, batch, &mut ttfts, &mut e2es);
+        generated_tokens += gen;
+        prefill_times.push(pf_s);
+        decode_times.extend(dc_s);
+    }
+
+    let wall_s = started.elapsed().as_secs_f64();
+    ServerReport {
+        requests,
+        batches,
+        generated_tokens,
+        wall_s,
+        tokens_per_s: generated_tokens as f64 / wall_s.max(1e-9),
+        requests_per_s: requests as f64 / wall_s.max(1e-9),
+        ttft: Summary::of(&ttfts),
+        e2e: Summary::of(&e2es),
+        decode_step_s: crate::util::stats::mean(&decode_times),
+        prefill_s: crate::util::stats::mean(&prefill_times),
+        shadow: shadow.report(&cfg.policy),
+    }
+}
+
+/// Run one batch to completion: prefill, then greedy decode until every
+/// slot hits its token budget (or the context limit).
+fn process_batch(
+    model: &ServedModel,
+    tokenizer: &ByteTokenizer,
+    shadow: &mut ShadowCpuManager,
+    batch: Vec<Job>,
+    ttfts: &mut Vec<f64>,
+    e2es: &mut Vec<f64>,
+) -> (usize, f64, Vec<f64>) {
+    let dims = model.dims;
+    let b = dims.batch;
+    let s_max = dims.max_seq;
+
+    // Scheduler bookkeeping tasks (shadow).
+    let mut slots: Vec<Option<SlotState>> = Vec::with_capacity(b);
+    for (req, submitted, reply) in batch {
+        let t_sub = shadow.task_begin(TaskKind::Submit);
+        let t_chain = shadow.task_begin(TaskKind::SubmitChain);
+        let mut toks = tokenizer.encode(&req.prompt);
+        let budget = req.max_new_tokens.min(s_max.saturating_sub(2));
+        let max_prompt = s_max - budget.max(1) - 1;
+        toks.truncate(max_prompt.max(1));
+        if toks.is_empty() {
+            toks.push(0);
+        }
+        slots.push(Some(SlotState {
+            req,
+            submitted,
+            reply,
+            prompt_tokens: toks,
+            generated: Vec::new(),
+            ttft_s: 0.0,
+            done: false,
+        }));
+        shadow.task_end(t_sub);
+        shadow.task_end(t_chain);
+    }
+    while slots.len() < b {
+        slots.push(None); // padding slots
+    }
+
+    // Prefill.
+    let mut tokens = vec![0i32; b * s_max];
+    let mut lengths = vec![1i32; b];
+    for (i, slot) in slots.iter().enumerate() {
+        if let Some(st) = slot {
+            for (j, &t) in st.prompt_tokens.iter().enumerate() {
+                tokens[i * s_max + j] = t;
+            }
+            lengths[i] = st.prompt_tokens.len() as i32;
+        }
+    }
+    let t_alloc = shadow.task_begin(TaskKind::AllocMemory);
+    let pf_start = Instant::now();
+    let pf = model.prefill(&tokens, &lengths).expect("prefill");
+    let prefill_s = pf_start.elapsed().as_secs_f64();
+    shadow.task_end(t_alloc);
+
+    // First token from prefill logits.
+    let mut cur_tokens = model.argmax_tokens(&pf.logits);
+    let mut k = pf.k_cache;
+    let mut v = pf.v_cache;
+    for (i, slot) in slots.iter_mut().enumerate() {
+        if let Some(st) = slot {
+            st.ttft_s = st.submitted.elapsed().as_secs_f64();
+            st.generated.push(cur_tokens[i]);
+            if st.generated.len() >= st.req.max_new_tokens {
+                st.done = true;
+            }
+        }
+    }
+
+    // Greedy decode loop: fused chunks when the artifact provides them
+    // (§Perf — one PJRT dispatch per `decode_chunk_steps` tokens),
+    // otherwise token-by-token.
+    let mut decode_times = Vec::new();
+    let chunk_steps = model.decode_chunk_steps;
+    let mut remaining: Vec<i32> = slots
+        .iter()
+        .map(|s| s.as_ref().map_or(0, |st| (st.req.max_new_tokens.saturating_sub(1)) as i32))
+        .collect();
+    loop {
+        let work_left = remaining.iter().any(|&r| r > 0);
+        let ctx_full = lengths.iter().any(|&l| l as usize >= s_max - 1);
+        if !work_left || ctx_full {
+            break;
+        }
+        if chunk_steps > 0 {
+            let t_iter = shadow.task_begin(TaskKind::StartIteration);
+            let dc_start = Instant::now();
+            let out = model
+                .decode_chunk(&k, &v, &cur_tokens, &lengths, &remaining)
+                .expect("decode_chunk");
+            decode_times.push(dc_start.elapsed().as_secs_f64() / chunk_steps as f64);
+            shadow.task_end(t_iter);
+            k = out.k_cache;
+            v = out.v_cache;
+            lengths = out.lengths;
+            remaining = out.remaining;
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if let Some(st) = slot {
+                    for step in 0..chunk_steps {
+                        let tok = out.tokens[i * chunk_steps + step];
+                        if tok >= 0 && !st.done {
+                            st.generated.push(tok);
+                            cur_tokens[i] = tok;
+                            if st.generated.len() >= st.req.max_new_tokens {
+                                st.done = true;
+                            }
+                        }
+                    }
+                }
+            }
+        } else {
+            let t_iter = shadow.task_begin(TaskKind::StartIteration);
+            let dc_start = Instant::now();
+            let out = model.decode(&k, &v, &cur_tokens, &lengths).expect("decode");
+            decode_times.push(dc_start.elapsed().as_secs_f64());
+            shadow.task_end(t_iter);
+            k = out.k_cache;
+            v = out.v_cache;
+            let next = model.argmax_tokens(&out.logits);
+            for (i, slot) in slots.iter_mut().enumerate() {
+                match slot {
+                    Some(st) if !st.done => {
+                        lengths[i] += 1;
+                        cur_tokens[i] = next[i];
+                        remaining[i] -= 1;
+                        st.generated.push(next[i]);
+                        if st.generated.len() >= st.req.max_new_tokens {
+                            st.done = true;
+                        }
+                    }
+                    _ => {} // finished/padding slots hold their position
+                }
+            }
+        }
+    }
+
+    // Complete requests.
+    let mut gen_total = 0usize;
+    for slot in slots.into_iter().flatten() {
+        let t_fin = shadow.task_begin(TaskKind::FinishRequest);
+        let t_free = shadow.task_begin(TaskKind::FreeMemory);
+        let e2e = slot.submitted.elapsed().as_secs_f64();
+        ttfts.push(slot.ttft_s);
+        e2es.push(e2e);
+        gen_total += slot.generated.len();
+        let resp = ServeResponse {
+            id: slot.req.id,
+            text: tokenizer.decode(&slot.generated),
+            prompt_tokens: slot.prompt_tokens.len(),
+            generated_tokens: slot.generated.len(),
+            ttft_s: slot.ttft_s,
+            e2e_s: e2e,
+        };
+        let _ = slot.reply.send(resp);
+        shadow.task_end(t_fin);
+        shadow.task_end(t_free);
+    }
+    (gen_total, prefill_s, decode_times)
+}

@@ -1,0 +1,183 @@
+//! Shadow CPU core manager for the real serving stack.
+//!
+//! On real hardware the technique would drive `cpuidle` states and
+//! `sched_setaffinity`; in this repo the serving stack runs on whatever
+//! host executes it, so the core manager runs in *shadow mode*: every
+//! serving-side CPU task (batch scheduling, memory bookkeeping, each
+//! decode iteration) is reported to a [`CoreManager`] against wall-clock
+//! time, which runs the exact Algorithm 1/2 implementations the simulator
+//! uses and records what the working set, aging, and oversubscription
+//! *would have been*. The end-to-end example prints this next to the real
+//! latency/throughput numbers.
+
+use std::time::Instant;
+
+use crate::cluster::TaskKind;
+use crate::cpu::{AgingParams, CpuPackage, TemperatureModel};
+use crate::policy::{self, CoreManager};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// The shadow manager.
+pub struct ShadowCpuManager {
+    mgr: CoreManager,
+    start: Instant,
+    adjust_period_s: Option<f64>,
+    last_adjust_s: f64,
+    next_task: u64,
+    /// Normalized idle-core availability sampled at each task begin.
+    pub idle_samples: Vec<f64>,
+    pub tasks_started: u64,
+}
+
+/// End-of-run shadow statistics.
+#[derive(Clone, Debug)]
+pub struct ShadowReport {
+    pub policy: String,
+    pub n_cores: usize,
+    pub tasks_started: u64,
+    pub oversub_events: u64,
+    /// Fraction of wall-clock core-seconds spent in C6 (age-halted).
+    pub c6_fraction: f64,
+    /// Mean accumulated ΔVth across cores (V) — wall-clock scale.
+    pub mean_dvth: f64,
+    /// CV of the (hypothetical) core frequency distribution.
+    pub freq_cv: f64,
+    pub idle: Summary,
+}
+
+impl ShadowCpuManager {
+    pub fn new(n_cores: usize, policy_name: &str, seed: u64) -> Result<ShadowCpuManager, String> {
+        let cpu = CpuPackage::uniform(
+            n_cores,
+            AgingParams::paper_default(),
+            TemperatureModel::paper_default(),
+        );
+        let policy = policy::by_name(policy_name)?;
+        let adjust_period_s = policy.adjust_period_s();
+        Ok(ShadowCpuManager {
+            mgr: CoreManager::new(cpu, policy, Rng::new(seed)),
+            start: Instant::now(),
+            adjust_period_s,
+            last_adjust_s: 0.0,
+            next_task: 0,
+            idle_samples: Vec::new(),
+            tasks_started: 0,
+        })
+    }
+
+    /// Wall-clock simulation time (seconds since server start).
+    pub fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn maybe_adjust(&mut self, now: f64) {
+        if let Some(p) = self.adjust_period_s {
+            if now - self.last_adjust_s >= p {
+                self.mgr.adjust(now);
+                self.last_adjust_s = now;
+            }
+        }
+    }
+
+    /// Report a CPU task starting; returns its shadow id.
+    pub fn task_begin(&mut self, _kind: TaskKind) -> u64 {
+        let now = self.now();
+        self.maybe_adjust(now);
+        let id = self.next_task;
+        self.next_task += 1;
+        self.tasks_started += 1;
+        self.idle_samples.push(self.mgr.cpu.normalized_idle_for_extra_task());
+        self.mgr.start_task(id, now);
+        id
+    }
+
+    /// Report a CPU task finishing.
+    pub fn task_end(&mut self, id: u64) {
+        let now = self.now();
+        self.mgr.finish_task(id, now);
+        self.maybe_adjust(now);
+    }
+
+    /// Current working-set size (C0 cores).
+    pub fn active_cores(&self) -> usize {
+        self.mgr.cpu.active_count()
+    }
+
+    pub fn report(&mut self, policy_name: &str) -> ShadowReport {
+        let now = self.now();
+        let freqs = self.mgr.cpu.frequencies(now);
+        let total_time: f64 = self
+            .mgr
+            .cpu
+            .cores
+            .iter()
+            .map(|c| c.active_time + c.c6_time)
+            .sum();
+        let c6_time: f64 = self.mgr.cpu.cores.iter().map(|c| c.c6_time).sum();
+        ShadowReport {
+            policy: policy_name.to_string(),
+            n_cores: self.mgr.cpu.n_cores(),
+            tasks_started: self.tasks_started,
+            oversub_events: self.mgr.oversub_events,
+            c6_fraction: if total_time > 0.0 { c6_time / total_time } else { 0.0 },
+            mean_dvth: crate::util::stats::mean(
+                &self.mgr.cpu.cores.iter().map(|c| c.dvth).collect::<Vec<_>>(),
+            ),
+            freq_cv: crate::util::stats::coeff_of_variation(&freqs),
+            idle: Summary::of(&self.idle_samples),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shadow_tracks_tasks_and_idles_cores() {
+        let mut s = ShadowCpuManager::new(16, "proposed", 1).unwrap();
+        // Simulate some bursts of work.
+        for _ in 0..20 {
+            let ids: Vec<u64> =
+                (0..3).map(|_| s.task_begin(TaskKind::StartIteration)).collect();
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            for id in ids {
+                s.task_end(id);
+            }
+        }
+        let r = s.report("proposed");
+        assert_eq!(r.tasks_started, 60);
+        assert_eq!(r.n_cores, 16);
+        assert_eq!(r.idle.n, 60);
+    }
+
+    #[test]
+    fn baselines_never_deep_idle_in_shadow() {
+        let mut s = ShadowCpuManager::new(8, "linux", 2).unwrap();
+        for _ in 0..10 {
+            let id = s.task_begin(TaskKind::Submit);
+            s.task_end(id);
+        }
+        assert_eq!(s.active_cores(), 8);
+        let r = s.report("linux");
+        assert_eq!(r.c6_fraction, 0.0);
+    }
+
+    #[test]
+    fn proposed_shrinks_working_set_over_time() {
+        let mut s = ShadowCpuManager::new(32, "proposed", 3);
+        let s = s.as_mut().unwrap();
+        // Force the periodic adjust by faking elapsed time via tasks with
+        // sleeps: one adjust period is 1 s, too slow for a unit test, so
+        // call the internals directly.
+        s.mgr.adjust(10.0);
+        assert!(s.mgr.cpu.c6_count() > 0);
+        assert!(s.mgr.cpu.active_count() >= 1);
+        // And it can recover under load.
+        for _ in 0..64 {
+            s.task_begin(TaskKind::StartIteration);
+        }
+        assert!(s.mgr.cpu.running_tasks() == 64);
+    }
+}

@@ -1,0 +1,60 @@
+//! Byte-level tokenizer for the served model (vocab = 256 ⇒ every UTF-8
+//! byte is a token; no external vocabulary files needed offline).
+
+/// Byte tokenizer.
+#[derive(Clone, Copy, Debug)]
+pub struct ByteTokenizer {
+    pub vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> ByteTokenizer {
+        assert!(vocab >= 2);
+        ByteTokenizer { vocab }
+    }
+
+    /// Encode a string: one token per byte, clamped into the vocab.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| (b as usize % self.vocab) as i32).collect()
+    }
+
+    /// Decode tokens back to text (lossy for non-UTF-8 sequences).
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = ByteTokenizer::new(256);
+        let s = "Hello, inference cluster 42!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let t = ByteTokenizer::new(256);
+        let s = "θ-shift: ΔVth ✓";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn encode_stays_in_vocab() {
+        let t = ByteTokenizer::new(256);
+        for tok in t.encode("ÿ\u{7f}\u{0}") {
+            assert!((0..256).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn decode_clamps_out_of_range() {
+        let t = ByteTokenizer::new(256);
+        let s = t.decode(&[72, 105, 999, -5]);
+        assert!(s.starts_with("Hi"));
+    }
+}

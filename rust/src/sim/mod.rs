@@ -1,0 +1,194 @@
+//! Deterministic discrete-event simulation engine.
+//!
+//! Our from-scratch equivalent of splitwise-sim's event core: a binary
+//! heap of `(time, seq)`-ordered events. The `seq` tiebreaker guarantees
+//! FIFO order among same-timestamp events, which makes every run exactly
+//! reproducible from a seed — a property every experiment in
+//! EXPERIMENTS.md relies on.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at a simulation time.
+struct Scheduled<E> {
+    time: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("event times must not be NaN")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event queue / simulation clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    seq: u64,
+    now: f64,
+    processed: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0, processed: 0 }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Total events processed so far.
+    #[inline]
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `at` (must be ≥ now).
+    pub fn push(&mut self, at: f64, payload: E) {
+        debug_assert!(at >= self.now - 1e-9, "scheduling into the past: {at} < {}", self.now);
+        debug_assert!(at.is_finite());
+        self.heap.push(Scheduled { time: at.max(self.now), seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` `delay` seconds from now.
+    pub fn push_in(&mut self, delay: f64, payload: E) {
+        self.push(self.now + delay.max(0.0), payload);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now - 1e-9);
+        self.now = ev.time;
+        self.processed += 1;
+        Some((ev.time, ev.payload))
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn same_time_is_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances() {
+        let mut q = EventQueue::new();
+        q.push(1.5, ());
+        q.push(4.0, ());
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.now(), 1.5);
+        q.push_in(1.0, ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 2.5);
+        q.pop();
+        assert_eq!(q.now(), 4.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        q.push(2.0, ());
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.push(10.0, 10);
+        q.push(1.0, 1);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (1.0, 1));
+        q.push(5.0, 5);
+        q.push(2.0, 2);
+        let mut times = Vec::new();
+        while let Some((t, _)) = q.pop() {
+            times.push(t);
+        }
+        assert_eq!(times, vec![2.0, 5.0, 10.0]);
+    }
+
+    #[test]
+    fn property_random_schedule_is_sorted() {
+        crate::util::proptest::forall(200, 99, |g| {
+            let n = g.size(1, 200);
+            let mut q = EventQueue::new();
+            for i in 0..n {
+                q.push(g.f64(0.0, 1000.0), i);
+            }
+            let mut prev = -1.0;
+            while let Some((t, _)) = q.pop() {
+                if t < prev {
+                    return crate::util::proptest::check(false, format!("{t} < {prev}"));
+                }
+                prev = t;
+            }
+            crate::util::proptest::check(true, "")
+        });
+    }
+}

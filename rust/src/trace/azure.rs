@@ -1,0 +1,249 @@
+//! Synthetic Azure-like LLM inference trace generator.
+//!
+//! Substitutes for the Splitwise production traces (see DESIGN.md). The
+//! published Splitwise trace analysis reports, per workload:
+//!
+//! * **Conversation**: median prompt ≈ 1020 tokens, median output ≈ 129
+//!   tokens, both heavy-tailed.
+//! * **Coding**: median prompt ≈ 1930 tokens, median output ≈ 13–30 tokens
+//!   (short completions).
+//!
+//! We model token counts as clamped log-normals matching those medians
+//! with realistic tails, and arrivals as a Poisson process at the target
+//! throughput — the x-axis of Figs. 2/6/7/8.
+
+use super::{Request, Trace};
+use crate::util::rng::Rng;
+
+/// Which Azure workload mix to synthesize.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    Conversation,
+    Coding,
+    /// Production-like blend: 70 % conversation, 30 % coding.
+    Mixed,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Result<Workload, String> {
+        match s {
+            "conv" | "conversation" => Ok(Workload::Conversation),
+            "code" | "coding" => Ok(Workload::Coding),
+            "mixed" => Ok(Workload::Mixed),
+            other => Err(format!("unknown workload '{other}' (conv|code|mixed)")),
+        }
+    }
+}
+
+/// Generator parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceParams {
+    /// Offered load in requests per second (cluster-wide).
+    pub rate_rps: f64,
+    /// Trace length in seconds.
+    pub duration_s: f64,
+    pub workload: Workload,
+    pub seed: u64,
+}
+
+/// Log-normal spec in (median, sigma) form with clamping.
+#[derive(Clone, Copy, Debug)]
+struct TokenDist {
+    median: f64,
+    sigma: f64,
+    min: u32,
+    max: u32,
+}
+
+impl TokenDist {
+    fn sample(&self, rng: &mut Rng) -> u32 {
+        let mu = self.median.ln();
+        let x = rng.lognormal(mu, self.sigma);
+        (x.round() as u32).clamp(self.min, self.max)
+    }
+}
+
+const CONV_PROMPT: TokenDist = TokenDist { median: 1020.0, sigma: 1.0, min: 4, max: 8192 };
+const CONV_OUTPUT: TokenDist = TokenDist { median: 129.0, sigma: 0.8, min: 1, max: 1024 };
+const CODE_PROMPT: TokenDist = TokenDist { median: 1930.0, sigma: 0.7, min: 16, max: 8192 };
+const CODE_OUTPUT: TokenDist = TokenDist { median: 28.0, sigma: 0.9, min: 1, max: 512 };
+
+/// The trace generator.
+pub struct AzureTraceGen {
+    pub params: TraceParams,
+}
+
+impl AzureTraceGen {
+    pub fn new(params: TraceParams) -> AzureTraceGen {
+        AzureTraceGen { params }
+    }
+
+    /// Generate a trace with a diurnal load profile: an inhomogeneous
+    /// Poisson process `λ(t) = rate·(1 + amplitude·sin(2πt/period))`
+    /// sampled by thinning. Production Azure traffic follows day/night
+    /// cycles; this stresses Selective Core Idling's tracking of load
+    /// *decreases* (the periodic branch of the controller).
+    pub fn generate_diurnal(&self, amplitude: f64, period_s: f64) -> Trace {
+        assert!((0.0..=1.0).contains(&amplitude), "amplitude in [0,1]");
+        assert!(period_s > 0.0);
+        let p = &self.params;
+        let mut rng = Rng::new(p.seed ^ 0xD1_0C);
+        let lambda_max = p.rate_rps * (1.0 + amplitude);
+        let mut requests = Vec::new();
+        let mut t = 0.0;
+        let mut id = 0u64;
+        loop {
+            t += rng.exp(lambda_max);
+            if t >= p.duration_s {
+                break;
+            }
+            let lambda_t = p.rate_rps
+                * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_s).sin());
+            if !rng.bool(lambda_t / lambda_max) {
+                continue; // thinned
+            }
+            let coding = match p.workload {
+                Workload::Conversation => false,
+                Workload::Coding => true,
+                Workload::Mixed => rng.bool(0.3),
+            };
+            let (pt, ot) = if coding {
+                (CODE_PROMPT.sample(&mut rng), CODE_OUTPUT.sample(&mut rng))
+            } else {
+                (CONV_PROMPT.sample(&mut rng), CONV_OUTPUT.sample(&mut rng))
+            };
+            requests.push(Request { id, arrival_s: t, prompt_tokens: pt, output_tokens: ot });
+            id += 1;
+        }
+        Trace { requests, duration_s: p.duration_s }
+    }
+
+    /// Generate a full trace.
+    pub fn generate(&self) -> Trace {
+        let mut rng = Rng::new(self.params.seed);
+        let mut requests = Vec::new();
+        let mut t = 0.0;
+        let mut id = 0u64;
+        loop {
+            t += rng.exp(self.params.rate_rps);
+            if t >= self.params.duration_s {
+                break;
+            }
+            let coding = match self.params.workload {
+                Workload::Conversation => false,
+                Workload::Coding => true,
+                Workload::Mixed => rng.bool(0.3),
+            };
+            let (p, o) = if coding {
+                (CODE_PROMPT.sample(&mut rng), CODE_OUTPUT.sample(&mut rng))
+            } else {
+                (CONV_PROMPT.sample(&mut rng), CONV_OUTPUT.sample(&mut rng))
+            };
+            requests.push(Request { id, arrival_s: t, prompt_tokens: p, output_tokens: o });
+            id += 1;
+        }
+        Trace { requests, duration_s: self.params.duration_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn gen(rate: f64, dur: f64, w: Workload, seed: u64) -> Trace {
+        AzureTraceGen::new(TraceParams { rate_rps: rate, duration_s: dur, workload: w, seed })
+            .generate()
+    }
+
+    #[test]
+    fn rate_matches_target() {
+        let t = gen(60.0, 300.0, Workload::Mixed, 1);
+        assert!((t.rate_rps() - 60.0).abs() < 3.0, "rate={}", t.rate_rps());
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gen(40.0, 60.0, Workload::Mixed, 7);
+        let b = gen(40.0, 60.0, Workload::Mixed, 7);
+        assert_eq!(a.requests, b.requests);
+        let c = gen(40.0, 60.0, Workload::Mixed, 8);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn conv_medians_match_published_stats() {
+        let t = gen(200.0, 300.0, Workload::Conversation, 2);
+        let prompts: Vec<f64> = t.requests.iter().map(|r| r.prompt_tokens as f64).collect();
+        let outputs: Vec<f64> = t.requests.iter().map(|r| r.output_tokens as f64).collect();
+        let p50_p = stats::percentile(&prompts, 50.0);
+        let p50_o = stats::percentile(&outputs, 50.0);
+        assert!((p50_p - 1020.0).abs() < 150.0, "prompt median={p50_p}");
+        assert!((p50_o - 129.0).abs() < 25.0, "output median={p50_o}");
+    }
+
+    #[test]
+    fn coding_outputs_are_short() {
+        let t = gen(200.0, 200.0, Workload::Coding, 3);
+        let outputs: Vec<f64> = t.requests.iter().map(|r| r.output_tokens as f64).collect();
+        let p50 = stats::percentile(&outputs, 50.0);
+        assert!(p50 < 60.0, "coding output median={p50}");
+        let prompts: Vec<f64> = t.requests.iter().map(|r| r.prompt_tokens as f64).collect();
+        assert!(stats::percentile(&prompts, 50.0) > 1500.0);
+    }
+
+    #[test]
+    fn interarrivals_are_exponential() {
+        let t = gen(100.0, 200.0, Workload::Mixed, 4);
+        let gaps: Vec<f64> =
+            t.requests.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+        let mean_gap = stats::mean(&gaps);
+        // Poisson(100/s) -> mean gap 10 ms; CV of exponential = 1.
+        assert!((mean_gap - 0.01).abs() < 0.002, "mean gap={mean_gap}");
+        let cv = stats::coeff_of_variation(&gaps);
+        assert!((cv - 1.0).abs() < 0.12, "cv={cv}");
+    }
+
+    #[test]
+    fn diurnal_profile_modulates_rate() {
+        let g = AzureTraceGen::new(TraceParams {
+            rate_rps: 100.0,
+            duration_s: 400.0,
+            workload: Workload::Mixed,
+            seed: 6,
+        });
+        // One full sine period: first half above base rate, second below.
+        let t = g.generate_diurnal(0.8, 400.0);
+        assert!(t.validate().is_ok());
+        let first = t.requests.iter().filter(|r| r.arrival_s < 200.0).count() as f64;
+        let second = t.requests.len() as f64 - first;
+        assert!(first > second * 1.8, "first={first} second={second}");
+        // Total volume stays near the base rate (sine integrates to 0).
+        assert!((t.rate_rps() - 100.0).abs() < 8.0, "rate={}", t.rate_rps());
+    }
+
+    #[test]
+    fn diurnal_zero_amplitude_is_homogeneous() {
+        let g = AzureTraceGen::new(TraceParams {
+            rate_rps: 50.0,
+            duration_s: 100.0,
+            workload: Workload::Mixed,
+            seed: 8,
+        });
+        let t = g.generate_diurnal(0.0, 100.0);
+        assert!((t.rate_rps() - 50.0).abs() < 5.0);
+        let first = t.requests.iter().filter(|r| r.arrival_s < 50.0).count() as f64;
+        let second = t.requests.len() as f64 - first;
+        assert!((first / second - 1.0).abs() < 0.25);
+    }
+
+    #[test]
+    fn tokens_within_clamps() {
+        let t = gen(100.0, 100.0, Workload::Mixed, 5);
+        for r in &t.requests {
+            assert!((1..=8192).contains(&r.prompt_tokens));
+            assert!((1..=1024).contains(&r.output_tokens));
+        }
+    }
+}

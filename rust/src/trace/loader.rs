@@ -1,0 +1,117 @@
+//! JSONL trace file IO.
+//!
+//! Format: one JSON object per line —
+//! `{"id": 0, "arrival_s": 0.013, "prompt_tokens": 980, "output_tokens": 120}`.
+//! A leading header object `{"duration_s": ...}` is optional; when absent,
+//! the last arrival time is used as the duration.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use super::{Request, Trace};
+use crate::util::json::{parse, Value};
+
+/// Write a trace to a JSONL file.
+pub fn save(trace: &Trace, path: &Path) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    let header = Value::obj(vec![("duration_s", trace.duration_s.into())]);
+    writeln!(w, "{}", header.to_string_compact())?;
+    for r in &trace.requests {
+        let v = Value::obj(vec![
+            ("id", (r.id as usize).into()),
+            ("arrival_s", r.arrival_s.into()),
+            ("prompt_tokens", (r.prompt_tokens as usize).into()),
+            ("output_tokens", (r.output_tokens as usize).into()),
+        ]);
+        writeln!(w, "{}", v.to_string_compact())?;
+    }
+    Ok(())
+}
+
+/// Load a trace from a JSONL file.
+pub fn load(path: &Path) -> Result<Trace, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+    let reader = std::io::BufReader::new(f);
+    let mut trace = Trace::default();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("read {path:?}:{lineno}: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse(&line).map_err(|e| format!("{path:?}:{}: {e}", lineno + 1))?;
+        if let Some(d) = v.get("duration_s").and_then(Value::as_f64) {
+            if v.get("id").is_none() {
+                trace.duration_s = d;
+                continue;
+            }
+        }
+        let req = Request {
+            id: v.get("id").and_then(Value::as_u64).ok_or(format!("line {}: no id", lineno + 1))?,
+            arrival_s: v
+                .get("arrival_s")
+                .and_then(Value::as_f64)
+                .ok_or(format!("line {}: no arrival_s", lineno + 1))?,
+            prompt_tokens: v
+                .get("prompt_tokens")
+                .and_then(Value::as_u64)
+                .ok_or(format!("line {}: no prompt_tokens", lineno + 1))?
+                as u32,
+            output_tokens: v
+                .get("output_tokens")
+                .and_then(Value::as_u64)
+                .ok_or(format!("line {}: no output_tokens", lineno + 1))?
+                as u32,
+        };
+        trace.requests.push(req);
+    }
+    if trace.duration_s == 0.0 {
+        trace.duration_s = trace.requests.last().map(|r| r.arrival_s).unwrap_or(0.0);
+    }
+    trace.validate()?;
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::azure::{AzureTraceGen, TraceParams, Workload};
+
+    #[test]
+    fn roundtrip() {
+        let t = AzureTraceGen::new(TraceParams {
+            rate_rps: 50.0,
+            duration_s: 10.0,
+            workload: Workload::Mixed,
+            seed: 1,
+        })
+        .generate();
+        let dir = std::env::temp_dir().join("carbon_sim_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        save(&t, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.duration_s, t.duration_s);
+        assert_eq!(loaded.requests.len(), t.requests.len());
+        for (a, b) in loaded.requests.iter().zip(t.requests.iter()) {
+            assert_eq!(a.id, b.id);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-9);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+        }
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/file.jsonl")).is_err());
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let dir = std::env::temp_dir().join("carbon_sim_trace_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"id\": 0}\n").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal criterion-style benchmark harness (`criterion` is not available
+//! on the offline toolchain). `cargo bench` runs each bench target as a
+//! plain binary (`harness = false`); those binaries use this module both
+//! for wall-clock micro-benchmarks (§Perf) and to print the figure/table
+//! reproduction rows.
+
+use std::time::Instant;
+
+/// Timing statistics of a measured closure.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: u64,
+    pub total_s: f64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+}
+
+/// Measure `f`, auto-calibrating the iteration count to fill roughly
+/// `target_s` seconds of wall time (criterion-like behaviour).
+pub fn bench<F: FnMut()>(name: &str, target_s: f64, mut f: F) -> BenchStats {
+    // Warm up + calibrate.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / once).clamp(1.0, 5_000_000.0)) as u64;
+
+    // Batched sampling: split iterations into up to 100 samples.
+    let samples = (iters.min(100)).max(1);
+    let per_sample = (iters / samples).max(1);
+    let mut sample_ns: Vec<f64> = Vec::with_capacity(samples as usize);
+    let total_t = Instant::now();
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..per_sample {
+            f();
+        }
+        sample_ns.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
+    }
+    let total_s = total_t.elapsed().as_secs_f64();
+    sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_ns = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+    let stats = BenchStats {
+        iters: samples * per_sample,
+        total_s,
+        mean_ns,
+        p50_ns: super::stats::percentile_sorted(&sample_ns, 50.0),
+        p99_ns: super::stats::percentile_sorted(&sample_ns, 99.0),
+        min_ns: sample_ns[0],
+        max_ns: *sample_ns.last().unwrap(),
+    };
+    println!(
+        "bench {name:<42} {:>12.1} ns/iter  (p50 {:>10.1}, p99 {:>10.1})  {:>14.0} it/s",
+        stats.mean_ns,
+        stats.p50_ns,
+        stats.p99_ns,
+        stats.throughput_per_s()
+    );
+    stats
+}
+
+/// Section header used by the figure-reproduction bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a table row with fixed column widths.
+pub fn row(cells: &[String]) {
+    let line: Vec<String> = cells.iter().map(|c| format!("{c:<16}")).collect();
+    println!("{}", line.join(" "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let s = bench("noop-ish", 0.02, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.iters >= 1);
+        assert!(s.mean_ns >= 0.0);
+        assert!(s.min_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn throughput_inverse_of_mean() {
+        let s = BenchStats {
+            iters: 1,
+            total_s: 1.0,
+            mean_ns: 100.0,
+            p50_ns: 100.0,
+            p99_ns: 100.0,
+            min_ns: 100.0,
+            max_ns: 100.0,
+        };
+        assert!((s.throughput_per_s() - 1e7).abs() < 1.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Minimal dense linear algebra: just enough for the process-variation
+//! model — building the spatial correlation matrix `rho_ij,kl =
+//! exp(-alpha * dist)` over the N_chip x N_chip grid and sampling
+//! correlated Gaussians via a Cholesky factorization.
+
+/// Row-major square matrix.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(n: usize) -> Matrix {
+        Matrix { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Lower-triangular Cholesky factor L with A = L L^T.
+    ///
+    /// Adds a tiny jitter to the diagonal on near-singular inputs (the
+    /// correlation matrix of a fine grid with slowly decaying correlation
+    /// is numerically borderline-PSD).
+    pub fn cholesky(&self) -> Result<Matrix, String> {
+        let n = self.n;
+        let mut l = Matrix::zeros(n);
+        let jitter = 1e-10;
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self.get(i, j);
+                for k in 0..j {
+                    sum -= l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    let d = sum + jitter;
+                    if d <= 0.0 {
+                        return Err(format!("matrix not positive definite at row {i} (d={d})"));
+                    }
+                    l.set(i, j, d.sqrt());
+                } else {
+                    l.set(i, j, sum / l.get(j, j));
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// y = A x (x.len() == n).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            let row = &self.data[i * self.n..(i + 1) * self.n];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// y = L x exploiting lower-triangular structure (Cholesky sampling).
+    pub fn lower_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            let row = &self.data[i * self.n..i * self.n + i + 1];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_of_identity() {
+        let i4 = Matrix::identity(4);
+        let l = i4.cholesky().unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((l.get(i, j) - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = B B^T + n I is SPD for random B.
+        let n = 8;
+        let mut rng = Rng::new(99);
+        let mut b = Matrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                b.set(i, j, rng.gaussian());
+            }
+        }
+        let mut a = Matrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b.get(i, k) * b.get(j, k);
+                }
+                a.set(i, j, s + if i == j { n as f64 } else { 0.0 });
+            }
+        }
+        let l = a.cholesky().unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l.get(i, k) * l.get(j, k);
+                }
+                assert!((s - a.get(i, j)).abs() < 1e-8, "mismatch at {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Matrix::identity(2);
+        a.set(0, 0, -1.0);
+        assert!(a.cholesky().is_err());
+    }
+
+    #[test]
+    fn correlated_samples_have_target_correlation() {
+        // 2x2 correlation 0.8: empirical correlation of L z should match.
+        let mut a = Matrix::identity(2);
+        a.set(0, 1, 0.8);
+        a.set(1, 0, 0.8);
+        let l = a.cholesky().unwrap();
+        let mut rng = Rng::new(4);
+        let n = 100_000;
+        let (mut sx, mut sy, mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = [rng.gaussian(), rng.gaussian()];
+            let v = l.lower_matvec(&z);
+            sx += v[0];
+            sy += v[1];
+            sxy += v[0] * v[1];
+            sxx += v[0] * v[0];
+            syy += v[1] * v[1];
+        }
+        let nf = n as f64;
+        let cov = sxy / nf - (sx / nf) * (sy / nf);
+        let vx = sxx / nf - (sx / nf).powi(2);
+        let vy = syy / nf - (sy / nf).powi(2);
+        let corr = cov / (vx * vy).sqrt();
+        assert!((corr - 0.8).abs() < 0.01, "corr={corr}");
+    }
+
+    #[test]
+    fn matvec_basic() {
+        let mut a = Matrix::zeros(2);
+        a.set(0, 0, 1.0);
+        a.set(0, 1, 2.0);
+        a.set(1, 0, 3.0);
+        a.set(1, 1, 4.0);
+        let y = a.matvec(&[1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 7.0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dependency-free substrate utilities.
+//!
+//! The offline build environment vendors only the crates the `xla` FFI
+//! needs, so the project carries its own small implementations of the
+//! usual ecosystem pieces: RNG + distributions ([`rng`]), statistics
+//! ([`stats`]), dense linear algebra for correlated sampling ([`linalg`]),
+//! JSON ([`json`]), CLI parsing ([`cli`]), a criterion-style bench harness
+//! ([`bench`]), and a property-testing harness ([`proptest`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,129 @@
+//! Miniature property-based testing harness (the `proptest` crate is not
+//! available offline). Generates many random cases from a seeded RNG and,
+//! on failure, retries with "smaller" cases to report a reduced example.
+//!
+//! Usage:
+//! ```ignore
+//! forall(1000, seed, |g| {
+//!     let n = g.size(1, 128);
+//!     let xs = g.vec_f64(n, 0.0, 1.0);
+//!     check(some_invariant(&xs), format!("xs={xs:?}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to each property iteration. `scale` in (0, 1]
+/// shrinks the magnitude of generated sizes/values for reduction attempts.
+pub struct Gen {
+    pub rng: Rng,
+    pub scale: f64,
+}
+
+impl Gen {
+    /// A size in [lo, hi], scaled down during shrink attempts.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.scale).round() as usize;
+        lo + if span == 0 { 0 } else { self.rng.usize(span + 1) }
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let span = (hi - lo) * self.scale;
+        lo + self.rng.f64() * span
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.size(lo, hi)).collect()
+    }
+}
+
+/// Outcome of a single property check.
+pub enum Check {
+    Pass,
+    Fail(String),
+}
+
+/// Assert-style helper producing a [`Check`].
+pub fn check(cond: bool, msg: impl Into<String>) -> Check {
+    if cond {
+        Check::Pass
+    } else {
+        Check::Fail(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing case's
+/// message (after shrink attempts) if any case fails.
+pub fn forall<F: FnMut(&mut Gen) -> Check>(cases: u32, seed: u64, mut prop: F) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_rng = root.fork(case as u64);
+        let mut g = Gen { rng: case_rng.clone(), scale: 1.0 };
+        if let Check::Fail(msg) = prop(&mut g) {
+            // Shrink: replay the same stream at smaller scales; keep the
+            // smallest scale that still fails.
+            let mut best = (1.0_f64, msg);
+            for &scale in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g2 = Gen { rng: case_rng.clone(), scale };
+                if let Check::Fail(m2) = prop(&mut g2) {
+                    best = (scale, m2);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}, shrink-scale={}):\n{}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(200, 1, |g| {
+            let n = g.size(0, 50);
+            let xs = g.vec_f64(n, -10.0, 10.0);
+            let sum: f64 = xs.iter().sum();
+            let sum_rev: f64 = xs.iter().rev().sum();
+            check((sum - sum_rev).abs() < 1e-9, "sum should be order-insensitive")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(100, 2, |g| {
+            let x = g.f64(0.0, 100.0);
+            check(x < 50.0, format!("x={x} >= 50"))
+        });
+    }
+
+    #[test]
+    fn gen_size_respects_bounds() {
+        let mut g = Gen { rng: Rng::new(3), scale: 1.0 };
+        for _ in 0..1000 {
+            let s = g.size(2, 7);
+            assert!((2..=7).contains(&s));
+        }
+    }
+
+    #[test]
+    fn shrink_scale_reduces_sizes() {
+        let mut g_small = Gen { rng: Rng::new(4), scale: 0.1 };
+        for _ in 0..100 {
+            assert!(g_small.size(0, 100) <= 11);
+        }
+    }
+}

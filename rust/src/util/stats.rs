@@ -1,0 +1,279 @@
+//! Statistics helpers: percentiles, coefficient of variation, histograms.
+//!
+//! These back every metric the paper reports: frequency CV across cores
+//! (Fig. 6), percentile bands across cluster machines (p1/p50/p90/p99 in
+//! Figs. 6–8), and the violin-style distributions of Fig. 2 / Fig. 8.
+
+/// Arithmetic mean. Empty input -> 0.0.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance. Empty input -> 0.0.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Coefficient of variation: sigma / mean. The paper's per-CPU aging
+/// unevenness metric (Fig. 6). Returns 0 for empty/zero-mean inputs.
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    std_dev(xs) / m.abs()
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice (ascending).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Summary of a distribution: the percentile band the paper reports plus
+/// mean/min/max. Produced by every experiment runner.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p1: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p1: 0.0,
+                p25: 0.0,
+                p50: 0.0,
+                p75: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: std_dev(&v),
+            min: v[0],
+            p1: percentile_sorted(&v, 1.0),
+            p25: percentile_sorted(&v, 25.0),
+            p50: percentile_sorted(&v, 50.0),
+            p75: percentile_sorted(&v, 75.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: *v.last().unwrap(),
+        }
+    }
+
+    /// Render one compact row, used by the bench harnesses.
+    pub fn row(&self) -> String {
+        format!(
+            "n={:<8} mean={:<12.6} std={:<12.6} min={:<12.6} p1={:<12.6} p50={:<12.6} p90={:<12.6} p99={:<12.6} max={:<12.6}",
+            self.n, self.mean, self.std, self.min, self.p1, self.p50, self.p90, self.p99, self.max
+        )
+    }
+}
+
+/// Fixed-width histogram over [lo, hi); values outside are clamped into the
+/// edge bins. Used for the violin/distribution figures (Fig. 2, Fig. 8).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], count: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * n as f64) as isize).clamp(0, n as isize - 1) as usize;
+        self.bins[idx] += 1;
+        self.count += 1;
+    }
+
+    /// Normalized bin densities (sum to 1).
+    pub fn density(&self) -> Vec<f64> {
+        if self.count == 0 {
+            return vec![0.0; self.bins.len()];
+        }
+        self.bins.iter().map(|&b| b as f64 / self.count as f64).collect()
+    }
+
+    /// ASCII sparkline of the bins — the text-mode "violin plot".
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.bins.iter().copied().max().unwrap_or(0);
+        if max == 0 {
+            return " ".repeat(self.bins.len());
+        }
+        self.bins
+            .iter()
+            .map(|&b| {
+                if b == 0 {
+                    ' '
+                } else {
+                    let idx = ((b as f64 / max as f64) * 7.0).round() as usize;
+                    GLYPHS[idx.min(7)]
+                }
+            })
+            .collect()
+    }
+}
+
+/// Streaming mean/variance (Welford). Used on the simulator hot path where
+/// storing every sample would allocate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((variance(&xs) - 4.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_scale_invariant() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [10.0, 20.0, 30.0];
+        assert!((coeff_of_variation(&xs) - coeff_of_variation(&ys)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_singleton_and_empty() {
+        assert_eq!(percentile(&[5.0], 99.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn summary_orders() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p1 < s.p50 && s.p50 < s.p90 && s.p90 < s.p99);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 999.0);
+        assert!((s.p50 - 499.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(0.5);
+        h.add(9.5);
+        h.add(-3.0); // clamps into bin 0
+        h.add(42.0); // clamps into bin 9
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        assert_eq!(h.count, 4);
+        let d = h.density();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.add(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-9);
+    }
+}

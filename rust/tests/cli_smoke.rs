@@ -1,0 +1,132 @@
+//! Launcher smoke tests: every CLI subcommand must run end-to-end.
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_carbon-sim")
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin()).args(args).output().expect("spawn carbon-sim");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = run(&["--help"]);
+    assert!(ok);
+    for cmd in ["simulate", "figure", "trace-gen", "serve", "aging-demo"] {
+        assert!(text.contains(cmd), "missing {cmd} in help");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn simulate_runs_small() {
+    let (ok, text) = run(&[
+        "simulate",
+        "--rate",
+        "5",
+        "--duration",
+        "5",
+        "--cores",
+        "8",
+        "--prompt-machines",
+        "1",
+        "--token-machines",
+        "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("requests completed"));
+    assert!(text.contains("mean fred"));
+}
+
+#[test]
+fn simulate_with_config_file() {
+    let dir = std::env::temp_dir().join("carbon_sim_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("c.json");
+    std::fs::write(&cfg, r#"{"cores_per_cpu": 8, "n_prompt": 1, "n_token": 1, "policy": "linux"}"#)
+        .unwrap();
+    let (ok, text) = run(&[
+        "simulate",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--rate",
+        "3",
+        "--duration",
+        "4",
+    ]);
+    assert!(ok, "{text}");
+    // The printed rate is the trace's *achieved* rate, so match loosely.
+    assert!(text.contains("(linux @"), "{text}");
+    assert!(text.contains("8 cores)"), "{text}");
+}
+
+#[test]
+fn simulate_rejects_bad_config() {
+    let dir = std::env::temp_dir().join("carbon_sim_cli_cfg2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("bad.json");
+    std::fs::write(&cfg, r#"{"policy": "nope"}"#).unwrap();
+    let (ok, text) = run(&["simulate", "--config", cfg.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(text.contains("config error"));
+}
+
+#[test]
+fn figures_smoke_scale() {
+    // Analytic figures are instant; simulation figures use smoke scale.
+    for fig in ["1", "4", "5"] {
+        let (ok, text) = run(&["figure", "--fig", fig, "--scale", "smoke"]);
+        assert!(ok, "fig {fig}: {text}");
+        assert!(text.contains(&format!("Fig {fig}")), "fig {fig}: {text}");
+    }
+    let (ok, text) = run(&["figure", "--fig", "8", "--scale", "smoke", "--duration", "5"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("normalized idle"));
+}
+
+#[test]
+fn trace_gen_writes_loadable_file() {
+    let dir = std::env::temp_dir().join("carbon_sim_cli_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.jsonl");
+    let (ok, text) = run(&[
+        "trace-gen",
+        "--rate",
+        "20",
+        "--duration",
+        "5",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    let trace = carbon_sim::trace::loader::load(&path).expect("loadable trace");
+    assert!(!trace.requests.is_empty());
+    // And it can be replayed.
+    let (ok2, text2) =
+        run(&["simulate", "--trace", path.to_str().unwrap(), "--cores", "8",
+              "--prompt-machines", "1", "--token-machines", "1"]);
+    assert!(ok2, "{text2}");
+}
+
+#[test]
+fn aging_demo_prints_calibration() {
+    let (ok, text) = run(&["aging-demo", "--years", "10"]);
+    assert!(ok);
+    // Year 10 always-on must show the 30% calibration datum.
+    let year10 = text.lines().find(|l| l.trim_start().starts_with("10 ")).unwrap();
+    assert!(year10.contains("30.00"), "{year10}");
+}

@@ -1,0 +1,168 @@
+//! Property-based integration tests over the core-management invariants —
+//! random task arrival/finish/adjust interleavings must never violate the
+//! §3 system model's rules, for any policy.
+
+use carbon_sim::cpu::{AgingParams, CState, CpuPackage, TemperatureModel};
+use carbon_sim::policy::{by_name, CoreManager, ALL_POLICIES};
+use carbon_sim::util::proptest::{check, forall, Check};
+use carbon_sim::util::rng::Rng;
+
+fn mgr(n: usize, policy: &str, seed: u64) -> CoreManager {
+    let cpu =
+        CpuPackage::uniform(n, AgingParams::paper_default(), TemperatureModel::paper_default());
+    CoreManager::new(cpu, by_name(policy).unwrap(), Rng::new(seed))
+}
+
+/// Drive a random schedule and verify structural invariants after every op.
+fn run_schedule(policy: &'static str) {
+    forall(150, 0xC0FEE ^ policy.len() as u64, |g| {
+        let n_cores = g.size(1, 64).max(1);
+        let n_ops = g.size(10, 300);
+        let mut m = mgr(n_cores, policy, 7);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_task = 0u64;
+        let mut now = 0.0f64;
+        for _ in 0..n_ops {
+            now += g.f64(0.0, 0.5);
+            match g.size(0, 9) {
+                // 50%: start a task
+                0..=4 => {
+                    m.start_task(next_task, now);
+                    live.push(next_task);
+                    next_task += 1;
+                }
+                // 30%: finish a random live task
+                5..=7 => {
+                    if !live.is_empty() {
+                        let idx = g.size(0, live.len() - 1);
+                        let t = live.swap_remove(idx);
+                        m.finish_task(t, now);
+                    }
+                }
+                // 20%: periodic adjust
+                _ => m.adjust(now),
+            }
+            // ---- invariants ----
+            let cpu = &m.cpu;
+            if cpu.running_tasks() != live.len() {
+                return check(
+                    false,
+                    format!(
+                        "[{policy}] task accounting: running {} != live {}",
+                        cpu.running_tasks(),
+                        live.len()
+                    ),
+                );
+            }
+            if cpu.active_count() + cpu.c6_count() != cpu.n_cores() {
+                return check(false, format!("[{policy}] C-state partition broken"));
+            }
+            if cpu.active_count() == 0 && !live.is_empty() {
+                return check(false, format!("[{policy}] all cores asleep with live tasks"));
+            }
+            for core in &cpu.cores {
+                if core.task.is_some() && core.state == CState::C6 {
+                    return check(false, format!("[{policy}] allocated core {} in C6", core.id));
+                }
+            }
+            // Oversubscription only when no free active core exists.
+            if !cpu.oversub.is_empty() && cpu.has_free_active_core() {
+                // The manager must have promoted — transiently allowed only
+                // inside calls, never observable here.
+                return check(false, format!("[{policy}] unpromoted oversub with free cores"));
+            }
+        }
+        // Drain everything: all cores must end task-free.
+        for t in live {
+            m.finish_task(t, now + 1.0);
+        }
+        check(m.cpu.running_tasks() == 0, format!("[{policy}] drain left tasks behind"))
+    });
+}
+
+#[test]
+fn invariants_proposed() {
+    run_schedule("proposed");
+}
+
+#[test]
+fn invariants_linux() {
+    run_schedule("linux");
+}
+
+#[test]
+fn invariants_least_aged() {
+    run_schedule("least-aged");
+}
+
+#[test]
+fn aging_monotonicity_under_any_schedule() {
+    // Whatever the policy does, every core's ΔVth must be non-decreasing
+    // and its frequency non-increasing over time.
+    forall(60, 0xA6E, |g| {
+        let policy = ALL_POLICIES[g.size(0, 2)];
+        let mut m = mgr(16, policy, 3);
+        let mut now = 0.0;
+        let mut prev_dvth: Vec<f64> = vec![0.0; 16];
+        let mut next_task = 0u64;
+        let mut live = Vec::new();
+        for _ in 0..50 {
+            now += g.f64(0.1, 10.0);
+            if g.bool() {
+                m.start_task(next_task, now);
+                live.push(next_task);
+                next_task += 1;
+            } else if let Some(t) = live.pop() {
+                m.finish_task(t, now);
+            }
+            m.adjust(now);
+            m.cpu.advance_all(now);
+            for (i, core) in m.cpu.cores.iter().enumerate() {
+                if core.dvth < prev_dvth[i] - 1e-15 {
+                    return check(
+                        false,
+                        format!("[{policy}] core {i} dvth decreased: {} -> {}", prev_dvth[i], core.dvth),
+                    );
+                }
+                prev_dvth[i] = core.dvth;
+            }
+        }
+        check(true, "")
+    });
+}
+
+#[test]
+fn proposed_halts_aging_in_parked_cores() {
+    // A core parked in C6 must not accumulate ΔVth while parked.
+    let mut m = mgr(8, "proposed", 5);
+    m.adjust(1.0); // parks 7 cores
+    let parked: Vec<usize> =
+        m.cpu.cores.iter().filter(|c| c.state == CState::C6).map(|c| c.id).collect();
+    assert!(!parked.is_empty());
+    let before: Vec<f64> = parked.iter().map(|&i| m.cpu.cores[i].dvth).collect();
+    m.cpu.advance_all(3600.0);
+    for (k, &i) in parked.iter().enumerate() {
+        assert_eq!(m.cpu.cores[i].dvth, before[k], "parked core {i} aged");
+    }
+}
+
+#[test]
+fn working_set_scales_with_offered_load() {
+    // Sweep load levels; the converged working set must be monotone-ish
+    // in the load (within the reaction function's deadband).
+    let mut prev_active = 1;
+    for load in [2usize, 8, 16, 28] {
+        let mut m = mgr(40, "proposed", 11);
+        for t in 0..load as u64 {
+            m.start_task(t, 0.0);
+        }
+        for step in 1..60 {
+            m.adjust(step as f64);
+        }
+        let active = m.cpu.active_count();
+        assert!(active >= load, "load {load}: working set {active} below load");
+        assert!(active <= load + 4, "load {load}: working set {active} too generous");
+        assert!(active >= prev_active, "working set not monotone in load");
+        prev_active = active;
+    }
+}

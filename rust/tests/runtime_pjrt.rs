@@ -1,0 +1,212 @@
+//! Three-layer integration tests: the Rust runtime loading and executing
+//! the AOT artifacts (L1 Pallas kernels + L2 JAX graphs) through PJRT,
+//! cross-validated against the pure-Rust models.
+//!
+//! These tests need `make artifacts`; they skip (with a note) when the
+//! artifacts are absent so `cargo test` works standalone.
+
+use carbon_sim::cpu::AgingParams;
+use carbon_sim::runtime::{AgingStepPjrt, Manifest, Runtime, ServedModel};
+use carbon_sim::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    // Tests run from the workspace root.
+    let dir = Runtime::default_artifacts_dir();
+    if Runtime::artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not found in {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_is_consistent_with_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).expect("manifest");
+    let w = m.load_weights(&dir).expect("weights");
+    assert_eq!(w.len(), m.params.len());
+    for (entry, data) in m.params.iter().zip(w.iter()) {
+        assert_eq!(entry.n_elems(), data.len(), "{}", entry.name);
+        assert!(data.iter().all(|x| x.is_finite()), "{} has non-finite weights", entry.name);
+    }
+    assert_eq!(m.model.vocab, 256);
+    assert!(m.aging.machines > 0 && m.aging.cores > 0);
+}
+
+#[test]
+fn aging_step_artifact_matches_rust_model() {
+    // The L1 Pallas kernel (via PJRT) and cpu::aging must agree bitwise-ish.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).expect("pjrt client");
+    let step = AgingStepPjrt::load(&rt).expect("aging exe");
+    let aging = AgingParams::paper_default();
+    let n = step.machines * step.cores;
+    let mut rng = Rng::new(42);
+    let dvth: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 0.08) as f32).collect();
+    let adf: Vec<f32> = (0..n).map(|_| rng.range_f64(5e-4, 2e-2) as f32).collect();
+    let tau: Vec<f32> = (0..n)
+        .map(|_| if rng.bool(0.25) { 0.0 } else { rng.range_f64(1.0, 3e7) as f32 })
+        .collect();
+    let f0: Vec<f32> = (0..n).map(|_| rng.range_f64(2.3, 2.8) as f32).collect();
+
+    let (new_dvth, freq) = step.step(&dvth, &adf, &tau, &f0).expect("step");
+    assert_eq!(new_dvth.len(), n);
+    for i in 0..n {
+        let expect_dvth = if tau[i] > 0.0 {
+            aging.dvth_step(dvth[i] as f64, adf[i] as f64, tau[i] as f64)
+        } else {
+            dvth[i] as f64
+        };
+        let expect_f = aging.freq_ghz(f0[i] as f64, expect_dvth);
+        assert!(
+            (new_dvth[i] as f64 - expect_dvth).abs() < 5e-4,
+            "dvth[{i}] pjrt={} rust={}",
+            new_dvth[i],
+            expect_dvth
+        );
+        assert!(
+            (freq[i] as f64 - expect_f).abs() < 5e-3,
+            "freq[{i}] pjrt={} rust={}",
+            freq[i],
+            expect_f
+        );
+    }
+}
+
+#[test]
+fn served_model_prefill_and_decode_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).expect("pjrt client");
+    let model = ServedModel::load(rt).expect("model load");
+    let d = model.dims;
+
+    let mut tokens = vec![0i32; d.batch * d.max_seq];
+    for (i, t) in tokens.iter_mut().enumerate().take(d.max_seq) {
+        *t = (i % 200) as i32; // sequence 0 gets a real prompt
+    }
+    let lengths: Vec<i32> = (0..d.batch).map(|b| (4 + 3 * b) as i32).collect();
+    let pf = model.prefill(&tokens, &lengths).expect("prefill");
+    assert_eq!(pf.logits.len(), d.batch * d.vocab);
+    assert_eq!(pf.k_cache.len(), d.kv_elems());
+    assert!(pf.logits.iter().all(|x| x.is_finite()));
+
+    let next = model.argmax_tokens(&pf.logits);
+    assert_eq!(next.len(), d.batch);
+    assert!(next.iter().all(|&t| (0..d.vocab as i32).contains(&t)));
+
+    let dc = model
+        .decode(&pf.k_cache, &pf.v_cache, &next, &lengths)
+        .expect("decode");
+    assert_eq!(dc.logits.len(), d.batch * d.vocab);
+    assert!(dc.logits.iter().all(|x| x.is_finite()));
+    // The KV cache must change where the new token was written.
+    assert_ne!(pf.k_cache, dc.k_cache);
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).expect("pjrt client");
+    let model = ServedModel::load(rt).expect("model load");
+    let d = model.dims;
+    let tokens = vec![1i32; d.batch * d.max_seq];
+    let lengths = vec![5i32; d.batch];
+    let pf = model.prefill(&tokens, &lengths).expect("prefill");
+    let next = vec![7i32; d.batch];
+    let a = model.decode(&pf.k_cache, &pf.v_cache, &next, &lengths).expect("decode");
+    let b = model.decode(&pf.k_cache, &pf.v_cache, &next, &lengths).expect("decode");
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.k_cache, b.k_cache);
+}
+
+#[test]
+fn serving_stack_end_to_end_smoke() {
+    let Some(dir) = artifacts_dir() else { return };
+    use carbon_sim::serving::{ServeRequest, Server, ServerConfig};
+    let server = Server::start(ServerConfig {
+        artifacts_dir: dir,
+        policy: "proposed".into(),
+        shadow_cores: 16,
+        ..Default::default()
+    })
+    .expect("server");
+    let rx1 = server.submit(ServeRequest {
+        id: 1,
+        prompt: "hello aging-aware world".into(),
+        max_new_tokens: 8,
+    });
+    let rx2 = server.submit(ServeRequest {
+        id: 2,
+        prompt: "second request".into(),
+        max_new_tokens: 4,
+    });
+    let r1 = rx1.recv().expect("resp1");
+    let r2 = rx2.recv().expect("resp2");
+    assert_eq!(r1.generated_tokens, 8);
+    assert_eq!(r2.generated_tokens, 4);
+    assert!(r1.ttft_s > 0.0 && r1.e2e_s >= r1.ttft_s);
+    let report = server.shutdown();
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.generated_tokens, 12);
+    assert!(report.shadow.tasks_started > 0);
+}
+
+#[test]
+fn decode_chunk_matches_single_steps() {
+    // The fused-chunk artifact must reproduce token-by-token decode.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).expect("pjrt client");
+    let model = ServedModel::load(rt).expect("model load");
+    let d = model.dims;
+    let chunk = model.decode_chunk_steps;
+    assert!(chunk > 0, "artifacts must include decode_chunk");
+
+    let mut tokens = vec![0i32; d.batch * d.max_seq];
+    for (i, t) in tokens.iter_mut().enumerate().take(d.max_seq) {
+        *t = (13 + i % 101) as i32;
+    }
+    let lengths: Vec<i32> = (0..d.batch).map(|b| (3 + 2 * b) as i32).collect();
+    let pf = model.prefill(&tokens, &lengths).expect("prefill");
+    let first = model.argmax_tokens(&pf.logits);
+    let budgets: Vec<i32> = (0..d.batch).map(|b| (chunk as i32).min(2 + b as i32)).collect();
+
+    // Reference path: single-step decode with manual freeze logic.
+    let (mut k, mut v) = (pf.k_cache.clone(), pf.v_cache.clone());
+    let mut cur = first.clone();
+    let mut lens = lengths.clone();
+    let mut rem = budgets.clone();
+    let mut ref_tokens: Vec<Vec<i32>> = vec![Vec::new(); d.batch];
+    for _ in 0..chunk {
+        let out = model.decode(&k, &v, &cur, &lens).expect("decode");
+        let next = model.argmax_tokens(&out.logits);
+        k = out.k_cache;
+        v = out.v_cache;
+        for b in 0..d.batch {
+            if rem[b] > 0 {
+                ref_tokens[b].push(next[b]);
+                cur[b] = next[b];
+                lens[b] += 1;
+                rem[b] -= 1;
+            }
+        }
+    }
+
+    // Chunked path.
+    let out = model
+        .decode_chunk(&pf.k_cache, &pf.v_cache, &first, &lengths, &budgets)
+        .expect("decode_chunk");
+    for b in 0..d.batch {
+        let got: Vec<i32> = (0..chunk)
+            .map(|s| out.tokens[b * chunk + s])
+            .filter(|&t| t >= 0)
+            .collect();
+        assert_eq!(got, ref_tokens[b], "slot {b}");
+        assert_eq!(out.lengths[b], lens[b], "slot {b} length");
+        assert_eq!(out.remaining[b], rem[b], "slot {b} remaining");
+    }
+    // KV caches agree closely.
+    for (a, b) in out.k_cache.iter().zip(k.iter()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}

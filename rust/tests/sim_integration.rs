@@ -1,0 +1,107 @@
+//! Cluster-simulator integration tests at (reduced) paper scale: the full
+//! 22-machine cluster, all policies paired on identical silicon, with the
+//! paper's qualitative results asserted end-to-end.
+
+use carbon_sim::carbon::EmbodiedModel;
+use carbon_sim::cluster::{Cluster, ClusterConfig};
+use carbon_sim::experiments::{fig6, fig7, fig8, run_paired, Scale};
+use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
+use carbon_sim::util::stats;
+
+fn short_paper_scale() -> Scale {
+    let mut s = Scale::paper();
+    s.duration_s = 30.0;
+    s.rates = vec![60.0];
+    s.core_counts = vec![40];
+    s
+}
+
+#[test]
+fn paper_cluster_end_to_end_shapes() {
+    let scale = short_paper_scale();
+    let cell = run_paired(&scale, 40, 60.0);
+    let cells = vec![cell];
+
+    // Fig. 6 orderings.
+    let rows6 = fig6::rows(&cells, 2.6);
+    assert!(fig6::check_shape(&rows6).is_empty(), "{:?}", fig6::check_shape(&rows6));
+
+    // Fig. 7: meaningful carbon reduction at full cluster size.
+    let rows7 = fig7::rows(&cells, &EmbodiedModel::paper_default());
+    assert!(fig7::check_shape(&rows7).is_empty(), "{:?}", fig7::check_shape(&rows7));
+    let prop = rows7.iter().find(|r| r.policy == "proposed").unwrap();
+    assert!(
+        prop.reduction_pct_p99 > 15.0,
+        "p99 reduction {:.1}% too small at paper scale",
+        prop.reduction_pct_p99
+    );
+    assert!(prop.reduction_pct_p50 > 30.0);
+    assert!(prop.lifetime_yr_p99 > 3.5);
+
+    // Fig. 8 availability shape.
+    let rows8 = fig8::rows(&cells);
+    assert!(fig8::check_shape(&rows8).is_empty(), "{:?}", fig8::check_shape(&rows8));
+}
+
+#[test]
+fn service_quality_impact_is_bounded() {
+    // Paper: "less than 10% impact to the inference service quality".
+    // Compare E2E latency under proposed vs linux on the same trace.
+    let scale = short_paper_scale();
+    let cell = run_paired(&scale, 40, 60.0);
+    let linux_e2e = cell.result("linux").e2e_summary();
+    let prop_e2e = cell.result("proposed").e2e_summary();
+    let impact = (prop_e2e.p50 - linux_e2e.p50) / linux_e2e.p50;
+    assert!(impact < 0.10, "p50 E2E impact {:.1}% exceeds 10%", impact * 100.0);
+    // And the oversubscription depth stays within the paper's bound.
+    let idle = stats::Summary::of(&cell.result("proposed").pooled_idle_samples());
+    assert!(idle.p1 >= -0.101, "oversubscription p1 {} beyond -0.1", idle.p1);
+}
+
+#[test]
+fn deterministic_at_cluster_scale() {
+    let cfg = ClusterConfig { cores_per_cpu: 40, ..ClusterConfig::default() };
+    let trace = AzureTraceGen::new(TraceParams {
+        rate_rps: 50.0,
+        duration_s: 15.0,
+        workload: Workload::Mixed,
+        seed: 2,
+    })
+    .generate();
+    let a = Cluster::new(cfg.clone()).run(&trace);
+    let b = Cluster::new(cfg).run(&trace);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.freq, b.freq);
+    assert_eq!(a.collector.e2e, b.collector.e2e);
+}
+
+#[test]
+fn eighty_core_vms_also_hold_shapes() {
+    let mut scale = short_paper_scale();
+    scale.core_counts = vec![80];
+    let cell = run_paired(&scale, 80, 60.0);
+    let rows8 = fig8::rows(&[cell]);
+    assert!(fig8::check_shape(&rows8).is_empty(), "{:?}", fig8::check_shape(&rows8));
+    // Higher core count -> oversubscription severity improves (paper §6.2).
+    let prop = rows8.iter().find(|r| r.policy == "proposed").unwrap();
+    assert!(prop.idle.p1 >= -0.1);
+}
+
+#[test]
+fn throughput_sweep_is_stable() {
+    // The simulator keeps up with offered load across the paper's sweep
+    // (cluster designed iso-throughput for these rates).
+    for rate in [40.0, 100.0] {
+        let trace = AzureTraceGen::new(TraceParams {
+            rate_rps: rate,
+            duration_s: 20.0,
+            workload: Workload::Mixed,
+            seed: 3,
+        })
+        .generate();
+        let r = Cluster::new(ClusterConfig::default()).run(&trace);
+        assert_eq!(r.completed_requests, trace.requests.len());
+        // E2E latency stays sane (no runaway queueing) at both ends.
+        assert!(r.e2e_summary().p50 < 60.0, "rate {rate}: p50 {}", r.e2e_summary().p50);
+    }
+}
