@@ -1,6 +1,13 @@
 //! Experiment runners — one per paper figure (see DESIGN.md's
 //! per-experiment index). Bench binaries (`cargo bench`) and the CLI
 //! (`carbon-sim figure ...`) both call into these.
+//!
+//! The [`sweep`] module generalizes the per-figure matrix into a
+//! parallel scenario-sweep engine: arbitrary rate × core count × policy
+//! × workload × replica grids, sharded across a worker pool with
+//! deterministic per-cell seeds and JSON/CSV aggregation
+//! (`carbon-sim sweep`). [`run_matrix`] itself runs its paired cells on
+//! the same pool, so `carbon-sim figure --fig 6|7|8` parallelizes too.
 
 pub mod fig1;
 pub mod fig2;
@@ -9,6 +16,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod sweep;
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::metrics::SimResult;
@@ -114,15 +122,26 @@ pub fn run_paired(scale: &Scale, cores: usize, rate: f64) -> PairedCell {
     PairedCell { cores, rate, results }
 }
 
-/// The full matrix over (core count × rate).
-pub fn run_matrix(scale: &Scale) -> Vec<PairedCell> {
-    let mut cells = Vec::new();
+/// The full matrix over (core count × rate), run on `threads` pool
+/// workers (0 = one per available core). Cells are independent and
+/// seeded from `scale`, so the result is identical at any thread count;
+/// output order matches the sequential nested loop.
+pub fn run_matrix_threads(scale: &Scale, threads: usize) -> Vec<PairedCell> {
+    let mut axes = Vec::new();
     for &cores in &scale.core_counts {
         for &rate in &scale.rates {
-            cells.push(run_paired(scale, cores, rate));
+            axes.push((cores, rate));
         }
     }
-    cells
+    crate::util::pool::run_indexed(axes.len(), threads, |i| {
+        run_paired(scale, axes[i].0, axes[i].1)
+    })
+}
+
+/// The full matrix over (core count × rate), parallelized across all
+/// available cores.
+pub fn run_matrix(scale: &Scale) -> Vec<PairedCell> {
+    run_matrix_threads(scale, 0)
 }
 
 #[cfg(test)]
@@ -150,5 +169,23 @@ mod tests {
         s.core_counts = vec![4, 8];
         let m = run_matrix(&s);
         assert_eq!(m.len(), 4);
+    }
+
+    #[test]
+    fn matrix_parallel_matches_sequential() {
+        let mut s = Scale::smoke();
+        s.duration_s = 5.0;
+        s.rates = vec![4.0, 8.0];
+        s.core_counts = vec![8];
+        let seq = run_matrix_threads(&s, 1);
+        let par = run_matrix_threads(&s, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(par.iter()) {
+            assert_eq!((a.cores, a.rate), (b.cores, b.rate));
+            for (ra, rb) in a.results.iter().zip(b.results.iter()) {
+                assert_eq!(ra.events_processed, rb.events_processed);
+                assert_eq!(ra.freq, rb.freq);
+            }
+        }
     }
 }

@@ -1,0 +1,550 @@
+//! Parallel scenario-sweep engine.
+//!
+//! Expands a [`SweepSpec`] — the cross product of throughputs × VM core
+//! counts × policies × workload scenarios × seed replicas — into
+//! independent cells, shards them across a [`crate::util::pool`] worker
+//! pool, and aggregates the per-cell [`SimResult`]s into one JSON or CSV
+//! report.
+//!
+//! **Determinism contract:** every cell's seed is derived from
+//! `(spec.seed, scenario index)` by [`cell_seed`], never from execution
+//! order, and the pool returns results in cell-index order. The
+//! aggregated report is therefore byte-identical at any `--threads`
+//! value (covered by `tests/sweep_determinism.rs`).
+//!
+//! **Pairing:** the scenario index deliberately excludes the policy axis,
+//! so every policy in a scenario shares one seed — identical trace and
+//! identical silicon (process-variation sample) — exactly like
+//! [`super::run_paired`] does for the paper's figures.
+
+use std::path::Path;
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::metrics::SimResult;
+use crate::policy::ALL_POLICIES;
+use crate::trace::azure::{AzureTraceGen, TraceParams, Workload};
+use crate::util::json::Value;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// The sweep axes. The expansion order is workloads (outer) → core
+/// counts → rates → replicas → policies (inner), so policies of one
+/// scenario are adjacent in the report.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub rates: Vec<f64>,
+    pub core_counts: Vec<usize>,
+    pub policies: Vec<String>,
+    pub workloads: Vec<Workload>,
+    /// Independent seed replicas per (workload, cores, rate) scenario.
+    pub replicas: usize,
+    /// Trace duration per cell (s).
+    pub duration_s: f64,
+    pub n_prompt: usize,
+    pub n_token: usize,
+    /// Root seed; per-cell seeds derive from it via [`cell_seed`].
+    pub seed: u64,
+}
+
+impl SweepSpec {
+    /// The paper's full grid (§6.1) under the default mixed workload.
+    pub fn paper() -> SweepSpec {
+        SweepSpec {
+            rates: vec![40.0, 60.0, 80.0, 100.0],
+            core_counts: vec![40, 80],
+            policies: ALL_POLICIES.iter().map(|p| p.to_string()).collect(),
+            workloads: vec![Workload::Mixed],
+            replicas: 1,
+            duration_s: 120.0,
+            n_prompt: 5,
+            n_token: 17,
+            seed: 42,
+        }
+    }
+
+    /// A seconds-scale spec for tests and CI smoke runs.
+    pub fn smoke() -> SweepSpec {
+        SweepSpec {
+            rates: vec![6.0],
+            core_counts: vec![16],
+            policies: ALL_POLICIES.iter().map(|p| p.to_string()).collect(),
+            workloads: vec![Workload::Mixed],
+            replicas: 1,
+            duration_s: 8.0,
+            n_prompt: 1,
+            n_token: 2,
+            seed: 7,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rates.is_empty()
+            || self.core_counts.is_empty()
+            || self.policies.is_empty()
+            || self.workloads.is_empty()
+        {
+            return Err("sweep: every axis (rates, cores, policies, workloads) needs ≥ 1 value"
+                .to_string());
+        }
+        if self.replicas == 0 {
+            return Err("sweep: replicas must be ≥ 1".to_string());
+        }
+        if !(self.duration_s > 0.0) {
+            return Err("sweep: duration_s must be positive".to_string());
+        }
+        if self.rates.iter().any(|&r| !(r > 0.0)) {
+            return Err("sweep: rates must be positive".to_string());
+        }
+        if self.core_counts.iter().any(|&c| c == 0) {
+            return Err("sweep: core counts must be positive".to_string());
+        }
+        if self.n_prompt == 0 || self.n_token == 0 {
+            return Err("sweep: need ≥ 1 prompt and ≥ 1 token machine".to_string());
+        }
+        for p in &self.policies {
+            crate::policy::by_name(p)?;
+        }
+        Ok(())
+    }
+
+    /// Scenarios = cells / policies.
+    pub fn n_scenarios(&self) -> usize {
+        self.workloads.len() * self.core_counts.len() * self.rates.len() * self.replicas
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.n_scenarios() * self.policies.len()
+    }
+
+    /// Expand the axes into the full ordered cell list.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::with_capacity(self.n_cells());
+        let mut scenario = 0usize;
+        for &workload in &self.workloads {
+            for &cores in &self.core_counts {
+                for &rate in &self.rates {
+                    for replica in 0..self.replicas {
+                        let seed = cell_seed(self.seed, scenario as u64);
+                        for policy in &self.policies {
+                            out.push(SweepCell {
+                                index: out.len(),
+                                scenario,
+                                workload,
+                                cores,
+                                rate,
+                                replica,
+                                policy: policy.clone(),
+                                seed,
+                            });
+                        }
+                        scenario += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Derive a cell's seed from the spec seed and its **scenario** index.
+/// A pure function of its arguments — independent of thread count and
+/// execution order — so sweeps are reproducible by construction.
+pub fn cell_seed(base: u64, scenario: u64) -> u64 {
+    // Golden-ratio stride into the SplitMix64-seeded generator keeps
+    // neighbouring scenarios' streams decorrelated.
+    Rng::new(base.wrapping_add((scenario + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))).next_u64()
+}
+
+/// One expanded grid cell.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Position in the expanded cell list (report order).
+    pub index: usize,
+    /// Scenario = (workload, cores, rate, replica); shared by all
+    /// policies run on it.
+    pub scenario: usize,
+    pub workload: Workload,
+    pub cores: usize,
+    pub rate: f64,
+    pub replica: usize,
+    pub policy: String,
+    /// Derived seed (same for every policy of the scenario → paired
+    /// trace + silicon).
+    pub seed: u64,
+}
+
+/// A finished cell: the cell coordinates plus the simulation result.
+#[derive(Clone, Debug)]
+pub struct SweepCellResult {
+    pub cell: SweepCell,
+    pub result: SimResult,
+}
+
+impl SweepCellResult {
+    /// Deterministic JSON record: cell coordinates + the result's
+    /// seed-deterministic summary (wall-clock time is deliberately
+    /// excluded — see [`SimResult::to_json_summary`]).
+    pub fn to_json(&self) -> Value {
+        let c = &self.cell;
+        let mut obj = match self.result.to_json_summary() {
+            Value::Obj(o) => o,
+            _ => unreachable!("to_json_summary returns an object"),
+        };
+        obj.insert("index".into(), c.index.into());
+        obj.insert("scenario".into(), c.scenario.into());
+        obj.insert("workload".into(), c.workload.name().into());
+        obj.insert("rate_rps".into(), c.rate.into());
+        obj.insert("replica".into(), c.replica.into());
+        // u64 seeds exceed f64's 2^53 integer range; keep full fidelity.
+        obj.insert("seed".into(), format!("{}", c.seed).into());
+        Value::Obj(obj)
+    }
+}
+
+/// Decorrelates the trace generator's RNG stream from the cluster's:
+/// both are seeded per cell, and `Rng::new` is deterministic, so giving
+/// them the same raw seed would replay identical draw sequences —
+/// arrivals correlated with service times and silicon sampling (the
+/// figure runners avoid this the same way, see [`super::Scale::trace`]).
+const TRACE_SEED_XOR: u64 = 0x7AC3_5EED_0000_0001;
+
+/// Run one cell: synthesize its trace, build the cluster, simulate.
+pub fn run_cell(spec: &SweepSpec, cell: &SweepCell) -> SweepCellResult {
+    let trace = AzureTraceGen::new(TraceParams {
+        rate_rps: cell.rate,
+        duration_s: spec.duration_s,
+        workload: cell.workload,
+        seed: cell.seed ^ TRACE_SEED_XOR,
+    })
+    .generate();
+    let cfg = ClusterConfig {
+        n_prompt: spec.n_prompt,
+        n_token: spec.n_token,
+        cores_per_cpu: cell.cores,
+        policy: cell.policy.clone(),
+        seed: cell.seed,
+        ..ClusterConfig::default()
+    };
+    let result = Cluster::new(cfg).run(&trace);
+    SweepCellResult { cell: cell.clone(), result }
+}
+
+/// The aggregated sweep output.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub spec: SweepSpec,
+    /// In cell-index order (stable across thread counts).
+    pub cells: Vec<SweepCellResult>,
+}
+
+/// Run the full sweep on `threads` workers (0 = one per core).
+pub fn run(spec: &SweepSpec, threads: usize) -> Result<SweepReport, String> {
+    spec.validate()?;
+    let cells = spec.cells();
+    let results = pool::run_indexed(cells.len(), threads, |i| run_cell(spec, &cells[i]));
+    Ok(SweepReport { spec: spec.clone(), cells: results })
+}
+
+/// Report serialization format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    Json,
+    Csv,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Result<Format, String> {
+        match s {
+            "json" => Ok(Format::Json),
+            "csv" => Ok(Format::Csv),
+            other => Err(format!("unknown format '{other}' (json|csv)")),
+        }
+    }
+}
+
+/// CSV column order. Every name is a key of [`SweepCellResult::to_json`]'s
+/// object — [`SweepReport::to_csv`] extracts values from that same record,
+/// so the two serializations cannot drift apart.
+pub const CSV_COLUMNS: &[&str] = &[
+    "scenario",
+    "workload",
+    "cores",
+    "rate_rps",
+    "replica",
+    "policy",
+    "seed",
+    "completed",
+    "events",
+    "sim_duration_s",
+    "rate_achieved_rps",
+    "ttft_p50_s",
+    "ttft_p99_s",
+    "e2e_p50_s",
+    "e2e_p99_s",
+    "fred_mean_ghz",
+    "freq_cv_mean",
+    "oversub_fraction",
+    "idle_p50",
+];
+
+impl SweepReport {
+    /// The whole report as one deterministic JSON document.
+    pub fn to_json(&self) -> Value {
+        let s = &self.spec;
+        let spec = Value::obj(vec![
+            ("rates", Value::from_f64_slice(&s.rates)),
+            (
+                "core_counts",
+                Value::Arr(s.core_counts.iter().map(|&c| c.into()).collect()),
+            ),
+            (
+                "policies",
+                Value::Arr(s.policies.iter().map(|p| p.as_str().into()).collect()),
+            ),
+            (
+                "workloads",
+                Value::Arr(s.workloads.iter().map(|w| w.name().into()).collect()),
+            ),
+            ("replicas", s.replicas.into()),
+            ("duration_s", s.duration_s.into()),
+            ("n_prompt", s.n_prompt.into()),
+            ("n_token", s.n_token.into()),
+            ("seed", format!("{}", s.seed).into()),
+        ]);
+        Value::obj(vec![
+            ("spec", spec),
+            ("n_cells", self.cells.len().into()),
+            ("cells", Value::Arr(self.cells.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    /// The per-cell table as deterministic CSV, extracted column-by-column
+    /// from the same JSON record [`SweepCellResult::to_json`] emits.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&CSV_COLUMNS.join(","));
+        out.push('\n');
+        for cr in &self.cells {
+            let record = cr.to_json();
+            let row: Vec<String> = CSV_COLUMNS
+                .iter()
+                .map(|col| match record.get(col) {
+                    // Strings (workload, policy, seed) go in bare.
+                    Some(Value::Str(s)) => s.clone(),
+                    Some(v) => v.to_string_compact(),
+                    None => unreachable!("CSV column '{col}' missing from cell record"),
+                })
+                .collect();
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Serialize in the given format.
+    pub fn render(&self, format: Format) -> String {
+        match format {
+            Format::Json => {
+                let mut s = self.to_json().to_string_pretty();
+                s.push('\n');
+                s
+            }
+            Format::Csv => self.to_csv(),
+        }
+    }
+
+    /// Write the rendered report to a file.
+    pub fn write(&self, path: &Path, format: Format) -> std::io::Result<()> {
+        std::fs::write(path, self.render(format))
+    }
+
+    /// Human-readable per-cell summary table (the CLI's stdout view).
+    pub fn print_table(&self) {
+        println!(
+            "{:>4} {:<12} {:>5} {:>7} {:>3} {:<12} {:>7} {:>9} {:>9} {:>10} {:>9}",
+            "#", "workload", "cores", "rate", "rep", "policy", "reqs", "e2e_p50", "e2e_p99",
+            "fred(MHz)", "oversub"
+        );
+        for cr in &self.cells {
+            let c = &cr.cell;
+            let r = &cr.result;
+            let e2e = r.e2e_summary();
+            let fred = crate::util::stats::mean(&r.mean_fred_per_machine());
+            println!(
+                "{:>4} {:<12} {:>5} {:>7.1} {:>3} {:<12} {:>7} {:>9.3} {:>9.3} {:>10.3} {:>9.4}",
+                c.scenario,
+                c.workload.name(),
+                c.cores,
+                c.rate,
+                c.replica,
+                c.policy,
+                r.completed_requests,
+                e2e.p50,
+                e2e.p99,
+                fred * 1e3,
+                r.oversub_fraction(),
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------ CLI parsing
+
+/// Parse a comma-separated f64 list ("40,60,80").
+pub fn parse_f64_list(s: &str) -> Result<Vec<f64>, String> {
+    s.split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<f64>().map_err(|e| format!("bad number '{t}': {e}")))
+        .collect()
+}
+
+/// Parse a comma-separated usize list ("40,80").
+pub fn parse_usize_list(s: &str) -> Result<Vec<usize>, String> {
+    s.split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().map_err(|e| format!("bad count '{t}': {e}")))
+        .collect()
+}
+
+/// Parse a comma-separated policy list; "all" expands to
+/// [`ALL_POLICIES`].
+pub fn parse_policy_list(s: &str) -> Result<Vec<String>, String> {
+    if s.trim() == "all" {
+        return Ok(ALL_POLICIES.iter().map(|p| p.to_string()).collect());
+    }
+    let list: Vec<String> = s
+        .split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.to_string())
+        .collect();
+    for p in &list {
+        crate::policy::by_name(p)?;
+    }
+    Ok(list)
+}
+
+/// Parse a comma-separated workload list ("mixed,diurnal,bursty").
+pub fn parse_workload_list(s: &str) -> Result<Vec<Workload>, String> {
+    s.split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(Workload::parse)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepSpec {
+        SweepSpec {
+            rates: vec![4.0, 8.0],
+            core_counts: vec![8],
+            policies: vec!["linux".into(), "proposed".into()],
+            workloads: vec![Workload::Mixed, Workload::Bursty],
+            replicas: 2,
+            duration_s: 3.0,
+            n_prompt: 1,
+            n_token: 1,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn expansion_counts_and_order() {
+        let spec = tiny();
+        assert_eq!(spec.n_scenarios(), 2 * 1 * 2 * 2);
+        assert_eq!(spec.n_cells(), spec.n_scenarios() * 2);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), spec.n_cells());
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // Policies of one scenario are adjacent and share the seed.
+        for pair in cells.chunks(2) {
+            assert_eq!(pair[0].scenario, pair[1].scenario);
+            assert_eq!(pair[0].seed, pair[1].seed);
+            assert_ne!(pair[0].policy, pair[1].policy);
+        }
+        // Different scenarios get different seeds.
+        assert_ne!(cells[0].seed, cells[2].seed);
+    }
+
+    #[test]
+    fn cell_seed_is_pure_and_spreads() {
+        assert_eq!(cell_seed(42, 0), cell_seed(42, 0));
+        assert_ne!(cell_seed(42, 0), cell_seed(42, 1));
+        assert_ne!(cell_seed(42, 0), cell_seed(43, 0));
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let mut s = tiny();
+        s.rates.clear();
+        assert!(s.validate().is_err());
+        let mut s = tiny();
+        s.replicas = 0;
+        assert!(s.validate().is_err());
+        let mut s = tiny();
+        s.policies = vec!["nope".into()];
+        assert!(s.validate().is_err());
+        let mut s = tiny();
+        s.duration_s = 0.0;
+        assert!(s.validate().is_err());
+        assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn paired_silicon_and_trace_across_policies() {
+        let mut spec = tiny();
+        spec.rates = vec![5.0];
+        spec.workloads = vec![Workload::Mixed];
+        spec.replicas = 1;
+        let report = run(&spec, 1).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        let (a, b) = (&report.cells[0], &report.cells[1]);
+        assert_eq!(a.result.f0, b.result.f0, "policies must share silicon");
+        assert_eq!(a.result.rate_rps, b.result.rate_rps, "policies must share the trace");
+        assert_ne!(a.cell.policy, b.cell.policy);
+    }
+
+    #[test]
+    fn axis_parsers() {
+        assert_eq!(parse_f64_list("40, 60,80").unwrap(), vec![40.0, 60.0, 80.0]);
+        assert!(parse_f64_list("40,x").is_err());
+        assert_eq!(parse_usize_list("40,80").unwrap(), vec![40, 80]);
+        assert_eq!(parse_policy_list("all").unwrap().len(), ALL_POLICIES.len());
+        assert!(parse_policy_list("linux,nope").is_err());
+        assert_eq!(
+            parse_workload_list("mixed,diurnal,bursty").unwrap(),
+            vec![Workload::Mixed, Workload::Diurnal, Workload::Bursty]
+        );
+        assert!(parse_workload_list("mixed,frob").is_err());
+        assert_eq!(Format::parse("json").unwrap(), Format::Json);
+        assert!(Format::parse("xml").is_err());
+    }
+
+    #[test]
+    fn csv_has_header_and_one_row_per_cell() {
+        let mut spec = SweepSpec::smoke();
+        spec.duration_s = 2.0;
+        let report = run(&spec, 2).unwrap();
+        let csv = report.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + report.cells.len());
+        assert_eq!(lines[0], CSV_COLUMNS.join(","));
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), CSV_COLUMNS.len());
+            assert!(line.split(',').all(|field| !field.is_empty()), "{line}");
+        }
+        // Every CSV column is a key of the JSON cell record (to_csv
+        // extracts from it, so a drift would panic there too).
+        let record = report.cells[0].to_json();
+        for col in CSV_COLUMNS {
+            assert!(record.get(col).is_some(), "CSV column '{col}' missing from JSON record");
+        }
+    }
+}

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   simulate    run the cluster simulator on a (synthetic or file) trace
+//!   sweep       run a parallel scenario sweep (rates × cores × policies ×
+//!               workloads × replicas) and aggregate JSON/CSV results
 //!   figure      regenerate a paper figure (1, 2, 4, 5, 6, 7, 8)
 //!   trace-gen   synthesize an Azure-like trace to a JSONL file
 //!   serve       run the real PJRT serving stack on sample prompts
@@ -14,7 +16,7 @@ use std::path::Path;
 use carbon_sim::carbon::{EmbodiedModel, ServerPowerModel};
 use carbon_sim::cluster::{Cluster, ClusterConfig};
 use carbon_sim::cpu::{AgingParams, TemperatureModel};
-use carbon_sim::experiments::{self, Scale};
+use carbon_sim::experiments::{self, sweep, Scale};
 use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
 use carbon_sim::util::cli::Cli;
 use carbon_sim::util::stats::Summary;
@@ -30,6 +32,7 @@ fn main() {
     };
     let code = match cmd {
         "simulate" => cmd_simulate(&rest),
+        "sweep" => cmd_sweep(&rest),
         "figure" => cmd_figure(&rest),
         "trace-gen" => cmd_trace_gen(&rest),
         "serve" => cmd_serve(&rest),
@@ -50,6 +53,9 @@ fn top_usage() -> String {
     "carbon-sim — aging-aware CPU core management for LLM inference (paper reproduction)\n\n\
      Subcommands:\n\
      \x20 simulate     run the cluster simulator\n\
+     \x20 sweep        parallel scenario sweep: rates × cores × policies × workloads ×\n\
+     \x20              replicas, sharded over a worker pool (--threads), aggregated to\n\
+     \x20              JSON/CSV; bit-identical output at any thread count\n\
      \x20 figure       regenerate a paper figure (--fig 1|2|4|5|6|7|8)\n\
      \x20 trace-gen    synthesize an Azure-like trace (JSONL)\n\
      \x20 serve        run the PJRT serving stack (needs `make artifacts`)\n\
@@ -77,7 +83,7 @@ fn cmd_simulate(rest: &[String]) -> i32 {
         .opt("cores", "", "CPU cores per machine (default: 40)")
         .opt("prompt-machines", "", "prompt (prefill) machines (default: 5)")
         .opt("token-machines", "", "token (decode) machines (default: 17)")
-        .opt("workload", "mixed", "workload: conv | code | mixed")
+        .opt("workload", "mixed", "workload: conv | code | mixed | diurnal | bursty | long-context")
         .opt("trace", "", "replay a JSONL trace file instead of synthesizing")
         .opt("config", "", "JSON cluster config file (see configs/; flags override)")
         .opt("seed", "", "RNG seed (default: 42)")
@@ -209,13 +215,106 @@ fn pjrt_aging_check(result: &carbon_sim::metrics::SimResult) -> anyhow::Result<f
     Ok(max_err)
 }
 
+// ----------------------------------------------------------------- sweep
+
+fn cmd_sweep(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "carbon-sim sweep",
+        "parallel scenario sweep over rates × cores × policies × workloads × replicas",
+    )
+    .opt("rates", "40,60,80,100", "comma-separated request rates (rps)")
+    .opt("cores", "40,80", "comma-separated VM core counts")
+    .opt("policies", "all", "comma-separated policies, or 'all' (linux,least-aged,proposed)")
+    .opt("workloads", "mixed", "comma-separated scenarios: conv|code|mixed|diurnal|bursty|long-context")
+    .opt("replicas", "1", "seed replicas per scenario")
+    .opt("duration", "120", "trace duration per cell (s)")
+    .opt("prompt-machines", "5", "prompt (prefill) machines per cell")
+    .opt("token-machines", "17", "token (decode) machines per cell")
+    .opt("seed", "42", "root seed; per-cell seeds derive from (seed, scenario index)")
+    .opt("threads", "0", "worker threads (0 = one per available core)")
+    .opt("out", "", "write the aggregated report to this file (default: stdout table only)")
+    .opt("format", "json", "report format: json | csv")
+    .flag("quiet", "suppress the stdout summary table");
+    let a = parse_or_exit(&cli, rest);
+
+    // Strict scalar parsing: unlike `usize_or`-style lenient accessors, a
+    // malformed value must exit 2, not silently run the wrong grid for
+    // hours at paper scale.
+    fn num<T: std::str::FromStr>(
+        a: &carbon_sim::util::cli::Args,
+        key: &str,
+    ) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = a.str_or(key, "");
+        s.parse::<T>().map_err(|e| format!("bad --{key} '{s}': {e}"))
+    }
+
+    let parsed = (|| -> Result<(sweep::SweepSpec, sweep::Format, usize), String> {
+        let spec = sweep::SweepSpec {
+            rates: sweep::parse_f64_list(&a.str_or("rates", ""))?,
+            core_counts: sweep::parse_usize_list(&a.str_or("cores", ""))?,
+            policies: sweep::parse_policy_list(&a.str_or("policies", "all"))?,
+            workloads: sweep::parse_workload_list(&a.str_or("workloads", "mixed"))?,
+            replicas: num(&a, "replicas")?,
+            duration_s: num(&a, "duration")?,
+            n_prompt: num(&a, "prompt-machines")?,
+            n_token: num(&a, "token-machines")?,
+            seed: num(&a, "seed")?,
+        };
+        // sweep::run validates the spec; only the format needs checking here.
+        let format = sweep::Format::parse(&a.str_or("format", "json"))?;
+        let threads = num(&a, "threads")?;
+        Ok((spec, format, threads))
+    })();
+    let (spec, format, threads) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    let report = match sweep::run(&spec, threads) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    if !a.flag("quiet") {
+        println!(
+            "── sweep: {} cells ({} scenarios × {} policies) ──",
+            report.cells.len(),
+            spec.n_scenarios(),
+            spec.policies.len()
+        );
+        report.print_table();
+    }
+    let out = a.str_or("out", "");
+    if !out.is_empty() {
+        if let Err(e) = report.write(Path::new(&out), format) {
+            eprintln!("writing {out}: {e}");
+            return 1;
+        }
+        println!("wrote {} cells to {out}", report.cells.len());
+    } else if a.flag("quiet") {
+        // Quiet with no --out: emit the report itself to stdout.
+        print!("{}", report.render(format));
+    }
+    0
+}
+
 // ----------------------------------------------------------------- figure
 
 fn cmd_figure(rest: &[String]) -> i32 {
     let cli = Cli::new("carbon-sim figure", "regenerate a paper figure")
         .opt("fig", "6", "figure number: 1 | 2 | 4 | 5 | 6 | 7 | 8")
         .opt("scale", "paper", "experiment scale: paper | smoke")
-        .opt("duration", "0", "override trace duration (s); 0 = scale default");
+        .opt("duration", "0", "override trace duration (s); 0 = scale default")
+        .opt("threads", "0", "worker threads for the run matrix (0 = one per core)");
     let a = parse_or_exit(&cli, rest);
     let mut scale = match a.str_or("scale", "paper").as_str() {
         "paper" => Scale::paper(),
@@ -229,6 +328,7 @@ fn cmd_figure(rest: &[String]) -> i32 {
     if dur > 0.0 {
         scale.duration_s = dur;
     }
+    let threads = a.usize_or("threads", 0);
     match a.str_or("fig", "6").as_str() {
         "1" => experiments::fig1::print(&experiments::fig1::run(&ServerPowerModel::a100x4())),
         "2" => {
@@ -238,18 +338,18 @@ fn cmd_figure(rest: &[String]) -> i32 {
         "4" => experiments::fig4::print(&experiments::fig4::run(600.0, 120.0, 420.0, 1.0)),
         "5" => experiments::fig5::print(&experiments::fig5::run(40)),
         "6" => {
-            let cells = experiments::run_matrix(&scale);
+            let cells = experiments::run_matrix_threads(&scale, threads);
             experiments::fig6::print(&experiments::fig6::rows(&cells, 2.6));
         }
         "7" => {
-            let cells = experiments::run_matrix(&scale);
+            let cells = experiments::run_matrix_threads(&scale, threads);
             experiments::fig7::print(&experiments::fig7::rows(
                 &cells,
                 &EmbodiedModel::paper_default(),
             ));
         }
         "8" => {
-            let cells = experiments::run_matrix(&scale);
+            let cells = experiments::run_matrix_threads(&scale, threads);
             experiments::fig8::print(&experiments::fig8::rows(&cells));
         }
         other => {
@@ -266,7 +366,7 @@ fn cmd_trace_gen(rest: &[String]) -> i32 {
     let cli = Cli::new("carbon-sim trace-gen", "synthesize an Azure-like JSONL trace")
         .opt("rate", "60", "request rate (rps)")
         .opt("duration", "120", "duration (s)")
-        .opt("workload", "mixed", "conv | code | mixed")
+        .opt("workload", "mixed", "conv | code | mixed | diurnal | bursty | long-context")
         .opt("seed", "42", "RNG seed")
         .opt("out", "trace.jsonl", "output path");
     let a = parse_or_exit(&cli, rest);

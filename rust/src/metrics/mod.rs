@@ -9,6 +9,7 @@
 //! * end-of-run per-core frequencies → CV + mean degradation (Fig. 6),
 //! * request service-quality stats (TTFT / E2E latency).
 
+use crate::util::json::Value;
 use crate::util::stats::{self, Summary};
 
 /// Raw sample streams captured during a run.
@@ -129,6 +130,34 @@ impl SimResult {
         Summary::of(&self.collector.e2e)
     }
 
+    /// Machine-readable summary of the run as a JSON object.
+    ///
+    /// Contains only **seed-deterministic** quantities: `wall_time_s` and
+    /// anything else depending on host speed or thread scheduling is
+    /// deliberately excluded, so two runs of the same seed serialize to
+    /// byte-identical JSON — the property the sweep engine's any-thread-
+    /// count determinism guarantee is built on.
+    pub fn to_json_summary(&self) -> Value {
+        let ttft = self.ttft_summary();
+        let e2e = self.e2e_summary();
+        Value::obj(vec![
+            ("policy", self.policy.as_str().into()),
+            ("cores", self.cores_per_cpu.into()),
+            ("rate_achieved_rps", self.rate_rps.into()),
+            ("sim_duration_s", self.duration_s.into()),
+            ("completed", self.completed_requests.into()),
+            ("events", (self.events_processed as usize).into()),
+            ("ttft_p50_s", ttft.p50.into()),
+            ("ttft_p99_s", ttft.p99.into()),
+            ("e2e_p50_s", e2e.p50.into()),
+            ("e2e_p99_s", e2e.p99.into()),
+            ("fred_mean_ghz", stats::mean(&self.mean_fred_per_machine()).into()),
+            ("freq_cv_mean", stats::mean(&self.freq_cv_per_machine()).into()),
+            ("oversub_fraction", self.oversub_fraction().into()),
+            ("idle_p50", stats::percentile(&self.pooled_idle_samples(), 50.0).into()),
+        ])
+    }
+
     /// Fraction of total core-seconds spent oversubscribed, cluster-wide.
     pub fn oversub_fraction(&self) -> f64 {
         let over: f64 = self.collector.oversub_integral.iter().sum();
@@ -191,6 +220,22 @@ mod tests {
         c.sample_machine(1, 7, -0.1);
         assert_eq!(c.task_samples[0], vec![3.0]);
         assert_eq!(c.idle_samples[1], vec![-0.1]);
+    }
+
+    #[test]
+    fn json_summary_is_deterministic_and_excludes_wall_time() {
+        let mut r = result_with_freqs(vec![vec![2.6, 2.5]], vec![vec![2.5, 2.4]]);
+        r.policy = "proposed".into();
+        r.wall_time_s = 1.23;
+        let a = r.to_json_summary().to_string_pretty();
+        r.wall_time_s = 9.87; // host-dependent — must not affect the summary
+        let b = r.to_json_summary().to_string_pretty();
+        assert_eq!(a, b);
+        assert!(a.contains("\"fred_mean_ghz\""));
+        assert!(!a.contains("wall_time"));
+        let parsed = crate::util::json::parse(&a).unwrap();
+        assert_eq!(parsed.str_or("policy", ""), "proposed");
+        assert_eq!(parsed.usize_or("cores", 0), 2);
     }
 
     #[test]

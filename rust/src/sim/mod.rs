@@ -39,17 +39,23 @@ impl<E> PartialOrd for Scheduled<E> {
     }
 }
 
+/// Scheduling a past time beyond this tolerance is a hard error; within
+/// it, the time is clamped to `now` (float round-off from accumulated
+/// `now + dt` arithmetic) and counted in [`EventQueue::clamped`].
+pub const PAST_TOLERANCE_S: f64 = 1e-9;
+
 /// The event queue / simulation clock.
 pub struct EventQueue<E> {
     heap: BinaryHeap<Scheduled<E>>,
     seq: u64,
     now: f64,
     processed: u64,
+    clamped: u64,
 }
 
 impl<E> EventQueue<E> {
     pub fn new() -> EventQueue<E> {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0, processed: 0 }
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0, processed: 0, clamped: 0 }
     }
 
     /// Current simulation time (time of the last popped event).
@@ -74,17 +80,44 @@ impl<E> EventQueue<E> {
         self.heap.is_empty()
     }
 
-    /// Schedule `payload` at absolute time `at` (must be ≥ now).
-    pub fn push(&mut self, at: f64, payload: E) {
-        debug_assert!(at >= self.now - 1e-9, "scheduling into the past: {at} < {}", self.now);
-        debug_assert!(at.is_finite());
-        self.heap.push(Scheduled { time: at.max(self.now), seq: self.seq, payload });
-        self.seq += 1;
+    /// Number of pushes whose time was clamped forward to `now` (always a
+    /// sub-[`PAST_TOLERANCE_S`] float round-off; larger skews panic).
+    #[inline]
+    pub fn clamped(&self) -> u64 {
+        self.clamped
     }
 
-    /// Schedule `payload` `delay` seconds from now.
-    pub fn push_in(&mut self, delay: f64, payload: E) {
-        self.push(self.now + delay.max(0.0), payload);
+    /// Schedule `payload` at absolute time `at` (must be ≥ now) and return
+    /// the time actually used.
+    ///
+    /// Scheduling into the past is a real error in every build profile —
+    /// previously a `debug_assert!`, which let release-mode sweep workers
+    /// silently clamp buggy past-times to `now` and mask scheduling bugs.
+    /// Only float round-off within [`PAST_TOLERANCE_S`] is forgiven: the
+    /// time is clamped to `now`, the clamp is counted, and the clamped
+    /// time is returned so callers see the effective schedule.
+    pub fn push(&mut self, at: f64, payload: E) -> f64 {
+        assert!(at.is_finite(), "scheduling a non-finite time: {at}");
+        assert!(
+            at >= self.now - PAST_TOLERANCE_S,
+            "scheduling into the past: {at} < {}",
+            self.now
+        );
+        let time = if at < self.now {
+            self.clamped += 1;
+            self.now
+        } else {
+            at
+        };
+        self.heap.push(Scheduled { time, seq: self.seq, payload });
+        self.seq += 1;
+        time
+    }
+
+    /// Schedule `payload` `delay` seconds from now; returns the absolute
+    /// time used.
+    pub fn push_in(&mut self, delay: f64, payload: E) -> f64 {
+        self.push(self.now + delay.max(0.0), payload)
     }
 
     /// Pop the next event, advancing the clock to its timestamp.
@@ -171,6 +204,35 @@ mod tests {
             times.push(t);
         }
         assert_eq!(times, vec![2.0, 5.0, 10.0]);
+    }
+
+    #[test]
+    fn push_returns_scheduled_time() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.push(2.0, ()), 2.0);
+        q.pop();
+        // Sub-tolerance round-off clamps forward, is counted, returned.
+        let t = q.push(2.0 - 1e-12, ());
+        assert_eq!(t, 2.0);
+        assert_eq!(q.clamped(), 1);
+        assert_eq!(q.push_in(1.5, ()), 3.5);
+        assert_eq!(q.clamped(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_time_panics_in_all_profiles() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.pop();
+        q.push(4.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn non_finite_time_panics() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
     }
 
     #[test]

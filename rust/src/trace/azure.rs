@@ -15,13 +15,28 @@
 use super::{Request, Trace};
 use crate::util::rng::Rng;
 
-/// Which Azure workload mix to synthesize.
+/// Which workload scenario to synthesize: a token-marginal mix plus an
+/// arrival process. `Conversation`/`Coding`/`Mixed` are the Splitwise
+/// marginals under homogeneous Poisson arrivals (the paper's §6.1.2
+/// setup); `Diurnal`, `Bursty` and `LongContext` are the sweep engine's
+/// additional stress scenarios (day/night cycles, Markov-modulated
+/// on/off bursts, and long-context serving à la RAG/agentic traffic).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Workload {
     Conversation,
     Coding,
     /// Production-like blend: 70 % conversation, 30 % coding.
     Mixed,
+    /// Mixed marginals under a sinusoidal (day/night) rate profile:
+    /// `λ(t) = rate·(1 + A·sin(2πt/T))` with one full period per trace.
+    Diurnal,
+    /// Mixed marginals under a two-state Markov-modulated Poisson
+    /// process: ON bursts well above the mean rate, quiet OFF valleys,
+    /// time-averaging to the configured rate.
+    Bursty,
+    /// Long-context requests (multi-thousand-token prompts, long
+    /// completions) under homogeneous Poisson arrivals.
+    LongContext,
 }
 
 impl Workload {
@@ -30,10 +45,38 @@ impl Workload {
             "conv" | "conversation" => Ok(Workload::Conversation),
             "code" | "coding" => Ok(Workload::Coding),
             "mixed" => Ok(Workload::Mixed),
-            other => Err(format!("unknown workload '{other}' (conv|code|mixed)")),
+            "diurnal" => Ok(Workload::Diurnal),
+            "bursty" => Ok(Workload::Bursty),
+            "long" | "long-context" | "longcontext" => Ok(Workload::LongContext),
+            other => Err(format!(
+                "unknown workload '{other}' (conv|code|mixed|diurnal|bursty|long-context)"
+            )),
+        }
+    }
+
+    /// Canonical name (accepted by [`Workload::parse`]); used by the sweep
+    /// report and CSV/JSON output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Conversation => "conv",
+            Workload::Coding => "code",
+            Workload::Mixed => "mixed",
+            Workload::Diurnal => "diurnal",
+            Workload::Bursty => "bursty",
+            Workload::LongContext => "long-context",
         }
     }
 }
+
+/// Every scenario, in sweep-axis order.
+pub const ALL_WORKLOADS: [Workload; 6] = [
+    Workload::Conversation,
+    Workload::Coding,
+    Workload::Mixed,
+    Workload::Diurnal,
+    Workload::Bursty,
+    Workload::LongContext,
+];
 
 /// Generator parameters.
 #[derive(Clone, Copy, Debug)]
@@ -67,10 +110,47 @@ const CONV_PROMPT: TokenDist = TokenDist { median: 1020.0, sigma: 1.0, min: 4, m
 const CONV_OUTPUT: TokenDist = TokenDist { median: 129.0, sigma: 0.8, min: 1, max: 1024 };
 const CODE_PROMPT: TokenDist = TokenDist { median: 1930.0, sigma: 0.7, min: 16, max: 8192 };
 const CODE_OUTPUT: TokenDist = TokenDist { median: 28.0, sigma: 0.9, min: 1, max: 512 };
+// Long-context serving (RAG / agentic traffic): prompts an order of
+// magnitude above conversation, with long completions.
+const LONG_PROMPT: TokenDist = TokenDist { median: 6000.0, sigma: 0.5, min: 256, max: 32768 };
+const LONG_OUTPUT: TokenDist = TokenDist { median: 512.0, sigma: 0.6, min: 16, max: 4096 };
+
+/// Diurnal default amplitude used when the scenario is selected via
+/// [`Workload::Diurnal`] (the explicit [`AzureTraceGen::generate_diurnal`]
+/// entry point still takes the amplitude as a parameter).
+pub const DIURNAL_AMPLITUDE: f64 = 0.6;
+
+/// Bursty (MMPP) defaults: the process spends [`BURSTY_ON_FRACTION`] of
+/// time in the ON state (mean sojourn [`BURSTY_MEAN_ON_S`] seconds), and
+/// the OFF-state rate is [`BURSTY_OFF_RATE_FRACTION`] of the mean rate;
+/// the ON rate is derived so the time-average equals the configured rate.
+pub const BURSTY_ON_FRACTION: f64 = 0.3;
+pub const BURSTY_OFF_RATE_FRACTION: f64 = 0.2;
+pub const BURSTY_MEAN_ON_S: f64 = 2.0;
 
 /// The trace generator.
 pub struct AzureTraceGen {
     pub params: TraceParams,
+}
+
+/// Sample one request's `(prompt_tokens, output_tokens)` for a scenario.
+/// The arrival-process scenarios (`Diurnal`, `Bursty`) use the `Mixed`
+/// marginals; the draw order is identical to the original generator so
+/// pre-existing seeds reproduce byte-identical conv/code/mixed traces.
+fn sample_tokens(workload: Workload, rng: &mut Rng) -> (u32, u32) {
+    let coding = match workload {
+        Workload::Conversation => false,
+        Workload::Coding => true,
+        Workload::Mixed | Workload::Diurnal | Workload::Bursty => rng.bool(0.3),
+        Workload::LongContext => {
+            return (LONG_PROMPT.sample(rng), LONG_OUTPUT.sample(rng));
+        }
+    };
+    if coding {
+        (CODE_PROMPT.sample(rng), CODE_OUTPUT.sample(rng))
+    } else {
+        (CONV_PROMPT.sample(rng), CONV_OUTPUT.sample(rng))
+    }
 }
 
 impl AzureTraceGen {
@@ -102,24 +182,63 @@ impl AzureTraceGen {
             if !rng.bool(lambda_t / lambda_max) {
                 continue; // thinned
             }
-            let coding = match p.workload {
-                Workload::Conversation => false,
-                Workload::Coding => true,
-                Workload::Mixed => rng.bool(0.3),
-            };
-            let (pt, ot) = if coding {
-                (CODE_PROMPT.sample(&mut rng), CODE_OUTPUT.sample(&mut rng))
-            } else {
-                (CONV_PROMPT.sample(&mut rng), CONV_OUTPUT.sample(&mut rng))
-            };
+            let (pt, ot) = sample_tokens(p.workload, &mut rng);
             requests.push(Request { id, arrival_s: t, prompt_tokens: pt, output_tokens: ot });
             id += 1;
         }
         Trace { requests, duration_s: p.duration_s }
     }
 
-    /// Generate a full trace.
-    pub fn generate(&self) -> Trace {
+    /// Generate a trace with a two-state Markov-modulated Poisson arrival
+    /// process (EcoServe-style bursty demand). The chain alternates
+    /// between an ON state (mean sojourn `mean_on_s`, arrival rate well
+    /// above the mean) and an OFF state (rate `off_rate_frac · rate`),
+    /// with sojourn times exponential and rates chosen so the
+    /// time-average equals `rate_rps`:
+    ///
+    /// `λ_on = (1 − (1−d)·off_rate_frac) / d · rate`, `d = on_fraction`.
+    pub fn generate_bursty(&self, on_fraction: f64, off_rate_frac: f64, mean_on_s: f64) -> Trace {
+        assert!((0.0..1.0).contains(&on_fraction) && on_fraction > 0.0, "on_fraction in (0,1)");
+        assert!((0.0..1.0).contains(&off_rate_frac), "off_rate_frac in [0,1)");
+        assert!(mean_on_s > 0.0);
+        let p = &self.params;
+        let mut rng = Rng::new(p.seed ^ 0xB0_57);
+        let lambda_off = off_rate_frac * p.rate_rps;
+        let lambda_on = (1.0 - (1.0 - on_fraction) * off_rate_frac) / on_fraction * p.rate_rps;
+        let mean_off_s = mean_on_s * (1.0 - on_fraction) / on_fraction;
+        let mut requests = Vec::new();
+        let mut id = 0u64;
+        let mut t = 0.0;
+        let mut on = rng.bool(on_fraction); // start in steady state
+        while t < p.duration_s {
+            let sojourn = rng.exp(1.0 / if on { mean_on_s } else { mean_off_s });
+            let state_end = (t + sojourn).min(p.duration_s);
+            let lambda = if on { lambda_on } else { lambda_off };
+            if lambda > 0.0 {
+                let mut at = t;
+                loop {
+                    at += rng.exp(lambda);
+                    if at >= state_end {
+                        break;
+                    }
+                    let (pt, ot) = sample_tokens(p.workload, &mut rng);
+                    requests.push(Request {
+                        id,
+                        arrival_s: at,
+                        prompt_tokens: pt,
+                        output_tokens: ot,
+                    });
+                    id += 1;
+                }
+            }
+            t = state_end;
+            on = !on;
+        }
+        Trace { requests, duration_s: p.duration_s }
+    }
+
+    /// Generate a homogeneous-Poisson trace (the original §6.1.2 process).
+    fn generate_poisson(&self) -> Trace {
         let mut rng = Rng::new(self.params.seed);
         let mut requests = Vec::new();
         let mut t = 0.0;
@@ -129,20 +248,29 @@ impl AzureTraceGen {
             if t >= self.params.duration_s {
                 break;
             }
-            let coding = match self.params.workload {
-                Workload::Conversation => false,
-                Workload::Coding => true,
-                Workload::Mixed => rng.bool(0.3),
-            };
-            let (p, o) = if coding {
-                (CODE_PROMPT.sample(&mut rng), CODE_OUTPUT.sample(&mut rng))
-            } else {
-                (CONV_PROMPT.sample(&mut rng), CONV_OUTPUT.sample(&mut rng))
-            };
+            let (p, o) = sample_tokens(self.params.workload, &mut rng);
             requests.push(Request { id, arrival_s: t, prompt_tokens: p, output_tokens: o });
             id += 1;
         }
         Trace { requests, duration_s: self.params.duration_s }
+    }
+
+    /// Generate a full trace, dispatching on the scenario's arrival
+    /// process: homogeneous Poisson for `conv`/`code`/`mixed`/`long-context`,
+    /// one sinusoidal period over the trace for `diurnal` (amplitude
+    /// [`DIURNAL_AMPLITUDE`]), and the MMPP defaults for `bursty`.
+    pub fn generate(&self) -> Trace {
+        match self.params.workload {
+            Workload::Diurnal => {
+                self.generate_diurnal(DIURNAL_AMPLITUDE, self.params.duration_s)
+            }
+            Workload::Bursty => self.generate_bursty(
+                BURSTY_ON_FRACTION,
+                BURSTY_OFF_RATE_FRACTION,
+                BURSTY_MEAN_ON_S,
+            ),
+            _ => self.generate_poisson(),
+        }
     }
 }
 
@@ -236,6 +364,63 @@ mod tests {
         let first = t.requests.iter().filter(|r| r.arrival_s < 50.0).count() as f64;
         let second = t.requests.len() as f64 - first;
         assert!((first / second - 1.0).abs() < 0.25);
+    }
+
+    #[test]
+    fn parse_knows_every_scenario() {
+        for w in ALL_WORKLOADS {
+            assert_eq!(Workload::parse(w.name()).unwrap(), w);
+        }
+        assert_eq!(Workload::parse("long").unwrap(), Workload::LongContext);
+        assert!(Workload::parse("nope").is_err());
+    }
+
+    #[test]
+    fn diurnal_scenario_flows_through_generate() {
+        let t = gen(80.0, 400.0, Workload::Diurnal, 11);
+        assert!(t.validate().is_ok());
+        // One sine period over the trace: front-loaded arrivals, mean
+        // rate near the configured target.
+        let first = t.requests.iter().filter(|r| r.arrival_s < 200.0).count() as f64;
+        let second = t.requests.len() as f64 - first;
+        assert!(first > second * 1.5, "first={first} second={second}");
+        assert!((t.rate_rps() - 80.0).abs() < 8.0, "rate={}", t.rate_rps());
+    }
+
+    #[test]
+    fn bursty_scenario_matches_mean_rate_and_bursts() {
+        let t = gen(60.0, 600.0, Workload::Bursty, 12);
+        assert!(t.validate().is_ok());
+        assert!((t.rate_rps() - 60.0).abs() < 12.0, "rate={}", t.rate_rps());
+        // MMPP interarrivals are overdispersed relative to Poisson:
+        // coefficient of variation well above 1.
+        let gaps: Vec<f64> =
+            t.requests.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+        let cv = stats::coeff_of_variation(&gaps);
+        assert!(cv > 1.15, "bursty interarrival cv={cv} not overdispersed");
+    }
+
+    #[test]
+    fn bursty_is_deterministic_per_seed() {
+        let a = gen(40.0, 120.0, Workload::Bursty, 9);
+        let b = gen(40.0, 120.0, Workload::Bursty, 9);
+        assert_eq!(a.requests, b.requests);
+        let c = gen(40.0, 120.0, Workload::Bursty, 10);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn long_context_has_long_prompts_and_outputs() {
+        let t = gen(100.0, 200.0, Workload::LongContext, 13);
+        assert!(t.validate().is_ok());
+        let prompts: Vec<f64> = t.requests.iter().map(|r| r.prompt_tokens as f64).collect();
+        let outputs: Vec<f64> = t.requests.iter().map(|r| r.output_tokens as f64).collect();
+        assert!((stats::percentile(&prompts, 50.0) - 6000.0).abs() < 900.0);
+        assert!(stats::percentile(&outputs, 50.0) > 300.0);
+        for r in &t.requests {
+            assert!((256..=32768).contains(&r.prompt_tokens));
+            assert!((16..=4096).contains(&r.output_tokens));
+        }
     }
 
     #[test]

@@ -5,12 +5,14 @@
 //! usual ecosystem pieces: RNG + distributions ([`rng`]), statistics
 //! ([`stats`]), dense linear algebra for correlated sampling ([`linalg`]),
 //! JSON ([`json`]), CLI parsing ([`cli`]), a criterion-style bench harness
-//! ([`bench`]), and a property-testing harness ([`proptest`]).
+//! ([`bench`]), a property-testing harness ([`proptest`]), and a scoped
+//! worker pool for parallel experiment sweeps ([`pool`]).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod linalg;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,134 @@
+//! Minimal scoped worker pool (the offline toolchain has no `rayon`).
+//!
+//! [`run_indexed`] shards `n` independent jobs across a fixed number of
+//! `std::thread` workers via an atomic work-stealing counter and returns
+//! the results **in job-index order**, regardless of which worker ran
+//! which job or in what order they finished. Combined with per-job seeds
+//! derived from the job index (not from execution order), this makes the
+//! sweep engine's output bit-identical at any thread count.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Number of worker threads to use when the caller passes 0 ("auto").
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(0), f(1), ..., f(n-1)` on up to `threads` workers and collect
+/// the results in index order. `threads == 0` means auto (one per
+/// available core); `threads == 1` runs inline with no thread overhead.
+///
+/// Jobs must be independent: `f` is shared by reference across workers,
+/// so it captures only `Sync` state. A panicking job fails the pool
+/// fast: the dying worker raises an abort flag, surviving workers stop
+/// picking up new jobs, the worker's panic message reaches stderr
+/// (default panic hook), and the collector then panics on the missing
+/// result slot.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = if threads == 0 { available_threads() } else { threads };
+    let threads = threads.min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let abort = &abort;
+            let f = &f;
+            scope.spawn(move || {
+                // Raises the abort flag if this worker unwinds out of a
+                // panicking job, so the others stop draining the queue.
+                struct AbortOnPanic<'a>(&'a AtomicBool);
+                impl Drop for AbortOnPanic<'_> {
+                    fn drop(&mut self) {
+                        if std::thread::panicking() {
+                            self.0.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+                let _guard = AbortOnPanic(abort);
+                loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let result = f(i);
+                    if tx.send((i, result)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx); // the receive loop ends when the last worker finishes
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, result) in rx {
+            slots[i] = Some(result);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool worker panicked (its message is above) — job has no result"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_arrive_in_index_order() {
+        for threads in [1, 2, 3, 8] {
+            let out = run_indexed(20, threads, |i| i * i);
+            assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matches_sequential_for_any_thread_count() {
+        let seq = run_indexed(13, 1, |i| format!("job-{i}"));
+        for threads in [0, 2, 4, 16] {
+            assert_eq!(run_indexed(13, threads, |i| format!("job-{i}")), seq);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_jobs_is_fine() {
+        assert_eq!(run_indexed(2, 64, |i| i), vec![0, 1]);
+        assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker panicked")]
+    fn panicking_job_propagates_to_caller() {
+        run_indexed(8, 2, |i| {
+            if i == 0 {
+                panic!("job zero exploded");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn workers_actually_run_concurrently_on_shared_state() {
+        use std::sync::atomic::AtomicU64;
+        let total = AtomicU64::new(0);
+        run_indexed(100, 4, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+}

@@ -20,7 +20,7 @@ fn run(args: &[&str]) -> (bool, String) {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["--help"]);
     assert!(ok);
-    for cmd in ["simulate", "figure", "trace-gen", "serve", "aging-demo"] {
+    for cmd in ["simulate", "sweep", "figure", "trace-gen", "serve", "aging-demo"] {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
 }
@@ -120,6 +120,95 @@ fn trace_gen_writes_loadable_file() {
         run(&["simulate", "--trace", path.to_str().unwrap(), "--cores", "8",
               "--prompt-machines", "1", "--token-machines", "1"]);
     assert!(ok2, "{text2}");
+}
+
+#[test]
+fn sweep_help_lists_axes() {
+    // --help exits 2 (usage on stderr), like every other subcommand.
+    let (ok, text) = run(&["sweep", "--help"]);
+    assert!(!ok);
+    for flag in ["--rates", "--cores", "--policies", "--workloads", "--threads", "--out",
+                 "--format", "--replicas"] {
+        assert!(text.contains(flag), "missing {flag} in sweep help:\n{text}");
+    }
+    assert!(text.contains("diurnal"), "{text}");
+}
+
+#[test]
+fn sweep_tiny_end_to_end_writes_deterministic_json() {
+    let dir = std::env::temp_dir().join("carbon_sim_cli_sweep");
+    std::fs::create_dir_all(&dir).unwrap();
+    let args_for = |out: &str, threads: &str| {
+        vec![
+            "sweep".to_string(),
+            "--rates".into(), "5".into(),
+            "--cores".into(), "8".into(),
+            "--policies".into(), "all".into(),
+            "--workloads".into(), "mixed,bursty".into(),
+            "--duration".into(), "4".into(),
+            "--prompt-machines".into(), "1".into(),
+            "--token-machines".into(), "2".into(),
+            "--threads".into(), threads.into(),
+            "--format".into(), "json".into(),
+            "--quiet".into(),
+            "--out".into(), out.into(),
+        ]
+    };
+    let p1 = dir.join("sweep_t1.json");
+    let p8 = dir.join("sweep_t8.json");
+    let argv1 = args_for(p1.to_str().unwrap(), "1");
+    let argv8 = args_for(p8.to_str().unwrap(), "8");
+    let (ok1, t1) = run(&argv1.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    assert!(ok1, "{t1}");
+    let (ok8, t8) = run(&argv8.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    assert!(ok8, "{t8}");
+    let b1 = std::fs::read(&p1).unwrap();
+    let b8 = std::fs::read(&p8).unwrap();
+    assert_eq!(b1, b8, "sweep output must be byte-identical at any thread count");
+    // And it is valid JSON with the expected cell count: 1 rate × 1
+    // core count × 3 policies × 2 workloads = 6 cells.
+    let v = carbon_sim::util::json::parse(&String::from_utf8(b1).unwrap()).unwrap();
+    assert_eq!(v.usize_or("n_cells", 0), 6);
+    assert_eq!(v.get("cells").and_then(|c| c.as_arr()).unwrap().len(), 6);
+}
+
+#[test]
+fn sweep_csv_format_writes_table() {
+    let dir = std::env::temp_dir().join("carbon_sim_cli_sweep_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("sweep.csv");
+    let (ok, text) = run(&[
+        "sweep", "--rates", "4", "--cores", "8", "--policies", "proposed",
+        "--workloads", "diurnal", "--duration", "4", "--prompt-machines", "1",
+        "--token-machines", "1", "--quiet", "--format", "csv", "--out",
+        p.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    let csv = std::fs::read_to_string(&p).unwrap();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 2, "{csv}");
+    assert!(lines[0].starts_with("scenario,workload,cores"), "{csv}");
+    assert!(lines[1].contains("diurnal"), "{csv}");
+}
+
+#[test]
+fn sweep_rejects_bad_flags_with_exit_2() {
+    for bad in [
+        vec!["sweep", "--no-such-flag"],
+        vec!["sweep", "--format", "xml"],
+        vec!["sweep", "--workloads", "frobnicate"],
+        vec!["sweep", "--policies", "nope"],
+        vec!["sweep", "--rates", "abc"],
+        vec!["sweep", "--rates", ""],
+        vec!["sweep", "--replicas", "0"],
+        vec!["sweep", "--replicas", "-1"],
+        vec!["sweep", "--duration", "12O"],
+        vec!["sweep", "--threads", "two"],
+        vec!["sweep", "--seed", "x7"],
+    ] {
+        let (ok, text) = run(&bad);
+        assert!(!ok, "expected failure for {bad:?}:\n{text}");
+    }
 }
 
 #[test]

@@ -42,34 +42,8 @@ fn run_schedule(policy: &'static str) {
                 // 20%: periodic adjust
                 _ => m.adjust(now),
             }
-            // ---- invariants ----
-            let cpu = &m.cpu;
-            if cpu.running_tasks() != live.len() {
-                return check(
-                    false,
-                    format!(
-                        "[{policy}] task accounting: running {} != live {}",
-                        cpu.running_tasks(),
-                        live.len()
-                    ),
-                );
-            }
-            if cpu.active_count() + cpu.c6_count() != cpu.n_cores() {
-                return check(false, format!("[{policy}] C-state partition broken"));
-            }
-            if cpu.active_count() == 0 && !live.is_empty() {
-                return check(false, format!("[{policy}] all cores asleep with live tasks"));
-            }
-            for core in &cpu.cores {
-                if core.task.is_some() && core.state == CState::C6 {
-                    return check(false, format!("[{policy}] allocated core {} in C6", core.id));
-                }
-            }
-            // Oversubscription only when no free active core exists.
-            if !cpu.oversub.is_empty() && cpu.has_free_active_core() {
-                // The manager must have promoted — transiently allowed only
-                // inside calls, never observable here.
-                return check(false, format!("[{policy}] unpromoted oversub with free cores"));
+            if let Check::Fail(msg) = structural_invariants(&m, live.len(), policy) {
+                return Check::Fail(msg);
             }
         }
         // Drain everything: all cores must end task-free.
@@ -77,6 +51,96 @@ fn run_schedule(policy: &'static str) {
             m.finish_task(t, now + 1.0);
         }
         check(m.cpu.running_tasks() == 0, format!("[{policy}] drain left tasks behind"))
+    });
+}
+
+/// Structural invariants that must hold between manager calls, for any
+/// policy: task accounting, the C-state partition, no allocated C6 core,
+/// and no observable unpromoted oversubscription.
+fn structural_invariants(m: &CoreManager, live: usize, policy: &str) -> Check {
+    let cpu = &m.cpu;
+    if cpu.running_tasks() != live {
+        return check(
+            false,
+            format!("[{policy}] task accounting: running {} != live {live}", cpu.running_tasks()),
+        );
+    }
+    if cpu.active_count() + cpu.c6_count() != cpu.n_cores() {
+        return check(false, format!("[{policy}] C-state partition broken"));
+    }
+    if cpu.active_count() == 0 && live > 0 {
+        return check(false, format!("[{policy}] all cores asleep with live tasks"));
+    }
+    for core in &cpu.cores {
+        if core.task.is_some() && core.state == CState::C6 {
+            return check(false, format!("[{policy}] allocated core {} in C6", core.id));
+        }
+    }
+    if !cpu.oversub.is_empty() && cpu.has_free_active_core() {
+        return check(false, format!("[{policy}] unpromoted oversub with free cores"));
+    }
+    Check::Pass
+}
+
+/// Drive a policy with arrivals from a *bursty* (MMPP) trace: ON bursts
+/// hammer the working set far above the mean rate — exactly the regime
+/// where Selective Core Idling's reaction lag can oversubscribe — and
+/// OFF valleys shrink it again. Invariants must hold through both.
+fn run_bursty_trace(policy: &'static str) {
+    use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
+    forall(20, 0xB0B ^ policy.len() as u64, |g| {
+        let rate = 10.0 + g.f64(0.0, 50.0);
+        let n_cores = g.size(4, 48).max(1);
+        let trace = AzureTraceGen::new(TraceParams {
+            rate_rps: rate,
+            duration_s: 15.0,
+            workload: Workload::Bursty,
+            seed: g.size(0, 10_000) as u64,
+        })
+        .generate();
+        let mut m = mgr(n_cores, policy, 21);
+        // Completion events keyed in integer microseconds so the heap is
+        // Ord; service times 10–300 ms.
+        let mut completions = std::collections::BinaryHeap::new();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_adjust_us: u64 = 1_000_000;
+        for (id, r) in trace.requests.iter().enumerate() {
+            let arrive_us = (r.arrival_s * 1e6) as u64;
+            // Drain completions and adjust ticks before this arrival.
+            while let Some(std::cmp::Reverse((t_us, task))) = completions.peek().copied() {
+                if t_us > arrive_us {
+                    break;
+                }
+                completions.pop();
+                while next_adjust_us <= t_us {
+                    m.adjust(next_adjust_us as f64 / 1e6);
+                    next_adjust_us += 1_000_000;
+                }
+                m.finish_task(task, t_us as f64 / 1e6);
+                live.retain(|&t| t != task);
+                if let Check::Fail(msg) = structural_invariants(&m, live.len(), policy) {
+                    return Check::Fail(msg);
+                }
+            }
+            while next_adjust_us <= arrive_us {
+                m.adjust(next_adjust_us as f64 / 1e6);
+                next_adjust_us += 1_000_000;
+            }
+            let task = id as u64;
+            m.start_task(task, r.arrival_s);
+            live.push(task);
+            let service_us = (g.f64(0.01, 0.3) * 1e6) as u64;
+            completions.push(std::cmp::Reverse((arrive_us + service_us, task)));
+            if let Check::Fail(msg) = structural_invariants(&m, live.len(), policy) {
+                return Check::Fail(msg);
+            }
+        }
+        // Drain everything left.
+        let end_s = trace.duration_s + 1.0;
+        while let Some(std::cmp::Reverse((_, task))) = completions.pop() {
+            m.finish_task(task, end_s);
+        }
+        check(m.cpu.running_tasks() == 0, format!("[{policy}] bursty drain left tasks"))
     });
 }
 
@@ -93,6 +157,21 @@ fn invariants_linux() {
 #[test]
 fn invariants_least_aged() {
     run_schedule("least-aged");
+}
+
+#[test]
+fn bursty_invariants_proposed() {
+    run_bursty_trace("proposed");
+}
+
+#[test]
+fn bursty_invariants_linux() {
+    run_bursty_trace("linux");
+}
+
+#[test]
+fn bursty_invariants_least_aged() {
+    run_bursty_trace("least-aged");
 }
 
 #[test]

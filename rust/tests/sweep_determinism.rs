@@ -1,0 +1,183 @@
+//! Sweep-engine determinism and workload-scenario property tests.
+//!
+//! The engine's contract: per-cell seeds derive from `(spec.seed,
+//! scenario index)`, never from execution order, and the pool returns
+//! results in cell order — so the aggregated report is **byte-identical
+//! at any thread count**. The scenario generators must uphold the trace
+//! invariants (sorted arrivals, positive tokens, empirical rate near the
+//! configured mean) for arbitrary parameters.
+
+use carbon_sim::experiments::sweep::{self, SweepSpec};
+use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
+use carbon_sim::util::proptest::{check, forall, Check};
+use carbon_sim::util::stats;
+
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        rates: vec![4.0, 8.0],
+        core_counts: vec![8],
+        policies: vec!["linux".into(), "proposed".into()],
+        workloads: vec![Workload::Mixed, Workload::Bursty],
+        replicas: 1,
+        duration_s: 6.0,
+        n_prompt: 1,
+        n_token: 2,
+        seed: 1234,
+    }
+}
+
+#[test]
+fn json_and_csv_identical_at_1_2_and_8_threads() {
+    let spec = tiny_spec();
+    let base = sweep::run(&spec, 1).unwrap();
+    let base_json = base.to_json().to_string_pretty();
+    let base_csv = base.to_csv();
+    assert!(!base.cells.is_empty());
+    for threads in [2, 8] {
+        let r = sweep::run(&spec, threads).unwrap();
+        assert_eq!(
+            r.to_json().to_string_pretty(),
+            base_json,
+            "JSON diverged at {threads} threads"
+        );
+        assert_eq!(r.to_csv(), base_csv, "CSV diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn repeated_runs_are_byte_identical() {
+    let spec = tiny_spec();
+    let a = sweep::run(&spec, 3).unwrap().to_json().to_string_pretty();
+    let b = sweep::run(&spec, 3).unwrap().to_json().to_string_pretty();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn different_root_seed_changes_results() {
+    let mut spec = tiny_spec();
+    let a = sweep::run(&spec, 2).unwrap().to_json().to_string_pretty();
+    spec.seed = 4321;
+    let b = sweep::run(&spec, 2).unwrap().to_json().to_string_pretty();
+    assert_ne!(a, b);
+}
+
+#[test]
+fn report_json_parses_back_with_expected_shape() {
+    let spec = tiny_spec();
+    let report = sweep::run(&spec, 4).unwrap();
+    let v = carbon_sim::util::json::parse(&report.to_json().to_string_pretty()).unwrap();
+    let cells = v.get("cells").and_then(|c| c.as_arr()).expect("cells array");
+    assert_eq!(cells.len(), spec.n_cells());
+    assert_eq!(v.usize_or("n_cells", 0), spec.n_cells());
+    for cell in cells {
+        assert!(cell.get("policy").is_some());
+        assert!(cell.get("workload").is_some());
+        assert!(cell.f64_or("sim_duration_s", -1.0) > 0.0);
+        // Seeds are serialized as strings to survive the f64 round-trip.
+        assert!(cell.get("seed").and_then(|s| s.as_str()).is_some());
+    }
+}
+
+// ------------------------------------------------------- trace properties
+
+/// Shared invariant block for a generated trace.
+fn trace_invariants(
+    t: &carbon_sim::trace::Trace,
+    rate: f64,
+    rel_tol: f64,
+    label: &str,
+) -> Check {
+    if let Err(e) = t.validate() {
+        return check(false, format!("[{label}] invariant broken: {e}"));
+    }
+    for r in &t.requests {
+        if r.prompt_tokens == 0 || r.output_tokens == 0 {
+            return check(false, format!("[{label}] zero-token request {}", r.id));
+        }
+    }
+    let achieved = t.rate_rps();
+    check(
+        (achieved - rate).abs() <= rel_tol * rate,
+        format!("[{label}] rate {achieved:.2} vs target {rate:.2} (tol {rel_tol})"),
+    )
+}
+
+#[test]
+fn diurnal_traces_uphold_invariants() {
+    forall(40, 0xD1, |g| {
+        let rate = 10.0 + g.f64(0.0, 60.0);
+        let seed = g.size(0, 100_000) as u64;
+        let t = AzureTraceGen::new(TraceParams {
+            rate_rps: rate,
+            duration_s: 240.0,
+            workload: Workload::Diurnal,
+            seed,
+        })
+        .generate();
+        trace_invariants(&t, rate, 0.25, "diurnal")
+    });
+}
+
+#[test]
+fn bursty_traces_uphold_invariants() {
+    forall(40, 0xB2, |g| {
+        let rate = 10.0 + g.f64(0.0, 60.0);
+        let seed = g.size(0, 100_000) as u64;
+        let t = AzureTraceGen::new(TraceParams {
+            rate_rps: rate,
+            duration_s: 400.0,
+            workload: Workload::Bursty,
+            seed,
+        })
+        .generate();
+        // MMPP on/off cycling has far higher count variance than a
+        // homogeneous process (~10% relative std at this duration):
+        // allow a wide band — the point is "near the mean", not tight.
+        trace_invariants(&t, rate, 0.5, "bursty")
+    });
+}
+
+#[test]
+fn long_context_traces_uphold_invariants() {
+    forall(40, 0x1C, |g| {
+        let rate = 10.0 + g.f64(0.0, 60.0);
+        let seed = g.size(0, 100_000) as u64;
+        let t = AzureTraceGen::new(TraceParams {
+            rate_rps: rate,
+            duration_s: 180.0,
+            workload: Workload::LongContext,
+            seed,
+        })
+        .generate();
+        if let Check::Fail(m) = trace_invariants(&t, rate, 0.25, "long-context") {
+            return Check::Fail(m);
+        }
+        // Long-context marginals: median prompt must dwarf conversation's.
+        let prompts: Vec<f64> = t.requests.iter().map(|r| r.prompt_tokens as f64).collect();
+        check(
+            stats::percentile(&prompts, 50.0) > 3000.0,
+            format!("[long-context] median prompt {}", stats::percentile(&prompts, 50.0)),
+        )
+    });
+}
+
+#[test]
+fn bursty_interarrivals_are_overdispersed_vs_poisson() {
+    // The defining property of the MMPP scenario: CV of interarrival
+    // gaps exceeds the exponential's CV of 1.
+    let mut cvs = Vec::new();
+    for seed in 0..5u64 {
+        let t = AzureTraceGen::new(TraceParams {
+            rate_rps: 50.0,
+            duration_s: 400.0,
+            workload: Workload::Bursty,
+            seed,
+        })
+        .generate();
+        let gaps: Vec<f64> =
+            t.requests.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+        cvs.push(stats::coeff_of_variation(&gaps));
+    }
+    let mean_cv = stats::mean(&cvs);
+    assert!(mean_cv > 1.2, "mean interarrival CV {mean_cv} not overdispersed");
+}

@@ -1,0 +1,229 @@
+//! Vendored, dependency-free reimplementation of the subset of the
+//! `anyhow` API this workspace uses. The offline toolchain has no registry
+//! access, so the real crate cannot be fetched; this shim keeps the same
+//! call sites compiling and behaving equivalently:
+//!
+//! * [`Error`] — a context chain of messages (`{e}` prints the outermost
+//!   context, `{e:#}` the full `outer: ...: root` chain, like anyhow).
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error parameter.
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on `Result` and
+//!   `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the usual constructor macros.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what lets the blanket `From` conversion
+//! and the `Context` impls coexist.
+
+use std::fmt;
+
+/// Error type: an ordered chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    fn wrap(mut self, context: String) -> Error {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The context chain, outermost first (root cause last).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any `std::error::Error` converts into [`Error`], so `?` works on
+/// `io::Error`, channel errors, the vendored `xla::Error`, etc.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::msg(error)
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` with the error defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion helper: implemented for every std error AND for
+    /// [`crate::Error`] itself (disjoint because `Error` is not a
+    /// `std::error::Error`). This is what lets `.context(...)` apply to
+    /// both `Result<_, io::Error>` and `Result<_, anyhow::Error>`.
+    pub trait ToError {
+        fn to_error(self) -> crate::Error;
+    }
+
+    impl<E> ToError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn to_error(self) -> crate::Error {
+            crate::Error::msg(self)
+        }
+    }
+
+    impl ToError for crate::Error {
+        fn to_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` extension trait.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::ToError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| private::ToError::to_error(e).wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| private::ToError::to_error(e).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let e: Error = anyhow!("root {}", 7);
+        let r: Result<()> = Err(e);
+        let e2 = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "outer: root 7");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 3);
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert!(format!("{}", f(3).unwrap_err()).contains("condition failed"));
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+    }
+}

@@ -1,0 +1,182 @@
+//! Stub of the `xla` PJRT FFI bindings.
+//!
+//! The offline build environment does not ship the XLA/PJRT shared
+//! libraries, so this crate provides the exact type/method surface the
+//! workspace uses (`PjRtClient`, `PjRtLoadedExecutable`, `PjRtBuffer`,
+//! `Literal`, `HloModuleProto`, `XlaComputation`) with every runtime entry
+//! point returning [`Error::unavailable`]. Code paths that need PJRT —
+//! `carbon-sim serve`, `--pjrt-aging`, the artifact cross-validation
+//! tests — degrade to a clear "PJRT unavailable" error instead of failing
+//! to link; the pure-Rust simulator, the sweep engine, and every figure
+//! runner never touch this crate at runtime.
+//!
+//! Dropping the real bindings in place of this stub requires no changes to
+//! the callers: the signatures below mirror the real crate.
+
+use std::fmt;
+
+/// XLA/PJRT error type.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT unavailable (carbon-sim was built against the vendored xla stub; \
+             install the real XLA FFI bindings to enable this path)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A host-side literal (tensor value).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    elems: usize,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(data: &[T]) -> Literal {
+        Literal { elems: data.len() }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.elems {
+            return Err(Error(format!("reshape {:?} incompatible with {} elements", dims, self.elems)));
+        }
+        Ok(self.clone())
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.elems
+    }
+
+    /// Split a 2-tuple literal.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::unavailable("Literal::to_tuple2"))
+    }
+
+    /// Split a 3-tuple literal.
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        Err(Error::unavailable("Literal::to_tuple3"))
+    }
+
+    /// Decompose an n-tuple literal.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::decompose_tuple"))
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parsing HLO text {path:?}")))
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host-literal arguments.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device-buffer arguments.
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A PJRT client bound to a device plugin.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client's device.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    /// Upload a host buffer to the device.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT unavailable"), "{e}");
+    }
+
+    #[test]
+    fn literal_shape_bookkeeping_works() {
+        let l = Literal::vec1(&[0.0f32; 6]);
+        assert_eq!(l.element_count(), 6);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+}
