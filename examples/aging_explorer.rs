@@ -8,7 +8,7 @@
 //! Run: `cargo run --release --example aging_explorer`
 
 use carbon_sim::cpu::{
-    aging::SECONDS_PER_YEAR, AgingParams, CState, Core, ProcVarParams, ProcVarSampler,
+    aging::SECONDS_PER_YEAR, AgingOps, AgingParams, CState, Core, ProcVarParams, ProcVarSampler,
     TemperatureModel,
 };
 use carbon_sim::util::rng::Rng;
@@ -36,6 +36,7 @@ fn main() {
     println!("(30% at year 10 for the allocated column is the calibration datum)");
 
     println!("\n== (b) age halting vs even-out over one simulated month ==");
+    let ops = AgingOps::new(&aging, &temps);
     let month = SECONDS_PER_YEAR / 12.0;
     let mut always_on = Core::new(0, 2.6);
     let mut halted = Core::new(1, 2.6);
@@ -43,18 +44,18 @@ fn main() {
     for i in 0..steps {
         let t0 = i as f64 * month / steps as f64;
         let t1 = (i + 1) as f64 * month / steps as f64;
-        always_on.advance(t1, &aging, &temps);
+        always_on.advance(t1, &ops);
         // `halted` spends 90% of each window in C6.
-        halted.set_state(CState::C0, t0, &aging, &temps);
-        halted.advance(t0 + 0.1 * (t1 - t0), &aging, &temps);
-        halted.set_state(CState::C6, t0 + 0.1 * (t1 - t0), &aging, &temps);
-        halted.advance(t1, &aging, &temps);
+        halted.set_state(CState::C0, t0, &ops);
+        halted.advance(t0 + 0.1 * (t1 - t0), &ops);
+        halted.set_state(CState::C6, t0 + 0.1 * (t1 - t0), &ops);
+        halted.advance(t1, &ops);
     }
     println!(
         "always-active core: -{:.1} MHz | 90%-halted core: -{:.1} MHz  ({:.1}x less aging)",
-        always_on.freq_reduction_ghz(&aging) * 1e3,
-        halted.freq_reduction_ghz(&aging) * 1e3,
-        always_on.freq_reduction_ghz(&aging) / halted.freq_reduction_ghz(&aging)
+        always_on.freq_reduction_ghz(&ops) * 1e3,
+        halted.freq_reduction_ghz(&ops) * 1e3,
+        always_on.freq_reduction_ghz(&ops) / halted.freq_reduction_ghz(&ops)
     );
 
     println!("\n== (c) process-variation chip sample (40 cores) ==");

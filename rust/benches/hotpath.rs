@@ -10,7 +10,7 @@
 //! Run: `cargo bench --bench hotpath`
 
 use carbon_sim::cluster::{Cluster, ClusterConfig};
-use carbon_sim::cpu::{AgingParams, CpuPackage, TemperatureModel};
+use carbon_sim::cpu::{AgingOps, AgingParams, Core, CpuPackage, TemperatureModel};
 use carbon_sim::policy::{by_name, CoreManager};
 use carbon_sim::sim::EventQueue;
 use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
@@ -26,8 +26,20 @@ fn main() {
     let aging = AgingParams::paper_default();
     let adf = aging.adf(327.15, 1.0);
     let mut dvth = 0.0f64;
-    bench("dvth_step", 0.5, || {
+    bench("dvth_step (closed-form reference)", 0.5, || {
         dvth = aging.dvth_step(std::hint::black_box(dvth.min(0.1)), adf, 0.001);
+    });
+    // The production path: equivalent-stress-time advance (one
+    // multiply-add, no transcendentals) + the lazy powf snapshot read.
+    let ops = AgingOps::new(&aging, &TemperatureModel::paper_default());
+    let mut core = Core::new(0, 2.6);
+    let mut t = 0.0f64;
+    bench("core advance (eq-time fast path)", 0.5, || {
+        t += 0.001;
+        core.advance(std::hint::black_box(t), &ops);
+    });
+    bench("dvth snapshot (lazy powf read)", 0.5, || {
+        std::hint::black_box(core.dvth(&ops));
     });
 
     section("L3 micro: policy decisions (40-core CPU, half loaded)");

@@ -129,8 +129,10 @@ enum Ev {
     IterDone(usize),
     /// CPU inference task finished on machine `m`.
     TaskDone { m: usize, task: u64 },
-    /// Selective Core Idling tick on machine `m`.
-    Adjust(usize),
+    /// Selective Core Idling tick — one coalesced event ticks every
+    /// machine (§Perf: all machines share the policy's period, so one
+    /// heap entry replaces `n_machines` per tick).
+    Adjust,
     /// Metrics sampling tick (all machines).
     Sample,
 }
@@ -200,13 +202,13 @@ impl Cluster {
         for (idx, r) in trace.requests.iter().enumerate() {
             self.q.push(r.arrival_s, Ev::Arrive(idx));
         }
-        // Periodic hooks.
-        let adjust_period =
-            policy::by_name(&self.cfg.policy).expect("valid policy").adjust_period_s();
+        // Periodic hooks. The adjust period is read off machine 0's
+        // already-constructed policy — every machine runs the same policy,
+        // and re-boxing via `policy::by_name` just to read the period was
+        // a needless allocation.
+        let adjust_period = self.machines.first().and_then(|m| m.mgr.policy.adjust_period_s());
         if let Some(p) = adjust_period {
-            for m in 0..self.machines.len() {
-                self.q.push(p, Ev::Adjust(m));
-            }
+            self.q.push(p, Ev::Adjust);
         }
         self.q.push(self.cfg.sample_period_s, Ev::Sample);
 
@@ -248,11 +250,16 @@ impl Cluster {
             Ev::FlowDone(idx) => self.on_flow_done(now, idx),
             Ev::IterDone(m) => self.on_iter_done(now, m),
             Ev::TaskDone { m, task } => self.machines[m].mgr.finish_task(task, now),
-            Ev::Adjust(m) => {
-                self.machines[m].mgr.adjust(now);
+            Ev::Adjust => {
+                // Machine order matches the per-machine events this
+                // replaces (they were pushed, and thus popped, in id
+                // order at the shared timestamp).
+                for m in 0..self.machines.len() {
+                    self.machines[m].mgr.adjust(now);
+                }
                 if let Some(p) = adjust_period {
                     if !self.finished() {
-                        self.q.push(now + p, Ev::Adjust(m));
+                        self.q.push(now + p, Ev::Adjust);
                     }
                 }
             }
@@ -412,7 +419,7 @@ impl Cluster {
     fn spawn_task(&mut self, now: f64, m: usize, kind: TaskKind) {
         let task = self.next_task;
         self.next_task += 1;
-        self.task_spawns[ALL_TASK_KINDS.iter().position(|&k| k == kind).unwrap()] += 1;
+        self.task_spawns[kind.index()] += 1;
         let base = kind.sample_duration_s(&mut self.rng);
         let mach = &mut self.machines[m];
         // Event-driven Fig. 8 sample: idle-core availability at the moment

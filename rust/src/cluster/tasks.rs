@@ -52,6 +52,14 @@ pub const ALL_TASK_KINDS: [TaskKind; 11] = [
 ];
 
 impl TaskKind {
+    /// Position of this kind in [`ALL_TASK_KINDS`] — the enum declaration
+    /// order, so per-kind counters index directly by discriminant instead
+    /// of a linear scan per spawn (§Perf).
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
     /// Mean CPU occupancy in seconds.
     pub fn mean_duration_s(self) -> f64 {
         match self {
@@ -125,6 +133,13 @@ mod tests {
                 let d = kind.sample_duration_s(&mut rng);
                 assert!(d > 0.0 && d <= kind.mean_duration_s() * 20.0);
             }
+        }
+    }
+
+    #[test]
+    fn index_matches_all_task_kinds_order() {
+        for (i, kind) in ALL_TASK_KINDS.iter().enumerate() {
+            assert_eq!(kind.index(), i, "{} discriminant drifted", kind.name());
         }
     }
 

@@ -129,6 +129,97 @@ pub fn celsius(c: f64) -> f64 {
     c + 273.15
 }
 
+/// Transcendental-free precomputation of [`AgingParams`] over the discrete
+/// set of operating points the simulator visits (§Perf).
+///
+/// A core only ever sits at one of three operating points: (C0, allocated,
+/// Y = 1), (C0, unallocated, Y = unallocated_stress), or C6 (age-halted).
+/// The ADF of each C0 point is a constant of the configuration, so the two
+/// `exp()` + two `powf()` of [`AgingParams::adf`] are paid once per
+/// package instead of on every [`super::core::Core::advance`].
+///
+/// **Equivalent-stress-time invariant.** Per-core aging is stated in the
+/// *canonical* domain of the (C0, allocated) point: `eq_time_s` is the
+/// length of continuous worst-case stress that produces the core's current
+/// ΔVth, i.e. `ΔVth = ADF_alloc · eq_time^n`. Substituting into the
+/// reaction–diffusion recursion shows an interval of `τ` wall-seconds at
+/// an operating point with factor `ADF_p` advances the canonical time by
+/// `τ · (ADF_p / ADF_alloc)^{1/n}` — a constant rate per operating point.
+/// The hot-path advance is therefore one multiply-add; C6 intervals add
+/// nothing (age halting); ΔVth and frequency are derived lazily, with a
+/// single `powf`, only when metrics are read.
+#[derive(Clone, Copy, Debug)]
+pub struct AgingOps {
+    /// ADF at the canonical (C0, allocated, Y = 1) operating point.
+    pub adf_alloc: f64,
+    /// ADF at (C0, unallocated, Y = unallocated_stress).
+    pub adf_unalloc: f64,
+    /// Equivalent-stress-time accrual rate of the unallocated point, in
+    /// canonical seconds per wall-clock second:
+    /// `(ADF_unalloc / ADF_alloc)^{1/n}` (< 1).
+    pub rate_unalloc: f64,
+    /// Time exponent `n` of the reaction–diffusion model.
+    pub n: f64,
+    /// `1 / (Vdd − Vth)`.
+    inv_headroom: f64,
+    /// Nominal (pre-variation) frequency in GHz, for slowdown factors.
+    pub f_nominal_ghz: f64,
+}
+
+impl AgingOps {
+    pub fn new(p: &AgingParams, temps: &super::temperature::TemperatureModel) -> AgingOps {
+        use super::core::CState;
+        let adf_alloc = p.adf(temps.steady_k(CState::C0, true), 1.0);
+        let adf_unalloc = p.adf(temps.steady_k(CState::C0, false), p.unallocated_stress);
+        AgingOps {
+            adf_alloc,
+            adf_unalloc,
+            rate_unalloc: (adf_unalloc / adf_alloc).powf(1.0 / p.n),
+            n: p.n,
+            inv_headroom: 1.0 / (p.vdd - p.vth),
+            f_nominal_ghz: p.f_nominal_ghz,
+        }
+    }
+
+    /// Canonical equivalent-stress-time accrued by one wall-clock second
+    /// in C0 under the given allocation status.
+    #[inline]
+    pub fn eq_rate(&self, allocated: bool) -> f64 {
+        if allocated {
+            1.0
+        } else {
+            self.rate_unalloc
+        }
+    }
+
+    /// ΔVth (V) of a core with canonical equivalent stress time
+    /// `eq_time_s` — the lazy snapshot read (one `powf`).
+    #[inline]
+    pub fn dvth_of_eq(&self, eq_time_s: f64) -> f64 {
+        if eq_time_s <= 0.0 {
+            0.0
+        } else {
+            self.adf_alloc * eq_time_s.powf(self.n)
+        }
+    }
+
+    /// Inverse of [`AgingOps::dvth_of_eq`] (fixtures, state restoration).
+    #[inline]
+    pub fn eq_of_dvth(&self, dvth: f64) -> f64 {
+        if dvth <= 0.0 {
+            0.0
+        } else {
+            (dvth / self.adf_alloc).powf(1.0 / self.n)
+        }
+    }
+
+    /// Frequency (GHz): `f0 · (1 − ΔVth / (Vdd − Vth))`.
+    #[inline]
+    pub fn freq_ghz(&self, f0_ghz: f64, eq_time_s: f64) -> f64 {
+        f0_ghz * (1.0 - self.dvth_of_eq(eq_time_s) * self.inv_headroom)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +295,57 @@ mod tests {
         let p = AgingParams::paper_default();
         let f = p.freq_ghz(2.6, 0.07);
         assert!((f - 2.6 * (1.0 - 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ops_match_params_adf_at_both_operating_points() {
+        let p = AgingParams::paper_default();
+        let t = crate::cpu::TemperatureModel::paper_default();
+        let ops = AgingOps::new(&p, &t);
+        assert_eq!(ops.adf_alloc, p.adf(celsius(54.0), 1.0));
+        assert_eq!(ops.adf_unalloc, p.adf(celsius(51.08), p.unallocated_stress));
+        assert!(ops.rate_unalloc > 0.0 && ops.rate_unalloc < 1.0);
+        assert_eq!(ops.eq_rate(true), 1.0);
+        assert_eq!(ops.eq_rate(false), ops.rate_unalloc);
+    }
+
+    #[test]
+    fn eq_time_accrual_equals_closed_form_step() {
+        // τ wall-seconds at the unallocated point must advance dvth exactly
+        // like one dvth_step at ADF_unalloc.
+        let p = AgingParams::paper_default();
+        let t = crate::cpu::TemperatureModel::paper_default();
+        let ops = AgingOps::new(&p, &t);
+        let tau = 123_456.0;
+        let reference = p.dvth_step(0.0, ops.adf_unalloc, tau);
+        let fast = ops.dvth_of_eq(tau * ops.rate_unalloc);
+        assert!((fast - reference).abs() / reference < 1e-13, "{fast} vs {reference}");
+        // And switching points composes: τ allocated then τ unallocated.
+        let ref2 = p.dvth_step(p.dvth_step(0.0, ops.adf_alloc, tau), ops.adf_unalloc, tau);
+        let fast2 = ops.dvth_of_eq(tau + tau * ops.rate_unalloc);
+        assert!((fast2 - ref2).abs() / ref2 < 1e-13, "{fast2} vs {ref2}");
+    }
+
+    #[test]
+    fn eq_of_dvth_inverts_dvth_of_eq() {
+        let p = AgingParams::paper_default();
+        let t = crate::cpu::TemperatureModel::paper_default();
+        let ops = AgingOps::new(&p, &t);
+        for eq in [0.0, 1.0, 3.6e3, 1e7, 3e8] {
+            let rt = ops.eq_of_dvth(ops.dvth_of_eq(eq));
+            assert!((rt - eq).abs() <= 1e-9 * eq.max(1.0), "{rt} vs {eq}");
+        }
+    }
+
+    #[test]
+    fn ops_freq_matches_params_freq() {
+        let p = AgingParams::paper_default();
+        let t = crate::cpu::TemperatureModel::paper_default();
+        let ops = AgingOps::new(&p, &t);
+        let eq = 5e7;
+        let f_fast = ops.freq_ghz(2.6, eq);
+        let f_ref = p.freq_ghz(2.6, ops.dvth_of_eq(eq));
+        assert!((f_fast - f_ref).abs() < 1e-12);
     }
 
     #[test]

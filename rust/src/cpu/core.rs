@@ -1,15 +1,16 @@
 //! A single CPU core: C-state machine, allocation status, idle history,
 //! and lazily-advanced NBTI aging state.
 //!
-//! Aging is accounted lazily: a core's ΔVth is advanced only when its
-//! configuration (C-state or allocation) is about to change, or when a
-//! caller explicitly snapshots frequencies. Between changes the core sits
-//! at a constant (temperature, stress) operating point, so one recursion
-//! step per interval is exact — this is what makes the simulator hot path
-//! cheap (§Perf).
+//! Aging is accounted lazily *and* transcendental-free: a core's state is
+//! advanced only when its configuration (C-state or allocation) is about
+//! to change, or when a caller explicitly snapshots frequencies. Between
+//! changes the core sits at a constant (temperature, stress) operating
+//! point, whose ADF is precomputed in [`AgingOps`], and aging is tracked
+//! as *canonical equivalent stress time* — so one advance is a single
+//! multiply-add, and ΔVth/frequency cost one `powf` only when actually
+//! read (§Perf; see the [`AgingOps`] invariant docs).
 
-use super::aging::AgingParams;
-use super::temperature::TemperatureModel;
+use super::aging::AgingOps;
 
 /// CPU core idle state. The paper's technique only distinguishes the
 /// shallow-active and deepest-idle states (C0 vs C6, per the Linux cpuidle
@@ -61,8 +62,11 @@ pub struct Core {
     pub id: usize,
     /// Initial (process-variation) frequency in GHz.
     pub f0_ghz: f64,
-    /// Accumulated NBTI threshold-voltage shift (V).
-    pub dvth: f64,
+    /// Canonical equivalent stress time (s): the length of continuous
+    /// worst-case (C0, allocated) stress producing this core's current
+    /// ΔVth. Monotone in ΔVth, so policies compare ages on it directly;
+    /// the ΔVth value itself is a lazy snapshot ([`Core::dvth`]).
+    pub eq_time_s: f64,
     pub state: CState,
     /// Inference task currently pinned to this core.
     pub task: Option<u64>,
@@ -70,7 +74,7 @@ pub struct Core {
     pub idle_history: IdleHistory,
     /// When the core last became task-free (for idle-history accounting).
     idle_since: f64,
-    /// Last simulation time `dvth` was advanced to.
+    /// Last simulation time aging was advanced to.
     last_update: f64,
     /// Cumulative seconds with a task allocated (least-aged's work proxy).
     pub busy_time: f64,
@@ -85,7 +89,7 @@ impl Core {
         Core {
             id,
             f0_ghz,
-            dvth: 0.0,
+            eq_time_s: 0.0,
             state: CState::C0,
             task: None,
             idle_history: IdleHistory::default(),
@@ -104,10 +108,11 @@ impl Core {
 
     /// Advance aging to `now` under the current configuration.
     ///
-    /// C0 intervals stress the core at the Table-1 temperature for its
-    /// allocation status (worst-case stress Y = 1, per §3.2); C6 intervals
-    /// are age-halted and only accumulate wall-clock bookkeeping.
-    pub fn advance(&mut self, now: f64, aging: &AgingParams, temps: &TemperatureModel) {
+    /// C0 intervals accrue equivalent stress time at the precomputed rate
+    /// for the core's allocation status (worst-case stress Y = 1 when
+    /// allocated, per §3.2); C6 intervals are age-halted and only
+    /// accumulate wall-clock bookkeeping. No transcendentals (§Perf).
+    pub fn advance(&mut self, now: f64, ops: &AgingOps) {
         debug_assert!(
             now >= self.last_update - 1e-9,
             "time went backwards: {} < {}",
@@ -120,17 +125,16 @@ impl Core {
         }
         match self.state {
             CState::C0 => {
-                let temp_k = temps.steady_k(self.state, self.is_allocated());
-                let stress = if self.is_allocated() { 1.0 } else { aging.unallocated_stress };
-                let adf = aging.adf(temp_k, stress);
-                self.dvth = aging.dvth_step(self.dvth, adf, tau);
-                self.active_time += tau;
-                if self.is_allocated() {
+                if self.task.is_some() {
+                    self.eq_time_s += tau;
                     self.busy_time += tau;
+                } else {
+                    self.eq_time_s += tau * ops.rate_unalloc;
                 }
+                self.active_time += tau;
             }
             CState::C6 => {
-                // Age halted: dvth frozen.
+                // Age halted: equivalent stress time frozen.
                 self.c6_time += tau;
             }
         }
@@ -138,31 +142,25 @@ impl Core {
     }
 
     /// Pin a task to this core. Must be free and active.
-    pub fn assign(&mut self, task: u64, now: f64, aging: &AgingParams, temps: &TemperatureModel) {
+    pub fn assign(&mut self, task: u64, now: f64, ops: &AgingOps) {
         debug_assert!(self.task.is_none(), "core {} already allocated", self.id);
         debug_assert_eq!(self.state, CState::C0, "cannot assign to a deep-idle core");
-        self.advance(now, aging, temps);
+        self.advance(now, ops);
         // Close out the idle period that ends now.
         self.idle_history.push((now - self.idle_since).max(0.0));
         self.task = Some(task);
     }
 
     /// Release the task pinned to this core.
-    pub fn release(&mut self, now: f64, aging: &AgingParams, temps: &TemperatureModel) -> u64 {
+    pub fn release(&mut self, now: f64, ops: &AgingOps) -> u64 {
         debug_assert!(self.task.is_some(), "core {} has no task", self.id);
-        self.advance(now, aging, temps);
+        self.advance(now, ops);
         self.idle_since = now;
         self.task.take().unwrap()
     }
 
     /// Switch C-state. Putting an allocated core to C6 is a logic error.
-    pub fn set_state(
-        &mut self,
-        state: CState,
-        now: f64,
-        aging: &AgingParams,
-        temps: &TemperatureModel,
-    ) {
+    pub fn set_state(&mut self, state: CState, now: f64, ops: &AgingOps) {
         if state == self.state {
             return;
         }
@@ -171,31 +169,39 @@ impl Core {
             "cannot deep-idle allocated core {}",
             self.id
         );
-        self.advance(now, aging, temps);
+        self.advance(now, ops);
         self.state = state;
+    }
+
+    /// Accumulated ΔVth (V), *as of the last advance* — the lazy snapshot
+    /// derived from equivalent stress time (one `powf`). Call
+    /// [`Core::advance`] first for an up-to-date value.
+    #[inline]
+    pub fn dvth(&self, ops: &AgingOps) -> f64 {
+        ops.dvth_of_eq(self.eq_time_s)
     }
 
     /// Current frequency in GHz, *as of the last advance*. Call
     /// [`Core::advance`] first for an up-to-date value.
     #[inline]
-    pub fn freq_ghz(&self, aging: &AgingParams) -> f64 {
-        aging.freq_ghz(self.f0_ghz, self.dvth)
+    pub fn freq_ghz(&self, ops: &AgingOps) -> f64 {
+        ops.freq_ghz(self.f0_ghz, self.eq_time_s)
     }
 
     /// Absolute frequency reduction since t=0 (GHz).
     #[inline]
-    pub fn freq_reduction_ghz(&self, aging: &AgingParams) -> f64 {
-        self.f0_ghz - self.freq_ghz(aging)
+    pub fn freq_reduction_ghz(&self, ops: &AgingOps) -> f64 {
+        self.f0_ghz - self.freq_ghz(ops)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cpu::temperature::TemperatureModel;
+    use crate::cpu::{AgingParams, TemperatureModel};
 
-    fn fixtures() -> (AgingParams, TemperatureModel) {
-        (AgingParams::paper_default(), TemperatureModel::paper_default())
+    fn ops() -> AgingOps {
+        AgingOps::new(&AgingParams::paper_default(), &TemperatureModel::paper_default())
     }
 
     #[test]
@@ -211,71 +217,99 @@ mod tests {
 
     #[test]
     fn c0_ages_c6_does_not() {
-        let (aging, temps) = fixtures();
+        let ops = ops();
         let mut active = Core::new(0, 2.6);
         let mut idle = Core::new(1, 2.6);
-        idle.set_state(CState::C6, 0.0, &aging, &temps);
-        active.advance(3600.0, &aging, &temps);
-        idle.advance(3600.0, &aging, &temps);
-        assert!(active.dvth > 0.0);
-        assert_eq!(idle.dvth, 0.0);
+        idle.set_state(CState::C6, 0.0, &ops);
+        active.advance(3600.0, &ops);
+        idle.advance(3600.0, &ops);
+        assert!(active.dvth(&ops) > 0.0);
+        assert_eq!(idle.dvth(&ops), 0.0);
         assert_eq!(idle.c6_time, 3600.0);
         assert_eq!(active.active_time, 3600.0);
     }
 
     #[test]
     fn allocated_ages_faster_than_unallocated() {
-        let (aging, temps) = fixtures();
+        let ops = ops();
         let mut busy = Core::new(0, 2.6);
         let mut free = Core::new(1, 2.6);
-        busy.assign(1, 0.0, &aging, &temps);
-        busy.advance(3600.0, &aging, &temps);
-        free.advance(3600.0, &aging, &temps);
-        assert!(busy.dvth > free.dvth);
+        busy.assign(1, 0.0, &ops);
+        busy.advance(3600.0, &ops);
+        free.advance(3600.0, &ops);
+        assert!(busy.dvth(&ops) > free.dvth(&ops));
         assert_eq!(busy.busy_time, 3600.0);
         assert_eq!(free.busy_time, 0.0);
     }
 
     #[test]
     fn assign_release_tracks_idle_history() {
-        let (aging, temps) = fixtures();
+        let ops = ops();
         let mut c = Core::new(0, 2.6);
-        c.assign(10, 5.0, &aging, &temps); // idle 0..5
-        let t = c.release(8.0, &aging, &temps);
+        c.assign(10, 5.0, &ops); // idle 0..5
+        let t = c.release(8.0, &ops);
         assert_eq!(t, 10);
-        c.assign(11, 12.0, &aging, &temps); // idle 8..12
+        c.assign(11, 12.0, &ops); // idle 8..12
         assert_eq!(c.idle_history.len(), 2);
         assert!((c.idle_history.score() - 9.0).abs() < 1e-12);
     }
 
     #[test]
     fn freq_decreases_with_age() {
-        let (aging, temps) = fixtures();
+        let ops = ops();
         let mut c = Core::new(0, 2.6);
-        let f_start = c.freq_ghz(&aging);
-        c.advance(86_400.0, &aging, &temps);
-        assert!(c.freq_ghz(&aging) < f_start);
-        assert!(c.freq_reduction_ghz(&aging) > 0.0);
+        let f_start = c.freq_ghz(&ops);
+        c.advance(86_400.0, &ops);
+        assert!(c.freq_ghz(&ops) < f_start);
+        assert!(c.freq_reduction_ghz(&ops) > 0.0);
     }
 
     #[test]
     fn set_state_roundtrip_accumulates_times() {
-        let (aging, temps) = fixtures();
+        let ops = ops();
         let mut c = Core::new(0, 2.6);
-        c.set_state(CState::C6, 10.0, &aging, &temps);
-        c.set_state(CState::C0, 30.0, &aging, &temps);
-        c.advance(35.0, &aging, &temps);
+        c.set_state(CState::C6, 10.0, &ops);
+        c.set_state(CState::C0, 30.0, &ops);
+        c.advance(35.0, &ops);
         assert_eq!(c.c6_time, 20.0);
         assert!((c.active_time - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_matches_closed_form_recursion() {
+        // The fast path must reproduce AgingParams::dvth_step across an
+        // allocated → unallocated → C6 → allocated schedule.
+        let p = AgingParams::paper_default();
+        let t = TemperatureModel::paper_default();
+        let ops = AgingOps::new(&p, &t);
+        let mut c = Core::new(0, 2.6);
+        c.assign(1, 0.0, &ops);
+        c.advance(50_000.0, &ops); // 50ks allocated
+        c.release(50_000.0, &ops);
+        c.advance(80_000.0, &ops); // 30ks unallocated
+        c.set_state(CState::C6, 80_000.0, &ops);
+        c.advance(100_000.0, &ops); // 20ks halted
+        c.set_state(CState::C0, 100_000.0, &ops);
+        c.assign(2, 100_000.0, &ops);
+        c.advance(130_000.0, &ops); // 30ks allocated
+        let mut reference = p.dvth_step(0.0, ops.adf_alloc, 50_000.0);
+        reference = p.dvth_step(reference, ops.adf_unalloc, 30_000.0);
+        // C6: frozen.
+        reference = p.dvth_step(reference, ops.adf_alloc, 30_000.0);
+        let fast = c.dvth(&ops);
+        assert!(
+            (fast - reference).abs() / reference < 1e-12,
+            "fast={fast} reference={reference}"
+        );
     }
 
     #[test]
     #[should_panic]
     #[cfg(debug_assertions)]
     fn cannot_deep_idle_allocated() {
-        let (aging, temps) = fixtures();
+        let ops = ops();
         let mut c = Core::new(0, 2.6);
-        c.assign(1, 0.0, &aging, &temps);
-        c.set_state(CState::C6, 1.0, &aging, &temps);
+        c.assign(1, 0.0, &ops);
+        c.set_state(CState::C6, 1.0, &ops);
     }
 }

@@ -17,7 +17,7 @@ pub mod package;
 pub mod procvar;
 pub mod temperature;
 
-pub use aging::AgingParams;
+pub use aging::{AgingOps, AgingParams};
 pub use core::{CState, Core, IdleHistory};
 pub use package::CpuPackage;
 pub use procvar::{ProcVarParams, ProcVarSampler};

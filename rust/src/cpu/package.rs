@@ -5,10 +5,15 @@
 //! free core existed. Oversubscribed tasks still execute (time-shared by
 //! the OS) but degrade service quality; Algorithm 2 consumes their count
 //! and the Fig. 8 metric integrates them.
+//!
+//! The package also owns the [`AgingOps`] operating-point cache: the ADFs
+//! of the (C0, allocated) and (C0, unallocated) points are precomputed
+//! here once, so the per-event core advances are transcendental-free
+//! (§Perf).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
-use super::aging::AgingParams;
+use super::aging::{AgingOps, AgingParams};
 use super::core::{CState, Core};
 use super::temperature::TemperatureModel;
 
@@ -18,10 +23,14 @@ pub struct CpuPackage {
     pub cores: Vec<Core>,
     pub aging: AgingParams,
     pub temps: TemperatureModel,
+    /// Precomputed operating-point cache (ADFs, eq-time rates) — derived
+    /// from `aging` + `temps` at construction.
+    pub ops: AgingOps,
     /// task id -> core index, for O(1) release.
     task_core: HashMap<u64, usize>,
     /// Tasks executing without a dedicated core (oversubscription).
-    pub oversub: Vec<u64>,
+    /// A deque so the FIFO pop is O(1) (§Perf).
+    pub oversub: VecDeque<u64>,
     /// Cached count of cores in C0 (§Perf: the hot path queries counts on
     /// every task spawn; scanning all cores was the top profile entry).
     active_cnt: usize,
@@ -33,7 +42,16 @@ impl CpuPackage {
         let cores: Vec<Core> =
             f0_ghz.into_iter().enumerate().map(|(i, f)| Core::new(i, f)).collect();
         let active_cnt = cores.len();
-        CpuPackage { cores, aging, temps, task_core: HashMap::new(), oversub: Vec::new(), active_cnt }
+        let ops = AgingOps::new(&aging, &temps);
+        CpuPackage {
+            cores,
+            aging,
+            temps,
+            ops,
+            task_core: HashMap::new(),
+            oversub: VecDeque::new(),
+            active_cnt,
+        }
     }
 
     /// Homogeneous package at the nominal frequency (tests, quickstart).
@@ -92,25 +110,25 @@ impl CpuPackage {
 
     /// Pin `task` to `core_idx`.
     pub fn assign(&mut self, core_idx: usize, task: u64, now: f64) {
-        let (aging, temps) = (self.aging, self.temps);
-        self.cores[core_idx].assign(task, now, &aging, &temps);
+        let ops = self.ops;
+        self.cores[core_idx].assign(task, now, &ops);
         self.task_core.insert(task, core_idx);
     }
 
     /// Record `task` as oversubscribed (no dedicated core available).
     pub fn push_oversub(&mut self, task: u64) {
-        self.oversub.push(task);
+        self.oversub.push_back(task);
     }
 
     /// Finish a task wherever it runs. Returns the freed core index when
     /// the task had a dedicated core.
     pub fn finish_task(&mut self, task: u64, now: f64) -> Option<usize> {
         if let Some(core_idx) = self.task_core.remove(&task) {
-            let (aging, temps) = (self.aging, self.temps);
-            self.cores[core_idx].release(now, &aging, &temps);
+            let ops = self.ops;
+            self.cores[core_idx].release(now, &ops);
             Some(core_idx)
         } else if let Some(pos) = self.oversub.iter().position(|&t| t == task) {
-            self.oversub.swap_remove(pos);
+            self.oversub.swap_remove_back(pos);
             None
         } else {
             panic!("finish_task: unknown task {task}");
@@ -122,20 +140,16 @@ impl CpuPackage {
         self.task_core.get(&task).copied()
     }
 
-    /// Pop one pending oversubscribed task (FIFO), if any.
+    /// Pop one pending oversubscribed task (FIFO), if any — O(1).
     pub fn pop_oversub(&mut self) -> Option<u64> {
-        if self.oversub.is_empty() {
-            None
-        } else {
-            Some(self.oversub.remove(0))
-        }
+        self.oversub.pop_front()
     }
 
     /// Switch a core's C-state.
     pub fn set_state(&mut self, core_idx: usize, state: CState, now: f64) {
-        let (aging, temps) = (self.aging, self.temps);
+        let ops = self.ops;
         let before = self.cores[core_idx].state;
-        self.cores[core_idx].set_state(state, now, &aging, &temps);
+        self.cores[core_idx].set_state(state, now, &ops);
         match (before, state) {
             (CState::C0, CState::C6) => self.active_cnt -= 1,
             (CState::C6, CState::C0) => self.active_cnt += 1,
@@ -146,24 +160,24 @@ impl CpuPackage {
     /// Advance aging of every core to `now` (metrics snapshots; also the
     /// paper's periodic "accurate frequency from aging sensors" moment).
     pub fn advance_all(&mut self, now: f64) {
-        let (aging, temps) = (self.aging, self.temps);
+        let ops = self.ops;
         for c in &mut self.cores {
-            c.advance(now, &aging, &temps);
+            c.advance(now, &ops);
         }
     }
 
     /// Per-core frequencies (GHz) as of `now`.
     pub fn frequencies(&mut self, now: f64) -> Vec<f64> {
         self.advance_all(now);
-        let aging = self.aging;
-        self.cores.iter().map(|c| c.freq_ghz(&aging)).collect()
+        let ops = self.ops;
+        self.cores.iter().map(|c| c.freq_ghz(&ops)).collect()
     }
 
     /// Per-core absolute frequency reductions (GHz) as of `now`.
     pub fn freq_reductions(&mut self, now: f64) -> Vec<f64> {
         self.advance_all(now);
-        let aging = self.aging;
-        self.cores.iter().map(|c| c.freq_reduction_ghz(&aging)).collect()
+        let ops = self.ops;
+        self.cores.iter().map(|c| c.freq_reduction_ghz(&ops)).collect()
     }
 
     /// Relative execution-time dilation for a task on `core_idx`:
@@ -171,11 +185,11 @@ impl CpuPackage {
     /// task durations by this factor (§5: "execution time ... adjusted
     /// according to the operating frequency").
     pub fn slowdown(&self, core_idx: usize) -> f64 {
-        let f = self.cores[core_idx].freq_ghz(&self.aging);
+        let f = self.cores[core_idx].freq_ghz(&self.ops);
         if f <= 0.0 {
             f64::INFINITY
         } else {
-            self.aging.f_nominal_ghz / f
+            self.ops.f_nominal_ghz / f
         }
     }
 

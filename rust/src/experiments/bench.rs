@@ -1,0 +1,269 @@
+//! `carbon-sim bench` — the pinned perf matrix that tracks simulator
+//! throughput (simulated events per wall-clock second) from PR 2 onward.
+//!
+//! The matrix is deliberately small and *pinned*: short/long traces ×
+//! 40/80-core machines × every policy, fixed seeds, fixed machine counts —
+//! so `BENCH_<date>.json` files are comparable across commits. Cells run
+//! **sequentially** on one thread: the number under test is the hot-path
+//! cost per event, not pool scheduling.
+//!
+//! `--quick` shrinks durations and machine counts (keeping the matrix
+//! shape) for the CI smoke job, which uploads the JSON as an artifact so
+//! every PR leaves a perf record.
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::policy::ALL_POLICIES;
+use crate::trace::azure::{AzureTraceGen, TraceParams, Workload};
+use crate::trace::Trace;
+use crate::util::json::Value;
+
+/// Root seed of every bench cell — pinned so the matrix is identical
+/// across commits.
+pub const BENCH_SEED: u64 = 0xBE7C;
+
+/// One pinned cell of the bench matrix.
+#[derive(Clone, Debug)]
+pub struct BenchScenario {
+    /// Trace label: "short" | "long".
+    pub trace: &'static str,
+    pub rate_rps: f64,
+    pub duration_s: f64,
+    pub cores: usize,
+    pub policy: &'static str,
+}
+
+/// The per-trace axes of the matrix: (label, rate rps, duration s).
+fn trace_axes(quick: bool) -> Vec<(&'static str, f64, f64)> {
+    if quick {
+        vec![("short", 20.0, 3.0), ("long", 20.0, 6.0)]
+    } else {
+        vec![("short", 60.0, 30.0), ("long", 60.0, 120.0)]
+    }
+}
+
+/// Expand the pinned matrix: traces × 40/80 cores × all policies.
+pub fn matrix(quick: bool) -> Vec<BenchScenario> {
+    let mut out = Vec::new();
+    for &(label, rate, dur) in &trace_axes(quick) {
+        for &cores in &[40usize, 80] {
+            for &policy in ALL_POLICIES.iter() {
+                out.push(BenchScenario {
+                    trace: label,
+                    rate_rps: rate,
+                    duration_s: dur,
+                    cores,
+                    policy,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// A finished bench cell.
+#[derive(Clone, Debug)]
+pub struct BenchCellResult {
+    pub scenario: BenchScenario,
+    pub events: u64,
+    pub wall_s: f64,
+    pub completed: usize,
+    pub sim_duration_s: f64,
+}
+
+impl BenchCellResult {
+    pub fn events_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.events as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let s = &self.scenario;
+        Value::obj(vec![
+            ("trace", s.trace.into()),
+            ("rate_rps", s.rate_rps.into()),
+            ("duration_s", s.duration_s.into()),
+            ("cores", s.cores.into()),
+            ("policy", s.policy.into()),
+            ("events", (self.events as f64).into()),
+            ("wall_s", self.wall_s.into()),
+            ("events_per_s", self.events_per_s().into()),
+            ("completed", self.completed.into()),
+            ("sim_duration_s", self.sim_duration_s.into()),
+        ])
+    }
+}
+
+/// The aggregated bench report.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub quick: bool,
+    pub cells: Vec<BenchCellResult>,
+}
+
+impl BenchReport {
+    pub fn total_events(&self) -> u64 {
+        self.cells.iter().map(|c| c.events).sum()
+    }
+
+    pub fn total_wall_s(&self) -> f64 {
+        self.cells.iter().map(|c| c.wall_s).sum()
+    }
+
+    /// Matrix-level throughput: total events / total wall — the headline
+    /// number the perf trajectory tracks.
+    pub fn events_per_s(&self) -> f64 {
+        let wall = self.total_wall_s();
+        if wall > 0.0 {
+            self.total_events() as f64 / wall
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self, date: &str) -> Value {
+        Value::obj(vec![
+            ("date", date.into()),
+            ("quick", self.quick.into()),
+            ("seed", format!("{BENCH_SEED}").into()),
+            ("n_cells", self.cells.len().into()),
+            ("total_events", (self.total_events() as f64).into()),
+            ("total_wall_s", self.total_wall_s().into()),
+            ("events_per_s", self.events_per_s().into()),
+            ("cells", Value::Arr(self.cells.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    pub fn print_table(&self) {
+        println!(
+            "{:<6} {:>6} {:>5} {:<12} {:>11} {:>8} {:>13}",
+            "trace", "dur(s)", "cores", "policy", "events", "wall(s)", "events/s"
+        );
+        for c in &self.cells {
+            let s = &c.scenario;
+            println!(
+                "{:<6} {:>6.0} {:>5} {:<12} {:>11} {:>8.3} {:>13.0}",
+                s.trace,
+                s.duration_s,
+                s.cores,
+                s.policy,
+                c.events,
+                c.wall_s,
+                c.events_per_s()
+            );
+        }
+        println!(
+            "total: {} events in {:.2} s wall -> {:.0} events/s",
+            self.total_events(),
+            self.total_wall_s(),
+            self.events_per_s()
+        );
+    }
+}
+
+/// Run one cell against a pre-generated trace.
+fn run_cell(sc: &BenchScenario, trace: &Trace, quick: bool) -> BenchCellResult {
+    let (n_prompt, n_token) = if quick { (1, 2) } else { (5, 17) };
+    let cfg = ClusterConfig {
+        n_prompt,
+        n_token,
+        cores_per_cpu: sc.cores,
+        policy: sc.policy.into(),
+        seed: BENCH_SEED,
+        ..ClusterConfig::default()
+    };
+    let result = Cluster::new(cfg).run(trace);
+    BenchCellResult {
+        scenario: sc.clone(),
+        events: result.events_processed,
+        wall_s: result.wall_time_s,
+        completed: result.completed_requests,
+        sim_duration_s: result.duration_s,
+    }
+}
+
+/// Run the full pinned matrix sequentially.
+pub fn run(quick: bool) -> BenchReport {
+    // One trace per label, shared by every (cores, policy) cell of that
+    // row — pinned workload, and trace synthesis stays out of the timings.
+    // The xor decorrelates the trace RNG stream from the cluster's, like
+    // the sweep engine's TRACE_SEED_XOR.
+    let mut cells = Vec::new();
+    for &(label, rate, dur) in &trace_axes(quick) {
+        let trace = AzureTraceGen::new(TraceParams {
+            rate_rps: rate,
+            duration_s: dur,
+            workload: Workload::Mixed,
+            seed: BENCH_SEED ^ 0x7AC3_5EED,
+        })
+        .generate();
+        for sc in matrix(quick).into_iter().filter(|s| s.trace == label) {
+            cells.push(run_cell(&sc, &trace, quick));
+        }
+    }
+    BenchReport { quick, cells }
+}
+
+/// `YYYY-MM-DD` (UTC) from a Unix timestamp — no chrono offline, so this
+/// is the standard days-to-civil conversion (Howard Hinnant's algorithm).
+pub fn utc_date_string(unix_secs: u64) -> String {
+    let days = (unix_secs / 86_400) as i64;
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let mut y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    if m <= 2 {
+        y += 1;
+    }
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_shape_is_pinned() {
+        for quick in [false, true] {
+            let m = matrix(quick);
+            // 2 traces × 2 core counts × |policies|.
+            assert_eq!(m.len(), 2 * 2 * ALL_POLICIES.len());
+            assert!(m.iter().any(|s| s.trace == "short" && s.cores == 40));
+            assert!(m.iter().any(|s| s.trace == "long" && s.cores == 80));
+        }
+    }
+
+    #[test]
+    fn quick_run_produces_wellformed_report() {
+        let report = run(true);
+        assert_eq!(report.cells.len(), matrix(true).len());
+        for c in &report.cells {
+            assert!(c.events > 0, "{:?} processed no events", c.scenario);
+            assert!(c.completed > 0);
+            assert!(c.sim_duration_s > 0.0);
+        }
+        assert!(report.events_per_s() > 0.0);
+        let json = report.to_json("2026-01-01");
+        let parsed =
+            crate::util::json::parse(&json.to_string_pretty()).expect("bench JSON parses");
+        assert_eq!(parsed.usize_or("n_cells", 0), report.cells.len());
+        assert!(parsed.f64_or("events_per_s", 0.0) > 0.0);
+    }
+
+    #[test]
+    fn date_conversion_known_values() {
+        assert_eq!(utc_date_string(0), "1970-01-01");
+        assert_eq!(utc_date_string(86_400), "1970-01-02");
+        // 2000-03-01 00:00:00 UTC = 951868800 (leap-century boundary).
+        assert_eq!(utc_date_string(951_868_800), "2000-03-01");
+        // 2026-07-26 00:00:00 UTC = 20660 days × 86400.
+        assert_eq!(utc_date_string(20_660 * 86_400), "2026-07-26");
+    }
+}

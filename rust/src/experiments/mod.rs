@@ -1,6 +1,7 @@
 //! Experiment runners — one per paper figure (see DESIGN.md's
 //! per-experiment index). Bench binaries (`cargo bench`) and the CLI
-//! (`carbon-sim figure ...`) both call into these.
+//! (`carbon-sim figure ...`) both call into these. The [`bench`] module
+//! is the pinned perf matrix behind `carbon-sim bench` (§Perf).
 //!
 //! The [`sweep`] module generalizes the per-figure matrix into a
 //! parallel scenario-sweep engine: arbitrary rate × core count × policy
@@ -9,6 +10,7 @@
 //! (`carbon-sim sweep`). [`run_matrix`] itself runs its paired cells on
 //! the same pool, so `carbon-sim figure --fig 6|7|8` parallelizes too.
 
+pub mod bench;
 pub mod fig1;
 pub mod fig2;
 pub mod fig4;

@@ -4,6 +4,7 @@
 //!   simulate    run the cluster simulator on a (synthetic or file) trace
 //!   sweep       run a parallel scenario sweep (rates × cores × policies ×
 //!               workloads × replicas) and aggregate JSON/CSV results
+//!   bench       run the pinned perf matrix and write BENCH_<date>.json
 //!   figure      regenerate a paper figure (1, 2, 4, 5, 6, 7, 8)
 //!   trace-gen   synthesize an Azure-like trace to a JSONL file
 //!   serve       run the real PJRT serving stack on sample prompts
@@ -33,6 +34,7 @@ fn main() {
     let code = match cmd {
         "simulate" => cmd_simulate(&rest),
         "sweep" => cmd_sweep(&rest),
+        "bench" => cmd_bench(&rest),
         "figure" => cmd_figure(&rest),
         "trace-gen" => cmd_trace_gen(&rest),
         "serve" => cmd_serve(&rest),
@@ -56,6 +58,8 @@ fn top_usage() -> String {
      \x20 sweep        parallel scenario sweep: rates × cores × policies × workloads ×\n\
      \x20              replicas, sharded over a worker pool (--threads), aggregated to\n\
      \x20              JSON/CSV; bit-identical output at any thread count\n\
+     \x20 bench        run the pinned perf matrix (short/long traces × 40/80 cores ×\n\
+     \x20              all policies) and write events/sec to BENCH_<date>.json\n\
      \x20 figure       regenerate a paper figure (--fig 1|2|4|5|6|7|8)\n\
      \x20 trace-gen    synthesize an Azure-like trace (JSONL)\n\
      \x20 serve        run the PJRT serving stack (needs `make artifacts`)\n\
@@ -305,6 +309,57 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         print!("{}", report.render(format));
     }
     0
+}
+
+// ----------------------------------------------------------------- bench
+
+fn cmd_bench(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "carbon-sim bench",
+        "run the pinned perf matrix (short/long traces × 40/80 cores × all policies) \
+         and record simulated events/sec",
+    )
+    .opt("out", "", "output JSON path (default: BENCH_<date>.json)")
+    .flag("quick", "CI-scale matrix: seconds-long traces, 1+2 machines")
+    .flag("quiet", "suppress the stdout table");
+    let a = parse_or_exit(&cli, rest);
+
+    let quick = a.flag("quick");
+    let report = experiments::bench::run(quick);
+    let date = experiments::bench::utc_date_string(
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0),
+    );
+    if !a.flag("quiet") {
+        println!(
+            "── bench: {} cells ({}) ──",
+            report.cells.len(),
+            if quick { "quick matrix" } else { "full matrix" }
+        );
+        report.print_table();
+    }
+    let out = match a.str_or("out", "").as_str() {
+        "" => format!("BENCH_{date}.json"),
+        path => path.to_string(),
+    };
+    let mut body = report.to_json(&date).to_string_pretty();
+    body.push('\n');
+    match std::fs::write(&out, body) {
+        Ok(()) => {
+            println!(
+                "wrote {out}: {:.0} events/s over {} cells",
+                report.events_per_s(),
+                report.cells.len()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("writing {out}: {e}");
+            1
+        }
+    }
 }
 
 // ----------------------------------------------------------------- figure

@@ -9,7 +9,7 @@
 //! Age-halting" column).
 
 use super::CorePolicy;
-use crate::cpu::{CState, CpuPackage};
+use crate::cpu::CpuPackage;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug, Default)]
@@ -26,20 +26,10 @@ impl CorePolicy for LeastAgedPolicy {
         "least-aged"
     }
 
-    /// Free active core with the least executed work.
+    /// Free active core with the least executed work — a single
+    /// allocation-free pass over the package (§Perf).
     fn pick_core(&mut self, cpu: &CpuPackage, _now: f64, _rng: &mut Rng) -> Option<usize> {
-        let mut best: Option<(f64, usize)> = None;
-        for core in &cpu.cores {
-            if core.state != CState::C0 || core.task.is_some() {
-                continue;
-            }
-            match best {
-                None => best = Some((core.busy_time, core.id)),
-                Some((w, _)) if core.busy_time < w => best = Some((core.busy_time, core.id)),
-                _ => {}
-            }
-        }
-        best.map(|(_, id)| id)
+        super::min_free_core_by_key(cpu, |c| c.busy_time)
     }
 }
 

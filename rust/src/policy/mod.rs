@@ -20,8 +20,32 @@ pub use linux::LinuxPolicy;
 pub use proposed::ProposedPolicy;
 pub use reaction::ReactionFunction;
 
-use crate::cpu::CpuPackage;
+use crate::cpu::{CState, Core, CpuPackage};
 use crate::util::rng::Rng;
+
+/// Free-working-set argmin by an arbitrary age proxy — one pass, no
+/// allocation (§Perf). Shared by the `least-aged` baseline (cumulative
+/// busy time) and the `proposed-telemetry` variant (equivalent stress
+/// time). Ties break to the lowest core id (iteration order), matching
+/// the policies' historical behaviour.
+pub(crate) fn min_free_core_by_key<K: Fn(&Core) -> f64>(
+    cpu: &CpuPackage,
+    key: K,
+) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for core in &cpu.cores {
+        if core.state != CState::C0 || core.task.is_some() {
+            continue;
+        }
+        let k = key(core);
+        match best {
+            None => best = Some((k, core.id)),
+            Some((b, _)) if k < b => best = Some((k, core.id)),
+            _ => {}
+        }
+    }
+    best.map(|(_, id)| id)
+}
 
 /// A CPU core-management policy.
 pub trait CorePolicy {

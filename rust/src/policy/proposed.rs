@@ -13,8 +13,15 @@
 //! Surplus cores are parked in C6 **most-aged first**; deficit cores are
 //! woken **least-aged first** — complementing Algorithm 1's even-out
 //! behaviour. Because this path is periodic (not per-task), it is also
-//! where accurate aging values (ΔVth, as an aging sensor would report)
-//! are consulted (§5).
+//! where accurate aging values (equivalent stress time, as an aging
+//! sensor would report ΔVth) are consulted (§5).
+//!
+//! §Perf: `adjust` runs every 250 ms on every machine of every scenario
+//! cell, so its candidate selection is allocation-free — a reusable
+//! scratch buffer plus `select_nth_unstable_by` partial selection instead
+//! of collect-then-full-sort. Ages are compared on the canonical
+//! equivalent-stress-time (`Core::eq_time_s`), which orders identically
+//! to ΔVth without paying the `powf` snapshot per candidate.
 
 use super::reaction::ReactionFunction;
 use super::CorePolicy;
@@ -37,6 +44,9 @@ pub struct ProposedPolicy {
     /// `proposed-telemetry` policy; quantifies the headroom left by the
     /// paper's cheap estimator.
     pub use_telemetry: bool,
+    /// Reusable `(age_key, core_id)` scratch for `adjust`'s candidate
+    /// selection (§Perf: the periodic tick allocates nothing).
+    scratch: Vec<(f64, usize)>,
 }
 
 impl ProposedPolicy {
@@ -52,6 +62,7 @@ impl ProposedPolicy {
             adjust_period_s: 0.25,
             enable_idling: true,
             use_telemetry: false,
+            scratch: Vec::new(),
         }
     }
 
@@ -63,6 +74,38 @@ impl ProposedPolicy {
     /// Aging-sensor-driven selection (future-work extension).
     pub fn with_telemetry() -> ProposedPolicy {
         ProposedPolicy { use_telemetry: true, ..ProposedPolicy::new() }
+    }
+
+    /// Fill `self.scratch` with `(age_key, id)` of every core matching
+    /// `keep`, then partially select the `delta` extreme ones under `ord`
+    /// into `scratch[..delta]` (unordered within the prefix — callers
+    /// apply an order-insensitive state flip). Returns the clamped delta.
+    ///
+    /// The comparator totally orders `(eq_time, id)` tuples, so the
+    /// selected *set* is exactly the prefix a full sort would have taken,
+    /// at O(n) instead of O(n log n) and with zero heap traffic after the
+    /// first call.
+    fn select_extreme<F>(
+        &mut self,
+        cpu: &CpuPackage,
+        delta: usize,
+        keep: F,
+        descending: bool,
+    ) -> usize
+    where
+        F: Fn(&crate::cpu::Core) -> bool,
+    {
+        self.scratch.clear();
+        self.scratch.extend(cpu.cores.iter().filter(|c| keep(c)).map(|c| (c.eq_time_s, c.id)));
+        let delta = delta.min(self.scratch.len());
+        if delta > 0 && delta < self.scratch.len() {
+            if descending {
+                self.scratch.select_nth_unstable_by(delta - 1, |a, b| b.partial_cmp(a).unwrap());
+            } else {
+                self.scratch.select_nth_unstable_by(delta - 1, |a, b| a.partial_cmp(b).unwrap());
+            }
+        }
+        delta
     }
 }
 
@@ -78,21 +121,10 @@ impl CorePolicy for ProposedPolicy {
     }
 
     /// Algorithm 1: highest idle score among free working-set cores
-    /// (or lowest measured ΔVth in the telemetry variant).
+    /// (or lowest equivalent stress time in the telemetry variant).
     fn pick_core(&mut self, cpu: &CpuPackage, _now: f64, _rng: &mut Rng) -> Option<usize> {
         if self.use_telemetry {
-            let mut selected: Option<(f64, usize)> = None;
-            for core in &cpu.cores {
-                if core.state != CState::C0 || core.task.is_some() {
-                    continue;
-                }
-                match selected {
-                    None => selected = Some((core.dvth, core.id)),
-                    Some((d, _)) if core.dvth < d => selected = Some((core.dvth, core.id)),
-                    _ => {}
-                }
-            }
-            return selected.map(|(_, id)| id);
+            return super::min_free_core_by_key(cpu, |c| c.eq_time_s);
         }
         let mut selected: Option<usize> = None;
         let mut selected_score = 0.0f64;
@@ -128,29 +160,26 @@ impl CorePolicy for ProposedPolicy {
         if e_corr > 0 {
             // Underutilization: park δ cores, most-aged first. Only
             // active, unallocated cores are candidates.
-            let mut candidates: Vec<(f64, usize)> = cpu
-                .cores
-                .iter()
-                .filter(|c| c.state == CState::C0 && c.task.is_none())
-                .map(|c| (c.dvth, c.id))
-                .collect();
-            // Most aged first.
-            candidates.sort_by(|a, b| b.partial_cmp(a).unwrap());
-            let delta = (e_corr as usize).min(candidates.len());
-            for &(_, id) in candidates.iter().take(delta) {
+            let delta = self.select_extreme(
+                cpu,
+                e_corr as usize,
+                |c| c.state == CState::C0 && c.task.is_none(),
+                true,
+            );
+            for k in 0..delta {
+                let id = self.scratch[k].1;
                 cpu.set_state(id, CState::C6, now);
             }
         } else if e_corr < 0 {
             // Oversubscription: wake δ cores, least-aged first.
-            let mut candidates: Vec<(f64, usize)> = cpu
-                .cores
-                .iter()
-                .filter(|c| c.state == CState::C6)
-                .map(|c| (c.dvth, c.id))
-                .collect();
-            candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let delta = ((-e_corr) as usize).min(candidates.len());
-            for &(_, id) in candidates.iter().take(delta) {
+            let delta = self.select_extreme(
+                cpu,
+                (-e_corr) as usize,
+                |c| c.state == CState::C6,
+                false,
+            );
+            for k in 0..delta {
+                let id = self.scratch[k].1;
                 cpu.set_state(id, CState::C0, now);
             }
         }
@@ -248,9 +277,9 @@ mod tests {
     #[test]
     fn alg2_parks_most_aged_first_wakes_least_aged_first() {
         let mut cpu = pkg(4);
-        // Fabricate distinct ages.
-        for (i, d) in [0.04, 0.01, 0.03, 0.02].iter().enumerate() {
-            cpu.cores[i].dvth = *d;
+        // Fabricate distinct ages (equivalent stress time orders like ΔVth).
+        for (i, eq) in [4.0e6, 1.0e6, 3.0e6, 2.0e6].iter().enumerate() {
+            cpu.cores[i].eq_time_s = *eq;
         }
         let mut p = ProposedPolicy::new();
         // No tasks: e_prd=1 -> park 3 cores; survivors should be the least aged (core 1).
@@ -267,13 +296,29 @@ mod tests {
     }
 
     #[test]
-    fn telemetry_variant_picks_least_aged_by_dvth() {
+    fn alg2_selection_matches_full_sort_with_ties() {
+        // Equal ages: the partial selection must pick the same set a full
+        // (age, id) sort would — ties break by id, deterministically.
+        let mut cpu = pkg(6);
+        for (i, eq) in [5.0, 5.0, 1.0, 5.0, 2.0, 5.0].iter().enumerate() {
+            cpu.cores[i].eq_time_s = *eq * 1e6;
+        }
+        let mut p = ProposedPolicy::new();
+        // No tasks: park 5, keep 1 awake. Full sort descending on
+        // (age, id) keeps the smallest tuple awake: core 2 (age 1.0).
+        p.adjust(&mut cpu, 0.0);
+        assert_eq!(cpu.active_count(), 1);
+        assert_eq!(cpu.cores[2].state, CState::C0);
+    }
+
+    #[test]
+    fn telemetry_variant_picks_least_aged_by_age() {
         let mut cpu = pkg(4);
-        for (i, d) in [0.04, 0.01, 0.03, 0.02].iter().enumerate() {
-            cpu.cores[i].dvth = *d;
+        for (i, eq) in [4.0e6, 1.0e6, 3.0e6, 2.0e6].iter().enumerate() {
+            cpu.cores[i].eq_time_s = *eq;
         }
         // Give the *most aged* core the best idle score to show the two
-        // estimators disagree — telemetry must follow ΔVth.
+        // estimators disagree — telemetry must follow the aging sensor.
         cpu.assign(0, 1, 100.0);
         cpu.finish_task(1, 101.0);
         let mut p_est = ProposedPolicy::new();

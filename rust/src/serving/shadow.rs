@@ -106,6 +106,7 @@ impl ShadowCpuManager {
 
     pub fn report(&mut self, policy_name: &str) -> ShadowReport {
         let now = self.now();
+        let ops = self.mgr.cpu.ops;
         let freqs = self.mgr.cpu.frequencies(now);
         let total_time: f64 = self
             .mgr
@@ -122,7 +123,7 @@ impl ShadowCpuManager {
             oversub_events: self.mgr.oversub_events,
             c6_fraction: if total_time > 0.0 { c6_time / total_time } else { 0.0 },
             mean_dvth: crate::util::stats::mean(
-                &self.mgr.cpu.cores.iter().map(|c| c.dvth).collect::<Vec<_>>(),
+                &self.mgr.cpu.cores.iter().map(|c| c.dvth(&ops)).collect::<Vec<_>>(),
             ),
             freq_cv: crate::util::stats::coeff_of_variation(&freqs),
             idle: Summary::of(&self.idle_samples),

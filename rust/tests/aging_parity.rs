@@ -1,0 +1,112 @@
+//! Golden parity for the §Perf hot-path refactor: the transcendental-free
+//! equivalent-stress-time fast path (`Core::advance` + lazy `Core::dvth`)
+//! must reproduce the retained closed-form reference
+//! (`AgingParams::dvth_step`, one recursion step per interval at the
+//! interval's ADF) to 1e-12 *relative* error over randomized
+//! assign/release/C6 schedules.
+
+use carbon_sim::cpu::{AgingOps, AgingParams, CState, Core, TemperatureModel};
+use carbon_sim::util::proptest::{check, forall, Check};
+
+struct Fixture {
+    aging: AgingParams,
+    ops: AgingOps,
+    adf_alloc: f64,
+    adf_unalloc: f64,
+}
+
+fn fixture() -> Fixture {
+    let aging = AgingParams::paper_default();
+    let temps = TemperatureModel::paper_default();
+    let ops = AgingOps::new(&aging, &temps);
+    let adf_alloc = aging.adf(temps.steady_k(CState::C0, true), 1.0);
+    let adf_unalloc =
+        aging.adf(temps.steady_k(CState::C0, false), aging.unallocated_stress);
+    Fixture { aging, ops, adf_alloc, adf_unalloc }
+}
+
+#[test]
+fn eq_time_fast_path_matches_closed_form_over_random_schedules() {
+    let fx = fixture();
+    forall(250, 0xFA57_A61, |g| {
+        let mut core = Core::new(0, 2.6);
+        let mut dvth_ref = 0.0f64;
+        let mut now = 0.0f64;
+        let mut task_id = 1u64;
+        let n_steps = g.size(5, 120);
+        for _ in 0..n_steps {
+            // Dwell at the current operating point, then step both paths.
+            let tau = g.f64(0.0, 5.0e5);
+            now += tau;
+            if core.state == CState::C0 {
+                let adf = if core.is_allocated() { fx.adf_alloc } else { fx.adf_unalloc };
+                dvth_ref = fx.aging.dvth_step(dvth_ref, adf, tau);
+            }
+            core.advance(now, &fx.ops);
+            // Random configuration change at `now` (the core is already
+            // advanced, so the internal advance is a no-op).
+            match g.size(0, 5) {
+                0 | 1 => {
+                    if core.is_allocated() {
+                        core.release(now, &fx.ops);
+                    } else if core.state == CState::C0 {
+                        core.assign(task_id, now, &fx.ops);
+                        task_id += 1;
+                    }
+                }
+                2 => {
+                    if core.state == CState::C6 {
+                        core.set_state(CState::C0, now, &fx.ops);
+                    } else if !core.is_allocated() {
+                        core.set_state(CState::C6, now, &fx.ops);
+                    }
+                }
+                _ => {}
+            }
+            let dvth_fast = core.dvth(&fx.ops);
+            if dvth_ref > 0.0 {
+                let rel = (dvth_fast - dvth_ref).abs() / dvth_ref;
+                if rel > 1e-12 {
+                    return check(
+                        false,
+                        format!(
+                            "rel err {rel:.3e} after {now:.0}s: fast={dvth_fast} ref={dvth_ref}"
+                        ),
+                    );
+                }
+            } else if dvth_fast != 0.0 {
+                return check(false, format!("ref is 0 but fast is {dvth_fast}"));
+            }
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn fast_path_frequency_matches_reference_formula() {
+    // Frequency reads go through AgingOps; they must equal the retained
+    // AgingParams::freq_ghz applied to the reference ΔVth.
+    let fx = fixture();
+    let mut core = Core::new(0, 2.6);
+    core.assign(1, 0.0, &fx.ops);
+    core.advance(3.0e7, &fx.ops);
+    let dvth_ref = fx.aging.dvth_step(0.0, fx.adf_alloc, 3.0e7);
+    let f_ref = fx.aging.freq_ghz(2.6, dvth_ref);
+    let f_fast = core.freq_ghz(&fx.ops);
+    assert!(
+        (f_fast - f_ref).abs() / f_ref < 1e-12,
+        "fast={f_fast} ref={f_ref}"
+    );
+}
+
+#[test]
+fn ten_year_calibration_survives_the_fast_path() {
+    // 10 years of continuous allocated stress must still cost 30% of f0
+    // (the model's calibration datum) through the eq-time representation.
+    let fx = fixture();
+    let mut core = Core::new(0, 2.6);
+    core.assign(1, 0.0, &fx.ops);
+    core.advance(fx.aging.calib_lifetime_s, &fx.ops);
+    let red = core.freq_reduction_ghz(&fx.ops) / 2.6;
+    assert!((red - 0.30).abs() < 1e-9, "reduction={red}");
+}

@@ -20,7 +20,7 @@ fn run(args: &[&str]) -> (bool, String) {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["--help"]);
     assert!(ok);
-    for cmd in ["simulate", "sweep", "figure", "trace-gen", "serve", "aging-demo"] {
+    for cmd in ["simulate", "sweep", "bench", "figure", "trace-gen", "serve", "aging-demo"] {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
 }
@@ -209,6 +209,44 @@ fn sweep_rejects_bad_flags_with_exit_2() {
         let (ok, text) = run(&bad);
         assert!(!ok, "expected failure for {bad:?}:\n{text}");
     }
+}
+
+#[test]
+fn bench_quick_writes_wellformed_json() {
+    let dir = std::env::temp_dir().join("carbon_sim_cli_bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bench.json");
+    let (ok, text) = run(&["bench", "--quick", "--quiet", "--out", p.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("events/s"), "{text}");
+    let body = std::fs::read_to_string(&p).unwrap();
+    let v = carbon_sim::util::json::parse(&body).expect("bench output must be valid JSON");
+    // The pinned quick matrix: 2 traces × 2 core counts × 3 policies.
+    let cells = v.get("cells").and_then(|c| c.as_arr()).expect("cells array");
+    assert_eq!(cells.len(), 12, "{body}");
+    assert_eq!(v.usize_or("n_cells", 0), 12);
+    assert!(v.f64_or("events_per_s", 0.0) > 0.0);
+    assert!(v.f64_or("total_wall_s", 0.0) > 0.0);
+    // Date stamp has the YYYY-MM-DD shape.
+    let date = v.get("date").and_then(|d| d.as_str()).expect("date field");
+    assert_eq!(date.len(), 10, "{date}");
+    assert_eq!(&date[4..5], "-");
+    assert_eq!(&date[7..8], "-");
+    for cell in cells {
+        assert!(cell.f64_or("events", 0.0) > 0.0);
+        assert!(cell.f64_or("events_per_s", 0.0) > 0.0);
+        assert!(cell.get("policy").and_then(|p| p.as_str()).is_some());
+        let trace = cell.get("trace").and_then(|t| t.as_str()).unwrap();
+        assert!(trace == "short" || trace == "long");
+        let cores = cell.usize_or("cores", 0);
+        assert!(cores == 40 || cores == 80);
+    }
+}
+
+#[test]
+fn bench_rejects_bad_flags() {
+    let (ok, _) = run(&["bench", "--no-such-flag"]);
+    assert!(!ok);
 }
 
 #[test]

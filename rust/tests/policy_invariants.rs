@@ -196,14 +196,16 @@ fn aging_monotonicity_under_any_schedule() {
             }
             m.adjust(now);
             m.cpu.advance_all(now);
+            let ops = m.cpu.ops;
             for (i, core) in m.cpu.cores.iter().enumerate() {
-                if core.dvth < prev_dvth[i] - 1e-15 {
+                let dvth = core.dvth(&ops);
+                if dvth < prev_dvth[i] - 1e-15 {
                     return check(
                         false,
-                        format!("[{policy}] core {i} dvth decreased: {} -> {}", prev_dvth[i], core.dvth),
+                        format!("[{policy}] core {i} dvth decreased: {} -> {dvth}", prev_dvth[i]),
                     );
                 }
-                prev_dvth[i] = core.dvth;
+                prev_dvth[i] = dvth;
             }
         }
         check(true, "")
@@ -218,10 +220,11 @@ fn proposed_halts_aging_in_parked_cores() {
     let parked: Vec<usize> =
         m.cpu.cores.iter().filter(|c| c.state == CState::C6).map(|c| c.id).collect();
     assert!(!parked.is_empty());
-    let before: Vec<f64> = parked.iter().map(|&i| m.cpu.cores[i].dvth).collect();
+    let ops = m.cpu.ops;
+    let before: Vec<f64> = parked.iter().map(|&i| m.cpu.cores[i].dvth(&ops)).collect();
     m.cpu.advance_all(3600.0);
     for (k, &i) in parked.iter().enumerate() {
-        assert_eq!(m.cpu.cores[i].dvth, before[k], "parked core {i} aged");
+        assert_eq!(m.cpu.cores[i].dvth(&ops), before[k], "parked core {i} aged");
     }
 }
 
