@@ -2,13 +2,17 @@
 //! experiment sweeps, with defaults, validation, and round-tripping.
 //!
 //! Every CLI entry point accepts `--config <file.json>`; flags override
-//! file values, which override the paper defaults. See `configs/` for
-//! annotated examples (`paper.json` is exactly the §6.1 setup).
+//! file values, which override the paper defaults. Sweep grids are
+//! declarative too: `carbon-sim sweep --spec <file.json>` loads a full
+//! [`SweepSpec`] via [`sweep_from_file`] (examples under
+//! `examples/specs/`). All parsers reject unknown keys (typo
+//! protection), and every validation error names the offending key.
 
 use std::path::Path;
 
 use crate::cluster::ClusterConfig;
 use crate::cpu::{AgingParams, ProcVarParams};
+use crate::experiments::sweep::SweepSpec;
 use crate::experiments::Scale;
 use crate::model::PerfModel;
 use crate::trace::azure::Workload;
@@ -176,6 +180,168 @@ pub fn scale_from_value(v: &Value) -> Result<Scale, String> {
     Ok(s)
 }
 
+const SWEEP_KEYS: &[&str] = &[
+    "base",
+    "rates",
+    "core_counts",
+    "policies",
+    "workloads",
+    "replicas",
+    "duration_s",
+    "n_prompt",
+    "n_token",
+    "seed",
+];
+
+/// Load a [`SweepSpec`] from a JSON file (`carbon-sim sweep --spec`).
+pub fn sweep_from_file(path: &Path) -> Result<SweepSpec, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+    let v = parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+    sweep_from_value(&v).map_err(|e| format!("{path:?}: {e}"))
+}
+
+/// Build a [`SweepSpec`] from a parsed JSON object. Starts from the
+/// `"base"` preset (`"paper"`, the default, or `"smoke"`), overrides
+/// whichever axes the object sets, and validates the result. Unknown
+/// keys are rejected, and every error names the offending key.
+pub fn sweep_from_value(v: &Value) -> Result<SweepSpec, String> {
+    let obj = v.as_obj().ok_or("sweep spec must be a JSON object")?;
+    for key in obj.keys() {
+        if !SWEEP_KEYS.contains(&key.as_str()) {
+            return Err(format!("unknown sweep spec key '{key}' (known: {SWEEP_KEYS:?})"));
+        }
+    }
+    let base = match v.get("base") {
+        None => "paper",
+        Some(b) => b
+            .as_str()
+            .ok_or("sweep spec key 'base' must be the string \"paper\" or \"smoke\"")?,
+    };
+    let mut s = match base {
+        "paper" => SweepSpec::paper(),
+        "smoke" => SweepSpec::smoke(),
+        other => {
+            return Err(format!("sweep spec key 'base' must be \"paper\" or \"smoke\", got '{other}'"))
+        }
+    };
+    if let Some(x) = v.get("rates") {
+        s.rates = f64_array(x, "rates")?;
+    }
+    if let Some(x) = v.get("core_counts") {
+        s.core_counts = usize_array(x, "core_counts")?;
+    }
+    if let Some(x) = v.get("policies") {
+        s.policies = string_array(x, "policies")?;
+    }
+    if let Some(x) = v.get("workloads") {
+        s.workloads = string_array(x, "workloads")?
+            .iter()
+            .map(|w| Workload::parse(w).map_err(|e| format!("sweep spec key 'workloads': {e}")))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(x) = v.get("replicas") {
+        s.replicas = usize_scalar(x, "replicas")?;
+    }
+    if let Some(x) = v.get("duration_s") {
+        s.duration_s = f64_scalar(x, "duration_s")?;
+    }
+    if let Some(x) = v.get("n_prompt") {
+        s.n_prompt = usize_scalar(x, "n_prompt")?;
+    }
+    if let Some(x) = v.get("n_token") {
+        s.n_token = usize_scalar(x, "n_token")?;
+    }
+    if let Some(x) = v.get("seed") {
+        s.seed = u64_scalar(x, "seed")?;
+    }
+    s.validate()?;
+    Ok(s)
+}
+
+// Typed extraction helpers whose errors name the offending key — unlike
+// the lenient `f64_or`-style accessors, a sweep spec typo must fail
+// loudly instead of silently running the wrong grid for hours.
+
+/// 2^53: every integer below is exactly representable as f64; at and
+/// above, distinct written literals collapse to the same f64 (and every
+/// huge f64 passes `fract() == 0.0`, so a bound is the only way to catch
+/// a fat-fingered exponent before `as` saturates it).
+const MAX_EXACT_INT_F64: f64 = 9_007_199_254_740_992.0;
+
+fn f64_array(v: &Value, key: &str) -> Result<Vec<f64>, String> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("sweep spec key '{key}' must be an array of numbers"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| format!("sweep spec key '{key}' must contain only numbers"))
+        })
+        .collect()
+}
+
+fn usize_array(v: &Value, key: &str) -> Result<Vec<usize>, String> {
+    f64_array(v, key)?
+        .into_iter()
+        .map(|x| {
+            if x >= 0.0 && x.fract() == 0.0 && x < MAX_EXACT_INT_F64 {
+                Ok(x as usize)
+            } else {
+                Err(format!("sweep spec key '{key}' must contain non-negative integers < 2^53"))
+            }
+        })
+        .collect()
+}
+
+fn string_array(v: &Value, key: &str) -> Result<Vec<String>, String> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("sweep spec key '{key}' must be an array of strings"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("sweep spec key '{key}' must contain only strings"))
+        })
+        .collect()
+}
+
+fn f64_scalar(v: &Value, key: &str) -> Result<f64, String> {
+    v.as_f64().ok_or_else(|| format!("sweep spec key '{key}' must be a number"))
+}
+
+fn usize_scalar(v: &Value, key: &str) -> Result<usize, String> {
+    let x = f64_scalar(v, key)?;
+    if x >= 0.0 && x.fract() == 0.0 && x < MAX_EXACT_INT_F64 {
+        Ok(x as usize)
+    } else {
+        Err(format!("sweep spec key '{key}' must be a non-negative integer < 2^53"))
+    }
+}
+
+/// u64 seeds exceed f64's 2^53 integer range, so `"seed"` accepts either
+/// a JSON number (rejected beyond 2^53, where the JSON parser's f64
+/// representation already lost precision — accepting it would silently
+/// run a different seed than the user wrote) or a decimal string (the
+/// report serializes it back as a string for the same reason).
+fn u64_scalar(v: &Value, key: &str) -> Result<u64, String> {
+    match v {
+        Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < MAX_EXACT_INT_F64 => {
+            Ok(*x as u64)
+        }
+        Value::Num(_) => Err(format!(
+            "sweep spec key '{key}' must be a non-negative integer < 2^53; write larger \
+             seeds as decimal strings (JSON numbers lose precision there)"
+        )),
+        Value::Str(s) => s
+            .parse::<u64>()
+            .map_err(|e| format!("sweep spec key '{key}': bad u64 '{s}': {e}")),
+        _ => Err(format!(
+            "sweep spec key '{key}' must be a non-negative integer or decimal string"
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +406,91 @@ mod tests {
         assert_eq!(s.workload, Workload::Conversation);
         assert_eq!(s.seed, 9);
         assert!(scale_from_value(&parse(r#"{"rates": []}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn sweep_empty_object_is_the_paper_grid() {
+        let s = sweep_from_value(&parse("{}").unwrap()).unwrap();
+        let paper = SweepSpec::paper();
+        assert_eq!(s.rates, paper.rates);
+        assert_eq!(s.core_counts, paper.core_counts);
+        assert_eq!(s.policies, paper.policies);
+        assert_eq!(s.seed, paper.seed);
+        assert_eq!(s.spec_hash(), paper.spec_hash());
+    }
+
+    #[test]
+    fn sweep_base_smoke_with_overrides() {
+        let v = parse(
+            r#"{"base": "smoke", "rates": [4, 8], "workloads": ["diurnal", "bursty"],
+                "replicas": 2, "seed": 99}"#,
+        )
+        .unwrap();
+        let s = sweep_from_value(&v).unwrap();
+        assert_eq!(s.rates, vec![4.0, 8.0]);
+        assert_eq!(s.core_counts, SweepSpec::smoke().core_counts);
+        assert_eq!(s.workloads, vec![Workload::Diurnal, Workload::Bursty]);
+        assert_eq!(s.replicas, 2);
+        assert_eq!(s.seed, 99);
+    }
+
+    #[test]
+    fn sweep_seed_accepts_decimal_string_beyond_2_53() {
+        let v = parse(r#"{"seed": "18446744073709551615"}"#).unwrap();
+        assert_eq!(sweep_from_value(&v).unwrap().seed, u64::MAX);
+    }
+
+    #[test]
+    fn sweep_errors_name_the_offending_key() {
+        for (bad, named) in [
+            (r#"{"ratez": [40]}"#, "ratez"),
+            (r#"{"rates": "40"}"#, "rates"),
+            (r#"{"rates": [40, "x"]}"#, "rates"),
+            (r#"{"core_counts": [1.5]}"#, "core_counts"),
+            (r#"{"replicas": 4.6e18}"#, "replicas"),
+            (r#"{"policies": [40]}"#, "policies"),
+            (r#"{"workloads": ["frob"]}"#, "workloads"),
+            (r#"{"replicas": 1.5}"#, "replicas"),
+            (r#"{"duration_s": "long"}"#, "duration_s"),
+            (r#"{"seed": -3}"#, "seed"),
+            // Above 2^53 a JSON number has already lost precision in the
+            // f64 parse; only the string form is accepted there.
+            (r#"{"seed": 9007199254740993}"#, "seed"),
+            (r#"{"base": "huge"}"#, "base"),
+            (r#"{"base": 5}"#, "base"),
+        ] {
+            let err = sweep_from_value(&parse(bad).unwrap()).unwrap_err();
+            assert!(err.contains(named), "error for {bad} should name '{named}': {err}");
+        }
+        // Non-object specs and post-parse validation failures still error.
+        assert!(sweep_from_value(&parse("[1, 2]").unwrap()).is_err());
+        assert!(sweep_from_value(&parse(r#"{"rates": []}"#).unwrap()).is_err());
+        assert!(sweep_from_value(&parse(r#"{"policies": ["nope"]}"#).unwrap()).is_err());
+        assert!(sweep_from_value(&parse(r#"{"replicas": 0}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn sweep_file_errors_name_the_file() {
+        let dir = std::env::temp_dir().join("carbon_sim_sweep_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("broken.json");
+        std::fs::write(&p, "{not json").unwrap();
+        let err = sweep_from_file(&p).unwrap_err();
+        assert!(err.contains("broken.json"), "{err}");
+        assert!(sweep_from_file(Path::new("/nonexistent_spec.json")).is_err());
+    }
+
+    #[test]
+    fn shipped_example_specs_load_and_match_presets() {
+        let specs = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/specs");
+        let paper = sweep_from_file(&specs.join("paper.json")).unwrap();
+        assert_eq!(paper.spec_hash(), SweepSpec::paper().spec_hash(), "examples/specs/paper.json drifted from SweepSpec::paper()");
+        let smoke = sweep_from_file(&specs.join("smoke.json")).unwrap();
+        assert_eq!(smoke.spec_hash(), SweepSpec::smoke().spec_hash(), "examples/specs/smoke.json drifted from SweepSpec::smoke()");
+        let stress = sweep_from_file(&specs.join("diurnal_stress.json")).unwrap();
+        assert!(stress.validate().is_ok());
+        assert!(stress.workloads.contains(&Workload::Diurnal));
+        assert!(stress.n_cells() > SweepSpec::paper().n_cells());
     }
 
     #[test]

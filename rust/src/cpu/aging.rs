@@ -16,6 +16,27 @@
 //! Deep idle (C6) clock- and power-gates the core: no transistor switching
 //! stress, so an interval spent in C6 contributes **zero** stress time and
 //! ΔVth is frozen (the paper's age-halting premise).
+//!
+//! # The equivalent-stress-time invariant (§Perf)
+//!
+//! The recursion above costs two `exp` + three `powf` per evaluation if
+//! applied literally on every core event. Instead, per-core aging state
+//! is kept as **canonical equivalent stress time** (`Core::eq_time_s` in
+//! [`super::core`]): the length of continuous worst-case (C0, allocated,
+//! Y = 1) stress that would produce the core's current ΔVth, i.e.
+//! `ΔVth = ADF_alloc · eq_time^n`. A core only ever occupies one of three
+//! operating points — (C0, allocated), (C0, unallocated), or C6 — and
+//! substituting the invariant into the recursion shows that `τ`
+//! wall-seconds at a point with factor `ADF_p` advance canonical time by
+//! `τ · (ADF_p / ADF_alloc)^{1/n}`, a **constant rate** precomputed once
+//! per configuration by [`AgingOps`]. The per-event advance is therefore
+//! a single multiply-add with zero transcendentals; C6 advances nothing;
+//! ΔVth and frequency are lazy snapshots costing one `powf` only when
+//! metrics are read ([`AgingOps::dvth_of_eq`], [`AgingOps::freq_ghz`]).
+//! `eq_time_s` is monotone in ΔVth, so policies compare core ages on it
+//! directly. The fast path is pinned against the retained closed-form
+//! reference [`AgingParams::dvth_step`] to 1e-12 relative error by
+//! `tests/aging_parity.rs`.
 
 /// Boltzmann constant in eV/K.
 pub const K_B_EV: f64 = 8.617_333e-5;

@@ -123,10 +123,14 @@ impl BenchReport {
         }
     }
 
+    /// The report as one JSON document (schema documented in
+    /// `docs/output-schemas.md`, versioned by
+    /// [`super::OUTPUT_SCHEMA_VERSION`]).
     pub fn to_json(&self, date: &str) -> Value {
         Value::obj(vec![
             ("date", date.into()),
             ("quick", self.quick.into()),
+            ("schema_version", super::OUTPUT_SCHEMA_VERSION.into()),
             ("seed", format!("{BENCH_SEED}").into()),
             ("n_cells", self.cells.len().into()),
             ("total_events", (self.total_events() as f64).into()),
@@ -254,6 +258,7 @@ mod tests {
         let parsed =
             crate::util::json::parse(&json.to_string_pretty()).expect("bench JSON parses");
         assert_eq!(parsed.usize_or("n_cells", 0), report.cells.len());
+        assert_eq!(parsed.usize_or("schema_version", 0), crate::experiments::OUTPUT_SCHEMA_VERSION);
         assert!(parsed.f64_or("events_per_s", 0.0) > 0.0);
     }
 

@@ -7,8 +7,11 @@
 //! parallel scenario-sweep engine: arbitrary rate × core count × policy
 //! × workload × replica grids, sharded across a worker pool with
 //! deterministic per-cell seeds and JSON/CSV aggregation
-//! (`carbon-sim sweep`). [`run_matrix`] itself runs its paired cells on
-//! the same pool, so `carbon-sim figure --fig 6|7|8` parallelizes too.
+//! (`carbon-sim sweep`). [`sweep_stream`] is its disk-backed variant:
+//! per-cell JSONL spill, crash resume, and report assembly from the
+//! spill file (`--out-dir` / `--resume`). [`run_matrix`] itself runs its
+//! paired cells on the same pool, so `carbon-sim figure --fig 6|7|8`
+//! parallelizes too.
 
 pub mod bench;
 pub mod fig1;
@@ -19,6 +22,13 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod sweep;
+pub mod sweep_stream;
+
+/// Version stamp written into every machine-readable output this crate
+/// produces (sweep report JSON, `cells.jsonl` header, bench JSON), so
+/// `docs/output-schemas.md` can be versioned against the files. Bump it
+/// whenever a field is added, removed, or changes meaning.
+pub const OUTPUT_SCHEMA_VERSION: usize = 1;
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::metrics::SimResult;

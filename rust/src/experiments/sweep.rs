@@ -16,6 +16,21 @@
 //! so every policy in a scenario shares one seed — identical trace and
 //! identical silicon (process-variation sample) — exactly like
 //! [`super::run_paired`] does for the paper's figures.
+//!
+//! **Spec sources:** a spec is built from CLI axis flags, from the
+//! hard-coded [`SweepSpec::paper`]/[`SweepSpec::smoke`] presets, or
+//! declaratively from a JSON file via `config::sweep_from_file`
+//! (`carbon-sim sweep --spec examples/specs/paper.json`). A spec's
+//! identity is its canonical JSON ([`SweepSpec::to_json`]) hashed by
+//! [`SweepSpec::spec_hash`] — the streaming engine records that hash so
+//! a resume can refuse to mix cells from different grids.
+//!
+//! **Streaming:** [`run`] holds every [`SweepCellResult`] in memory —
+//! fine for paper-sized grids, the wrong shape for production sweeps.
+//! [`super::sweep_stream`] runs the same cells with O(workers) memory by
+//! spilling each finished cell to a `cells.jsonl` file and assembling
+//! the final report (byte-identical to [`SweepReport::render`]) from the
+//! spill, with crash resume.
 
 use std::path::Path;
 
@@ -116,33 +131,77 @@ impl SweepSpec {
         self.n_scenarios() * self.policies.len()
     }
 
-    /// Expand the axes into the full ordered cell list.
-    pub fn cells(&self) -> Vec<SweepCell> {
-        let mut out = Vec::with_capacity(self.n_cells());
-        let mut scenario = 0usize;
-        for &workload in &self.workloads {
-            for &cores in &self.core_counts {
-                for &rate in &self.rates {
-                    for replica in 0..self.replicas {
-                        let seed = cell_seed(self.seed, scenario as u64);
-                        for policy in &self.policies {
-                            out.push(SweepCell {
-                                index: out.len(),
-                                scenario,
-                                workload,
-                                cores,
-                                rate,
-                                replica,
-                                policy: policy.clone(),
-                                seed,
-                            });
-                        }
-                        scenario += 1;
-                    }
-                }
-            }
+    /// The spec as canonical JSON — the `"spec"` block of the report and
+    /// the byte string [`SweepSpec::spec_hash`] is computed over.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("rates", Value::from_f64_slice(&self.rates)),
+            (
+                "core_counts",
+                Value::Arr(self.core_counts.iter().map(|&c| c.into()).collect()),
+            ),
+            (
+                "policies",
+                Value::Arr(self.policies.iter().map(|p| p.as_str().into()).collect()),
+            ),
+            (
+                "workloads",
+                Value::Arr(self.workloads.iter().map(|w| w.name().into()).collect()),
+            ),
+            ("replicas", self.replicas.into()),
+            ("duration_s", self.duration_s.into()),
+            ("n_prompt", self.n_prompt.into()),
+            ("n_token", self.n_token.into()),
+            // u64 seeds exceed f64's 2^53 integer range; keep full fidelity.
+            ("seed", format!("{}", self.seed).into()),
+        ])
+    }
+
+    /// FNV-1a 64 over the canonical spec JSON, as 16 hex digits. Recorded
+    /// in the `cells.jsonl` header so `--resume` can verify the on-disk
+    /// cells belong to this exact grid.
+    pub fn spec_hash(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_json().to_string_compact().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
         }
-        out
+        format!("{h:016x}")
+    }
+
+    /// Derive the cell at `index` directly, without materializing the
+    /// grid — the streaming engine's workers stay O(1) memory per cell
+    /// even on grids too big to expand up front. The decomposition
+    /// inverts the [`SweepSpec::cells`] nesting: policies vary fastest,
+    /// then replicas, rates, core counts, workloads.
+    pub fn cell(&self, index: usize) -> SweepCell {
+        assert!(index < self.n_cells(), "cell index {index} out of range");
+        let scenario = index / self.policies.len();
+        let policy = self.policies[index % self.policies.len()].clone();
+        let mut s = scenario;
+        let replica = s % self.replicas;
+        s /= self.replicas;
+        let rate = self.rates[s % self.rates.len()];
+        s /= self.rates.len();
+        let cores = self.core_counts[s % self.core_counts.len()];
+        s /= self.core_counts.len();
+        let workload = self.workloads[s];
+        SweepCell {
+            index,
+            scenario,
+            workload,
+            cores,
+            rate,
+            replica,
+            policy,
+            seed: cell_seed(self.seed, scenario as u64),
+        }
+    }
+
+    /// Expand the axes into the full ordered cell list (the in-memory
+    /// engine's shape; equal to `(0..n_cells()).map(|i| cell(i))`).
+    pub fn cells(&self) -> Vec<SweepCell> {
+        (0..self.n_cells()).map(|i| self.cell(i)).collect()
     }
 }
 
@@ -288,31 +347,13 @@ pub const CSV_COLUMNS: &[&str] = &[
 ];
 
 impl SweepReport {
-    /// The whole report as one deterministic JSON document.
+    /// The whole report as one deterministic JSON document (schema
+    /// documented in `docs/output-schemas.md`, versioned by
+    /// [`super::OUTPUT_SCHEMA_VERSION`]).
     pub fn to_json(&self) -> Value {
-        let s = &self.spec;
-        let spec = Value::obj(vec![
-            ("rates", Value::from_f64_slice(&s.rates)),
-            (
-                "core_counts",
-                Value::Arr(s.core_counts.iter().map(|&c| c.into()).collect()),
-            ),
-            (
-                "policies",
-                Value::Arr(s.policies.iter().map(|p| p.as_str().into()).collect()),
-            ),
-            (
-                "workloads",
-                Value::Arr(s.workloads.iter().map(|w| w.name().into()).collect()),
-            ),
-            ("replicas", s.replicas.into()),
-            ("duration_s", s.duration_s.into()),
-            ("n_prompt", s.n_prompt.into()),
-            ("n_token", s.n_token.into()),
-            ("seed", format!("{}", s.seed).into()),
-        ]);
         Value::obj(vec![
-            ("spec", spec),
+            ("spec", self.spec.to_json()),
+            ("schema_version", super::OUTPUT_SCHEMA_VERSION.into()),
             ("n_cells", self.cells.len().into()),
             ("cells", Value::Arr(self.cells.iter().map(|c| c.to_json()).collect())),
         ])
@@ -471,6 +512,68 @@ mod tests {
         }
         // Different scenarios get different seeds.
         assert_ne!(cells[0].seed, cells[2].seed);
+    }
+
+    #[test]
+    fn cell_by_index_matches_the_nested_loop_expansion() {
+        // Pin cell(i)'s index decomposition to the documented nesting:
+        // workloads (outer) → cores → rates → replicas → policies (inner).
+        let spec = tiny();
+        let mut expect = Vec::new();
+        let mut scenario = 0usize;
+        for &workload in &spec.workloads {
+            for &cores in &spec.core_counts {
+                for &rate in &spec.rates {
+                    for replica in 0..spec.replicas {
+                        for policy in &spec.policies {
+                            expect.push((
+                                expect.len(),
+                                scenario,
+                                workload,
+                                cores,
+                                rate,
+                                replica,
+                                policy.clone(),
+                                cell_seed(spec.seed, scenario as u64),
+                            ));
+                        }
+                        scenario += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(expect.len(), spec.n_cells());
+        for (i, e) in expect.iter().enumerate() {
+            let c = spec.cell(i);
+            let got =
+                (c.index, c.scenario, c.workload, c.cores, c.rate, c.replica, c.policy, c.seed);
+            assert_eq!(&got, e, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn spec_hash_tracks_spec_identity() {
+        let a = tiny();
+        assert_eq!(a.spec_hash(), tiny().spec_hash());
+        assert_eq!(a.spec_hash().len(), 16);
+        let mut b = tiny();
+        b.seed = 12;
+        assert_ne!(a.spec_hash(), b.spec_hash());
+        let mut c = tiny();
+        c.rates.push(16.0);
+        assert_ne!(a.spec_hash(), c.spec_hash());
+        let mut d = tiny();
+        d.policies.reverse();
+        assert_ne!(a.spec_hash(), d.spec_hash(), "axis order is part of the identity");
+    }
+
+    #[test]
+    fn report_json_carries_schema_version() {
+        let mut spec = SweepSpec::smoke();
+        spec.duration_s = 2.0;
+        let report = run(&spec, 1).unwrap();
+        let v = crate::util::json::parse(&report.to_json().to_string_pretty()).unwrap();
+        assert_eq!(v.usize_or("schema_version", 0), crate::experiments::OUTPUT_SCHEMA_VERSION);
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Disk-backed sweep runs: per-cell JSONL spill, crash resume, and
+//! report assembly from the spill file (`carbon-sim sweep --out-dir`).
+//!
+//! [`sweep::run`](super::sweep::run) holds every cell result in memory
+//! until the end — O(grid) memory, and a crash loses everything. This
+//! module runs the same grid holding only O(workers) cell *results* at
+//! any moment (cells are derived per index on demand, never expanded up
+//! front; the done/pending bookkeeping and the spill's byte-range index
+//! cost a few machine words per cell) and loses at most the in-flight
+//! row on a kill:
+//!
+//! * **Spill.** Workers hand each finished [`SweepCellResult`] to a
+//!   single writer (via [`pool::run_streamed`]'s completion callback)
+//!   that appends one compact JSON row to `<out-dir>/cells.jsonl` in
+//!   **completion order** and retains nothing. The file starts with a
+//!   header row recording [`SweepSpec::spec_hash`] and the expected cell
+//!   count.
+//! * **Resume.** [`scan_and_compact`] re-reads an existing spill, drops
+//!   a truncated in-flight tail line, verifies the header's spec hash
+//!   against the current spec (refusing to mix grids), and returns which
+//!   cell indices are already done; [`run_streaming`] then simulates
+//!   only the remainder.
+//! * **Assembly.** [`assemble_report`] indexes the spill (byte ranges
+//!   per cell), then streams the rows back **in cell-index order** into
+//!   the final JSON/CSV report. Because rows are keyed by cell index and
+//!   per-cell seeds never depend on execution order, the assembled
+//!   report is byte-identical to [`SweepReport::render`] on an in-memory
+//!   run — at any `--threads` value, interrupted or not (covered by
+//!   `tests/sweep_stream.rs`).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::sweep::{run_cell, Format, SweepSpec, CSV_COLUMNS};
+#[allow(unused_imports)] // rustdoc links
+use super::sweep::{SweepCellResult, SweepReport};
+use super::OUTPUT_SCHEMA_VERSION;
+use crate::util::json::{parse, Value};
+use crate::util::pool;
+
+/// Spill file name inside `--out-dir`.
+pub const CELLS_FILE: &str = "cells.jsonl";
+
+/// What a streaming run did (the CLI's summary line).
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    pub n_cells: usize,
+    /// Cells already present in `cells.jsonl` and skipped (`--resume`).
+    pub n_resumed: usize,
+    /// Cells actually simulated by this invocation.
+    pub n_run: usize,
+    pub cells_path: PathBuf,
+    pub report_path: PathBuf,
+}
+
+/// The spill header row (line 1 of `cells.jsonl`).
+fn header_value(spec: &SweepSpec) -> Value {
+    Value::obj(vec![
+        ("kind", "sweep-cells".into()),
+        ("schema_version", OUTPUT_SCHEMA_VERSION.into()),
+        ("spec_hash", spec.spec_hash().as_str().into()),
+        ("n_cells", spec.n_cells().into()),
+    ])
+}
+
+/// Validate a complete header line against the current spec. Every
+/// failure names what diverged — a resume must never silently mix cells
+/// from a different grid.
+fn check_header(line: &[u8], spec: &SweepSpec, path: &Path) -> Result<(), String> {
+    let text = std::str::from_utf8(line).map_err(|_| format!("{path:?}: header is not UTF-8"))?;
+    let v = parse(text.trim_end())
+        .map_err(|e| format!("{path:?}: header is not a JSON object: {e}"))?;
+    if v.str_or("kind", "") != "sweep-cells" {
+        return Err(format!("{path:?}: not a sweep cells.jsonl spill (missing kind)"));
+    }
+    let ver = v.usize_or("schema_version", 0);
+    if ver != OUTPUT_SCHEMA_VERSION {
+        return Err(format!(
+            "{path:?}: spill schema_version {ver} != supported {OUTPUT_SCHEMA_VERSION}"
+        ));
+    }
+    let hash = spec.spec_hash();
+    let file_hash = v.str_or("spec_hash", "");
+    if file_hash != hash {
+        return Err(format!(
+            "{path:?}: spec hash mismatch (file {file_hash}, current spec {hash}) — \
+             the spill belongs to a different grid; use a fresh --out-dir"
+        ));
+    }
+    let n = v.usize_or("n_cells", 0);
+    if n != spec.n_cells() {
+        return Err(format!(
+            "{path:?}: spill expects {n} cells, current spec expands to {}",
+            spec.n_cells()
+        ));
+    }
+    Ok(())
+}
+
+/// Read one line (including any trailing newline) into `buf`; returns
+/// `(bytes_read, newline_terminated)`. `bytes_read == 0` is EOF.
+fn read_line(r: &mut impl BufRead, buf: &mut Vec<u8>) -> Result<(usize, bool), String> {
+    buf.clear();
+    let len = r.read_until(b'\n', buf).map_err(|e| format!("reading spill: {e}"))?;
+    Ok((len, buf.last() == Some(&b'\n')))
+}
+
+/// Parse a spill row's cell index, if the line is a valid row for an
+/// `n`-cell grid. Strict on purpose: a negative or fractional `"index"`
+/// must be rejected, not saturated/truncated into some other cell's slot
+/// (the lenient `as_usize` cast would silently misattribute the row).
+fn row_index(line: &[u8], n: usize) -> Option<usize> {
+    let text = std::str::from_utf8(line).ok()?;
+    let v = parse(text.trim_end()).ok()?;
+    match v.get("index")? {
+        Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 && ((*x) as usize) < n => {
+            Some(*x as usize)
+        }
+        _ => None,
+    }
+}
+
+/// Scan an existing spill for completed cells and compact it in place:
+/// keep the header and every valid, newline-terminated row (first copy
+/// wins on duplicates), drop the truncated tail an interrupt leaves
+/// behind. Returns `done[i] == true` for every cell already on disk.
+///
+/// An empty or header-truncated file (killed before the header landed)
+/// is reset to a fresh spill; a readable header from a *different* spec
+/// is a hard error.
+pub fn scan_and_compact(path: &Path, spec: &SweepSpec) -> Result<Vec<bool>, String> {
+    let n = spec.n_cells();
+    let mut done = vec![false; n];
+    let tmp = path.with_extension("jsonl.tmp");
+    {
+        let file = File::open(path).map_err(|e| format!("opening {path:?}: {e}"))?;
+        let mut r = BufReader::new(file);
+        let mut w = BufWriter::new(
+            File::create(&tmp).map_err(|e| format!("creating {tmp:?}: {e}"))?,
+        );
+        let mut buf = Vec::new();
+        let (len, complete) = read_line(&mut r, &mut buf)?;
+        if len == 0 || !complete {
+            // Killed before the header landed: no rows can follow it.
+            let mut line = header_value(spec).to_string_compact();
+            line.push('\n');
+            w.write_all(line.as_bytes()).map_err(|e| format!("writing {tmp:?}: {e}"))?;
+        } else {
+            check_header(&buf, spec, path)?;
+            w.write_all(&buf).map_err(|e| format!("writing {tmp:?}: {e}"))?;
+            loop {
+                let (len, complete) = read_line(&mut r, &mut buf)?;
+                if len == 0 {
+                    break;
+                }
+                if !complete {
+                    break; // in-flight row truncated by the interrupt: drop
+                }
+                let Some(idx) = row_index(&buf, n) else {
+                    break; // corrupt row: drop it and everything after
+                };
+                if !done[idx] {
+                    done[idx] = true;
+                    w.write_all(&buf).map_err(|e| format!("writing {tmp:?}: {e}"))?;
+                }
+            }
+        }
+        w.flush().map_err(|e| format!("writing {tmp:?}: {e}"))?;
+    }
+    fs::rename(&tmp, path).map_err(|e| format!("renaming {tmp:?} over {path:?}: {e}"))?;
+    Ok(done)
+}
+
+/// Run the sweep with per-cell streaming to `<out_dir>/cells.jsonl`,
+/// then assemble `<out_dir>/report.json` (or `.csv`) from the spill.
+/// With `resume`, cells already recorded by a previous (possibly
+/// interrupted) run of the **same spec** are skipped.
+pub fn run_streaming(
+    spec: &SweepSpec,
+    threads: usize,
+    out_dir: &Path,
+    format: Format,
+    resume: bool,
+    verbose: bool,
+) -> Result<StreamSummary, String> {
+    spec.validate()?;
+    fs::create_dir_all(out_dir).map_err(|e| format!("creating {out_dir:?}: {e}"))?;
+    let cells_path = out_dir.join(CELLS_FILE);
+    // Cells are derived per index on demand — the grid is never
+    // materialized, so worker memory stays O(1) per in-flight cell.
+    let n = spec.n_cells();
+
+    let done = if resume && cells_path.exists() {
+        scan_and_compact(&cells_path, spec)?
+    } else {
+        let mut line = header_value(spec).to_string_compact();
+        line.push('\n');
+        fs::write(&cells_path, line).map_err(|e| format!("writing {cells_path:?}: {e}"))?;
+        vec![false; n]
+    };
+    let pending: Vec<usize> = (0..n).filter(|&i| !done[i]).collect();
+    let n_resumed = n - pending.len();
+
+    let mut spill = OpenOptions::new()
+        .append(true)
+        .open(&cells_path)
+        .map_err(|e| format!("opening {cells_path:?}: {e}"))?;
+    let mut io_err: Option<String> = None;
+    let mut n_done = n_resumed;
+    pool::run_streamed(
+        &pending,
+        threads,
+        |i| run_cell(spec, &spec.cell(i)),
+        |_i, res| {
+            // One write per row: an interrupt loses at most the
+            // in-flight line, which the resume scan drops.
+            let mut line = res.to_json().to_string_compact();
+            line.push('\n');
+            if let Err(e) = spill.write_all(line.as_bytes()) {
+                // Returning false stops the pool: no point simulating
+                // the rest of the grid when rows can't be recorded.
+                io_err = Some(format!("appending to {cells_path:?}: {e}"));
+                return false;
+            }
+            n_done += 1;
+            if verbose {
+                let c = &res.cell;
+                println!(
+                    "[{n_done}/{n}] scenario {:>3} {:<12} {:>4}c {:>6.1} rps rep {} {:<12}",
+                    c.scenario,
+                    c.workload.name(),
+                    c.cores,
+                    c.rate,
+                    c.replica,
+                    c.policy
+                );
+            }
+            true
+        },
+    );
+    drop(spill);
+    if let Some(e) = io_err {
+        return Err(e);
+    }
+
+    let report_path = out_dir.join(match format {
+        Format::Json => "report.json",
+        Format::Csv => "report.csv",
+    });
+    assemble_report(&cells_path, spec, format, &report_path)?;
+    Ok(StreamSummary {
+        n_cells: n,
+        n_resumed,
+        n_run: pending.len(),
+        cells_path,
+        report_path,
+    })
+}
+
+/// Assemble the final report from a complete spill, streaming rows from
+/// disk in cell-index order — byte-identical to what
+/// [`SweepReport::render`] produces for the same spec.
+pub fn assemble_report(
+    cells_path: &Path,
+    spec: &SweepSpec,
+    format: Format,
+    report_path: &Path,
+) -> Result<(), String> {
+    let n = spec.n_cells();
+    // Pass 1: index the spill — the byte range of each cell's row.
+    let mut ranges: Vec<Option<(u64, usize)>> = vec![None; n];
+    {
+        let file = File::open(cells_path).map_err(|e| format!("opening {cells_path:?}: {e}"))?;
+        let mut r = BufReader::new(file);
+        let mut buf = Vec::new();
+        let (len, complete) = read_line(&mut r, &mut buf)?;
+        if len == 0 || !complete {
+            return Err(format!("{cells_path:?}: missing spill header"));
+        }
+        check_header(&buf, spec, cells_path)?;
+        let mut offset = len as u64;
+        loop {
+            let (len, complete) = read_line(&mut r, &mut buf)?;
+            if len == 0 || !complete {
+                break;
+            }
+            let Some(idx) = row_index(&buf, n) else {
+                break;
+            };
+            if ranges[idx].is_none() {
+                // Row length without the trailing newline.
+                ranges[idx] = Some((offset, len - 1));
+            }
+            offset += len as u64;
+        }
+    }
+    let missing = ranges.iter().filter(|r| r.is_none()).count();
+    if missing > 0 {
+        return Err(format!(
+            "{cells_path:?}: {missing} of {n} cells missing — interrupted sweep? rerun with --resume"
+        ));
+    }
+    let ranges: Vec<(u64, usize)> = ranges.into_iter().map(|r| r.unwrap()).collect();
+
+    // Pass 2: emit rows in cell-index order.
+    let mut src = File::open(cells_path).map_err(|e| format!("opening {cells_path:?}: {e}"))?;
+    let out = File::create(report_path).map_err(|e| format!("creating {report_path:?}: {e}"))?;
+    let mut w = BufWriter::new(out);
+    let write_err = |e: std::io::Error| format!("writing {report_path:?}: {e}");
+    match format {
+        Format::Json => write_report_json(&mut w, spec, &mut src, &ranges).map_err(write_err)?,
+        Format::Csv => write_report_csv(&mut w, &mut src, &ranges, cells_path)?,
+    }
+    w.flush().map_err(write_err)
+}
+
+/// Seek-and-parse one spill row.
+fn read_row(src: &mut File, (offset, len): (u64, usize)) -> Result<Value, String> {
+    src.seek(SeekFrom::Start(offset)).map_err(|e| format!("seeking spill: {e}"))?;
+    let mut buf = vec![0u8; len];
+    src.read_exact(&mut buf).map_err(|e| format!("reading spill row: {e}"))?;
+    let text = std::str::from_utf8(&buf).map_err(|_| "spill row is not UTF-8".to_string())?;
+    parse(text).map_err(|e| format!("spill row: {e}"))
+}
+
+/// Stream the JSON report. The glue between rows mirrors exactly what
+/// `Value::write` emits for the equivalent in-memory report object
+/// (top-level keys in BTreeMap order: cells, n_cells, schema_version,
+/// spec) — pinned byte-for-byte against [`SweepReport::render`] by
+/// `tests/sweep_stream.rs`.
+fn write_report_json<W: Write>(
+    w: &mut W,
+    spec: &SweepSpec,
+    src: &mut File,
+    ranges: &[(u64, usize)],
+) -> std::io::Result<()> {
+    let io_invalid =
+        |e: String| std::io::Error::new(std::io::ErrorKind::InvalidData, e);
+    w.write_all(b"{\n  \"cells\": [")?;
+    let mut buf = String::new();
+    for (k, &range) in ranges.iter().enumerate() {
+        if k > 0 {
+            w.write_all(b",")?;
+        }
+        w.write_all(b"\n    ")?;
+        let row = read_row(src, range).map_err(io_invalid)?;
+        buf.clear();
+        row.write_pretty_at(&mut buf, 2);
+        w.write_all(buf.as_bytes())?;
+    }
+    if !ranges.is_empty() {
+        w.write_all(b"\n  ")?;
+    }
+    w.write_all(b"],\n  \"n_cells\": ")?;
+    w.write_all(Value::from(ranges.len()).to_string_compact().as_bytes())?;
+    w.write_all(b",\n  \"schema_version\": ")?;
+    w.write_all(Value::from(OUTPUT_SCHEMA_VERSION).to_string_compact().as_bytes())?;
+    w.write_all(b",\n  \"spec\": ")?;
+    buf.clear();
+    spec.to_json().write_pretty_at(&mut buf, 1);
+    w.write_all(buf.as_bytes())?;
+    w.write_all(b"\n}\n")
+}
+
+/// Stream the CSV report: the same column extraction as
+/// [`SweepReport::to_csv`], row by row from the spill.
+fn write_report_csv<W: Write>(
+    w: &mut W,
+    src: &mut File,
+    ranges: &[(u64, usize)],
+    cells_path: &Path,
+) -> Result<(), String> {
+    let werr = |e: std::io::Error| format!("writing report: {e}");
+    w.write_all(CSV_COLUMNS.join(",").as_bytes()).map_err(werr)?;
+    w.write_all(b"\n").map_err(werr)?;
+    for &range in ranges {
+        let record = read_row(src, range)?;
+        let mut row = Vec::with_capacity(CSV_COLUMNS.len());
+        for col in CSV_COLUMNS {
+            match record.get(col) {
+                // Strings (workload, policy, seed) go in bare.
+                Some(Value::Str(s)) => row.push(s.clone()),
+                Some(v) => row.push(v.to_string_compact()),
+                None => {
+                    return Err(format!(
+                        "{cells_path:?}: spill row is missing CSV column '{col}'"
+                    ))
+                }
+            }
+        }
+        w.write_all(row.join(",").as_bytes()).map_err(werr)?;
+        w.write_all(b"\n").map_err(werr)?;
+    }
+    Ok(())
+}

@@ -17,7 +17,7 @@ use std::path::Path;
 use carbon_sim::carbon::{EmbodiedModel, ServerPowerModel};
 use carbon_sim::cluster::{Cluster, ClusterConfig};
 use carbon_sim::cpu::{AgingParams, TemperatureModel};
-use carbon_sim::experiments::{self, sweep, Scale};
+use carbon_sim::experiments::{self, sweep, sweep_stream, Scale};
 use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
 use carbon_sim::util::cli::Cli;
 use carbon_sim::util::stats::Summary;
@@ -57,7 +57,9 @@ fn top_usage() -> String {
      \x20 simulate     run the cluster simulator\n\
      \x20 sweep        parallel scenario sweep: rates × cores × policies × workloads ×\n\
      \x20              replicas, sharded over a worker pool (--threads), aggregated to\n\
-     \x20              JSON/CSV; bit-identical output at any thread count\n\
+     \x20              JSON/CSV; bit-identical output at any thread count. Grids come\n\
+     \x20              from axis flags or a JSON spec (--spec examples/specs/paper.json);\n\
+     \x20              --out-dir streams per-cell JSONL with crash resume (--resume)\n\
      \x20 bench        run the pinned perf matrix (short/long traces × 40/80 cores ×\n\
      \x20              all policies) and write events/sec to BENCH_<date>.json\n\
      \x20 figure       regenerate a paper figure (--fig 1|2|4|5|6|7|8)\n\
@@ -226,6 +228,7 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         "carbon-sim sweep",
         "parallel scenario sweep over rates × cores × policies × workloads × replicas",
     )
+    .opt("spec", "", "JSON sweep spec file (see examples/specs/); cannot be combined with axis flags")
     .opt("rates", "40,60,80,100", "comma-separated request rates (rps)")
     .opt("cores", "40,80", "comma-separated VM core counts")
     .opt("policies", "all", "comma-separated policies, or 'all' (linux,least-aged,proposed)")
@@ -237,7 +240,17 @@ fn cmd_sweep(rest: &[String]) -> i32 {
     .opt("seed", "42", "root seed; per-cell seeds derive from (seed, scenario index)")
     .opt("threads", "0", "worker threads (0 = one per available core)")
     .opt("out", "", "write the aggregated report to this file (default: stdout table only)")
+    .opt(
+        "out-dir",
+        "",
+        "stream one JSONL row per finished cell to <dir>/cells.jsonl (O(workers) memory) \
+         and assemble <dir>/report.<format> from it",
+    )
     .opt("format", "json", "report format: json | csv")
+    .flag(
+        "resume",
+        "with --out-dir: skip cells already recorded in cells.jsonl (spec hash must match)",
+    )
     .flag("quiet", "suppress the stdout summary table");
     let a = parse_or_exit(&cli, rest);
 
@@ -256,16 +269,40 @@ fn cmd_sweep(rest: &[String]) -> i32 {
     }
 
     let parsed = (|| -> Result<(sweep::SweepSpec, sweep::Format, usize), String> {
-        let spec = sweep::SweepSpec {
-            rates: sweep::parse_f64_list(&a.str_or("rates", ""))?,
-            core_counts: sweep::parse_usize_list(&a.str_or("cores", ""))?,
-            policies: sweep::parse_policy_list(&a.str_or("policies", "all"))?,
-            workloads: sweep::parse_workload_list(&a.str_or("workloads", "mixed"))?,
-            replicas: num(&a, "replicas")?,
-            duration_s: num(&a, "duration")?,
-            n_prompt: num(&a, "prompt-machines")?,
-            n_token: num(&a, "token-machines")?,
-            seed: num(&a, "seed")?,
+        let spec_path = a.str_or("spec", "");
+        let spec = if spec_path.is_empty() {
+            sweep::SweepSpec {
+                rates: sweep::parse_f64_list(&a.str_or("rates", ""))?,
+                core_counts: sweep::parse_usize_list(&a.str_or("cores", ""))?,
+                policies: sweep::parse_policy_list(&a.str_or("policies", "all"))?,
+                workloads: sweep::parse_workload_list(&a.str_or("workloads", "mixed"))?,
+                replicas: num(&a, "replicas")?,
+                duration_s: num(&a, "duration")?,
+                n_prompt: num(&a, "prompt-machines")?,
+                n_token: num(&a, "token-machines")?,
+                seed: num(&a, "seed")?,
+            }
+        } else {
+            // The spec file defines the whole grid; silently ignoring an
+            // explicitly typed axis flag would run the wrong grid for
+            // hours, so the combination is an error.
+            const AXIS_FLAGS: &[&str] = &[
+                "rates",
+                "cores",
+                "policies",
+                "workloads",
+                "replicas",
+                "duration",
+                "prompt-machines",
+                "token-machines",
+                "seed",
+            ];
+            if let Some(conflict) = AXIS_FLAGS.iter().find(|k| a.was_given(k)) {
+                return Err(format!(
+                    "--spec defines the whole grid; drop --{conflict} (edit the spec file instead)"
+                ));
+            }
+            carbon_sim::config::sweep_from_file(Path::new(&spec_path))?
         };
         // sweep::run validates the spec; only the format needs checking here.
         let format = sweep::Format::parse(&a.str_or("format", "json"))?;
@@ -279,6 +316,44 @@ fn cmd_sweep(rest: &[String]) -> i32 {
             return 2;
         }
     };
+
+    // --out-dir selects the streaming engine: per-cell JSONL spill with
+    // O(workers) memory, crash resume, and a report assembled from the
+    // spill (byte-identical to the in-memory path).
+    let out_dir = a.str_or("out-dir", "");
+    if a.flag("resume") && out_dir.is_empty() {
+        eprintln!("--resume requires --out-dir (the cells.jsonl spill to resume from)");
+        return 2;
+    }
+    if !out_dir.is_empty() && !a.str_or("out", "").is_empty() {
+        eprintln!("--out and --out-dir are mutually exclusive (the streaming report goes to <out-dir>/report.<format>)");
+        return 2;
+    }
+    if !out_dir.is_empty() {
+        let summary = match sweep_stream::run_streaming(
+            &spec,
+            threads,
+            Path::new(&out_dir),
+            format,
+            a.flag("resume"),
+            !a.flag("quiet"),
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        println!(
+            "streamed {} cells ({} resumed, {} run) to {}; report: {}",
+            summary.n_cells,
+            summary.n_resumed,
+            summary.n_run,
+            summary.cells_path.display(),
+            summary.report_path.display()
+        );
+        return 0;
+    }
 
     let report = match sweep::run(&spec, threads) {
         Ok(r) => r,

@@ -16,6 +16,17 @@
 //! where accurate aging values (equivalent stress time, as an aging
 //! sensor would report ΔVth) are consulted (§5).
 //!
+//! # The 250 ms selective-idling tick
+//!
+//! Selective Core Idling runs at a fixed 4 Hz cadence. The rate is *not*
+//! load-bearing for oversubscription: that is handled event-driven (the
+//! reaction function's fast arctan branch fires the instant a task finds
+//! no free core), so the periodic tick only needs to track load
+//! *decreases*. 250 ms follows inference-burst decay without thrashing
+//! C6 transitions (whose hardware entry/exit latency is ~100 µs), and
+//! the cluster coalesces the per-machine ticks into one all-machine
+//! event per period to keep the event queue flat.
+//!
 //! §Perf: `adjust` runs every 250 ms on every machine of every scenario
 //! cell, so its candidate selection is allocation-free — a reusable
 //! scratch buffer plus `select_nth_unstable_by` partial selection instead

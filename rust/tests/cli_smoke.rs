@@ -192,6 +192,81 @@ fn sweep_csv_format_writes_table() {
 }
 
 #[test]
+fn sweep_spec_file_streams_cells_and_assembles_report() {
+    let spec = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/smoke.json");
+    let dir = std::env::temp_dir().join("carbon_sim_cli_sweep_spec");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out_dir = dir.join("out");
+    let (ok, text) = run(&[
+        "sweep",
+        "--spec",
+        spec,
+        "--threads",
+        "4",
+        "--quiet",
+        "--out-dir",
+        out_dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("streamed 3 cells"), "{text}");
+    // Spill: header + one row per cell (1 rate × 1 core count × 3 policies).
+    let spill = std::fs::read_to_string(out_dir.join("cells.jsonl")).unwrap();
+    assert_eq!(spill.lines().count(), 1 + 3, "{spill}");
+    assert!(spill.lines().next().unwrap().contains("sweep-cells"), "{spill}");
+    // Report: valid JSON with the documented shape.
+    let body = std::fs::read_to_string(out_dir.join("report.json")).unwrap();
+    let v = carbon_sim::util::json::parse(&body).unwrap();
+    assert_eq!(v.usize_or("n_cells", 0), 3);
+    assert_eq!(v.usize_or("schema_version", 0), 1);
+    assert_eq!(v.get("cells").and_then(|c| c.as_arr()).unwrap().len(), 3);
+
+    // A --resume re-run finds everything done and reproduces the report.
+    let (ok2, text2) = run(&[
+        "sweep",
+        "--spec",
+        spec,
+        "--quiet",
+        "--resume",
+        "--out-dir",
+        out_dir.to_str().unwrap(),
+    ]);
+    assert!(ok2, "{text2}");
+    assert!(text2.contains("(3 resumed, 0 run)"), "{text2}");
+    assert_eq!(std::fs::read_to_string(out_dir.join("report.json")).unwrap(), body);
+}
+
+#[test]
+fn sweep_spec_flag_rejects_bad_files() {
+    let dir = std::env::temp_dir().join("carbon_sim_cli_sweep_badspec");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, r#"{"ratez": [40]}"#).unwrap();
+    let (ok, text) = run(&["sweep", "--spec", bad.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(text.contains("ratez"), "{text}");
+    let (ok2, _) = run(&["sweep", "--spec", "/nonexistent_spec.json"]);
+    assert!(!ok2);
+}
+
+#[test]
+fn sweep_spec_conflicts_with_axis_flags() {
+    let spec = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/smoke.json");
+    let (ok, text) = run(&["sweep", "--spec", spec, "--rates", "4"]);
+    assert!(!ok);
+    assert!(text.contains("--rates"), "{text}");
+    let (ok2, text2) = run(&["sweep", "--spec", spec, "--seed", "9"]);
+    assert!(!ok2);
+    assert!(text2.contains("--seed"), "{text2}");
+}
+
+#[test]
+fn sweep_resume_requires_out_dir() {
+    let (ok, text) = run(&["sweep", "--resume"]);
+    assert!(!ok);
+    assert!(text.contains("--out-dir"), "{text}");
+}
+
+#[test]
 fn sweep_rejects_bad_flags_with_exit_2() {
     for bad in [
         vec!["sweep", "--no-such-flag"],
@@ -205,6 +280,7 @@ fn sweep_rejects_bad_flags_with_exit_2() {
         vec!["sweep", "--duration", "12O"],
         vec!["sweep", "--threads", "two"],
         vec!["sweep", "--seed", "x7"],
+        vec!["sweep", "--out", "a.json", "--out-dir", "b"],
     ] {
         let (ok, text) = run(&bad);
         assert!(!ok, "expected failure for {bad:?}:\n{text}");

@@ -1,0 +1,153 @@
+//! Streaming-sweep contract tests: the disk-backed engine must produce
+//! reports **byte-identical** to the in-memory engine at any thread
+//! count, and an interrupted run resumed from its truncated
+//! `cells.jsonl` must converge to the same bytes as an uninterrupted
+//! run.
+
+use std::fs;
+use std::path::PathBuf;
+
+use carbon_sim::experiments::sweep::{self, Format, SweepSpec};
+use carbon_sim::experiments::sweep_stream::{self, CELLS_FILE};
+use carbon_sim::trace::azure::Workload;
+
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        rates: vec![5.0],
+        core_counts: vec![8],
+        policies: vec!["linux".into(), "least-aged".into(), "proposed".into()],
+        workloads: vec![Workload::Mixed, Workload::Bursty],
+        replicas: 1,
+        duration_s: 4.0,
+        n_prompt: 1,
+        n_token: 2,
+        seed: 77,
+    }
+}
+
+/// Fresh scratch dir under the system temp root.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("carbon_sim_sweep_stream").join(name);
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn streamed_json_report_is_byte_identical_to_in_memory_at_any_thread_count() {
+    let spec = tiny_spec();
+    let expected = sweep::run(&spec, 1).unwrap().render(Format::Json);
+    for threads in [1, 4] {
+        let dir = scratch(&format!("json_t{threads}"));
+        let s =
+            sweep_stream::run_streaming(&spec, threads, &dir, Format::Json, false, false).unwrap();
+        assert_eq!(s.n_cells, spec.n_cells());
+        assert_eq!(s.n_run, spec.n_cells());
+        assert_eq!(s.n_resumed, 0);
+        let streamed = fs::read_to_string(&s.report_path).unwrap();
+        assert_eq!(streamed, expected, "streamed JSON diverged at {threads} threads");
+        // The spill holds one header plus one row per cell.
+        let spill = fs::read_to_string(dir.join(CELLS_FILE)).unwrap();
+        assert_eq!(spill.lines().count(), 1 + spec.n_cells());
+        assert!(spill.lines().next().unwrap().contains(&spec.spec_hash()));
+    }
+}
+
+#[test]
+fn streamed_csv_report_is_byte_identical_to_in_memory() {
+    let spec = tiny_spec();
+    let expected = sweep::run(&spec, 1).unwrap().render(Format::Csv);
+    let dir = scratch("csv");
+    let s = sweep_stream::run_streaming(&spec, 3, &dir, Format::Csv, false, false).unwrap();
+    assert_eq!(fs::read_to_string(&s.report_path).unwrap(), expected);
+}
+
+#[test]
+fn resume_after_interrupt_skips_done_cells_and_matches_uninterrupted_bytes() {
+    let spec = tiny_spec();
+    let n = spec.n_cells();
+
+    // Uninterrupted reference run.
+    let ref_dir = scratch("resume_ref");
+    let r = sweep_stream::run_streaming(&spec, 2, &ref_dir, Format::Json, false, false).unwrap();
+    let expected = fs::read(&r.report_path).unwrap();
+
+    // "Interrupted" run: keep the header + the first k completed rows and
+    // a half-written in-flight line, exactly what a kill leaves behind.
+    let dir = scratch("resume_cut");
+    sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, false, false).unwrap();
+    let cells_path = dir.join(CELLS_FILE);
+    let full = fs::read_to_string(&cells_path).unwrap();
+    let lines: Vec<&str> = full.lines().collect();
+    assert_eq!(lines.len(), 1 + n);
+    let k = 2;
+    let mut cut: String =
+        lines[..1 + k].iter().map(|l| format!("{l}\n")).collect();
+    cut.push_str("{\"index\": 999, \"truncated in-fli"); // no trailing newline
+    fs::write(&cells_path, cut).unwrap();
+    fs::remove_file(dir.join("report.json")).unwrap();
+
+    let s = sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, true, false).unwrap();
+    assert_eq!(s.n_resumed, k, "resume must skip exactly the intact rows");
+    assert_eq!(s.n_run, n - k);
+    assert_eq!(
+        fs::read(&s.report_path).unwrap(),
+        expected,
+        "resumed report must be byte-identical to an uninterrupted run"
+    );
+    // The compacted spill is complete again.
+    let spill = fs::read_to_string(&cells_path).unwrap();
+    assert_eq!(spill.lines().count(), 1 + n);
+}
+
+#[test]
+fn resume_with_a_different_spec_is_refused() {
+    let spec = tiny_spec();
+    let dir = scratch("resume_wrong_spec");
+    sweep_stream::run_streaming(&spec, 1, &dir, Format::Json, false, false).unwrap();
+    let mut other = tiny_spec();
+    other.seed = 78;
+    let err =
+        sweep_stream::run_streaming(&other, 1, &dir, Format::Json, true, false).unwrap_err();
+    assert!(err.contains("hash mismatch"), "{err}");
+}
+
+#[test]
+fn resume_on_a_complete_spill_runs_nothing_and_reproduces_the_report() {
+    let spec = tiny_spec();
+    let dir = scratch("resume_noop");
+    let first = sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, false, false).unwrap();
+    let expected = fs::read(&first.report_path).unwrap();
+    let again = sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, true, false).unwrap();
+    assert_eq!(again.n_run, 0);
+    assert_eq!(again.n_resumed, spec.n_cells());
+    assert_eq!(fs::read(&again.report_path).unwrap(), expected);
+}
+
+#[test]
+fn resume_into_an_empty_dir_just_runs_everything() {
+    let spec = tiny_spec();
+    let dir = scratch("resume_fresh");
+    let s = sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, true, false).unwrap();
+    assert_eq!(s.n_run, spec.n_cells());
+    assert_eq!(s.n_resumed, 0);
+}
+
+#[test]
+fn assemble_refuses_an_incomplete_spill() {
+    let spec = tiny_spec();
+    let dir = scratch("assemble_incomplete");
+    sweep_stream::run_streaming(&spec, 1, &dir, Format::Json, false, false).unwrap();
+    let cells_path = dir.join(CELLS_FILE);
+    let full = fs::read_to_string(&cells_path).unwrap();
+    let cut: String = full.lines().take(2).map(|l| format!("{l}\n")).collect();
+    fs::write(&cells_path, cut).unwrap();
+    let err = sweep_stream::assemble_report(
+        &cells_path,
+        &spec,
+        Format::Json,
+        &dir.join("report2.json"),
+    )
+    .unwrap_err();
+    assert!(err.contains("--resume"), "{err}");
+}
