@@ -1,0 +1,221 @@
+//! Merge sharded sweep spills into one report (`carbon-sim merge`).
+//!
+//! A grid split with `sweep --shard K/N` leaves N `cells.jsonl` spills,
+//! typically on N machines. [`merge_spills`] reassembles them:
+//!
+//! * **Validation.** Every spill must carry the same `spec_hash`,
+//!   `schema_version`, and `n_cells` as the first (errors name the
+//!   offending path), and together the spills must cover the grid
+//!   **disjointly and completely** — duplicate cell indexes (overlapping
+//!   shard sets, or the same shard passed twice) and missing indexes (a
+//!   forgotten or unfinished shard) are reported by index. Within one
+//!   spill, repeated rows for a cell keep the **first** copy and a
+//!   truncated tail is dropped — exactly the rules
+//!   [`sweep_stream::scan_and_compact`] applies on resume, so a spill
+//!   reads the same whether it is resumed or merged.
+//! * **Assembly.** The merged `<out-dir>/cells.jsonl` is written as an
+//!   unsharded spill — header from the spec embedded in the shard
+//!   headers, rows copied verbatim in cell-index order — and the report
+//!   is assembled from it by [`sweep_stream::assemble_report`]. Because
+//!   cell seeds derive from cell indexes (never execution order or
+//!   machine), the resulting `report.json`/`report.csv` is
+//!   **byte-identical** to a single-machine run of the full grid
+//!   (pinned by `tests/sweep_shard.rs`).
+
+use std::fs::{self, File};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::sweep::{Format, SweepSpec};
+use super::sweep_stream::{
+    self, parse_header, read_line, row_index, SpillHeader, CELLS_FILE,
+};
+
+/// What a merge did (the CLI's summary line).
+#[derive(Clone, Debug)]
+pub struct MergeSummary {
+    /// Input spills merged.
+    pub n_spills: usize,
+    /// Cells in the reassembled grid.
+    pub n_cells: usize,
+    pub cells_path: PathBuf,
+    pub report_path: PathBuf,
+}
+
+/// Cap index lists in error messages — a million-cell grid missing one
+/// whole shard should not print a million numbers.
+fn fmt_indexes(idx: &[usize]) -> String {
+    const SHOWN: usize = 16;
+    let shown: Vec<String> = idx.iter().take(SHOWN).map(|i| i.to_string()).collect();
+    if idx.len() > SHOWN {
+        format!("[{}, … +{} more]", shown.join(", "), idx.len() - SHOWN)
+    } else {
+        format!("[{}]", shown.join(", "))
+    }
+}
+
+/// One input spill opened for merging.
+struct Spill {
+    cells_path: PathBuf,
+    header: SpillHeader,
+}
+
+/// Read and identity-check the header of `<dir>/cells.jsonl`.
+fn open_spill(dir: &Path) -> Result<Spill, String> {
+    let cells_path = dir.join(CELLS_FILE);
+    let file = File::open(&cells_path)
+        .map_err(|e| format!("opening {cells_path:?}: {e} (is {dir:?} a sweep --out-dir?)"))?;
+    let mut r = BufReader::new(file);
+    let mut buf = Vec::new();
+    let (len, complete) = read_line(&mut r, &mut buf)?;
+    if len == 0 || !complete {
+        return Err(format!("{cells_path:?}: missing spill header"));
+    }
+    let header = parse_header(&buf, &cells_path)?;
+    Ok(Spill { cells_path, header })
+}
+
+/// Validate the shard spills under `dirs` against one another and
+/// reassemble them into `<out_dir>/cells.jsonl` plus the final report —
+/// byte-identical to an unsharded single-machine run of the same spec.
+pub fn merge_spills(
+    dirs: &[PathBuf],
+    out_dir: &Path,
+    format: Format,
+) -> Result<MergeSummary, String> {
+    if dirs.is_empty() {
+        return Err("merge: need at least one shard directory".to_string());
+    }
+    let spills: Vec<Spill> = dirs.iter().map(|d| open_spill(d)).collect::<Result<_, _>>()?;
+
+    // The first spill fixes the grid identity; every other spill must
+    // match it, and its embedded spec must hash to the recorded value.
+    let first = &spills[0];
+    let spec_v = first.header.spec.as_ref().ok_or_else(|| {
+        format!(
+            "{:?}: spill header has no embedded spec — cannot reconstruct the grid",
+            first.cells_path
+        )
+    })?;
+    let spec: SweepSpec = crate::config::sweep_from_value(spec_v)
+        .map_err(|e| format!("{:?}: embedded spec: {e}", first.cells_path))?;
+    if spec.spec_hash() != first.header.spec_hash {
+        return Err(format!(
+            "{:?}: embedded spec hashes to {}, header records {} — corrupt spill header",
+            first.cells_path,
+            spec.spec_hash(),
+            first.header.spec_hash
+        ));
+    }
+    for s in &spills[1..] {
+        if s.header.spec_hash != first.header.spec_hash {
+            return Err(format!(
+                "{:?}: spec hash mismatch ({} here, {} in {:?}) — shards of different \
+                 grids cannot merge",
+                s.cells_path, s.header.spec_hash, first.header.spec_hash, first.cells_path
+            ));
+        }
+        if s.header.n_cells != first.header.n_cells {
+            return Err(format!(
+                "{:?}: spill expects {} cells, {:?} expects {}",
+                s.cells_path, s.header.n_cells, first.cells_path, first.header.n_cells
+            ));
+        }
+    }
+    let n = spec.n_cells();
+
+    // Scan every spill's rows: byte range per cell index. Within a
+    // spill the first copy wins — the same dedup rule the resume
+    // compaction applies — while a duplicate *across* spills is a
+    // coverage-overlap error.
+    let mut ranges: Vec<Option<(usize, u64, usize)>> = vec![None; n];
+    let mut overlap: Vec<usize> = Vec::new();
+    for (spill_id, s) in spills.iter().enumerate() {
+        let file = File::open(&s.cells_path)
+            .map_err(|e| format!("opening {:?}: {e}", s.cells_path))?;
+        let mut r = BufReader::new(file);
+        let mut buf = Vec::new();
+        let (header_len, _) = read_line(&mut r, &mut buf)?;
+        let mut offset = header_len as u64;
+        loop {
+            let (len, complete) = read_line(&mut r, &mut buf)?;
+            if len == 0 || !complete {
+                break; // EOF, or an interrupt's truncated tail: drop
+            }
+            let Some(idx) = row_index(&buf, n) else {
+                break; // corrupt row: drop it and everything after
+            };
+            match ranges[idx] {
+                Some((owner, _, _)) if owner != spill_id => overlap.push(idx),
+                Some(_) => {} // repeat within the spill: first copy wins
+                None => ranges[idx] = Some((spill_id, offset, len - 1)),
+            }
+            offset += len as u64;
+        }
+    }
+    if !overlap.is_empty() {
+        overlap.sort_unstable();
+        overlap.dedup();
+        let example = overlap[0];
+        let owner = ranges[example].map(|(o, _, _)| o).unwrap_or(0);
+        return Err(format!(
+            "merge: overlapping shard coverage — {} cell index(es) appear in more than one \
+             spill (e.g. cell {example} is in {:?} and at least one later spill): {} — \
+             shards must partition the grid disjointly; pass each shard exactly once",
+            overlap.len(),
+            spills[owner].cells_path,
+            fmt_indexes(&overlap)
+        ));
+    }
+    let missing: Vec<usize> = (0..n).filter(|&i| ranges[i].is_none()).collect();
+    if !missing.is_empty() {
+        return Err(format!(
+            "merge: incomplete shard set — {} of {n} cells missing: {} — pass every shard \
+             directory; an interrupted shard can be finished with \
+             `carbon-sim sweep --resume --shard K/N` first",
+            missing.len(),
+            fmt_indexes(&missing)
+        ));
+    }
+
+    // Reassemble: an unsharded spill, rows verbatim in cell-index order.
+    // Written to a temp file and renamed, so an out-dir that doubles as
+    // an input dir never clobbers a spill while rows are still read.
+    fs::create_dir_all(out_dir).map_err(|e| format!("creating {out_dir:?}: {e}"))?;
+    let cells_path = out_dir.join(CELLS_FILE);
+    let tmp = cells_path.with_extension("jsonl.tmp");
+    {
+        let mut srcs: Vec<File> = spills
+            .iter()
+            .map(|s| {
+                File::open(&s.cells_path).map_err(|e| format!("opening {:?}: {e}", s.cells_path))
+            })
+            .collect::<Result<_, _>>()?;
+        let mut w = BufWriter::new(
+            File::create(&tmp).map_err(|e| format!("creating {tmp:?}: {e}"))?,
+        );
+        let werr = |e: std::io::Error| format!("writing {tmp:?}: {e}");
+        let mut header = sweep_stream::full_header_line(&spec);
+        header.push('\n');
+        w.write_all(header.as_bytes()).map_err(werr)?;
+        let mut buf = Vec::new();
+        for &range in &ranges {
+            let (spill_id, offset, len) = range.expect("coverage verified complete");
+            let src = &mut srcs[spill_id];
+            src.seek(SeekFrom::Start(offset))
+                .map_err(|e| format!("seeking {:?}: {e}", spills[spill_id].cells_path))?;
+            buf.resize(len, 0);
+            src.read_exact(&mut buf)
+                .map_err(|e| format!("reading {:?}: {e}", spills[spill_id].cells_path))?;
+            w.write_all(&buf).map_err(werr)?;
+            w.write_all(b"\n").map_err(werr)?;
+        }
+        w.flush().map_err(werr)?;
+    }
+    fs::rename(&tmp, &cells_path)
+        .map_err(|e| format!("renaming {tmp:?} over {cells_path:?}: {e}"))?;
+
+    let report_path = out_dir.join(sweep_stream::report_file_name(format));
+    sweep_stream::assemble_report(&cells_path, &spec, format, &report_path)?;
+    Ok(MergeSummary { n_spills: spills.len(), n_cells: n, cells_path, report_path })
+}

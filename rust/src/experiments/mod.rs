@@ -9,9 +9,12 @@
 //! deterministic per-cell seeds and JSON/CSV aggregation
 //! (`carbon-sim sweep`). [`sweep_stream`] is its disk-backed variant:
 //! per-cell JSONL spill, crash resume, and report assembly from the
-//! spill file (`--out-dir` / `--resume`). [`run_matrix`] itself runs its
-//! paired cells on the same pool, so `carbon-sim figure --fig 6|7|8`
-//! parallelizes too.
+//! spill file (`--out-dir` / `--resume`); `--shard K/N` restricts a run
+//! to one interleaved slice of the grid so N machines can split it, and
+//! [`merge`] (`carbon-sim merge`) validates and reassembles the shard
+//! spills into a report byte-identical to a single-machine run.
+//! [`run_matrix`] itself runs its paired cells on the same pool, so
+//! `carbon-sim figure --fig 6|7|8` parallelizes too.
 
 pub mod bench;
 pub mod fig1;
@@ -21,6 +24,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod merge;
 pub mod sweep;
 pub mod sweep_stream;
 
@@ -28,7 +32,12 @@ pub mod sweep_stream;
 /// produces (sweep report JSON, `cells.jsonl` header, bench JSON), so
 /// `docs/output-schemas.md` can be versioned against the files. Bump it
 /// whenever a field is added, removed, or changes meaning.
-pub const OUTPUT_SCHEMA_VERSION: usize = 1;
+///
+/// Version history: **1** — initial schemas; **2** — spill headers embed
+/// the canonical `spec` plus optional `shard_index`/`shard_count`,
+/// non-finite numbers serialize as `NaN`/`Infinity`/`-Infinity` instead
+/// of `null`, and CSV string fields use RFC-4180 quoting when needed.
+pub const OUTPUT_SCHEMA_VERSION: usize = 2;
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::metrics::SimResult;

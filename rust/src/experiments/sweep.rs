@@ -32,6 +32,7 @@
 //! the final report (byte-identical to [`SweepReport::render`]) from the
 //! spill, with crash resume.
 
+use std::fmt;
 use std::path::Path;
 
 use crate::cluster::{Cluster, ClusterConfig};
@@ -205,6 +206,75 @@ impl SweepSpec {
     }
 }
 
+/// A `K/N` shard assignment for distributing one grid across machines:
+/// the invocation owns exactly the cells whose
+/// `cell_index % count == index` (see [`ShardSpec::owns`]), so the N
+/// shards partition the grid disjointly and completely. `0/1` (the
+/// default, [`ShardSpec::full`]) is the whole grid. Interleaved
+/// ownership keeps shards balanced across slow and fast cells regardless
+/// of how the axes are ordered.
+///
+/// Because cell seeds derive from the cell index ([`cell_seed`]) and
+/// never from execution order, a cell simulates identically whichever
+/// shard runs it — which is what lets `carbon-sim merge` reassemble
+/// shard spills into a report byte-identical to a single-machine run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// This shard's position, in `0..count`.
+    pub index: usize,
+    /// Total number of shards the grid is split across.
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// The whole grid as one shard (`0/1`) — an unsharded run.
+    pub fn full() -> ShardSpec {
+        ShardSpec { index: 0, count: 1 }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.count == 1
+    }
+
+    pub fn new(index: usize, count: usize) -> Result<ShardSpec, String> {
+        if count == 0 {
+            return Err("shard count must be ≥ 1".to_string());
+        }
+        if index >= count {
+            return Err(format!("shard index {index} out of range for {count} shards (0..{count})"));
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Parse the CLI form `K/N` (e.g. `--shard 0/3`).
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let (k, n) = s
+            .split_once('/')
+            .ok_or_else(|| format!("bad shard '{s}': expected K/N, e.g. 0/3"))?;
+        let index =
+            k.trim().parse::<usize>().map_err(|e| format!("bad shard index '{k}': {e}"))?;
+        let count =
+            n.trim().parse::<usize>().map_err(|e| format!("bad shard count '{n}': {e}"))?;
+        ShardSpec::new(index, count)
+    }
+
+    /// Does this shard own the cell at `cell_index`?
+    pub fn owns(&self, cell_index: usize) -> bool {
+        cell_index % self.count == self.index
+    }
+
+    /// How many cells of an `n`-cell grid this shard owns.
+    pub fn owned_count(&self, n: usize) -> usize {
+        n / self.count + usize::from(n % self.count > self.index)
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
 /// Derive a cell's seed from the spec seed and its **scenario** index.
 /// A pure function of its arguments — independent of thread count and
 /// execution order — so sweeps are reproducible by construction.
@@ -346,6 +416,28 @@ pub const CSV_COLUMNS: &[&str] = &[
     "idle_p50",
 ];
 
+/// RFC-4180 CSV field quoting: wrap the field in double quotes (doubling
+/// any inner quote) when it contains a comma, quote, or line break;
+/// everything else passes through bare, so reports whose fields never
+/// need quoting keep their historic bytes. Without this, one
+/// spec-provided name containing a comma silently shifts every column
+/// after it.
+pub fn csv_field(s: &str) -> String {
+    if !s.contains(|c| matches!(c, ',' | '"' | '\n' | '\r')) {
+        return s.to_string();
+    }
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        if c == '"' {
+            out.push('"');
+        }
+        out.push(c);
+    }
+    out.push('"');
+    out
+}
+
 impl SweepReport {
     /// The whole report as one deterministic JSON document (schema
     /// documented in `docs/output-schemas.md`, versioned by
@@ -370,8 +462,9 @@ impl SweepReport {
             let row: Vec<String> = CSV_COLUMNS
                 .iter()
                 .map(|col| match record.get(col) {
-                    // Strings (workload, policy, seed) go in bare.
-                    Some(Value::Str(s)) => s.clone(),
+                    // Strings (workload, policy, seed) are quoted only
+                    // when RFC 4180 requires it.
+                    Some(Value::Str(s)) => csv_field(s),
                     Some(v) => v.to_string_compact(),
                     None => unreachable!("CSV column '{col}' missing from cell record"),
                 })
@@ -628,6 +721,82 @@ mod tests {
         assert!(parse_workload_list("mixed,frob").is_err());
         assert_eq!(Format::parse("json").unwrap(), Format::Json);
         assert!(Format::parse("xml").is_err());
+    }
+
+    #[test]
+    fn shard_spec_parses_and_partitions() {
+        let s = ShardSpec::parse("1/3").unwrap();
+        assert_eq!((s.index, s.count), (1, 3));
+        assert_eq!(s.to_string(), "1/3");
+        assert!(!s.is_full());
+        assert!(ShardSpec::parse("0/1").unwrap().is_full());
+        for bad in ["", "3", "x/2", "1/x", "1/0", "2/2", "5/3", "1/2/3"] {
+            assert!(ShardSpec::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        // N shards partition any grid disjointly and completely.
+        for n in [0usize, 1, 7, 12] {
+            for count in [1usize, 2, 3, 5] {
+                let shards: Vec<ShardSpec> =
+                    (0..count).map(|k| ShardSpec::new(k, count).unwrap()).collect();
+                let mut owners = vec![0usize; n];
+                for sh in &shards {
+                    let owned: Vec<usize> = (0..n).filter(|&i| sh.owns(i)).collect();
+                    assert_eq!(owned.len(), sh.owned_count(n), "{sh} of {n}");
+                    for i in owned {
+                        owners[i] += 1;
+                    }
+                }
+                assert!(owners.iter().all(|&c| c == 1), "n={n} count={count}: {owners:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn csv_field_applies_rfc4180_quoting() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field(""), "");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_field("two\nlines"), "\"two\nlines\"");
+        assert_eq!(csv_field("cr\rhere"), "\"cr\rhere\"");
+    }
+
+    #[test]
+    fn csv_quotes_fields_that_need_it_and_roundtrips() {
+        // A cell whose policy name carries a comma and quotes must not
+        // shift the columns after it. to_csv never validates names, so
+        // mutate a real cell's record post-run.
+        let mut spec = SweepSpec::smoke();
+        spec.duration_s = 2.0;
+        spec.policies = vec!["linux".into()];
+        let mut report = run(&spec, 1).unwrap();
+        let evil = "pro,posed \"v2\"";
+        report.cells[0].cell.policy = evil.to_string();
+        let csv = report.to_csv();
+        let line = csv.lines().nth(1).unwrap();
+        // Minimal RFC-4180 reader: split on commas outside quotes,
+        // un-double inner quotes.
+        let mut fields: Vec<String> = Vec::new();
+        let mut cur = String::new();
+        let mut in_quotes = false;
+        let mut chars = line.chars().peekable();
+        while let Some(c) = chars.next() {
+            match c {
+                '"' if in_quotes && chars.peek() == Some(&'"') => {
+                    cur.push('"');
+                    chars.next();
+                }
+                '"' => in_quotes = !in_quotes,
+                ',' if !in_quotes => fields.push(std::mem::take(&mut cur)),
+                c => cur.push(c),
+            }
+        }
+        fields.push(cur);
+        assert_eq!(fields.len(), CSV_COLUMNS.len(), "{line}");
+        let policy_col = CSV_COLUMNS.iter().position(|&c| c == "policy").unwrap();
+        assert_eq!(fields[policy_col], evil);
+        // The column after policy is still the seed, undisturbed.
+        assert_eq!(fields[policy_col + 1], format!("{}", report.cells[0].cell.seed));
     }
 
     #[test]

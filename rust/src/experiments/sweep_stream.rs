@@ -27,12 +27,19 @@
 //!   report is byte-identical to [`SweepReport::render`] on an in-memory
 //!   run — at any `--threads` value, interrupted or not (covered by
 //!   `tests/sweep_stream.rs`).
+//! * **Sharding.** `--shard K/N` ([`ShardSpec`]) runs only the cells
+//!   with `index % N == K`, spilled exactly as above; the header records
+//!   the shard assignment, `--resume` composes with it (a partial shard
+//!   resumes like a partial grid), and no report is assembled — the N
+//!   shard spills, possibly from N machines, are validated and
+//!   reassembled by [`super::merge`] (`carbon-sim merge`) into a report
+//!   byte-identical to a single-machine run of the whole grid.
 
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
-use super::sweep::{run_cell, Format, SweepSpec, CSV_COLUMNS};
+use super::sweep::{run_cell, Format, ShardSpec, SweepSpec, CSV_COLUMNS};
 #[allow(unused_imports)] // rustdoc links
 use super::sweep::{SweepCellResult, SweepReport};
 use super::OUTPUT_SCHEMA_VERSION;
@@ -45,54 +52,135 @@ pub const CELLS_FILE: &str = "cells.jsonl";
 /// What a streaming run did (the CLI's summary line).
 #[derive(Clone, Debug)]
 pub struct StreamSummary {
+    /// Cells this invocation is responsible for: the whole grid when
+    /// unsharded, the shard's owned subset under `--shard K/N`.
     pub n_cells: usize,
     /// Cells already present in `cells.jsonl` and skipped (`--resume`).
     pub n_resumed: usize,
     /// Cells actually simulated by this invocation.
     pub n_run: usize,
     pub cells_path: PathBuf,
-    pub report_path: PathBuf,
+    /// `None` for a shard run: a shard spill covers only part of the
+    /// grid, so the report comes from `carbon-sim merge`.
+    pub report_path: Option<PathBuf>,
 }
 
-/// The spill header row (line 1 of `cells.jsonl`).
-fn header_value(spec: &SweepSpec) -> Value {
-    Value::obj(vec![
+/// The spill header row (line 1 of `cells.jsonl`). Embeds the full
+/// canonical spec (not just its hash) so a spill is self-contained:
+/// `carbon-sim merge` reconstructs the grid from the header alone,
+/// without needing the original `--spec` file on the merging machine.
+/// The shard fields are written only for sharded runs; their absence
+/// means full coverage (`0/1`), so an unsharded spill carries no shard
+/// noise. (Spills from schema version 1 are refused outright by the
+/// version check, sharded or not.)
+fn header_value(spec: &SweepSpec, shard: &ShardSpec) -> Value {
+    let mut pairs = vec![
         ("kind", "sweep-cells".into()),
         ("schema_version", OUTPUT_SCHEMA_VERSION.into()),
         ("spec_hash", spec.spec_hash().as_str().into()),
         ("n_cells", spec.n_cells().into()),
-    ])
+        ("spec", spec.to_json()),
+    ];
+    if !shard.is_full() {
+        pairs.push(("shard_index", shard.index.into()));
+        pairs.push(("shard_count", shard.count.into()));
+    }
+    Value::obj(pairs)
 }
 
-/// Validate a complete header line against the current spec. Every
-/// failure names what diverged — a resume must never silently mix cells
-/// from a different grid.
-fn check_header(line: &[u8], spec: &SweepSpec, path: &Path) -> Result<(), String> {
+/// The compact header line (no trailing newline) of an **unsharded**
+/// spill for `spec` — what a fresh full-grid run writes, and what
+/// [`super::merge`] stamps onto a reassembled spill.
+pub(crate) fn full_header_line(spec: &SweepSpec) -> String {
+    header_value(spec, &ShardSpec::full()).to_string_compact()
+}
+
+/// A parsed and version-checked spill header.
+pub(crate) struct SpillHeader {
+    pub spec_hash: String,
+    pub n_cells: usize,
+    /// Recorded shard assignment; `0/1` when the header has no shard
+    /// fields (an unsharded spill).
+    pub shard: ShardSpec,
+    /// The embedded canonical spec, when present.
+    pub spec: Option<Value>,
+}
+
+/// Strict non-negative-integer header field, defaulting when absent.
+/// The lenient `as_usize` cast would saturate/truncate a corrupt value
+/// (`-1`, `1.7`) into a plausible one — same reasoning as [`row_index`].
+fn header_usize(v: &Value, key: &str, default: usize, path: &Path) -> Result<usize, String> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(Value::Num(x)) if *x >= 0.0 && x.fract() == 0.0 && *x < 9_007_199_254_740_992.0 => {
+            Ok(*x as usize)
+        }
+        Some(other) => Err(format!(
+            "{path:?}: spill header field '{key}' must be a non-negative integer, got {other}"
+        )),
+    }
+}
+
+/// Parse a complete header line, checking only spill identity (kind,
+/// schema version, well-formed shard fields) — comparisons against a
+/// concrete spec belong to [`check_header`].
+pub(crate) fn parse_header(line: &[u8], path: &Path) -> Result<SpillHeader, String> {
     let text = std::str::from_utf8(line).map_err(|_| format!("{path:?}: header is not UTF-8"))?;
     let v = parse(text.trim_end())
         .map_err(|e| format!("{path:?}: header is not a JSON object: {e}"))?;
     if v.str_or("kind", "") != "sweep-cells" {
         return Err(format!("{path:?}: not a sweep cells.jsonl spill (missing kind)"));
     }
-    let ver = v.usize_or("schema_version", 0);
+    let ver = header_usize(&v, "schema_version", 0, path)?;
     if ver != OUTPUT_SCHEMA_VERSION {
         return Err(format!(
             "{path:?}: spill schema_version {ver} != supported {OUTPUT_SCHEMA_VERSION}"
         ));
     }
+    let shard = ShardSpec::new(
+        header_usize(&v, "shard_index", 0, path)?,
+        header_usize(&v, "shard_count", 1, path)?,
+    )
+    .map_err(|e| format!("{path:?}: bad shard fields in spill header: {e}"))?;
+    Ok(SpillHeader {
+        spec_hash: v.str_or("spec_hash", "").to_string(),
+        n_cells: header_usize(&v, "n_cells", 0, path)?,
+        shard,
+        spec: v.get("spec").cloned(),
+    })
+}
+
+/// Validate a complete header line against the current spec and shard
+/// assignment. Every failure names what diverged — a resume must never
+/// silently mix cells from a different grid or another machine's shard.
+fn check_header(
+    line: &[u8],
+    spec: &SweepSpec,
+    shard: &ShardSpec,
+    path: &Path,
+) -> Result<(), String> {
+    let h = parse_header(line, path)?;
     let hash = spec.spec_hash();
-    let file_hash = v.str_or("spec_hash", "");
-    if file_hash != hash {
+    if h.spec_hash != hash {
         return Err(format!(
-            "{path:?}: spec hash mismatch (file {file_hash}, current spec {hash}) — \
-             the spill belongs to a different grid; use a fresh --out-dir"
+            "{path:?}: spec hash mismatch (file {}, current spec {hash}) — \
+             the spill belongs to a different grid; use a fresh --out-dir",
+            h.spec_hash
         ));
     }
-    let n = v.usize_or("n_cells", 0);
-    if n != spec.n_cells() {
+    if h.n_cells != spec.n_cells() {
         return Err(format!(
-            "{path:?}: spill expects {n} cells, current spec expands to {}",
+            "{path:?}: spill expects {} cells, current spec expands to {}",
+            h.n_cells,
             spec.n_cells()
+        ));
+    }
+    if h.shard != *shard {
+        return Err(format!(
+            "{path:?}: spill records shard {}, this run expects {} — a spill holds exactly \
+             one shard's cells; use a fresh --out-dir per shard and reassemble completed \
+             shards with `carbon-sim merge`",
+            h.shard, shard
         ));
     }
     Ok(())
@@ -100,7 +188,7 @@ fn check_header(line: &[u8], spec: &SweepSpec, path: &Path) -> Result<(), String
 
 /// Read one line (including any trailing newline) into `buf`; returns
 /// `(bytes_read, newline_terminated)`. `bytes_read == 0` is EOF.
-fn read_line(r: &mut impl BufRead, buf: &mut Vec<u8>) -> Result<(usize, bool), String> {
+pub(crate) fn read_line(r: &mut impl BufRead, buf: &mut Vec<u8>) -> Result<(usize, bool), String> {
     buf.clear();
     let len = r.read_until(b'\n', buf).map_err(|e| format!("reading spill: {e}"))?;
     Ok((len, buf.last() == Some(&b'\n')))
@@ -110,7 +198,7 @@ fn read_line(r: &mut impl BufRead, buf: &mut Vec<u8>) -> Result<(usize, bool), S
 /// `n`-cell grid. Strict on purpose: a negative or fractional `"index"`
 /// must be rejected, not saturated/truncated into some other cell's slot
 /// (the lenient `as_usize` cast would silently misattribute the row).
-fn row_index(line: &[u8], n: usize) -> Option<usize> {
+pub(crate) fn row_index(line: &[u8], n: usize) -> Option<usize> {
     let text = std::str::from_utf8(line).ok()?;
     let v = parse(text.trim_end()).ok()?;
     match v.get("index")? {
@@ -128,8 +216,12 @@ fn row_index(line: &[u8], n: usize) -> Option<usize> {
 ///
 /// An empty or header-truncated file (killed before the header landed)
 /// is reset to a fresh spill; a readable header from a *different* spec
-/// is a hard error.
-pub fn scan_and_compact(path: &Path, spec: &SweepSpec) -> Result<Vec<bool>, String> {
+/// or shard assignment is a hard error.
+pub fn scan_and_compact(
+    path: &Path,
+    spec: &SweepSpec,
+    shard: &ShardSpec,
+) -> Result<Vec<bool>, String> {
     let n = spec.n_cells();
     let mut done = vec![false; n];
     let tmp = path.with_extension("jsonl.tmp");
@@ -143,11 +235,11 @@ pub fn scan_and_compact(path: &Path, spec: &SweepSpec) -> Result<Vec<bool>, Stri
         let (len, complete) = read_line(&mut r, &mut buf)?;
         if len == 0 || !complete {
             // Killed before the header landed: no rows can follow it.
-            let mut line = header_value(spec).to_string_compact();
+            let mut line = header_value(spec, shard).to_string_compact();
             line.push('\n');
             w.write_all(line.as_bytes()).map_err(|e| format!("writing {tmp:?}: {e}"))?;
         } else {
-            check_header(&buf, spec, path)?;
+            check_header(&buf, spec, shard, path)?;
             w.write_all(&buf).map_err(|e| format!("writing {tmp:?}: {e}"))?;
             loop {
                 let (len, complete) = read_line(&mut r, &mut buf)?;
@@ -176,10 +268,16 @@ pub fn scan_and_compact(path: &Path, spec: &SweepSpec) -> Result<Vec<bool>, Stri
 /// then assemble `<out_dir>/report.json` (or `.csv`) from the spill.
 /// With `resume`, cells already recorded by a previous (possibly
 /// interrupted) run of the **same spec** are skipped.
+///
+/// Under a non-full `shard`, only the cells that shard owns are run and
+/// spilled, the header records the assignment, and **no report is
+/// assembled** (`report_path` is `None`): completed shard spills are
+/// reassembled by [`super::merge::merge_spills`].
 pub fn run_streaming(
     spec: &SweepSpec,
     threads: usize,
     out_dir: &Path,
+    shard: &ShardSpec,
     format: Format,
     resume: bool,
     verbose: bool,
@@ -190,17 +288,18 @@ pub fn run_streaming(
     // Cells are derived per index on demand — the grid is never
     // materialized, so worker memory stays O(1) per in-flight cell.
     let n = spec.n_cells();
+    let n_owned = shard.owned_count(n);
 
     let done = if resume && cells_path.exists() {
-        scan_and_compact(&cells_path, spec)?
+        scan_and_compact(&cells_path, spec, shard)?
     } else {
-        let mut line = header_value(spec).to_string_compact();
+        let mut line = header_value(spec, shard).to_string_compact();
         line.push('\n');
         fs::write(&cells_path, line).map_err(|e| format!("writing {cells_path:?}: {e}"))?;
         vec![false; n]
     };
-    let pending: Vec<usize> = (0..n).filter(|&i| !done[i]).collect();
-    let n_resumed = n - pending.len();
+    let pending: Vec<usize> = (0..n).filter(|&i| shard.owns(i) && !done[i]).collect();
+    let n_resumed = n_owned - pending.len();
 
     let mut spill = OpenOptions::new()
         .append(true)
@@ -227,7 +326,7 @@ pub fn run_streaming(
             if verbose {
                 let c = &res.cell;
                 println!(
-                    "[{n_done}/{n}] scenario {:>3} {:<12} {:>4}c {:>6.1} rps rep {} {:<12}",
+                    "[{n_done}/{n_owned}] scenario {:>3} {:<12} {:>4}c {:>6.1} rps rep {} {:<12}",
                     c.scenario,
                     c.workload.name(),
                     c.cores,
@@ -244,18 +343,31 @@ pub fn run_streaming(
         return Err(e);
     }
 
-    let report_path = out_dir.join(match format {
-        Format::Json => "report.json",
-        Format::Csv => "report.csv",
-    });
-    assemble_report(&cells_path, spec, format, &report_path)?;
+    // A shard spill covers only its owned cells, so there is nothing to
+    // assemble here — that is `carbon-sim merge`'s job once every shard
+    // has finished.
+    let report_path = if shard.is_full() {
+        let path = out_dir.join(report_file_name(format));
+        assemble_report(&cells_path, spec, format, &path)?;
+        Some(path)
+    } else {
+        None
+    };
     Ok(StreamSummary {
-        n_cells: n,
+        n_cells: n_owned,
         n_resumed,
         n_run: pending.len(),
         cells_path,
         report_path,
     })
+}
+
+/// The report file name inside an `--out-dir` for a given format.
+pub fn report_file_name(format: Format) -> &'static str {
+    match format {
+        Format::Json => "report.json",
+        Format::Csv => "report.csv",
+    }
 }
 
 /// Assemble the final report from a complete spill, streaming rows from
@@ -278,7 +390,9 @@ pub fn assemble_report(
         if len == 0 || !complete {
             return Err(format!("{cells_path:?}: missing spill header"));
         }
-        check_header(&buf, spec, cells_path)?;
+        // A report always covers the whole grid, so only a full (0/1)
+        // spill assembles; shard spills go through `carbon-sim merge`.
+        check_header(&buf, spec, &ShardSpec::full(), cells_path)?;
         let mut offset = len as u64;
         loop {
             let (len, complete) = read_line(&mut r, &mut buf)?;
@@ -379,8 +493,9 @@ fn write_report_csv<W: Write>(
         let mut row = Vec::with_capacity(CSV_COLUMNS.len());
         for col in CSV_COLUMNS {
             match record.get(col) {
-                // Strings (workload, policy, seed) go in bare.
-                Some(Value::Str(s)) => row.push(s.clone()),
+                // Strings (workload, policy, seed) are quoted only when
+                // RFC 4180 requires it — same rule as SweepReport::to_csv.
+                Some(Value::Str(s)) => row.push(super::sweep::csv_field(s)),
                 Some(v) => row.push(v.to_string_compact()),
                 None => {
                     return Err(format!(

@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   simulate    run the cluster simulator on a (synthetic or file) trace
 //!   sweep       run a parallel scenario sweep (rates × cores × policies ×
-//!               workloads × replicas) and aggregate JSON/CSV results
+//!               workloads × replicas) and aggregate JSON/CSV results;
+//!               --shard K/N runs one machine's slice of the grid
+//!   merge       validate and reassemble sharded sweep spills into one report
 //!   bench       run the pinned perf matrix and write BENCH_<date>.json
 //!   figure      regenerate a paper figure (1, 2, 4, 5, 6, 7, 8)
 //!   trace-gen   synthesize an Azure-like trace to a JSONL file
@@ -34,6 +36,7 @@ fn main() {
     let code = match cmd {
         "simulate" => cmd_simulate(&rest),
         "sweep" => cmd_sweep(&rest),
+        "merge" => cmd_merge(&rest),
         "bench" => cmd_bench(&rest),
         "figure" => cmd_figure(&rest),
         "trace-gen" => cmd_trace_gen(&rest),
@@ -59,7 +62,10 @@ fn top_usage() -> String {
      \x20              replicas, sharded over a worker pool (--threads), aggregated to\n\
      \x20              JSON/CSV; bit-identical output at any thread count. Grids come\n\
      \x20              from axis flags or a JSON spec (--spec examples/specs/paper.json);\n\
-     \x20              --out-dir streams per-cell JSONL with crash resume (--resume)\n\
+     \x20              --out-dir streams per-cell JSONL with crash resume (--resume);\n\
+     \x20              --shard K/N runs one machine's slice of the grid\n\
+     \x20 merge        validate sharded sweep spills against one another and reassemble\n\
+     \x20              them into a report byte-identical to a single-machine run\n\
      \x20 bench        run the pinned perf matrix (short/long traces × 40/80 cores ×\n\
      \x20              all policies) and write events/sec to BENCH_<date>.json\n\
      \x20 figure       regenerate a paper figure (--fig 1|2|4|5|6|7|8)\n\
@@ -247,6 +253,12 @@ fn cmd_sweep(rest: &[String]) -> i32 {
          and assemble <dir>/report.<format> from it",
     )
     .opt("format", "json", "report format: json | csv")
+    .opt(
+        "shard",
+        "",
+        "run only this machine's slice of the grid, as K/N (cells with index % N == K); \
+         requires --out-dir; reassemble finished shards with `carbon-sim merge`",
+    )
     .flag(
         "resume",
         "with --out-dir: skip cells already recorded in cells.jsonl (spec hash must match)",
@@ -329,11 +341,26 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         eprintln!("--out and --out-dir are mutually exclusive (the streaming report goes to <out-dir>/report.<format>)");
         return 2;
     }
+    let shard = match a.str_or("shard", "").as_str() {
+        "" => sweep::ShardSpec::full(),
+        s => match sweep::ShardSpec::parse(s) {
+            Ok(sh) => sh,
+            Err(e) => {
+                eprintln!("--shard: {e}");
+                return 2;
+            }
+        },
+    };
+    if !shard.is_full() && out_dir.is_empty() {
+        eprintln!("--shard requires --out-dir (shard spills are what `carbon-sim merge` reassembles)");
+        return 2;
+    }
     if !out_dir.is_empty() {
         let summary = match sweep_stream::run_streaming(
             &spec,
             threads,
             Path::new(&out_dir),
+            &shard,
             format,
             a.flag("resume"),
             !a.flag("quiet"),
@@ -344,14 +371,24 @@ fn cmd_sweep(rest: &[String]) -> i32 {
                 return 2;
             }
         };
-        println!(
-            "streamed {} cells ({} resumed, {} run) to {}; report: {}",
-            summary.n_cells,
-            summary.n_resumed,
-            summary.n_run,
-            summary.cells_path.display(),
-            summary.report_path.display()
-        );
+        match summary.report_path {
+            Some(report) => println!(
+                "streamed {} cells ({} resumed, {} run) to {}; report: {}",
+                summary.n_cells,
+                summary.n_resumed,
+                summary.n_run,
+                summary.cells_path.display(),
+                report.display()
+            ),
+            None => println!(
+                "streamed shard {shard}: {} cells ({} resumed, {} run) to {}; when every \
+                 shard is done: carbon-sim merge <dir>... --out-dir <merged>",
+                summary.n_cells,
+                summary.n_resumed,
+                summary.n_run,
+                summary.cells_path.display()
+            ),
+        }
         return 0;
     }
 
@@ -384,6 +421,59 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         print!("{}", report.render(format));
     }
     0
+}
+
+// ----------------------------------------------------------------- merge
+
+fn cmd_merge(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "carbon-sim merge",
+        "validate sharded sweep spills (same spec hash, disjoint-and-complete cell \
+         coverage) and reassemble them into <out-dir>/cells.jsonl plus a report \
+         byte-identical to a single-machine run of the full grid",
+    )
+    .pos(
+        "shard-dir",
+        "one `sweep --out-dir` directory per shard, each holding a cells.jsonl spill",
+    )
+    .opt("out-dir", "", "directory for the merged cells.jsonl and report (required)")
+    .opt("format", "json", "report format: json | csv");
+    let a = parse_or_exit(&cli, rest);
+
+    if a.positional.is_empty() {
+        eprintln!("merge needs at least one shard directory\n\n{}", cli.usage());
+        return 2;
+    }
+    let out_dir = a.str_or("out-dir", "");
+    if out_dir.is_empty() {
+        eprintln!("merge requires --out-dir (where the merged spill and report go)");
+        return 2;
+    }
+    let format = match sweep::Format::parse(&a.str_or("format", "json")) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let dirs: Vec<std::path::PathBuf> =
+        a.positional.iter().map(|d| std::path::PathBuf::from(d.as_str())).collect();
+    match experiments::merge::merge_spills(&dirs, Path::new(&out_dir), format) {
+        Ok(s) => {
+            println!(
+                "merged {} shard spill(s), {} cells -> {}; report: {}",
+                s.n_spills,
+                s.n_cells,
+                s.cells_path.display(),
+                s.report_path.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
 }
 
 // ----------------------------------------------------------------- bench

@@ -1,8 +1,9 @@
 //! Tiny command-line argument parser (clap is not available offline).
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
-//! arguments. Each binary declares its options up front so `--help` output
-//! is generated consistently.
+//! arguments (declared with [`Cli::pos`] so they show up in `--help`).
+//! Each binary declares its options up front so `--help` output is
+//! generated consistently.
 
 use std::collections::BTreeMap;
 
@@ -52,16 +53,26 @@ impl Args {
     }
 }
 
+/// A declared positional argument (documentation only — the parser
+/// collects positionals regardless; declaring one adds a usage line and
+/// an "Arguments" help section).
+#[derive(Clone, Debug)]
+pub struct PosSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+}
+
 /// Command-line parser for one (sub)command.
 pub struct Cli {
     pub name: &'static str,
     pub about: &'static str,
     pub opts: Vec<OptSpec>,
+    pub positionals: Vec<PosSpec>,
 }
 
 impl Cli {
     pub fn new(name: &'static str, about: &'static str) -> Cli {
-        Cli { name, about, opts: Vec::new() }
+        Cli { name, about, opts: Vec::new(), positionals: Vec::new() }
     }
 
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Cli {
@@ -74,8 +85,28 @@ impl Cli {
         self
     }
 
+    /// Declare a repeatable positional argument for the help text
+    /// (`carbon-sim merge <shard-dir>...`).
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Cli {
+        self.positionals.push(PosSpec { name, help });
+        self
+    }
+
     pub fn usage(&self) -> String {
-        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        let mut s = format!("{} — {}\n", self.name, self.about);
+        if !self.positionals.is_empty() {
+            let args: Vec<String> =
+                self.positionals.iter().map(|p| format!("<{}>...", p.name)).collect();
+            s.push_str(&format!(
+                "\nUsage: {} [options] {}\n\nArguments:\n",
+                self.name,
+                args.join(" ")
+            ));
+            for p in &self.positionals {
+                s.push_str(&format!("  <{}>...\n      {}\n", p.name, p.help));
+            }
+        }
+        s.push_str("\nOptions:\n");
         for o in &self.opts {
             let d = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
             let kind = if o.is_flag { "" } else { " <value>" };
@@ -209,5 +240,20 @@ mod tests {
     fn help_returns_usage() {
         let err = cli().parse(&toks(&["--help"])).unwrap_err();
         assert!(err.contains("request rate"));
+    }
+
+    #[test]
+    fn declared_positionals_show_in_usage_and_still_parse() {
+        let c = Cli::new("merge", "merge tool").pos("dir", "a shard directory").opt(
+            "out",
+            "",
+            "output path",
+        );
+        let u = c.usage();
+        assert!(u.contains("Usage: merge [options] <dir>..."), "{u}");
+        assert!(u.contains("a shard directory"), "{u}");
+        let a = c.parse(&toks(&["d1", "--out", "x", "d2"])).unwrap();
+        assert_eq!(a.positional, vec!["d1", "d2"]);
+        assert_eq!(a.str_or("out", ""), "x");
     }
 }

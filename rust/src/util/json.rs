@@ -2,6 +2,14 @@
 //! no serde). Handles everything the project needs: config files, JSONL
 //! trace files, the AOT weights manifest written by `python/compile/aot.py`,
 //! and machine-readable experiment results.
+//!
+//! **Non-finite numbers.** Strict JSON has no NaN/Inf; rewriting them as
+//! `null` (the usual dodge) silently corrupts a metric and breaks the
+//! sweep engine's byte-identity contract once a value round-trips through
+//! a spill file. This writer instead emits the bare tokens `NaN`,
+//! `Infinity`, and `-Infinity`, and the parser restores them losslessly —
+//! the same extension Python's `json` module uses by default, so every
+//! downstream consumer in `python/` keeps working.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -126,8 +134,10 @@ fn escape_into(s: &str, out: &mut String) {
 }
 
 fn emit_num(x: f64, out: &mut String) {
-    if x.is_nan() || x.is_infinite() {
-        out.push_str("null"); // JSON has no NaN/Inf
+    if x.is_nan() {
+        out.push_str("NaN"); // restored losslessly by this module's parser
+    } else if x.is_infinite() {
+        out.push_str(if x > 0.0 { "Infinity" } else { "-Infinity" });
     } else if x == x.trunc() && x.abs() < 1e15 {
         out.push_str(&format!("{}", x as i64));
     } else {
@@ -271,6 +281,9 @@ impl<'a> Parser<'a> {
             Some(b'n') => self.lit("null", Value::Null),
             Some(b't') => self.lit("true", Value::Bool(true)),
             Some(b'f') => self.lit("false", Value::Bool(false)),
+            // The writer's non-finite tokens (see module docs).
+            Some(b'N') => self.lit("NaN", Value::Num(f64::NAN)),
+            Some(b'I') => self.lit("Infinity", Value::Num(f64::INFINITY)),
             Some(b'"') => self.string().map(Value::Str),
             Some(b'[') => self.array(),
             Some(b'{') => self.object(),
@@ -284,6 +297,9 @@ impl<'a> Parser<'a> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
+            if self.peek() == Some(b'I') {
+                return self.lit("Infinity", Value::Num(f64::NEG_INFINITY));
+            }
         }
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.pos += 1;
@@ -496,15 +512,27 @@ mod tests {
             ("nan", Value::Num(f64::NAN)),
         ]);
         let round = parse(&v.to_string_compact()).unwrap();
-        // NaN serializes as null, so compare the re-emitted documents.
-        assert_eq!(round.to_string_pretty(), parse(&round.to_string_compact()).unwrap().to_string_pretty());
+        assert_eq!(round.to_string_pretty(), v.to_string_pretty());
         assert_eq!(round.get("f").unwrap().to_string_compact(), "0.1234567890123");
         assert_eq!(round.get("i").unwrap().to_string_compact(), "42");
     }
 
     #[test]
-    fn nan_becomes_null() {
-        let v = Value::Num(f64::NAN);
-        assert_eq!(v.to_string_compact(), "null");
+    fn nonfinite_numbers_roundtrip_losslessly() {
+        assert_eq!(Value::Num(f64::NAN).to_string_compact(), "NaN");
+        assert_eq!(Value::Num(f64::INFINITY).to_string_compact(), "Infinity");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_string_compact(), "-Infinity");
+        assert!(parse("NaN").unwrap().as_f64().unwrap().is_nan());
+        assert_eq!(parse("Infinity").unwrap().as_f64(), Some(f64::INFINITY));
+        assert_eq!(parse("-Infinity").unwrap().as_f64(), Some(f64::NEG_INFINITY));
+        // Inside a document, and re-emitted byte-identically.
+        let doc = r#"{"a":NaN,"b":[-Infinity,Infinity,1.5]}"#;
+        let v = parse(doc).unwrap();
+        assert!(v.get("a").unwrap().as_f64().unwrap().is_nan());
+        assert_eq!(v.to_string_compact(), doc);
+        // Near-miss tokens are still rejected.
+        assert!(parse("Nan").is_err());
+        assert!(parse("-Inf").is_err());
+        assert!(parse("NaNx").is_err());
     }
 }

@@ -37,12 +37,17 @@ pub fn coeff_of_variation(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, `p` in [0, 100]. Sorts a copy.
+///
+/// NaN samples (e.g. a 0/0 ratio from an empty cell) are **ignored**: the
+/// percentile is computed over the remaining values, and an empty or
+/// all-NaN input returns 0.0. A `partial_cmp(..).unwrap()` sort here
+/// would instead panic the whole sweep on the first NaN mid-grid.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -64,9 +69,16 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 
 /// Summary of a distribution: the percentile band the paper reports plus
 /// mean/min/max. Produced by every experiment runner.
+///
+/// NaN samples are excluded from every statistic and counted in
+/// [`Summary::nan_count`] instead; `n` is the number of samples the
+/// statistics were actually computed over (`n + nan_count` = input
+/// length). An all-NaN input summarizes like an empty one.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
     pub n: usize,
+    /// Input samples that were NaN and therefore excluded.
+    pub nan_count: usize,
     pub mean: f64,
     pub std: f64,
     pub min: f64,
@@ -81,9 +93,12 @@ pub struct Summary {
 
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
-        if xs.is_empty() {
+        let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+        let nan_count = xs.len() - v.len();
+        if v.is_empty() {
             return Summary {
                 n: 0,
+                nan_count,
                 mean: 0.0,
                 std: 0.0,
                 min: 0.0,
@@ -96,10 +111,10 @@ impl Summary {
                 max: 0.0,
             };
         }
-        let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Summary {
             n: v.len(),
+            nan_count,
             mean: mean(&v),
             std: std_dev(&v),
             min: v[0],
@@ -124,23 +139,36 @@ impl Summary {
 
 /// Fixed-width histogram over [lo, hi); values outside are clamped into the
 /// edge bins. Used for the violin/distribution figures (Fig. 2, Fig. 8).
+///
+/// NaN samples are not binned (a NaN-to-int cast is 0, which would
+/// silently pile them into bin 0 and skew the distributions); they are
+/// counted in `nan_count` instead. ±Inf clamp into the edge bins like
+/// any other out-of-range value.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     pub lo: f64,
     pub hi: f64,
     pub bins: Vec<u64>,
     pub count: u64,
+    /// NaN samples seen by [`Histogram::add`] and excluded from `bins`.
+    pub nan_count: u64,
 }
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
         assert!(hi > lo && nbins > 0);
-        Histogram { lo, hi, bins: vec![0; nbins], count: 0 }
+        Histogram { lo, hi, bins: vec![0; nbins], count: 0, nan_count: 0 }
     }
 
     pub fn add(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nan_count += 1;
+            return;
+        }
         let n = self.bins.len();
         let t = (x - self.lo) / (self.hi - self.lo);
+        // Saturating float→int casts send ±Inf to the isize extremes,
+        // which the clamp folds into the edge bins.
         let idx = ((t * n as f64) as isize).clamp(0, n as isize - 1) as usize;
         self.bins[idx] += 1;
         self.count += 1;
@@ -243,6 +271,37 @@ mod tests {
     }
 
     #[test]
+    fn percentile_and_summary_ignore_nans() {
+        // Regression: one NaN sample used to panic the partial_cmp sort.
+        let xs = [3.0, f64::NAN, 1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert!((percentile(&xs, 50.0) - 2.0).abs() < 1e-12);
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.nan_count, 2);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        // All-NaN input behaves like an empty one.
+        let all = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!((all.n, all.nan_count), (0, 2));
+        assert_eq!(all.p50, 0.0);
+        assert_eq!(percentile(&[f64::NAN], 50.0), 0.0);
+        // NaN-free inputs are unaffected.
+        assert_eq!(Summary::of(&[1.0, 2.0]).nan_count, 0);
+    }
+
+    #[test]
+    fn summary_keeps_infinities_in_order() {
+        let s = Summary::of(&[f64::NEG_INFINITY, 1.0, f64::INFINITY]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, f64::NEG_INFINITY);
+        assert_eq!(s.max, f64::INFINITY);
+        assert_eq!(s.p50, 1.0);
+    }
+
+    #[test]
     fn summary_orders() {
         let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
         let s = Summary::of(&xs);
@@ -262,6 +321,22 @@ mod tests {
         assert_eq!(h.bins[0], 2);
         assert_eq!(h.bins[9], 2);
         assert_eq!(h.count, 4);
+        let d = h.density();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_nan_separately_and_clamps_infinities() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(f64::NAN);
+        h.add(5.0);
+        h.add(f64::NEG_INFINITY);
+        h.add(f64::INFINITY);
+        assert_eq!(h.nan_count, 1, "NaN must not land in any bin");
+        assert_eq!(h.bins[0], 1, "-inf clamps into the low edge bin");
+        assert_eq!(h.bins[9], 1, "+inf clamps into the high edge bin");
+        assert_eq!(h.bins[5], 1);
+        assert_eq!(h.count, 3);
         let d = h.density();
         assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
     }

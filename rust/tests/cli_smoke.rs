@@ -20,7 +20,8 @@ fn run(args: &[&str]) -> (bool, String) {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["--help"]);
     assert!(ok);
-    for cmd in ["simulate", "sweep", "bench", "figure", "trace-gen", "serve", "aging-demo"] {
+    for cmd in ["simulate", "sweep", "merge", "bench", "figure", "trace-gen", "serve", "aging-demo"]
+    {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
 }
@@ -217,7 +218,10 @@ fn sweep_spec_file_streams_cells_and_assembles_report() {
     let body = std::fs::read_to_string(out_dir.join("report.json")).unwrap();
     let v = carbon_sim::util::json::parse(&body).unwrap();
     assert_eq!(v.usize_or("n_cells", 0), 3);
-    assert_eq!(v.usize_or("schema_version", 0), 1);
+    assert_eq!(
+        v.usize_or("schema_version", 0),
+        carbon_sim::experiments::OUTPUT_SCHEMA_VERSION
+    );
     assert_eq!(v.get("cells").and_then(|c| c.as_arr()).unwrap().len(), 3);
 
     // A --resume re-run finds everything done and reproduces the report.
@@ -264,6 +268,82 @@ fn sweep_resume_requires_out_dir() {
     let (ok, text) = run(&["sweep", "--resume"]);
     assert!(!ok);
     assert!(text.contains("--out-dir"), "{text}");
+}
+
+#[test]
+fn sweep_shard_requires_out_dir_and_a_valid_assignment() {
+    let (ok, text) = run(&["sweep", "--shard", "0/2"]);
+    assert!(!ok);
+    assert!(text.contains("--out-dir"), "{text}");
+    for bad in ["2/2", "x/2", "1/x", "1/0", "3"] {
+        let (ok, text) = run(&["sweep", "--shard", bad, "--out-dir", "/tmp/unused_shard_dir"]);
+        assert!(!ok, "--shard {bad} must be rejected:\n{text}");
+    }
+}
+
+#[test]
+fn sharded_sweep_and_merge_reproduce_the_unsharded_report() {
+    let spec = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/smoke.json");
+    let dir = std::env::temp_dir().join("carbon_sim_cli_sweep_shard");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = |name: &str| dir.join(name).to_str().unwrap().to_string();
+
+    let (ok, text) =
+        run(&["sweep", "--spec", spec, "--quiet", "--threads", "2", "--out-dir", &path("full")]);
+    assert!(ok, "{text}");
+    for k in 0..2 {
+        let (ok, text) = run(&[
+            "sweep",
+            "--spec",
+            spec,
+            "--quiet",
+            "--threads",
+            "2",
+            "--shard",
+            &format!("{k}/2"),
+            "--out-dir",
+            &path(&format!("s{k}")),
+        ]);
+        assert!(ok, "shard {k}: {text}");
+        assert!(text.contains(&format!("shard {k}/2")), "{text}");
+        assert!(text.contains("carbon-sim merge"), "{text}");
+        // A shard run must not leave a report behind.
+        assert!(!dir.join(format!("s{k}")).join("report.json").exists());
+    }
+    let (ok, text) =
+        run(&["merge", &path("s0"), &path("s1"), "--out-dir", &path("merged")]);
+    assert!(ok, "{text}");
+    assert!(text.contains("merged 2 shard spill(s)"), "{text}");
+    let full = std::fs::read(dir.join("full").join("report.json")).unwrap();
+    let merged = std::fs::read(dir.join("merged").join("report.json")).unwrap();
+    assert_eq!(full, merged, "merged report must be byte-identical to the unsharded run");
+
+    // An incomplete shard set is refused with the missing cells named.
+    let (ok, text) = run(&["merge", &path("s0"), "--out-dir", &path("merged_bad")]);
+    assert!(!ok);
+    assert!(text.contains("incomplete shard set"), "{text}");
+}
+
+#[test]
+fn merge_rejects_bad_invocations() {
+    // No shard dirs.
+    let (ok, text) = run(&["merge", "--out-dir", "/tmp/unused_merge_out"]);
+    assert!(!ok);
+    assert!(text.contains("at least one shard directory"), "{text}");
+    // No --out-dir.
+    let (ok2, text2) = run(&["merge", "/tmp/nonexistent_shard_dir"]);
+    assert!(!ok2);
+    assert!(text2.contains("--out-dir"), "{text2}");
+    // Nonexistent input dir.
+    let (ok3, text3) =
+        run(&["merge", "/tmp/nonexistent_shard_dir", "--out-dir", "/tmp/unused_merge_out"]);
+    assert!(!ok3);
+    assert!(text3.contains("cells.jsonl"), "{text3}");
+    // --help shows the positional contract.
+    let (ok4, text4) = run(&["merge", "--help"]);
+    assert!(!ok4);
+    assert!(text4.contains("<shard-dir>..."), "{text4}");
 }
 
 #[test]

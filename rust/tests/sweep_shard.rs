@@ -1,0 +1,332 @@
+//! Sharded-sweep + merge contract tests: N shard spills, produced
+//! independently (as if on N machines), must reassemble into reports
+//! **byte-identical** to a single-machine run of the full grid, and the
+//! merge must reject incomplete, overlapping, or mismatched shard sets
+//! with errors that name the offending spill or cell indexes.
+
+use std::fs;
+use std::path::PathBuf;
+
+use carbon_sim::experiments::merge::merge_spills;
+use carbon_sim::experiments::sweep::{self, Format, ShardSpec, SweepSpec};
+use carbon_sim::experiments::sweep_stream::{self, CELLS_FILE};
+use carbon_sim::trace::azure::Workload;
+use carbon_sim::util::json::parse;
+
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        rates: vec![5.0],
+        core_counts: vec![8],
+        policies: vec!["linux".into(), "proposed".into()],
+        workloads: vec![Workload::Mixed, Workload::Bursty],
+        replicas: 1,
+        duration_s: 3.0,
+        n_prompt: 1,
+        n_token: 1,
+        seed: 31,
+    }
+}
+
+/// Fresh scratch dir under the system temp root.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("carbon_sim_sweep_shard").join(name);
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_shard(spec: &SweepSpec, dir: &std::path::Path, shard: ShardSpec, resume: bool) {
+    sweep_stream::run_streaming(spec, 2, dir, &shard, Format::Json, resume, false).unwrap();
+}
+
+/// Run every shard of a K-way split under `root`, returning the dirs.
+fn run_split(spec: &SweepSpec, root: &std::path::Path, count: usize) -> Vec<PathBuf> {
+    (0..count)
+        .map(|k| {
+            let dir = root.join(format!("s{k}"));
+            fs::create_dir_all(&dir).unwrap();
+            run_shard(spec, &dir, ShardSpec::new(k, count).unwrap(), false);
+            dir
+        })
+        .collect()
+}
+
+#[test]
+fn three_way_split_merges_byte_identical_to_the_unsharded_run() {
+    let spec = tiny_spec();
+    let root = scratch("threeway");
+
+    // Single-machine references: streamed and in-memory.
+    let full_dir = root.join("full");
+    let s = sweep_stream::run_streaming(
+        &spec,
+        2,
+        &full_dir,
+        &ShardSpec::full(),
+        Format::Json,
+        false,
+        false,
+    )
+    .unwrap();
+    let expected_json = fs::read(s.report_path.unwrap()).unwrap();
+    assert_eq!(
+        expected_json,
+        sweep::run(&spec, 1).unwrap().render(Format::Json).into_bytes(),
+        "streamed full run must match the in-memory render"
+    );
+
+    let dirs = run_split(&spec, &root, 3);
+    // Each shard spill records its assignment and holds only owned rows.
+    let n = spec.n_cells();
+    let mut total_rows = 0;
+    for (k, dir) in dirs.iter().enumerate() {
+        let shard = ShardSpec::new(k, 3).unwrap();
+        let spill = fs::read_to_string(dir.join(CELLS_FILE)).unwrap();
+        let header = parse(spill.lines().next().unwrap()).unwrap();
+        assert_eq!(header.usize_or("shard_index", 99), k, "{spill}");
+        assert_eq!(header.usize_or("shard_count", 99), 3);
+        let rows: Vec<usize> = spill
+            .lines()
+            .skip(1)
+            .map(|l| parse(l).unwrap().usize_or("index", usize::MAX))
+            .collect();
+        assert_eq!(rows.len(), shard.owned_count(n));
+        assert!(rows.iter().all(|&i| shard.owns(i)), "shard {k} spilled a foreign cell");
+        total_rows += rows.len();
+    }
+    assert_eq!(total_rows, n, "shards must partition the grid");
+
+    // Merge → byte-identical JSON report, and a complete unsharded spill.
+    let merged = root.join("merged");
+    let m = merge_spills(&dirs, &merged, Format::Json).unwrap();
+    assert_eq!(m.n_spills, 3);
+    assert_eq!(m.n_cells, n);
+    assert_eq!(fs::read(&m.report_path).unwrap(), expected_json);
+    let merged_spill = fs::read_to_string(&m.cells_path).unwrap();
+    assert_eq!(merged_spill.lines().count(), 1 + n);
+    let merged_header = parse(merged_spill.lines().next().unwrap()).unwrap();
+    assert!(merged_header.get("shard_index").is_none(), "merged spill is unsharded");
+
+    // The merged dir now behaves like a single-machine out-dir: CSV
+    // assembles from it too, matching the in-memory CSV byte-for-byte.
+    let m2 = merge_spills(&dirs, &root.join("merged_csv"), Format::Csv).unwrap();
+    assert_eq!(
+        fs::read_to_string(&m2.report_path).unwrap(),
+        sweep::run(&spec, 1).unwrap().render(Format::Csv)
+    );
+}
+
+#[test]
+fn merge_of_a_single_full_spill_reproduces_its_report() {
+    let spec = tiny_spec();
+    let root = scratch("single_full");
+    let full_dir = root.join("full");
+    let s = sweep_stream::run_streaming(
+        &spec,
+        2,
+        &full_dir,
+        &ShardSpec::full(),
+        Format::Json,
+        false,
+        false,
+    )
+    .unwrap();
+    let expected = fs::read(s.report_path.unwrap()).unwrap();
+    let m = merge_spills(&[full_dir], &root.join("merged"), Format::Json).unwrap();
+    assert_eq!(fs::read(&m.report_path).unwrap(), expected);
+}
+
+#[test]
+fn merge_rejects_a_missing_shard_listing_missing_cells() {
+    let spec = tiny_spec();
+    let root = scratch("missing_shard");
+    let dirs = run_split(&spec, &root, 3);
+    // Drop shard 1: its cells (index % 3 == 1) must be reported.
+    let err =
+        merge_spills(&[dirs[0].clone(), dirs[2].clone()], &root.join("merged"), Format::Json)
+            .unwrap_err();
+    assert!(err.contains("incomplete shard set"), "{err}");
+    assert!(err.contains("cells missing"), "{err}");
+    let shard1 = ShardSpec::new(1, 3).unwrap();
+    let first_missing = (0..spec.n_cells()).find(|&i| shard1.owns(i)).unwrap();
+    assert!(err.contains(&format!("{first_missing}")), "{err}");
+}
+
+#[test]
+fn merge_rejects_overlapping_coverage_listing_duplicate_cells() {
+    let spec = tiny_spec();
+    let root = scratch("overlap");
+    let dirs = run_split(&spec, &root, 2);
+    // The same shard passed twice is full overlap.
+    let err = merge_spills(
+        &[dirs[0].clone(), dirs[1].clone(), dirs[0].clone()],
+        &root.join("merged"),
+        Format::Json,
+    )
+    .unwrap_err();
+    assert!(err.contains("overlapping shard coverage"), "{err}");
+    assert!(err.contains("cell 0"), "{err}");
+}
+
+#[test]
+fn merge_rejects_a_mismatched_spec_hash_naming_the_spill() {
+    let spec = tiny_spec();
+    let root = scratch("wrong_hash");
+    let dirs = run_split(&spec, &root, 2);
+    // Shard 1 re-run from a *different* grid (other seed).
+    let mut other = tiny_spec();
+    other.seed = 32;
+    let foreign = root.join("foreign");
+    run_shard(&other, &foreign, ShardSpec::new(1, 2).unwrap(), false);
+    let err = merge_spills(&[dirs[0].clone(), foreign.clone()], &root.join("merged"), Format::Json)
+        .unwrap_err();
+    assert!(err.contains("spec hash mismatch"), "{err}");
+    assert!(err.contains("foreign"), "error must name the offending spill: {err}");
+}
+
+#[test]
+fn truncated_shard_tail_is_finished_by_resume_then_merges_clean() {
+    let spec = tiny_spec();
+    let root = scratch("truncated_tail");
+    let full_dir = root.join("full");
+    let s = sweep_stream::run_streaming(
+        &spec,
+        2,
+        &full_dir,
+        &ShardSpec::full(),
+        Format::Json,
+        false,
+        false,
+    )
+    .unwrap();
+    let expected = fs::read(s.report_path.unwrap()).unwrap();
+    let dirs = run_split(&spec, &root, 2);
+
+    // Interrupt shard 1: drop its last complete row and leave a
+    // half-written line, exactly what a kill leaves behind.
+    let cells = dirs[1].join(CELLS_FILE);
+    let spill = fs::read_to_string(&cells).unwrap();
+    let lines: Vec<&str> = spill.lines().collect();
+    let mut cut: String =
+        lines[..lines.len() - 1].iter().map(|l| format!("{l}\n")).collect();
+    cut.push_str("{\"index\": 3, \"truncated in-fl"); // no trailing newline
+    fs::write(&cells, cut).unwrap();
+
+    // Merging the interrupted shard set fails, pointing at --resume.
+    let err = merge_spills(&dirs, &root.join("merged_early"), Format::Json).unwrap_err();
+    assert!(err.contains("incomplete shard set"), "{err}");
+    assert!(err.contains("--resume"), "{err}");
+
+    // Resume composes with --shard: finish shard 1, then merge clean.
+    run_shard(&spec, &dirs[1], ShardSpec::new(1, 2).unwrap(), true);
+    let m = merge_spills(&dirs, &root.join("merged"), Format::Json).unwrap();
+    assert_eq!(fs::read(&m.report_path).unwrap(), expected);
+}
+
+#[test]
+fn shard_resume_refuses_a_spill_from_another_shard_or_the_full_grid() {
+    let spec = tiny_spec();
+    let root = scratch("resume_wrong_shard");
+    let dir = root.join("s0");
+    run_shard(&spec, &dir, ShardSpec::new(0, 2).unwrap(), false);
+    // Resuming the 0/2 spill as shard 1/2 must be refused…
+    let err = sweep_stream::run_streaming(
+        &spec,
+        1,
+        &dir,
+        &ShardSpec::new(1, 2).unwrap(),
+        Format::Json,
+        true,
+        false,
+    )
+    .unwrap_err();
+    assert!(err.contains("shard 0/2"), "{err}");
+    assert!(err.contains("1/2"), "{err}");
+    // …and so must resuming it as an unsharded run.
+    let err2 = sweep_stream::run_streaming(
+        &spec,
+        1,
+        &dir,
+        &ShardSpec::full(),
+        Format::Json,
+        true,
+        false,
+    )
+    .unwrap_err();
+    assert!(err2.contains("shard 0/2"), "{err2}");
+}
+
+#[test]
+fn shard_resume_skips_only_the_shards_own_done_cells() {
+    let spec = tiny_spec();
+    let root = scratch("shard_resume_counts");
+    let shard = ShardSpec::new(1, 2).unwrap();
+    let dir = root.join("s1");
+    run_shard(&spec, &dir, shard, false);
+    let owned = shard.owned_count(spec.n_cells());
+    assert_eq!(owned, 2, "shard 1/2 of the 4-cell grid owns cells 1 and 3");
+
+    // Keep the header + one row, truncate the rest mid-line.
+    let cells = dir.join(CELLS_FILE);
+    let spill = fs::read_to_string(&cells).unwrap();
+    let mut cut: String =
+        spill.lines().take(2).map(|l| format!("{l}\n")).collect();
+    cut.push_str("{\"ind");
+    fs::write(&cells, cut).unwrap();
+
+    let s = sweep_stream::run_streaming(
+        &spec, 2, &dir, &shard, Format::Json, true, false,
+    )
+    .unwrap();
+    assert_eq!(s.n_cells, owned);
+    assert_eq!(s.n_resumed, 1);
+    assert_eq!(s.n_run, owned - 1);
+    assert!(s.report_path.is_none(), "a shard run must not assemble a report");
+    // The finished shard spill is whole again.
+    let spill = fs::read_to_string(&cells).unwrap();
+    assert_eq!(spill.lines().count(), 1 + owned);
+}
+
+#[test]
+fn corrupt_shard_header_fields_are_rejected_not_coerced() {
+    // A negative or fractional shard field must fail loudly — the
+    // lenient as-usize cast would saturate it into a plausible shard.
+    let spec = tiny_spec();
+    let root = scratch("corrupt_header");
+    let dir = root.join("s0");
+    run_shard(&spec, &dir, ShardSpec::new(0, 2).unwrap(), false);
+    let cells = dir.join(CELLS_FILE);
+    let spill = fs::read_to_string(&cells).unwrap();
+    let poisoned = spill.replacen("\"shard_index\":0", "\"shard_index\":-1", 1);
+    assert_ne!(poisoned, spill, "header must contain the shard_index field");
+    fs::write(&cells, poisoned).unwrap();
+    let err = merge_spills(&[dir.clone()], &root.join("merged"), Format::Json).unwrap_err();
+    assert!(err.contains("shard_index"), "{err}");
+    let err2 = sweep_stream::run_streaming(
+        &spec,
+        1,
+        &dir,
+        &ShardSpec::new(0, 2).unwrap(),
+        Format::Json,
+        true,
+        false,
+    )
+    .unwrap_err();
+    assert!(err2.contains("shard_index"), "{err2}");
+}
+
+#[test]
+fn a_more_shards_than_cells_split_still_merges() {
+    // 2 cells over 3 shards: shard 2 owns nothing — its spill is
+    // header-only, and the merge must still reassemble cleanly.
+    let mut spec = tiny_spec();
+    spec.workloads = vec![Workload::Mixed];
+    spec.duration_s = 2.0;
+    assert_eq!(spec.n_cells(), 2);
+    let root = scratch("tiny_grid_many_shards");
+    let dirs = run_split(&spec, &root, 3);
+    let empty_spill = fs::read_to_string(dirs[2].join(CELLS_FILE)).unwrap();
+    assert_eq!(empty_spill.lines().count(), 1, "shard 2 of 3 owns no cell of a 2-cell grid");
+    let m = merge_spills(&dirs, &root.join("merged"), Format::Json).unwrap();
+    assert_eq!(m.n_cells, 2);
+}

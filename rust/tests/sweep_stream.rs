@@ -1,15 +1,18 @@
 //! Streaming-sweep contract tests: the disk-backed engine must produce
 //! reports **byte-identical** to the in-memory engine at any thread
-//! count, and an interrupted run resumed from its truncated
-//! `cells.jsonl` must converge to the same bytes as an uninterrupted
-//! run.
+//! count, an interrupted run resumed from its truncated `cells.jsonl`
+//! must converge to the same bytes as an uninterrupted run, and
+//! non-finite metric values must survive the spill round-trip losslessly
+//! (a NaN rewritten as `null` would silently diverge the resumed report
+//! from the in-memory path).
 
 use std::fs;
 use std::path::PathBuf;
 
-use carbon_sim::experiments::sweep::{self, Format, SweepSpec};
+use carbon_sim::experiments::sweep::{self, Format, ShardSpec, SweepSpec};
 use carbon_sim::experiments::sweep_stream::{self, CELLS_FILE};
 use carbon_sim::trace::azure::Workload;
+use carbon_sim::util::json::{parse, Value};
 
 fn tiny_spec() -> SweepSpec {
     SweepSpec {
@@ -33,18 +36,29 @@ fn scratch(name: &str) -> PathBuf {
     dir
 }
 
+/// Run the full (unsharded) grid through the streaming engine.
+fn stream_full(
+    spec: &SweepSpec,
+    threads: usize,
+    dir: &std::path::Path,
+    format: Format,
+    resume: bool,
+) -> Result<sweep_stream::StreamSummary, String> {
+    sweep_stream::run_streaming(spec, threads, dir, &ShardSpec::full(), format, resume, false)
+}
+
 #[test]
 fn streamed_json_report_is_byte_identical_to_in_memory_at_any_thread_count() {
     let spec = tiny_spec();
     let expected = sweep::run(&spec, 1).unwrap().render(Format::Json);
     for threads in [1, 4] {
         let dir = scratch(&format!("json_t{threads}"));
-        let s =
-            sweep_stream::run_streaming(&spec, threads, &dir, Format::Json, false, false).unwrap();
+        let s = stream_full(&spec, threads, &dir, Format::Json, false).unwrap();
         assert_eq!(s.n_cells, spec.n_cells());
         assert_eq!(s.n_run, spec.n_cells());
         assert_eq!(s.n_resumed, 0);
-        let streamed = fs::read_to_string(&s.report_path).unwrap();
+        let report_path = s.report_path.expect("full run assembles a report");
+        let streamed = fs::read_to_string(&report_path).unwrap();
         assert_eq!(streamed, expected, "streamed JSON diverged at {threads} threads");
         // The spill holds one header plus one row per cell.
         let spill = fs::read_to_string(dir.join(CELLS_FILE)).unwrap();
@@ -58,8 +72,29 @@ fn streamed_csv_report_is_byte_identical_to_in_memory() {
     let spec = tiny_spec();
     let expected = sweep::run(&spec, 1).unwrap().render(Format::Csv);
     let dir = scratch("csv");
-    let s = sweep_stream::run_streaming(&spec, 3, &dir, Format::Csv, false, false).unwrap();
-    assert_eq!(fs::read_to_string(&s.report_path).unwrap(), expected);
+    let s = stream_full(&spec, 3, &dir, Format::Csv, false).unwrap();
+    assert_eq!(fs::read_to_string(s.report_path.unwrap()).unwrap(), expected);
+}
+
+#[test]
+fn spill_header_embeds_the_spec_and_reparses_to_the_same_grid() {
+    let spec = tiny_spec();
+    let dir = scratch("header_spec");
+    stream_full(&spec, 2, &dir, Format::Json, false).unwrap();
+    let spill = fs::read_to_string(dir.join(CELLS_FILE)).unwrap();
+    let header = parse(spill.lines().next().unwrap()).unwrap();
+    assert_eq!(
+        header.usize_or("schema_version", 0),
+        carbon_sim::experiments::OUTPUT_SCHEMA_VERSION
+    );
+    // The embedded spec reconstructs the exact grid (spills are
+    // self-contained: `merge` needs no --spec file).
+    let embedded = header.get("spec").expect("header embeds the spec");
+    let rebuilt = carbon_sim::config::sweep_from_value(embedded).unwrap();
+    assert_eq!(rebuilt.spec_hash(), spec.spec_hash());
+    // Unsharded spills carry no shard fields (backward-compatible form).
+    assert!(header.get("shard_index").is_none());
+    assert!(header.get("shard_count").is_none());
 }
 
 #[test]
@@ -69,13 +104,13 @@ fn resume_after_interrupt_skips_done_cells_and_matches_uninterrupted_bytes() {
 
     // Uninterrupted reference run.
     let ref_dir = scratch("resume_ref");
-    let r = sweep_stream::run_streaming(&spec, 2, &ref_dir, Format::Json, false, false).unwrap();
-    let expected = fs::read(&r.report_path).unwrap();
+    let r = stream_full(&spec, 2, &ref_dir, Format::Json, false).unwrap();
+    let expected = fs::read(r.report_path.unwrap()).unwrap();
 
     // "Interrupted" run: keep the header + the first k completed rows and
     // a half-written in-flight line, exactly what a kill leaves behind.
     let dir = scratch("resume_cut");
-    sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, false, false).unwrap();
+    stream_full(&spec, 2, &dir, Format::Json, false).unwrap();
     let cells_path = dir.join(CELLS_FILE);
     let full = fs::read_to_string(&cells_path).unwrap();
     let lines: Vec<&str> = full.lines().collect();
@@ -87,11 +122,11 @@ fn resume_after_interrupt_skips_done_cells_and_matches_uninterrupted_bytes() {
     fs::write(&cells_path, cut).unwrap();
     fs::remove_file(dir.join("report.json")).unwrap();
 
-    let s = sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, true, false).unwrap();
+    let s = stream_full(&spec, 2, &dir, Format::Json, true).unwrap();
     assert_eq!(s.n_resumed, k, "resume must skip exactly the intact rows");
     assert_eq!(s.n_run, n - k);
     assert_eq!(
-        fs::read(&s.report_path).unwrap(),
+        fs::read(s.report_path.unwrap()).unwrap(),
         expected,
         "resumed report must be byte-identical to an uninterrupted run"
     );
@@ -104,11 +139,10 @@ fn resume_after_interrupt_skips_done_cells_and_matches_uninterrupted_bytes() {
 fn resume_with_a_different_spec_is_refused() {
     let spec = tiny_spec();
     let dir = scratch("resume_wrong_spec");
-    sweep_stream::run_streaming(&spec, 1, &dir, Format::Json, false, false).unwrap();
+    stream_full(&spec, 1, &dir, Format::Json, false).unwrap();
     let mut other = tiny_spec();
     other.seed = 78;
-    let err =
-        sweep_stream::run_streaming(&other, 1, &dir, Format::Json, true, false).unwrap_err();
+    let err = stream_full(&other, 1, &dir, Format::Json, true).unwrap_err();
     assert!(err.contains("hash mismatch"), "{err}");
 }
 
@@ -116,19 +150,19 @@ fn resume_with_a_different_spec_is_refused() {
 fn resume_on_a_complete_spill_runs_nothing_and_reproduces_the_report() {
     let spec = tiny_spec();
     let dir = scratch("resume_noop");
-    let first = sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, false, false).unwrap();
-    let expected = fs::read(&first.report_path).unwrap();
-    let again = sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, true, false).unwrap();
+    let first = stream_full(&spec, 2, &dir, Format::Json, false).unwrap();
+    let expected = fs::read(first.report_path.unwrap()).unwrap();
+    let again = stream_full(&spec, 2, &dir, Format::Json, true).unwrap();
     assert_eq!(again.n_run, 0);
     assert_eq!(again.n_resumed, spec.n_cells());
-    assert_eq!(fs::read(&again.report_path).unwrap(), expected);
+    assert_eq!(fs::read(again.report_path.unwrap()).unwrap(), expected);
 }
 
 #[test]
 fn resume_into_an_empty_dir_just_runs_everything() {
     let spec = tiny_spec();
     let dir = scratch("resume_fresh");
-    let s = sweep_stream::run_streaming(&spec, 2, &dir, Format::Json, true, false).unwrap();
+    let s = stream_full(&spec, 2, &dir, Format::Json, true).unwrap();
     assert_eq!(s.n_run, spec.n_cells());
     assert_eq!(s.n_resumed, 0);
 }
@@ -137,7 +171,7 @@ fn resume_into_an_empty_dir_just_runs_everything() {
 fn assemble_refuses_an_incomplete_spill() {
     let spec = tiny_spec();
     let dir = scratch("assemble_incomplete");
-    sweep_stream::run_streaming(&spec, 1, &dir, Format::Json, false, false).unwrap();
+    stream_full(&spec, 1, &dir, Format::Json, false).unwrap();
     let cells_path = dir.join(CELLS_FILE);
     let full = fs::read_to_string(&cells_path).unwrap();
     let cut: String = full.lines().take(2).map(|l| format!("{l}\n")).collect();
@@ -150,4 +184,59 @@ fn assemble_refuses_an_incomplete_spill() {
     )
     .unwrap_err();
     assert!(err.contains("--resume"), "{err}");
+}
+
+/// Inject a non-finite value into one spill row's metric field and
+/// re-serialize the row compactly (what a run whose cell produced that
+/// value would have written).
+fn poison_row(cells_path: &std::path::Path, field: &str, value: f64) {
+    let full = fs::read_to_string(cells_path).unwrap();
+    let mut lines: Vec<String> = full.lines().map(|l| l.to_string()).collect();
+    let row = parse(&lines[1]).unwrap();
+    let mut obj = match row {
+        Value::Obj(o) => o,
+        _ => panic!("spill row must be an object"),
+    };
+    assert!(obj.contains_key(field), "row has no field '{field}'");
+    obj.insert(field.to_string(), Value::Num(value));
+    lines[1] = Value::Obj(obj).to_string_compact();
+    fs::write(cells_path, lines.join("\n") + "\n").unwrap();
+}
+
+#[test]
+fn nonfinite_metrics_roundtrip_through_spill_and_reports_losslessly() {
+    let spec = tiny_spec();
+    let dir = scratch("nan_roundtrip");
+    stream_full(&spec, 1, &dir, Format::Json, false).unwrap();
+    let cells_path = dir.join(CELLS_FILE);
+    poison_row(&cells_path, "ttft_p99_s", f64::NAN);
+
+    // JSON: the assembled report carries the NaN token, and this crate's
+    // parser restores it as a NaN number — not null, not a string.
+    let json_path = dir.join("report_nan.json");
+    sweep_stream::assemble_report(&cells_path, &spec, Format::Json, &json_path).unwrap();
+    let body = fs::read_to_string(&json_path).unwrap();
+    assert!(body.contains("\"ttft_p99_s\": NaN"), "{body}");
+    let v = parse(&body).unwrap();
+    let cell = &v.get("cells").unwrap().as_arr().unwrap()[0];
+    assert!(cell.get("ttft_p99_s").unwrap().as_f64().unwrap().is_nan());
+
+    // And a second spill round-trip of the same row is byte-stable (the
+    // property `null`-rewriting used to break).
+    let again = dir.join("report_nan2.json");
+    sweep_stream::assemble_report(&cells_path, &spec, Format::Json, &again).unwrap();
+    assert_eq!(fs::read(&json_path).unwrap(), fs::read(&again).unwrap());
+
+    // CSV: the NaN lands as a bare NaN field in the right column.
+    poison_row(&cells_path, "idle_p50", f64::NEG_INFINITY);
+    let csv_path = dir.join("report_nan.csv");
+    sweep_stream::assemble_report(&cells_path, &spec, Format::Csv, &csv_path).unwrap();
+    let csv = fs::read_to_string(&csv_path).unwrap();
+    let header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
+    let row: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+    assert_eq!(row.len(), header.len());
+    let ttft_col = header.iter().position(|&c| c == "ttft_p99_s").unwrap();
+    let idle_col = header.iter().position(|&c| c == "idle_p50").unwrap();
+    assert_eq!(row[ttft_col], "NaN");
+    assert_eq!(row[idle_col], "-Infinity");
 }
