@@ -1,26 +1,45 @@
 //! Merge sharded sweep spills into one report (`carbon-sim merge`).
 //!
 //! A grid split with `sweep --shard K/N` leaves N `cells.jsonl` spills,
-//! typically on N machines. [`merge_spills`] reassembles them:
+//! typically on N machines. [`merge_spills`] reassembles them — invoked
+//! by hand, or automatically by [`super::orchestrate`] once its fleet
+//! reports every shard `done`.
 //!
-//! * **Validation.** Every spill must carry the same `spec_hash`,
-//!   `schema_version`, and `n_cells` as the first (errors name the
-//!   offending path), and together the spills must cover the grid
-//!   **disjointly and completely** — duplicate cell indexes (overlapping
-//!   shard sets, or the same shard passed twice) and missing indexes (a
-//!   forgotten or unfinished shard) are reported by index. Within one
-//!   spill, repeated rows for a cell keep the **first** copy and a
-//!   truncated tail is dropped — exactly the rules
-//!   [`sweep_stream::scan_and_compact`] applies on resume, so a spill
-//!   reads the same whether it is resumed or merged.
-//! * **Assembly.** The merged `<out-dir>/cells.jsonl` is written as an
-//!   unsharded spill — header from the spec embedded in the shard
-//!   headers, rows copied verbatim in cell-index order — and the report
-//!   is assembled from it by [`sweep_stream::assemble_report`]. Because
-//!   cell seeds derive from cell indexes (never execution order or
-//!   machine), the resulting `report.json`/`report.csv` is
-//!   **byte-identical** to a single-machine run of the full grid
-//!   (pinned by `tests/sweep_shard.rs`).
+//! # Validation contract
+//!
+//! A merge succeeds only when **all** of the following hold; every
+//! refusal is a hard error naming the offending spill path or the cell
+//! indexes involved (the full error→cause→fix table is in
+//! `docs/distributed-sweeps.md`):
+//!
+//! 1. Every `<dir>/cells.jsonl` exists, starts with a complete
+//!    `sweep-cells` header of the supported `schema_version`, and the
+//!    first spill's header embeds a canonical `spec` that parses and
+//!    hashes to its recorded `spec_hash` (spills are self-contained —
+//!    the merging machine needs no `--spec` file).
+//! 2. Every spill carries the same `spec_hash` and `n_cells` as the
+//!    first: shards of different grids never mix.
+//! 3. Together the spills cover the grid **disjointly and completely**:
+//!    duplicate cell indexes (overlapping shard sets, or one shard
+//!    passed twice) and missing indexes (a forgotten or unfinished
+//!    shard) are each reported by index, capped at 16 shown.
+//!
+//! Within one spill, repeated rows for a cell keep the **first** copy
+//! and a truncated or corrupt tail is dropped — exactly the rules
+//! [`sweep_stream::scan_and_compact`] applies on resume, so a spill
+//! reads the same whether it is resumed, merged, or verified by the
+//! orchestrator ([`sweep_stream::scan_done`]).
+//!
+//! # Assembly
+//!
+//! The merged `<out-dir>/cells.jsonl` is written as an unsharded spill —
+//! header from the spec embedded in the shard headers, rows copied
+//! verbatim in cell-index order — and the report is assembled from it by
+//! [`sweep_stream::assemble_report`]. Because cell seeds derive from
+//! cell indexes (never execution order or machine), the resulting
+//! `report.json`/`report.csv` is **byte-identical** to a single-machine
+//! run of the full grid (pinned by `tests/sweep_shard.rs` and
+//! `tests/orchestrate.rs`).
 
 use std::fs::{self, File};
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};

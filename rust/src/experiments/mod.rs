@@ -13,6 +13,10 @@
 //! to one interleaved slice of the grid so N machines can split it, and
 //! [`merge`] (`carbon-sim merge`) validates and reassembles the shard
 //! spills into a report byte-identical to a single-machine run.
+//! [`orchestrate`] (`carbon-sim orchestrate`) drives that whole
+//! distributed pipeline from one spec: it launches the N shard runs
+//! (local children or a `--launcher` template), tracks them in a
+//! retry/resume manifest, and invokes the merge on completion.
 //! [`run_matrix`] itself runs its paired cells on the same pool, so
 //! `carbon-sim figure --fig 6|7|8` parallelizes too.
 
@@ -25,19 +29,31 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod merge;
+pub mod orchestrate;
 pub mod sweep;
 pub mod sweep_stream;
 
 /// Version stamp written into every machine-readable output this crate
-/// produces (sweep report JSON, `cells.jsonl` header, bench JSON), so
-/// `docs/output-schemas.md` can be versioned against the files. Bump it
-/// whenever a field is added, removed, or changes meaning.
+/// produces (sweep report JSON, `cells.jsonl` header, bench JSON, the
+/// `orchestrate.json` manifest), so `docs/output-schemas.md` can be
+/// versioned against the files. Bump it whenever a field is added,
+/// removed, or changes meaning.
 ///
 /// Version history: **1** — initial schemas; **2** — spill headers embed
 /// the canonical `spec` plus optional `shard_index`/`shard_count`,
 /// non-finite numbers serialize as `NaN`/`Infinity`/`-Infinity` instead
-/// of `null`, and CSV string fields use RFC-4180 quoting when needed.
-pub const OUTPUT_SCHEMA_VERSION: usize = 2;
+/// of `null`, and CSV string fields use RFC-4180 quoting when needed;
+/// **3** — adds the `orchestrate.json` shard-fleet manifest
+/// (`carbon-sim orchestrate`); the sweep report, spill, and bench
+/// schemas are unchanged from version 2.
+pub const OUTPUT_SCHEMA_VERSION: usize = 3;
+
+/// Oldest `cells.jsonl` spill version `--resume` and `merge` still
+/// accept. The spill format is unchanged since version 2 (version 3
+/// only added the orchestrate manifest), so refusing v2 spills would
+/// orphan days of shard work over a label; version-1 spills really do
+/// differ (no embedded spec) and stay refused.
+pub const MIN_SUPPORTED_SPILL_SCHEMA_VERSION: usize = 2;
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::metrics::SimResult;

@@ -1,0 +1,736 @@
+//! Shard-fleet orchestration (`carbon-sim orchestrate`): drive the whole
+//! distributed sweep pipeline from one spec — launch N `sweep --shard
+//! K/N` runs, relay their progress, retry failures against their partial
+//! spills, and merge the finished shard spills into a report
+//! byte-identical to a single-machine run.
+//!
+//! PR 4's building blocks (`--shard K/N` spills, `carbon-sim merge`)
+//! made distributed sweeps *possible*; this module makes them *one
+//! command*. [`run`] owns the fleet: shard children are launched either
+//! as local `carbon-sim sweep` processes (the default) or through a
+//! `--launcher` shell template with `{shard}`/`{out_dir}`/`{spec}`
+//! placeholders (SSH, SLURM `srun`, …), at most `workers` in flight at
+//! once, with every child's stdout/stderr relayed line-by-line under a
+//! `[shard K/N]` prefix.
+//!
+//! # Retry/resume state machine
+//!
+//! Each shard moves through `pending → running → done | failed`, tracked
+//! in the `<out-dir>/orchestrate.json` manifest (field reference in
+//! `docs/output-schemas.md` §3.2), which is atomically rewritten
+//! (temp-file + rename) on **every** transition so a killed orchestrator
+//! always leaves a consistent manifest behind:
+//!
+//! * **Launch.** A `pending` shard starts when a worker slot frees up.
+//!   The first attempt of a fresh (non-`--resume`) run starts a fresh
+//!   spill; every later attempt — a retry, or any attempt under
+//!   `--resume` — passes `--resume` to the child so cells already in the
+//!   shard's spill are **reused, not re-simulated**.
+//! * **Verification.** Exit code 0 is not trusted blindly: the shard's
+//!   spill is re-scanned ([`sweep_stream::scan_done`], the same rules as
+//!   resume compaction) and the shard is `done` only when every cell it
+//!   owns is on disk. A launcher that queues asynchronously and returns
+//!   early (e.g. `sbatch` without `--wait`) therefore fails verification
+//!   instead of corrupting the merge.
+//! * **Failure.** A non-zero exit, spawn error, or incomplete spill
+//!   re-launches the shard up to `retries` more times, then parks it as
+//!   `failed`, recording the exit code and the last stderr lines. Other
+//!   shards keep running; the orchestrator then errors out, surfacing
+//!   each failed shard's stderr tail, and a later `orchestrate --resume`
+//!   re-runs only the non-`done` shards.
+//! * **Resume.** `--resume` re-reads the manifest (refusing a different
+//!   spec hash, cell count, or shard count — the split cannot change
+//!   mid-flight), requeues `running` (interrupted) and `failed` shards,
+//!   and re-verifies `done` shards' spills on disk rather than trusting
+//!   the status — a deleted or truncated shard dir heals itself.
+//! * **Merge.** Once every shard is `done`, the existing
+//!   [`merge::merge_spills`] validation + reassembly path produces
+//!   `<out-dir>/cells.jsonl` and `report.json`/`.csv` — byte-identical
+//!   to a single-machine run (pinned by `tests/orchestrate.rs`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::Mutex;
+
+use super::merge;
+use super::sweep::{Format, ShardSpec, SweepSpec};
+use super::sweep_stream::{self, header_usize, CELLS_FILE};
+use super::OUTPUT_SCHEMA_VERSION;
+use crate::util::json::{parse, Value};
+use crate::util::pool;
+use crate::util::proc;
+
+/// Manifest file name inside the orchestrate `--out-dir`.
+pub const MANIFEST_FILE: &str = "orchestrate.json";
+
+/// The sub-directory one shard's spill lands in (`<out-dir>/shard-<k>`).
+pub fn shard_dir_name(k: usize) -> String {
+    format!("shard-{k}")
+}
+
+/// One shard's position in the retry/resume state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStatus {
+    /// Not launched yet (or requeued by `--resume`).
+    Pending,
+    /// An attempt is in flight — after a crash, "was in flight".
+    Running,
+    /// Exited 0 and the spill verifiably covers every owned cell.
+    Done,
+    /// Out of retries; `exit_code`/`stderr_tail` say why.
+    Failed,
+}
+
+impl ShardStatus {
+    fn name(self) -> &'static str {
+        match self {
+            ShardStatus::Pending => "pending",
+            ShardStatus::Running => "running",
+            ShardStatus::Done => "done",
+            ShardStatus::Failed => "failed",
+        }
+    }
+
+    fn parse(s: &str) -> Result<ShardStatus, String> {
+        match s {
+            "pending" => Ok(ShardStatus::Pending),
+            "running" => Ok(ShardStatus::Running),
+            "done" => Ok(ShardStatus::Done),
+            "failed" => Ok(ShardStatus::Failed),
+            other => Err(format!("unknown shard status '{other}'")),
+        }
+    }
+}
+
+/// One shard's manifest record.
+#[derive(Clone, Debug)]
+pub struct ShardState {
+    pub status: ShardStatus,
+    /// Cumulative launch attempts, across orchestrate invocations.
+    pub attempts: usize,
+    /// Exit code of the most recent finished attempt (`None` before the
+    /// first exit, or when the child was signal-killed or failed to
+    /// spawn).
+    pub exit_code: Option<i32>,
+    /// Last stderr lines of the most recent failed attempt (cleared once
+    /// the shard succeeds).
+    pub stderr_tail: Vec<String>,
+}
+
+impl Default for ShardState {
+    fn default() -> ShardState {
+        ShardState {
+            status: ShardStatus::Pending,
+            attempts: 0,
+            exit_code: None,
+            stderr_tail: Vec::new(),
+        }
+    }
+}
+
+/// The in-memory manifest; serialized to [`MANIFEST_FILE`] on every
+/// state transition.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub spec_hash: String,
+    pub n_cells: usize,
+    pub shard_count: usize,
+    /// The canonical spec, embedded like the `cells.jsonl` header embeds
+    /// it — the manifest is self-describing.
+    pub spec: Value,
+    pub shards: Vec<ShardState>,
+}
+
+impl Manifest {
+    fn fresh(spec: &SweepSpec, shards: usize) -> Manifest {
+        Manifest {
+            spec_hash: spec.spec_hash(),
+            n_cells: spec.n_cells(),
+            shard_count: shards,
+            spec: spec.to_json(),
+            shards: vec![ShardState::default(); shards],
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let shards = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(k, s)| {
+                let mut pairs = vec![
+                    ("index", k.into()),
+                    ("out_dir", shard_dir_name(k).into()),
+                    ("status", s.status.name().into()),
+                    ("attempts", s.attempts.into()),
+                ];
+                if let Some(code) = s.exit_code {
+                    pairs.push(("exit_code", f64::from(code).into()));
+                }
+                if !s.stderr_tail.is_empty() {
+                    pairs.push((
+                        "stderr_tail",
+                        Value::Arr(s.stderr_tail.iter().map(|l| l.as_str().into()).collect()),
+                    ));
+                }
+                Value::obj(pairs)
+            })
+            .collect();
+        Value::obj(vec![
+            ("kind", "orchestrate".into()),
+            ("schema_version", OUTPUT_SCHEMA_VERSION.into()),
+            ("spec_hash", self.spec_hash.as_str().into()),
+            ("n_cells", self.n_cells.into()),
+            ("shard_count", self.shard_count.into()),
+            ("spec", self.spec.clone()),
+            ("shards", Value::Arr(shards)),
+        ])
+    }
+
+    /// Atomic rewrite: a kill between transitions leaves either the old
+    /// or the new manifest, never a torn one.
+    fn write(&self, path: &Path) -> Result<(), String> {
+        let tmp = path.with_extension("json.tmp");
+        let mut body = self.to_json().to_string_pretty();
+        body.push('\n');
+        fs::write(&tmp, body).map_err(|e| format!("writing {tmp:?}: {e}"))?;
+        fs::rename(&tmp, path).map_err(|e| format!("renaming {tmp:?} over {path:?}: {e}"))
+    }
+
+    /// Load and identity-check an existing manifest against the current
+    /// invocation. Every refusal names what diverged — a resume must
+    /// never mix shards of a different grid or a different split.
+    fn load(path: &Path, spec: &SweepSpec, shards: usize) -> Result<Manifest, String> {
+        let text = fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+        let v = parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+        if v.str_or("kind", "") != "orchestrate" {
+            return Err(format!("{path:?}: not an orchestrate manifest (missing kind)"));
+        }
+        let ver = header_usize(&v, "schema_version", 0, path)?;
+        if ver != OUTPUT_SCHEMA_VERSION {
+            return Err(format!(
+                "{path:?}: manifest schema_version {ver} != supported {OUTPUT_SCHEMA_VERSION}"
+            ));
+        }
+        let hash = spec.spec_hash();
+        if v.str_or("spec_hash", "") != hash {
+            return Err(format!(
+                "{path:?}: manifest spec hash {} does not match the current spec ({hash}) — \
+                 this out-dir belongs to a different grid; use a fresh --out-dir",
+                v.str_or("spec_hash", "")
+            ));
+        }
+        let n_cells = header_usize(&v, "n_cells", 0, path)?;
+        if n_cells != spec.n_cells() {
+            return Err(format!(
+                "{path:?}: manifest expects {n_cells} cells, current spec expands to {}",
+                spec.n_cells()
+            ));
+        }
+        let shard_count = header_usize(&v, "shard_count", 0, path)?;
+        if shard_count != shards {
+            return Err(format!(
+                "{path:?}: manifest records {shard_count} shards, this run asked for {shards} — \
+                 a grid's split cannot change mid-flight; finish with --shards {shard_count} \
+                 or start a fresh --out-dir"
+            ));
+        }
+        let raw = v
+            .get("shards")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| format!("{path:?}: manifest has no shards array"))?;
+        if raw.len() != shards {
+            return Err(format!(
+                "{path:?}: manifest lists {} shard entries for shard_count {shards}",
+                raw.len()
+            ));
+        }
+        let mut states = Vec::with_capacity(shards);
+        for (k, entry) in raw.iter().enumerate() {
+            if header_usize(entry, "index", usize::MAX, path)? != k {
+                return Err(format!("{path:?}: shard entry {k} has a mismatched index field"));
+            }
+            let status = ShardStatus::parse(entry.str_or("status", ""))
+                .map_err(|e| format!("{path:?}: shard entry {k}: {e}"))?;
+            let exit_code = match entry.get("exit_code") {
+                None => None,
+                Some(Value::Num(x)) if x.fract() == 0.0 && x.abs() < 2_147_483_648.0 => {
+                    Some(*x as i32)
+                }
+                Some(other) => {
+                    return Err(format!(
+                        "{path:?}: shard entry {k}: exit_code must be an integer, got {other}"
+                    ))
+                }
+            };
+            let stderr_tail = match entry.get("stderr_tail") {
+                None => Vec::new(),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| {
+                        format!("{path:?}: shard entry {k}: stderr_tail must be an array")
+                    })?
+                    .iter()
+                    .map(|l| l.as_str().unwrap_or_default().to_string())
+                    .collect(),
+            };
+            states.push(ShardState {
+                status,
+                attempts: header_usize(entry, "attempts", 0, path)?,
+                exit_code,
+                stderr_tail,
+            });
+        }
+        Ok(Manifest {
+            spec_hash: hash,
+            n_cells,
+            shard_count,
+            spec: v.get("spec").cloned().unwrap_or_else(|| spec.to_json()),
+            shards: states,
+        })
+    }
+}
+
+/// Everything [`run`] needs; the CLI builds one from flags, tests build
+/// one directly (pointing `program` at the `carbon-sim` binary under
+/// test).
+#[derive(Clone, Debug)]
+pub struct OrchestrateConfig {
+    /// The parsed grid — hashed for the manifest and used for
+    /// verification; children re-read it from `spec_path`.
+    pub spec: SweepSpec,
+    /// Spec file handed to every shard child (`{spec}` in templates).
+    pub spec_path: PathBuf,
+    /// How many shards to split the grid across (the `N` of `K/N`).
+    pub shards: usize,
+    /// Max shard runs in flight at once (0 = all shards).
+    pub workers: usize,
+    /// Re-launches per shard after a failure, per invocation.
+    pub retries: usize,
+    /// `--threads` forwarded to local shard children (0 = one per core).
+    pub threads_per_shard: usize,
+    /// Format of the merged report.
+    pub format: Format,
+    /// Shell template with `{shard}`/`{out_dir}`/`{spec}` placeholders,
+    /// run as `sh -c`; `None` launches local children via `program`.
+    /// Templates must block until the shard finishes and must land the
+    /// spill under `{out_dir}` on this machine's filesystem.
+    pub launcher: Option<String>,
+    /// The `carbon-sim` binary for the default local launcher.
+    pub program: PathBuf,
+    /// Continue a previous run in the same out-dir.
+    pub resume: bool,
+    /// Relay child stdout progress lines (stderr is always relayed).
+    pub verbose: bool,
+}
+
+/// What an orchestrate run did (the CLI's summary line).
+#[derive(Clone, Debug)]
+pub struct OrchestrateSummary {
+    pub n_shards: usize,
+    /// Shards whose spills were already complete and were not relaunched.
+    pub n_skipped: usize,
+    /// Shards launched (at least once) by this invocation.
+    pub n_launched: usize,
+    pub cells_path: PathBuf,
+    pub report_path: PathBuf,
+}
+
+/// Is every cell this shard owns recorded in `done`?
+fn shard_complete(done: &[bool], shard: &ShardSpec) -> bool {
+    (0..done.len()).filter(|&i| shard.owns(i)).all(|i| done[i])
+}
+
+/// Drive the fleet to completion: launch/retry every non-done shard,
+/// then merge. See the module docs for the state machine.
+pub fn run(cfg: &OrchestrateConfig, out_dir: &Path) -> Result<OrchestrateSummary, String> {
+    cfg.spec.validate()?;
+    if cfg.shards == 0 {
+        return Err("orchestrate: --shards must be ≥ 1".to_string());
+    }
+    fs::create_dir_all(out_dir).map_err(|e| format!("creating {out_dir:?}: {e}"))?;
+    let manifest_path = out_dir.join(MANIFEST_FILE);
+
+    let mut manifest = if manifest_path.exists() {
+        if !cfg.resume {
+            return Err(format!(
+                "{manifest_path:?} already exists — pass --resume to continue that run \
+                 (done shards are kept, interrupted/failed ones relaunched against their \
+                 partial spills), or use a fresh --out-dir"
+            ));
+        }
+        Manifest::load(&manifest_path, &cfg.spec, cfg.shards)?
+    } else {
+        Manifest::fresh(&cfg.spec, cfg.shards)
+    };
+
+    // Requeue interrupted and failed shards, and re-verify "done" ones
+    // against the spill actually on disk — the manifest records intent,
+    // the spill is the ground truth.
+    for k in 0..cfg.shards {
+        let requeue = match manifest.shards[k].status {
+            ShardStatus::Pending => false,
+            ShardStatus::Running | ShardStatus::Failed => true,
+            ShardStatus::Done => {
+                let cells = out_dir.join(shard_dir_name(k)).join(CELLS_FILE);
+                let shard = ShardSpec::new(k, cfg.shards).expect("k < shards");
+                if !cells.exists() {
+                    true
+                } else {
+                    !shard_complete(&sweep_stream::scan_done(&cells, &cfg.spec, &shard)?, &shard)
+                }
+            }
+        };
+        if requeue {
+            manifest.shards[k].status = ShardStatus::Pending;
+        }
+    }
+    manifest.write(&manifest_path)?;
+
+    let to_run: Vec<usize> = (0..cfg.shards)
+        .filter(|&k| manifest.shards[k].status != ShardStatus::Done)
+        .collect();
+    let n_skipped = cfg.shards - to_run.len();
+    if cfg.verbose && n_skipped > 0 {
+        println!("orchestrate: {n_skipped} shard(s) already complete, launching {}", to_run.len());
+    }
+
+    let shared = Mutex::new(manifest);
+    let workers = if cfg.workers == 0 { cfg.shards } else { cfg.workers };
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    pool::run_streamed(
+        &to_run,
+        workers,
+        |k| run_shard(cfg, out_dir, &manifest_path, &shared, k),
+        |k, outcome| {
+            if let Err(msg) = outcome {
+                failures.push((k, msg));
+            }
+            true // keep the rest of the fleet running
+        },
+    );
+    if !failures.is_empty() {
+        failures.sort_unstable_by_key(|&(k, _)| k);
+        let mut msg = format!(
+            "orchestrate: {} of {} shard(s) failed:\n",
+            failures.len(),
+            cfg.shards
+        );
+        for (_, detail) in &failures {
+            msg.push_str(detail);
+            msg.push('\n');
+        }
+        msg.push_str(&format!(
+            "finished shards and partial spills are kept under {out_dir:?}; fix the cause \
+             and re-run with --resume"
+        ));
+        return Err(msg);
+    }
+
+    // Every shard verified complete: validate + reassemble through the
+    // same merge path a by-hand `carbon-sim merge` would use.
+    let dirs: Vec<PathBuf> = (0..cfg.shards).map(|k| out_dir.join(shard_dir_name(k))).collect();
+    let m = merge::merge_spills(&dirs, out_dir, cfg.format)?;
+    Ok(OrchestrateSummary {
+        n_shards: cfg.shards,
+        n_skipped,
+        n_launched: to_run.len(),
+        cells_path: m.cells_path,
+        report_path: m.report_path,
+    })
+}
+
+/// Update shard `k`'s manifest record under the lock and persist it.
+fn update_shard(
+    shared: &Mutex<Manifest>,
+    manifest_path: &Path,
+    k: usize,
+    f: impl FnOnce(&mut ShardState),
+) -> Result<(), String> {
+    let mut m = shared.lock().expect("manifest lock");
+    f(&mut m.shards[k]);
+    m.write(manifest_path)
+}
+
+/// Build shard `k`'s launch command for this attempt.
+fn shard_command(cfg: &OrchestrateConfig, shard_dir: &Path, k: usize, resume: bool) -> Command {
+    let shard = format!("{k}/{}", cfg.shards);
+    match &cfg.launcher {
+        Some(template) => {
+            let line = proc::substitute(
+                template,
+                &[
+                    ("shard", shard.as_str()),
+                    ("out_dir", &shard_dir.display().to_string()),
+                    ("spec", &cfg.spec_path.display().to_string()),
+                ],
+            );
+            proc::shell_command(&line)
+        }
+        None => {
+            let mut cmd = Command::new(&cfg.program);
+            cmd.arg("sweep")
+                .arg("--spec")
+                .arg(&cfg.spec_path)
+                .arg("--shard")
+                .arg(&shard)
+                .arg("--out-dir")
+                .arg(shard_dir)
+                .arg("--threads")
+                .arg(cfg.threads_per_shard.to_string());
+            if resume {
+                cmd.arg("--resume");
+            }
+            if !cfg.verbose {
+                cmd.arg("--quiet");
+            }
+            cmd
+        }
+    }
+}
+
+/// Run one shard to `done` or `failed`: up to `1 + retries` attempts,
+/// each verified against the on-disk spill. Returns `Err` with the
+/// preformatted failure description (exit code + stderr tail) once the
+/// shard is parked as failed.
+fn run_shard(
+    cfg: &OrchestrateConfig,
+    out_dir: &Path,
+    manifest_path: &Path,
+    shared: &Mutex<Manifest>,
+    k: usize,
+) -> Result<(), String> {
+    let shard = ShardSpec::new(k, cfg.shards).expect("k < shards");
+    let shard_dir = out_dir.join(shard_dir_name(k));
+    fs::create_dir_all(&shard_dir).map_err(|e| format!("creating {shard_dir:?}: {e}"))?;
+    let label = format!("[shard {shard}]");
+
+    let mut last_failure = String::new();
+    let mut last_code: Option<i32> = None;
+    let mut last_tail: Vec<String> = Vec::new();
+    for attempt in 1..=cfg.retries + 1 {
+        update_shard(shared, manifest_path, k, |s| {
+            s.status = ShardStatus::Running;
+            s.attempts += 1;
+        })?;
+        // Only the very first attempt of a fresh run starts a fresh
+        // spill; retries and resumed runs reuse what is already on disk.
+        let child_resume = cfg.resume || attempt > 1;
+        if cfg.verbose {
+            println!(
+                "{label} launching (attempt {attempt}/{}{})",
+                cfg.retries + 1,
+                if child_resume { ", resuming spill" } else { "" }
+            );
+        }
+        let mut cmd = shard_command(cfg, &shard_dir, k, child_resume);
+        let spawned = proc::run_streaming_lines(&mut cmd, &mut |line, is_err| {
+            if is_err {
+                eprintln!("{label} {line}");
+            } else if cfg.verbose {
+                println!("{label} {line}");
+            }
+        });
+        let (outcome, code, tail) = match spawned {
+            Err(e) => (Err(e), None, Vec::new()),
+            Ok((status, tail)) => {
+                let code = status.code();
+                if status.success() {
+                    // Exit 0 must be backed by a complete spill.
+                    let cells = shard_dir.join(CELLS_FILE);
+                    match sweep_stream::scan_done(&cells, &cfg.spec, &shard) {
+                        Err(e) => {
+                            (Err(format!("exit 0 but the spill is unreadable: {e}")), code, tail)
+                        }
+                        Ok(done) if shard_complete(&done, &shard) => (Ok(()), code, tail),
+                        Ok(done) => {
+                            let owned = shard.owned_count(done.len());
+                            let have =
+                                (0..done.len()).filter(|&i| shard.owns(i) && done[i]).count();
+                            (
+                                Err(format!(
+                                    "exit 0 but {cells:?} records only {have} of {owned} owned \
+                                     cells — did the launcher return before the shard finished?"
+                                )),
+                                code,
+                                tail,
+                            )
+                        }
+                    }
+                } else {
+                    let why = match code {
+                        Some(c) => format!("exit code {c}"),
+                        None => "killed by signal".to_string(),
+                    };
+                    (Err(why), code, tail)
+                }
+            }
+        };
+        match outcome {
+            Ok(()) => {
+                update_shard(shared, manifest_path, k, |s| {
+                    s.status = ShardStatus::Done;
+                    s.exit_code = code;
+                    s.stderr_tail.clear();
+                })?;
+                if cfg.verbose {
+                    println!("{label} done (attempt {attempt})");
+                }
+                return Ok(());
+            }
+            Err(why) => {
+                eprintln!("{label} attempt {attempt}/{} failed: {why}", cfg.retries + 1);
+                last_failure = why;
+                last_code = code;
+                last_tail = tail;
+                update_shard(shared, manifest_path, k, |s| {
+                    s.exit_code = last_code;
+                    s.stderr_tail = last_tail.clone();
+                })?;
+            }
+        }
+    }
+    update_shard(shared, manifest_path, k, |s| {
+        s.status = ShardStatus::Failed;
+    })?;
+    let mut detail = format!(
+        "  shard {shard}: {last_failure} after {} attempt(s)",
+        cfg.retries + 1
+    );
+    if last_tail.is_empty() {
+        detail.push_str(" (no stderr output)");
+    } else {
+        detail.push_str("; stderr tail:");
+        for line in &last_tail {
+            detail.push_str("\n    ");
+            detail.push_str(line);
+        }
+    }
+    Err(detail)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::azure::Workload;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            rates: vec![5.0],
+            core_counts: vec![8],
+            policies: vec!["linux".into(), "proposed".into()],
+            workloads: vec![Workload::Mixed],
+            replicas: 1,
+            duration_s: 2.0,
+            n_prompt: 1,
+            n_token: 1,
+            seed: 31,
+        }
+    }
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("carbon_sim_orchestrate_unit").join(name);
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_disk() {
+        let spec = tiny_spec();
+        let dir = scratch("roundtrip");
+        let path = dir.join(MANIFEST_FILE);
+        let mut m = Manifest::fresh(&spec, 3);
+        m.shards[0].status = ShardStatus::Done;
+        m.shards[0].attempts = 1;
+        m.shards[0].exit_code = Some(0);
+        m.shards[1].status = ShardStatus::Failed;
+        m.shards[1].attempts = 3;
+        m.shards[1].exit_code = Some(7);
+        m.shards[1].stderr_tail = vec!["boom".into(), "again".into()];
+        m.write(&path).unwrap();
+
+        let back = Manifest::load(&path, &spec, 3).unwrap();
+        assert_eq!(back.spec_hash, spec.spec_hash());
+        assert_eq!(back.n_cells, spec.n_cells());
+        assert_eq!(back.shard_count, 3);
+        assert_eq!(back.shards[0].status, ShardStatus::Done);
+        assert_eq!(back.shards[0].exit_code, Some(0));
+        assert_eq!(back.shards[1].status, ShardStatus::Failed);
+        assert_eq!(back.shards[1].attempts, 3);
+        assert_eq!(back.shards[1].exit_code, Some(7));
+        assert_eq!(back.shards[1].stderr_tail, vec!["boom", "again"]);
+        assert_eq!(back.shards[2].status, ShardStatus::Pending);
+        // The manifest is self-describing: the embedded spec round-trips
+        // through the config parser to the same hash.
+        let rebuilt = crate::config::sweep_from_value(&back.spec).unwrap();
+        assert_eq!(rebuilt.spec_hash(), spec.spec_hash());
+    }
+
+    #[test]
+    fn manifest_load_refuses_identity_mismatches() {
+        let spec = tiny_spec();
+        let dir = scratch("mismatch");
+        let path = dir.join(MANIFEST_FILE);
+        Manifest::fresh(&spec, 2).write(&path).unwrap();
+
+        let mut other = tiny_spec();
+        other.seed = 32;
+        let err = Manifest::load(&path, &other, 2).unwrap_err();
+        assert!(err.contains("spec hash"), "{err}");
+
+        let err2 = Manifest::load(&path, &spec, 3).unwrap_err();
+        assert!(err2.contains("2 shards"), "{err2}");
+        assert!(err2.contains("--shards 2"), "{err2}");
+
+        fs::write(&path, "{\"kind\": \"something-else\"}\n").unwrap();
+        let err3 = Manifest::load(&path, &spec, 2).unwrap_err();
+        assert!(err3.contains("not an orchestrate manifest"), "{err3}");
+    }
+
+    #[test]
+    fn manifest_load_rejects_corrupt_fields() {
+        let spec = tiny_spec();
+        let dir = scratch("corrupt");
+        let path = dir.join(MANIFEST_FILE);
+        Manifest::fresh(&spec, 2).write(&path).unwrap();
+        let body = fs::read_to_string(&path).unwrap();
+        let poisoned = body.replace("\"pending\"", "\"exploded\"");
+        assert_ne!(poisoned, body);
+        fs::write(&path, poisoned).unwrap();
+        let err = Manifest::load(&path, &spec, 2).unwrap_err();
+        assert!(err.contains("exploded"), "{err}");
+    }
+
+    #[test]
+    fn shard_complete_checks_only_owned_cells() {
+        let shard = ShardSpec::new(1, 2).unwrap();
+        // 4-cell grid: shard 1/2 owns cells 1 and 3.
+        assert!(shard_complete(&[false, true, false, true], &shard));
+        assert!(!shard_complete(&[true, true, true, false], &shard));
+        assert!(shard_complete(&[true; 4], &shard));
+    }
+
+    #[test]
+    fn fresh_run_refuses_an_existing_manifest_without_resume() {
+        let spec = tiny_spec();
+        let dir = scratch("no_resume");
+        Manifest::fresh(&spec, 2).write(&dir.join(MANIFEST_FILE)).unwrap();
+        let cfg = OrchestrateConfig {
+            spec: spec.clone(),
+            spec_path: dir.join("spec.json"),
+            shards: 2,
+            workers: 0,
+            retries: 0,
+            threads_per_shard: 1,
+            format: Format::Json,
+            launcher: None,
+            program: PathBuf::from("/nonexistent"),
+            resume: false,
+            verbose: false,
+        };
+        let err = run(&cfg, &dir).unwrap_err();
+        assert!(err.contains("--resume"), "{err}");
+    }
+}

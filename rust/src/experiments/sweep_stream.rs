@@ -109,14 +109,21 @@ pub(crate) struct SpillHeader {
 /// Strict non-negative-integer header field, defaulting when absent.
 /// The lenient `as_usize` cast would saturate/truncate a corrupt value
 /// (`-1`, `1.7`) into a plausible one — same reasoning as [`row_index`].
-fn header_usize(v: &Value, key: &str, default: usize, path: &Path) -> Result<usize, String> {
+/// Shared with [`super::orchestrate`]'s manifest parser, which applies
+/// the same strictness to `orchestrate.json`.
+pub(crate) fn header_usize(
+    v: &Value,
+    key: &str,
+    default: usize,
+    path: &Path,
+) -> Result<usize, String> {
     match v.get(key) {
         None => Ok(default),
         Some(Value::Num(x)) if *x >= 0.0 && x.fract() == 0.0 && *x < 9_007_199_254_740_992.0 => {
             Ok(*x as usize)
         }
         Some(other) => Err(format!(
-            "{path:?}: spill header field '{key}' must be a non-negative integer, got {other}"
+            "{path:?}: header field '{key}' must be a non-negative integer, got {other}"
         )),
     }
 }
@@ -132,9 +139,10 @@ pub(crate) fn parse_header(line: &[u8], path: &Path) -> Result<SpillHeader, Stri
         return Err(format!("{path:?}: not a sweep cells.jsonl spill (missing kind)"));
     }
     let ver = header_usize(&v, "schema_version", 0, path)?;
-    if ver != OUTPUT_SCHEMA_VERSION {
+    if !(super::MIN_SUPPORTED_SPILL_SCHEMA_VERSION..=OUTPUT_SCHEMA_VERSION).contains(&ver) {
         return Err(format!(
-            "{path:?}: spill schema_version {ver} != supported {OUTPUT_SCHEMA_VERSION}"
+            "{path:?}: spill schema_version {ver} outside supported {}..={OUTPUT_SCHEMA_VERSION}",
+            super::MIN_SUPPORTED_SPILL_SCHEMA_VERSION
         ));
     }
     let shard = ShardSpec::new(
@@ -261,6 +269,40 @@ pub fn scan_and_compact(
         w.flush().map_err(|e| format!("writing {tmp:?}: {e}"))?;
     }
     fs::rename(&tmp, path).map_err(|e| format!("renaming {tmp:?} over {path:?}: {e}"))?;
+    Ok(done)
+}
+
+/// Read-only variant of [`scan_and_compact`]: report which of the grid's
+/// cells a spill already records, by the same rules resume compaction
+/// applies (header identity check, first copy wins, a truncated or
+/// corrupt tail is ignored) — without rewriting the file. The
+/// orchestrator ([`super::orchestrate`]) uses this as its validation
+/// hook: a shard child's exit code 0 is only trusted once every cell the
+/// shard owns is on disk, and a `--resume` only skips a shard whose
+/// spill is verifiably complete. An empty or header-truncated file is
+/// simply "nothing recorded"; a header from a different spec or shard
+/// assignment is a hard error, exactly as on resume.
+pub fn scan_done(path: &Path, spec: &SweepSpec, shard: &ShardSpec) -> Result<Vec<bool>, String> {
+    let n = spec.n_cells();
+    let mut done = vec![false; n];
+    let file = File::open(path).map_err(|e| format!("opening {path:?}: {e}"))?;
+    let mut r = BufReader::new(file);
+    let mut buf = Vec::new();
+    let (len, complete) = read_line(&mut r, &mut buf)?;
+    if len == 0 || !complete {
+        return Ok(done); // killed before the header landed: no rows follow
+    }
+    check_header(&buf, spec, shard, path)?;
+    loop {
+        let (len, complete) = read_line(&mut r, &mut buf)?;
+        if len == 0 || !complete {
+            break;
+        }
+        let Some(idx) = row_index(&buf, n) else {
+            break; // corrupt row: it and everything after would be dropped
+        };
+        done[idx] = true;
+    }
     Ok(done)
 }
 

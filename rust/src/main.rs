@@ -5,6 +5,9 @@
 //!   sweep       run a parallel scenario sweep (rates × cores × policies ×
 //!               workloads × replicas) and aggregate JSON/CSV results;
 //!               --shard K/N runs one machine's slice of the grid
+//!   orchestrate launch a whole sharded sweep from one spec — N shard runs
+//!               (local children or a --launcher template), a retry/resume
+//!               manifest, and the final merge, in one command
 //!   merge       validate and reassemble sharded sweep spills into one report
 //!   bench       run the pinned perf matrix and write BENCH_<date>.json
 //!   figure      regenerate a paper figure (1, 2, 4, 5, 6, 7, 8)
@@ -36,6 +39,7 @@ fn main() {
     let code = match cmd {
         "simulate" => cmd_simulate(&rest),
         "sweep" => cmd_sweep(&rest),
+        "orchestrate" => cmd_orchestrate(&rest),
         "merge" => cmd_merge(&rest),
         "bench" => cmd_bench(&rest),
         "figure" => cmd_figure(&rest),
@@ -64,6 +68,10 @@ fn top_usage() -> String {
      \x20              from axis flags or a JSON spec (--spec examples/specs/paper.json);\n\
      \x20              --out-dir streams per-cell JSONL with crash resume (--resume);\n\
      \x20              --shard K/N runs one machine's slice of the grid\n\
+     \x20 orchestrate  drive a whole sharded sweep from one spec: launch N shard runs\n\
+     \x20              (local children, or remote via --launcher template), track them\n\
+     \x20              in a retry/resume manifest (orchestrate.json), and merge the\n\
+     \x20              finished spills into the final report — one command end to end\n\
      \x20 merge        validate sharded sweep spills against one another and reassemble\n\
      \x20              them into a report byte-identical to a single-machine run\n\
      \x20 bench        run the pinned perf matrix (short/long traces × 40/80 cores ×\n\
@@ -266,20 +274,6 @@ fn cmd_sweep(rest: &[String]) -> i32 {
     .flag("quiet", "suppress the stdout summary table");
     let a = parse_or_exit(&cli, rest);
 
-    // Strict scalar parsing: unlike `usize_or`-style lenient accessors, a
-    // malformed value must exit 2, not silently run the wrong grid for
-    // hours at paper scale.
-    fn num<T: std::str::FromStr>(
-        a: &carbon_sim::util::cli::Args,
-        key: &str,
-    ) -> Result<T, String>
-    where
-        T::Err: std::fmt::Display,
-    {
-        let s = a.str_or(key, "");
-        s.parse::<T>().map_err(|e| format!("bad --{key} '{s}': {e}"))
-    }
-
     let parsed = (|| -> Result<(sweep::SweepSpec, sweep::Format, usize), String> {
         let spec_path = a.str_or("spec", "");
         let spec = if spec_path.is_empty() {
@@ -288,11 +282,14 @@ fn cmd_sweep(rest: &[String]) -> i32 {
                 core_counts: sweep::parse_usize_list(&a.str_or("cores", ""))?,
                 policies: sweep::parse_policy_list(&a.str_or("policies", "all"))?,
                 workloads: sweep::parse_workload_list(&a.str_or("workloads", "mixed"))?,
-                replicas: num(&a, "replicas")?,
-                duration_s: num(&a, "duration")?,
-                n_prompt: num(&a, "prompt-machines")?,
-                n_token: num(&a, "token-machines")?,
-                seed: num(&a, "seed")?,
+                // Strict scalar parsing (`Args::parsed`): a malformed
+                // value must exit 2, not silently run the wrong grid
+                // for hours at paper scale.
+                replicas: a.parsed("replicas")?,
+                duration_s: a.parsed("duration")?,
+                n_prompt: a.parsed("prompt-machines")?,
+                n_token: a.parsed("token-machines")?,
+                seed: a.parsed("seed")?,
             }
         } else {
             // The spec file defines the whole grid; silently ignoring an
@@ -318,7 +315,7 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         };
         // sweep::run validates the spec; only the format needs checking here.
         let format = sweep::Format::parse(&a.str_or("format", "json"))?;
-        let threads = num(&a, "threads")?;
+        let threads = a.parsed("threads")?;
         Ok((spec, format, threads))
     })();
     let (spec, format, threads) = match parsed {
@@ -421,6 +418,112 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         print!("{}", report.render(format));
     }
     0
+}
+
+// ----------------------------------------------------------------- orchestrate
+
+fn cmd_orchestrate(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "carbon-sim orchestrate",
+        "drive a sharded sweep end to end: launch N `sweep --shard K/N` runs from one \
+         spec (at most --workers in flight), relay their progress, retry failures \
+         against their partial spills, track everything in <out-dir>/orchestrate.json, \
+         and merge the finished shards into a report byte-identical to a \
+         single-machine run",
+    )
+    .opt("spec", "", "JSON sweep spec file (required; defines the whole grid)")
+    .opt("shards", "", "number of shards N to split the grid across (required)")
+    .opt("workers", "0", "max shard runs in flight at once (0 = all N)")
+    .opt(
+        "retries",
+        "2",
+        "re-launches per shard after a failure; retries resume the shard's partial spill",
+    )
+    .opt("threads", "0", "worker threads per local shard child (0 = one per core)")
+    .opt(
+        "out-dir",
+        "orchestrate-out",
+        "directory for the shard out-dirs (shard-<k>/), the orchestrate.json manifest, \
+         and the merged cells.jsonl + report",
+    )
+    .opt("format", "json", "merged report format: json | csv")
+    .opt(
+        "launcher",
+        "",
+        "shell template launching one shard, with {shard}, {out_dir}, and {spec} \
+         substituted (e.g. for SSH/SLURM); it must block until the shard finishes and \
+         write the spill under {out_dir}. Default: local carbon-sim child processes",
+    )
+    .flag(
+        "resume",
+        "continue a previous orchestrate run in this --out-dir: done shards are kept \
+         (re-verified on disk), interrupted and failed ones relaunch with --resume",
+    )
+    .flag("quiet", "suppress relayed shard stdout lines (stderr is always relayed)");
+    let a = parse_or_exit(&cli, rest);
+
+    let spec_path = a.str_or("spec", "");
+    if spec_path.is_empty() {
+        eprintln!("orchestrate requires --spec (the grid definition every shard runs)");
+        return 2;
+    }
+    if a.str_or("shards", "").is_empty() {
+        eprintln!("orchestrate requires --shards N (how many slices to split the grid into)");
+        return 2;
+    }
+    let parsed = (|| -> Result<experiments::orchestrate::OrchestrateConfig, String> {
+        let spec = carbon_sim::config::sweep_from_file(Path::new(&spec_path))?;
+        let shards: usize = a.parsed("shards")?;
+        if shards == 0 {
+            return Err("--shards must be ≥ 1".to_string());
+        }
+        let program = std::env::current_exe()
+            .map_err(|e| format!("cannot locate the carbon-sim binary for shard children: {e}"))?;
+        let launcher = match a.str_or("launcher", "").as_str() {
+            "" => None,
+            t => Some(t.to_string()),
+        };
+        Ok(experiments::orchestrate::OrchestrateConfig {
+            spec,
+            spec_path: spec_path.clone().into(),
+            shards,
+            workers: a.parsed("workers")?,
+            retries: a.parsed("retries")?,
+            threads_per_shard: a.parsed("threads")?,
+            format: sweep::Format::parse(&a.str_or("format", "json"))?,
+            launcher,
+            program,
+            resume: a.flag("resume"),
+            verbose: !a.flag("quiet"),
+        })
+    })();
+    let cfg = match parsed {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let out_dir = a.str_or("out-dir", "orchestrate-out");
+    match experiments::orchestrate::run(&cfg, Path::new(&out_dir)) {
+        Ok(s) => {
+            println!(
+                "orchestrated {} shard(s) ({} already complete, {} launched); merged {} \
+                 cells -> {}; report: {}",
+                s.n_shards,
+                s.n_skipped,
+                s.n_launched,
+                cfg.spec.n_cells(),
+                s.cells_path.display(),
+                s.report_path.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
 }
 
 // ----------------------------------------------------------------- merge

@@ -51,6 +51,18 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+    /// Strict typed accessor: parse `key`'s value, erroring (naming the
+    /// key and the bad token) on malformed input. Unlike the lenient
+    /// [`Args::usize_or`]-style accessors, a typo must not silently fall
+    /// back to a default — at sweep scale that runs the wrong grid for
+    /// hours (`sweep` and `orchestrate` parse every scalar this way).
+    pub fn parsed<T: std::str::FromStr>(&self, key: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self.str_or(key, "");
+        s.parse::<T>().map_err(|e| format!("bad --{key} '{s}': {e}"))
+    }
 }
 
 /// A declared positional argument (documentation only — the parser
@@ -224,6 +236,17 @@ mod tests {
         assert!(!a.was_given("policy"), "default-seeded value is not 'given'");
         let b = cli().parse(&toks(&["--policy=linux"])).unwrap();
         assert!(b.was_given("policy"), "--key=value form counts as given");
+    }
+
+    #[test]
+    fn parsed_is_strict_where_the_lenient_accessors_default() {
+        let a = cli().parse(&toks(&["--rate", "12O"])).unwrap(); // letter O typo
+        assert_eq!(a.f64_or("rate", 60.0), 60.0, "lenient accessor falls back");
+        let err = a.parsed::<f64>("rate").unwrap_err();
+        assert!(err.contains("--rate") && err.contains("12O"), "{err}");
+        let b = cli().parse(&toks(&["--rate", "100"])).unwrap();
+        assert_eq!(b.parsed::<usize>("rate").unwrap(), 100);
+        assert_eq!(b.parsed::<f64>("rate").unwrap(), 100.0);
     }
 
     #[test]

@@ -5,14 +5,17 @@
 //! usual ecosystem pieces: RNG + distributions ([`rng`]), statistics
 //! ([`stats`]), dense linear algebra for correlated sampling ([`linalg`]),
 //! JSON ([`json`]), CLI parsing ([`cli`]), a criterion-style bench harness
-//! ([`bench`]), a property-testing harness ([`proptest`]), and a scoped
-//! worker pool for parallel experiment sweeps ([`pool`]).
+//! ([`bench`]), a property-testing harness ([`proptest`]), a scoped
+//! worker pool for parallel experiment sweeps ([`pool`]), and
+//! line-streaming child-process handling for the shard-fleet
+//! orchestrator ([`proc`]).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod linalg;
 pub mod pool;
+pub mod proc;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,154 @@
+//! Child-process helpers for the shard-fleet orchestrator
+//! ([`crate::experiments::orchestrate`]): launcher-template substitution
+//! and running children while streaming their output line-by-line.
+//!
+//! `std::process` offers blocking `wait` (no output) or `output`
+//! (all-or-nothing capture) — neither fits an orchestrator that must
+//! relay a shard's progress lines *as they appear* over a multi-hour
+//! sweep and still report a useful stderr excerpt when the child dies.
+//! [`run_streaming_lines`] drains both pipes concurrently (two reader
+//! threads feeding one **bounded** channel), hands every line to the
+//! caller's callback on the calling thread in arrival order, and retains
+//! only the last [`STDERR_TAIL_LINES`] stderr lines. Memory stays
+//! bounded however chatty the child is: when the consumer is slower than
+//! the child (stdout piped into a paused pager, say), the channel fills,
+//! the reader threads stop draining, and the child blocks on its full
+//! pipe — ordinary pipeline backpressure rather than unbounded
+//! buffering. Within that bound both pipes are still drained eagerly, so
+//! a child interleaving heavy stdout and stderr cannot deadlock the way
+//! naive sequential `read_to_end` calls would.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader};
+use std::process::{Command, ExitStatus, Stdio};
+use std::sync::mpsc;
+
+/// How many trailing stderr lines [`run_streaming_lines`] retains for
+/// failure reports.
+pub const STDERR_TAIL_LINES: usize = 10;
+
+/// Relay-channel capacity (lines in flight between the pipe readers and
+/// the consumer). Small enough that a stalled consumer caps memory at a
+/// few KB per child, large enough that line-at-a-time hand-off never
+/// throttles a healthy child.
+const RELAY_CHANNEL_LINES: usize = 256;
+
+/// Substitute `{key}` placeholders into a launcher template: every
+/// occurrence of `{key}` is replaced by its paired value. Unrecognized
+/// brace sequences pass through untouched, so templates can still use
+/// shell syntax like `${VAR}` — the placeholder names themselves are
+/// reserved, though: a literal `{shard}` cannot be written.
+pub fn substitute(template: &str, subs: &[(&str, &str)]) -> String {
+    let mut out = template.to_string();
+    for (key, value) in subs {
+        out = out.replace(&format!("{{{key}}}"), value);
+    }
+    out
+}
+
+/// The command a launcher template runs as: `sh -c <line>`.
+pub fn shell_command(line: &str) -> Command {
+    let mut cmd = Command::new("sh");
+    cmd.arg("-c").arg(line);
+    cmd
+}
+
+/// Spawn `cmd` and run it to completion, feeding each stdout/stderr line
+/// to `on_line(line, is_stderr)` (called on this thread, in arrival
+/// order, without the trailing newline). Returns the exit status plus
+/// the last [`STDERR_TAIL_LINES`] stderr lines. stdin is closed — a
+/// child that prompts would otherwise hang the fleet.
+pub fn run_streaming_lines(
+    cmd: &mut Command,
+    on_line: &mut dyn FnMut(&str, bool),
+) -> Result<(ExitStatus, Vec<String>), String> {
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::piped());
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| format!("spawning {:?}: {e}", cmd.get_program()))?;
+    let stdout = child.stdout.take().expect("stdout is piped");
+    let stderr = child.stderr.take().expect("stderr is piped");
+    let mut tail: VecDeque<String> = VecDeque::with_capacity(STDERR_TAIL_LINES);
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::sync_channel::<(String, bool)>(RELAY_CHANNEL_LINES);
+        let tx_err = tx.clone();
+        scope.spawn(move || {
+            for line in BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if tx.send((line, false)).is_err() {
+                    break;
+                }
+            }
+        });
+        scope.spawn(move || {
+            for line in BufReader::new(stderr).lines() {
+                let Ok(line) = line else { break };
+                if tx_err.send((line, true)).is_err() {
+                    break;
+                }
+            }
+        });
+        // Both senders drop when their pipe closes; the loop then ends.
+        for (line, is_err) in rx {
+            if is_err {
+                if tail.len() == STDERR_TAIL_LINES {
+                    tail.pop_front();
+                }
+                tail.push_back(line.clone());
+            }
+            on_line(&line, is_err);
+        }
+    });
+    let status = child.wait().map_err(|e| format!("waiting for child: {e}"))?;
+    Ok((status, tail.into_iter().collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn substitute_replaces_every_occurrence_of_known_keys_only() {
+        let t = "run {shard} of {spec} into {out_dir} (again: {shard}); keep ${HOME} and {nope}";
+        let got = substitute(
+            t,
+            &[("shard", "1/3"), ("spec", "s.json"), ("out_dir", "/tmp/o")],
+        );
+        assert_eq!(got, "run 1/3 of s.json into /tmp/o (again: 1/3); keep ${HOME} and {nope}");
+    }
+
+    #[test]
+    fn streams_both_pipes_and_reports_exit_and_tail() {
+        let mut lines = Vec::new();
+        let (status, tail) = run_streaming_lines(
+            &mut shell_command("echo out-a; echo err-b >&2; echo out-c; exit 3"),
+            &mut |line, is_err| lines.push((line.to_string(), is_err)),
+        )
+        .unwrap();
+        assert_eq!(status.code(), Some(3));
+        assert_eq!(tail, vec!["err-b".to_string()]);
+        assert!(lines.contains(&("out-a".to_string(), false)), "{lines:?}");
+        assert!(lines.contains(&("out-c".to_string(), false)), "{lines:?}");
+        assert!(lines.contains(&("err-b".to_string(), true)), "{lines:?}");
+    }
+
+    #[test]
+    fn stderr_tail_keeps_only_the_last_lines() {
+        let (status, tail) = run_streaming_lines(
+            &mut shell_command("for i in $(seq 1 25); do echo line-$i >&2; done"),
+            &mut |_, _| {},
+        )
+        .unwrap();
+        assert!(status.success());
+        assert_eq!(tail.len(), STDERR_TAIL_LINES);
+        assert_eq!(tail.first().map(String::as_str), Some("line-16"));
+        assert_eq!(tail.last().map(String::as_str), Some("line-25"));
+    }
+
+    #[test]
+    fn spawn_failure_is_an_error_not_a_panic() {
+        let mut cmd = Command::new("/nonexistent/definitely-not-a-binary");
+        let err = run_streaming_lines(&mut cmd, &mut |_, _| {}).unwrap_err();
+        assert!(err.contains("spawning"), "{err}");
+    }
+}

@@ -20,8 +20,17 @@ fn run(args: &[&str]) -> (bool, String) {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["--help"]);
     assert!(ok);
-    for cmd in ["simulate", "sweep", "merge", "bench", "figure", "trace-gen", "serve", "aging-demo"]
-    {
+    for cmd in [
+        "simulate",
+        "sweep",
+        "orchestrate",
+        "merge",
+        "bench",
+        "figure",
+        "trace-gen",
+        "serve",
+        "aging-demo",
+    ] {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
 }
@@ -323,6 +332,86 @@ fn sharded_sweep_and_merge_reproduce_the_unsharded_report() {
     let (ok, text) = run(&["merge", &path("s0"), "--out-dir", &path("merged_bad")]);
     assert!(!ok);
     assert!(text.contains("incomplete shard set"), "{text}");
+}
+
+#[test]
+fn orchestrate_help_lists_fleet_flags() {
+    let (ok, text) = run(&["orchestrate", "--help"]);
+    assert!(!ok, "--help exits 2 like every other subcommand");
+    for flag in ["--spec", "--shards", "--workers", "--retries", "--launcher", "--resume",
+                 "--out-dir", "--format"] {
+        assert!(text.contains(flag), "missing {flag} in orchestrate help:\n{text}");
+    }
+    assert!(text.contains("{shard}"), "{text}");
+}
+
+#[test]
+fn orchestrate_rejects_bad_invocations() {
+    let spec = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/smoke.json");
+    // Missing --spec / --shards.
+    let (ok, text) = run(&["orchestrate", "--shards", "2"]);
+    assert!(!ok);
+    assert!(text.contains("--spec"), "{text}");
+    let (ok2, text2) = run(&["orchestrate", "--spec", spec]);
+    assert!(!ok2);
+    assert!(text2.contains("--shards"), "{text2}");
+    // Malformed and zero shard counts.
+    for bad in ["0", "two", "-1"] {
+        let (ok, text) = run(&["orchestrate", "--spec", spec, "--shards", bad]);
+        assert!(!ok, "--shards {bad} must be rejected:\n{text}");
+    }
+    // Bad spec file.
+    let (ok3, _) = run(&["orchestrate", "--spec", "/nonexistent_spec.json", "--shards", "2"]);
+    assert!(!ok3);
+}
+
+#[test]
+fn orchestrate_three_shards_matches_the_single_machine_sweep() {
+    // The acceptance path: `orchestrate --spec smoke.json --shards 3`
+    // must produce report.json byte-identical to a plain sweep of the
+    // same spec — and refuse to clobber its out-dir without --resume.
+    let spec = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/smoke.json");
+    let dir = std::env::temp_dir().join("carbon_sim_cli_orchestrate");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = |name: &str| dir.join(name).to_str().unwrap().to_string();
+
+    let (ok, text) =
+        run(&["sweep", "--spec", spec, "--quiet", "--threads", "2", "--out-dir", &path("full")]);
+    assert!(ok, "{text}");
+    let (ok, text) = run(&[
+        "orchestrate",
+        "--spec",
+        spec,
+        "--shards",
+        "3",
+        "--threads",
+        "1",
+        "--quiet",
+        "--out-dir",
+        &path("orch"),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("orchestrated 3 shard(s)"), "{text}");
+    let full = std::fs::read(dir.join("full").join("report.json")).unwrap();
+    let orch = std::fs::read(dir.join("orch").join("report.json")).unwrap();
+    assert_eq!(full, orch, "orchestrated report must be byte-identical to the unsharded run");
+    assert!(dir.join("orch").join("orchestrate.json").exists());
+
+    // Re-running into the same out-dir without --resume is refused…
+    let (ok, text) = run(&[
+        "orchestrate", "--spec", spec, "--shards", "3", "--quiet", "--out-dir", &path("orch"),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--resume"), "{text}");
+    // …and with --resume it verifies the done shards and just re-merges.
+    let (ok, text) = run(&[
+        "orchestrate", "--spec", spec, "--shards", "3", "--quiet", "--resume", "--out-dir",
+        &path("orch"),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("(3 already complete, 0 launched)"), "{text}");
+    assert_eq!(std::fs::read(dir.join("orch").join("report.json")).unwrap(), full);
 }
 
 #[test]

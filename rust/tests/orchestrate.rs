@@ -1,0 +1,265 @@
+//! Orchestrator contract tests: `orchestrate` must drive N real shard
+//! child processes from one spec and converge on reports **byte-identical**
+//! to a single-machine run — including after a shard is killed mid-run
+//! and the orchestrate is resumed — and a failing launcher must exhaust
+//! its retries and surface the shard's stderr tail.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use carbon_sim::experiments::orchestrate::{
+    self, OrchestrateConfig, MANIFEST_FILE,
+};
+use carbon_sim::experiments::sweep::{self, Format, SweepSpec};
+use carbon_sim::experiments::sweep_stream::CELLS_FILE;
+use carbon_sim::trace::azure::Workload;
+use carbon_sim::util::json::{parse, Value};
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_carbon-sim"))
+}
+
+/// 4 cells: 2 policies × (mixed, bursty). Small enough that a shard
+/// child finishes in well under a second.
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        rates: vec![5.0],
+        core_counts: vec![8],
+        policies: vec!["linux".into(), "proposed".into()],
+        workloads: vec![Workload::Mixed, Workload::Bursty],
+        replicas: 1,
+        duration_s: 3.0,
+        n_prompt: 1,
+        n_token: 1,
+        seed: 31,
+    }
+}
+
+/// Fresh scratch dir under the system temp root.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("carbon_sim_orchestrate").join(name);
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write the spec file the shard children will re-read. The canonical
+/// JSON round-trips through `config::sweep_from_file` to the same hash.
+fn write_spec(dir: &Path, spec: &SweepSpec) -> PathBuf {
+    let path = dir.join("spec.json");
+    let mut body = spec.to_json().to_string_pretty();
+    body.push('\n');
+    fs::write(&path, body).unwrap();
+    path
+}
+
+fn cfg(spec: &SweepSpec, spec_path: &Path, shards: usize) -> OrchestrateConfig {
+    OrchestrateConfig {
+        spec: spec.clone(),
+        spec_path: spec_path.to_path_buf(),
+        shards,
+        workers: 0,
+        retries: 1,
+        threads_per_shard: 1,
+        format: Format::Json,
+        launcher: None,
+        program: bin(),
+        resume: false,
+        verbose: false,
+    }
+}
+
+/// The single-machine reference bytes for `report.json`.
+fn reference_json(spec: &SweepSpec) -> Vec<u8> {
+    sweep::run(spec, 1).unwrap().render(Format::Json).into_bytes()
+}
+
+/// Rewrite one shard's manifest status in place (simulating the state a
+/// killed orchestrator leaves behind).
+fn set_shard_status(manifest_path: &Path, k: usize, status: &str) {
+    let mut v = parse(&fs::read_to_string(manifest_path).unwrap()).unwrap();
+    let Value::Obj(obj) = &mut v else { panic!("manifest is not an object") };
+    let Some(Value::Arr(shards)) = obj.get_mut("shards") else {
+        panic!("manifest has no shards array")
+    };
+    let Value::Obj(entry) = &mut shards[k] else { panic!("shard entry is not an object") };
+    entry.insert("status".to_string(), Value::Str(status.to_string()));
+    let mut body = v.to_string_pretty();
+    body.push('\n');
+    fs::write(manifest_path, body).unwrap();
+}
+
+#[test]
+fn three_shards_merge_byte_identical_to_the_single_machine_run() {
+    let spec = tiny_spec();
+    let root = scratch("threeway");
+    let spec_path = write_spec(&root, &spec);
+    let out = root.join("out");
+
+    let s = orchestrate::run(&cfg(&spec, &spec_path, 3), &out).unwrap();
+    assert_eq!((s.n_shards, s.n_skipped, s.n_launched), (3, 0, 3));
+    assert_eq!(fs::read(&s.report_path).unwrap(), reference_json(&spec));
+
+    // The merged spill is a full, unsharded one.
+    let merged = fs::read_to_string(&s.cells_path).unwrap();
+    assert_eq!(merged.lines().count(), 1 + spec.n_cells());
+    assert!(!merged.lines().next().unwrap().contains("shard_index"), "{merged}");
+
+    // Manifest: every shard done in one attempt, mapped to its out-dir.
+    let m = parse(&fs::read_to_string(out.join(MANIFEST_FILE)).unwrap()).unwrap();
+    assert_eq!(m.str_or("kind", ""), "orchestrate");
+    assert_eq!(m.str_or("spec_hash", ""), spec.spec_hash());
+    assert_eq!(m.usize_or("shard_count", 0), 3);
+    let shards = m.get("shards").and_then(|s| s.as_arr()).unwrap();
+    assert_eq!(shards.len(), 3);
+    for (k, entry) in shards.iter().enumerate() {
+        assert_eq!(entry.str_or("status", ""), "done", "shard {k}");
+        assert_eq!(entry.usize_or("attempts", 0), 1, "shard {k}");
+        assert_eq!(entry.usize_or("exit_code", 99), 0, "shard {k}");
+        assert_eq!(entry.str_or("out_dir", ""), format!("shard-{k}"));
+        assert!(out.join(format!("shard-{k}")).join(CELLS_FILE).exists());
+    }
+}
+
+#[test]
+fn one_shard_degenerates_to_a_single_child_full_run() {
+    let spec = tiny_spec();
+    let root = scratch("single");
+    let spec_path = write_spec(&root, &spec);
+    let s = orchestrate::run(&cfg(&spec, &spec_path, 1), &root.join("out")).unwrap();
+    assert_eq!(fs::read(&s.report_path).unwrap(), reference_json(&spec));
+}
+
+#[test]
+fn killed_shard_mid_run_then_resume_converges_on_identical_bytes() {
+    let spec = tiny_spec();
+    let root = scratch("kill_resume");
+    let spec_path = write_spec(&root, &spec);
+    let out = root.join("out");
+    let expected = reference_json(&spec);
+
+    let first = orchestrate::run(&cfg(&spec, &spec_path, 2), &out).unwrap();
+    assert_eq!(fs::read(&first.report_path).unwrap(), expected);
+
+    // Simulate a kill while shard 1 was in flight: its spill loses the
+    // last complete row and gains a half-written line, and the manifest
+    // still says "running".
+    let cells = out.join("shard-1").join(CELLS_FILE);
+    let spill = fs::read_to_string(&cells).unwrap();
+    let lines: Vec<&str> = spill.lines().collect();
+    assert_eq!(lines.len(), 1 + 2, "shard 1/2 of the 4-cell grid owns 2 cells");
+    let mut cut: String = lines[..lines.len() - 1].iter().map(|l| format!("{l}\n")).collect();
+    cut.push_str("{\"index\": 3, \"truncated in-fl"); // no trailing newline
+    fs::write(&cells, cut).unwrap();
+    set_shard_status(&out.join(MANIFEST_FILE), 1, "running");
+    fs::remove_file(first.report_path).unwrap();
+
+    let mut resume_cfg = cfg(&spec, &spec_path, 2);
+    resume_cfg.resume = true;
+    let s = orchestrate::run(&resume_cfg, &out).unwrap();
+    assert_eq!((s.n_skipped, s.n_launched), (1, 1), "only the killed shard relaunches");
+    assert_eq!(fs::read(&s.report_path).unwrap(), expected);
+
+    let m = parse(&fs::read_to_string(out.join(MANIFEST_FILE)).unwrap()).unwrap();
+    let shards = m.get("shards").and_then(|s| s.as_arr()).unwrap();
+    assert_eq!(shards[0].usize_or("attempts", 0), 1, "finished shard untouched");
+    assert_eq!(shards[1].usize_or("attempts", 0), 2, "killed shard relaunched once");
+    assert_eq!(shards[1].str_or("status", ""), "done");
+    // The intact row was reused: the resumed shard spill is whole again.
+    assert_eq!(fs::read_to_string(&cells).unwrap().lines().count(), 1 + 2);
+}
+
+#[test]
+fn deleted_shard_dir_heals_on_resume_despite_a_done_manifest() {
+    let spec = tiny_spec();
+    let root = scratch("deleted_dir");
+    let spec_path = write_spec(&root, &spec);
+    let out = root.join("out");
+    let expected = reference_json(&spec);
+    orchestrate::run(&cfg(&spec, &spec_path, 2), &out).unwrap();
+
+    // The manifest says done, but the spill is gone — the spill is the
+    // ground truth, so --resume must re-run that shard.
+    fs::remove_dir_all(out.join("shard-0")).unwrap();
+    let mut resume_cfg = cfg(&spec, &spec_path, 2);
+    resume_cfg.resume = true;
+    let s = orchestrate::run(&resume_cfg, &out).unwrap();
+    assert_eq!((s.n_skipped, s.n_launched), (1, 1));
+    assert_eq!(fs::read(&s.report_path).unwrap(), expected);
+}
+
+#[test]
+fn failing_launcher_exhausts_retries_and_surfaces_the_stderr_tail() {
+    let spec = tiny_spec();
+    let root = scratch("bad_launcher");
+    let spec_path = write_spec(&root, &spec);
+    let out = root.join("out");
+
+    let mut bad = cfg(&spec, &spec_path, 2);
+    bad.retries = 1;
+    bad.launcher =
+        Some("echo starting {shard} from {spec} into {out_dir}; echo boom-{shard} >&2; exit 3"
+            .to_string());
+    let err = orchestrate::run(&bad, &out).unwrap_err();
+    assert!(err.contains("2 of 2 shard(s) failed"), "{err}");
+    assert!(err.contains("exit code 3"), "{err}");
+    assert!(err.contains("boom-0/2"), "stderr tail must be surfaced: {err}");
+    assert!(err.contains("boom-1/2"), "stderr tail must be surfaced: {err}");
+    assert!(err.contains("--resume"), "{err}");
+
+    // The manifest parked both shards as failed with the evidence.
+    let m = parse(&fs::read_to_string(out.join(MANIFEST_FILE)).unwrap()).unwrap();
+    let shards = m.get("shards").and_then(|s| s.as_arr()).unwrap();
+    for (k, entry) in shards.iter().enumerate() {
+        assert_eq!(entry.str_or("status", ""), "failed", "shard {k}");
+        assert_eq!(entry.usize_or("attempts", 0), 2, "1 launch + 1 retry");
+        assert_eq!(entry.usize_or("exit_code", 99), 3);
+        let tail = entry.get("stderr_tail").and_then(|t| t.as_arr()).unwrap();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].as_str().unwrap(), format!("boom-{k}/2"));
+    }
+
+    // A --resume with a working launcher heals the run completely.
+    let mut good = cfg(&spec, &spec_path, 2);
+    good.resume = true;
+    let s = orchestrate::run(&good, &out).unwrap();
+    assert_eq!(s.n_launched, 2);
+    assert_eq!(fs::read(&s.report_path).unwrap(), reference_json(&spec));
+    let m = parse(&fs::read_to_string(out.join(MANIFEST_FILE)).unwrap()).unwrap();
+    let shards = m.get("shards").and_then(|s| s.as_arr()).unwrap();
+    for entry in shards {
+        assert_eq!(entry.str_or("status", ""), "done");
+        assert_eq!(entry.usize_or("attempts", 0), 3, "attempts accumulate across runs");
+        assert!(entry.get("stderr_tail").is_none(), "tail cleared on success");
+    }
+}
+
+#[test]
+fn launcher_template_driving_the_real_binary_matches_the_reference() {
+    let spec = tiny_spec();
+    let root = scratch("template");
+    let spec_path = write_spec(&root, &spec);
+
+    let mut c = cfg(&spec, &spec_path, 2);
+    c.launcher = Some(format!(
+        "\"{}\" sweep --spec \"{{spec}}\" --shard {{shard}} --out-dir \"{{out_dir}}\" \
+         --threads 1 --resume --quiet",
+        bin().display()
+    ));
+    let s = orchestrate::run(&c, &root.join("out")).unwrap();
+    assert_eq!(fs::read(&s.report_path).unwrap(), reference_json(&spec));
+}
+
+#[test]
+fn async_launcher_that_returns_early_fails_verification() {
+    // A launcher that exits 0 without producing the spill (sbatch-style
+    // fire-and-forget) must not be trusted: verification fails it.
+    let spec = tiny_spec();
+    let root = scratch("async_launcher");
+    let spec_path = write_spec(&root, &spec);
+    let mut c = cfg(&spec, &spec_path, 2);
+    c.retries = 0;
+    c.launcher = Some("echo queued {shard}; exit 0".to_string());
+    let err = orchestrate::run(&c, &root.join("out")).unwrap_err();
+    assert!(err.contains("exit 0 but"), "{err}");
+}

@@ -10,6 +10,7 @@ use std::path::PathBuf;
 use carbon_sim::experiments::merge::merge_spills;
 use carbon_sim::experiments::sweep::{self, Format, ShardSpec, SweepSpec};
 use carbon_sim::experiments::sweep_stream::{self, CELLS_FILE};
+use carbon_sim::experiments::OUTPUT_SCHEMA_VERSION;
 use carbon_sim::trace::azure::Workload;
 use carbon_sim::util::json::parse;
 
@@ -313,6 +314,48 @@ fn corrupt_shard_header_fields_are_rejected_not_coerced() {
     )
     .unwrap_err();
     assert!(err2.contains("shard_index"), "{err2}");
+}
+
+#[test]
+fn version_2_spills_are_still_accepted_and_version_1_refused() {
+    // The spill format is unchanged since schema_version 2 (3 only added
+    // the orchestrate manifest), so relabelled v2 spills must keep
+    // merging and resuming — days of shard work must not be orphaned by
+    // a label bump. v1 really differs (no embedded spec) and stays out.
+    let spec = tiny_spec();
+    let root = scratch("v2_compat");
+    let dirs = run_split(&spec, &root, 2);
+    let cells = dirs[0].join(CELLS_FILE);
+    let spill = fs::read_to_string(&cells).unwrap();
+    let v2 = spill.replacen(
+        &format!("\"schema_version\":{OUTPUT_SCHEMA_VERSION}"),
+        "\"schema_version\":2",
+        1,
+    );
+    assert_ne!(v2, spill, "header must carry the current schema_version");
+    fs::write(&cells, v2).unwrap();
+
+    let m = merge_spills(&dirs, &root.join("merged"), Format::Json).unwrap();
+    assert_eq!(m.n_cells, spec.n_cells());
+    let s = sweep_stream::run_streaming(
+        &spec,
+        1,
+        &dirs[0],
+        &ShardSpec::new(0, 2).unwrap(),
+        Format::Json,
+        true,
+        false,
+    )
+    .unwrap();
+    assert_eq!(s.n_run, 0, "a v2 spill resumes without re-running anything");
+
+    // Resume compaction preserved the v2 header; relabel it down to 1.
+    let spill = fs::read_to_string(&cells).unwrap();
+    let v1 = spill.replacen("\"schema_version\":2", "\"schema_version\":1", 1);
+    assert_ne!(v1, spill);
+    fs::write(&cells, v1).unwrap();
+    let err = merge_spills(&dirs, &root.join("merged_v1"), Format::Json).unwrap_err();
+    assert!(err.contains("schema_version 1"), "{err}");
 }
 
 #[test]
