@@ -42,6 +42,19 @@ fn main() {
         std::hint::black_box(core.dvth(&ops));
     });
 
+    section("L3 micro: SoA batch advance");
+    for n in [40usize, 80] {
+        let mut cpu = pkg(n);
+        for t in 0..(n as u64 / 2) {
+            cpu.assign(t as usize * 2, t, 0.0);
+        }
+        let mut tb = 0.0f64;
+        bench(&format!("advance_all ({n} cores)"), 0.5, || {
+            tb += 0.001;
+            cpu.advance_all(std::hint::black_box(tb));
+        });
+    }
+
     section("L3 micro: policy decisions (40-core CPU, half loaded)");
     for pol in ["proposed", "linux", "least-aged"] {
         let mut mgr = CoreManager::new(pkg(40), by_name(pol).unwrap(), Rng::new(1));
@@ -73,6 +86,23 @@ fn main() {
     bench("adjust (80 cores)", 0.5, || {
         now80 += 1.0;
         mgr80.adjust(now80);
+    });
+    // The coalesced-tick fast path: a machine with no mutations since the
+    // last tick costs one dirty-bit branch, not an Algorithm 2 pass.
+    let mut mgr_skip = CoreManager::new(pkg(40), by_name("proposed").unwrap(), Rng::new(1));
+    for t in 0..10u64 {
+        mgr_skip.start_task(t, 0.0);
+    }
+    let mut now_skip = 1.0;
+    for _ in 0..64 {
+        if !mgr_skip.adjust_tick(now_skip) {
+            break;
+        }
+        now_skip += 0.25;
+    }
+    bench("adjust_tick (clean skip, 40 cores)", 0.5, || {
+        now_skip += 0.25;
+        std::hint::black_box(mgr_skip.adjust_tick(now_skip));
     });
 
     section("L3 micro: event queue");

@@ -20,7 +20,10 @@ pub enum Role {
 pub struct Machine {
     pub id: usize,
     pub role: Role,
-    /// The aging-aware (or baseline) CPU core manager.
+    /// The aging-aware (or baseline) CPU core manager. The cluster's
+    /// coalesced 250 ms adjust event drives it through
+    /// [`CoreManager::adjust_tick`], which skips machines whose package
+    /// saw no mutation since the previous tick (dirty-flag skip-ahead).
     pub mgr: CoreManager,
     /// KV-cache memory pool (token machines).
     pub kv: KvMemory,

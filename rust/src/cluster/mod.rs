@@ -148,7 +148,8 @@ pub struct Cluster {
     completed: usize,
     arrivals_pending: usize,
     pub collector: Collector,
-    /// Per-machine per-kind spawn counts (diagnostics / Table 2 evidence).
+    /// Cluster-global spawn counts, indexed by [`TaskKind::index`]
+    /// (diagnostics / Table 2 evidence).
     pub task_spawns: Vec<u64>,
 }
 
@@ -221,9 +222,25 @@ impl Cluster {
         }
         let end = self.q.now();
 
+        // Integrate the (last Sample, end] tail: the run usually ends
+        // between sampling ticks, and dropping that partial interval
+        // under-counts `oversub_integral`/`active_core_seconds` (and thus
+        // `oversub_fraction`) on short runs.
+        let tail = end - self.collector.last_integral_t;
+        if tail > 0.0 {
+            for m in 0..self.machines.len() {
+                let cpu = &self.machines[m].mgr.cpu;
+                self.collector.integrate(m, tail, cpu.running_tasks(), cpu.active_count());
+            }
+            self.collector.last_integral_t = end;
+        }
+
         // Final aging snapshot.
-        let f0: Vec<Vec<f64>> =
-            self.machines.iter().map(|m| m.mgr.cpu.cores.iter().map(|c| c.f0_ghz).collect()).collect();
+        let f0: Vec<Vec<f64>> = self
+            .machines
+            .iter()
+            .map(|m| m.mgr.cpu.core_views().map(|c| c.f0_ghz()).collect())
+            .collect();
         let freq: Vec<Vec<f64>> =
             self.machines.iter_mut().map(|m| m.mgr.cpu.frequencies(end)).collect();
 
@@ -253,9 +270,11 @@ impl Cluster {
             Ev::Adjust => {
                 // Machine order matches the per-machine events this
                 // replaces (they were pushed, and thus popped, in id
-                // order at the shared timestamp).
+                // order at the shared timestamp). `adjust_tick` skips
+                // machines whose package saw no state change since their
+                // last tick (dirty-flag skip-ahead; see `cpu::package`).
                 for m in 0..self.machines.len() {
-                    self.machines[m].mgr.adjust(now);
+                    self.machines[m].mgr.adjust_tick(now);
                 }
                 if let Some(p) = adjust_period {
                     if !self.finished() {
@@ -530,6 +549,22 @@ mod tests {
             fred_prop < fred_linux * 0.9,
             "proposed fred={fred_prop} linux fred={fred_linux}"
         );
+    }
+
+    #[test]
+    fn integrals_cover_the_tail_after_the_last_sample() {
+        // All cores stay C0 under the linux baseline, so the active-core
+        // integral must equal n_machines × cores × duration — including
+        // the partial (last Sample, end] interval that used to be dropped
+        // (the run almost never ends exactly on a sampling tick).
+        let mut c = Cluster::new(small_cfg("linux"));
+        let t = small_trace(5.0, 10.0);
+        let r = c.run(&t);
+        let total: f64 = r.collector.active_core_seconds.iter().sum();
+        let expect = (5 * 16) as f64 * r.duration_s;
+        let rel = (total - expect).abs() / expect;
+        assert!(rel < 1e-9, "active core-seconds {total} != {expect} (rel {rel:e})");
+        assert!((r.collector.last_integral_t - r.duration_s).abs() < 1e-12);
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! A single CPU core: C-state machine, allocation status, idle history,
 //! and lazily-advanced NBTI aging state.
 //!
+//! This is the *scalar reference implementation*. The cluster hot path
+//! does not store `Core` structs — [`super::package::CpuPackage`] keeps
+//! the same state structure-of-arrays so batch advances vectorize — but
+//! the two must agree exactly: `tests/aging_parity.rs` pins this struct
+//! against the closed-form recursion, and `tests/package_soa.rs` pins the
+//! package's SoA path against the same reference.
+//!
 //! Aging is accounted lazily *and* transcendental-free: a core's state is
 //! advanced only when its configuration (C-state or allocation) is about
 //! to change, or when a caller explicitly snapshots frequencies. Between

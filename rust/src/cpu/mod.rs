@@ -8,8 +8,10 @@
 //!   transient.
 //! * [`procvar`] — spatially-correlated process variation producing each
 //!   core's initial frequency `f0`.
-//! * [`core`] — a single core's state machine and lazy aging accounting.
-//! * [`package`] — the multi-core CPU the management policies operate on.
+//! * [`core`] — the standalone scalar core state machine (the reference
+//!   implementation the SoA fast path is pinned against).
+//! * [`package`] — the multi-core CPU the management policies operate on,
+//!   with core state stored structure-of-arrays for batch advances.
 
 pub mod aging;
 pub mod core;
@@ -19,6 +21,6 @@ pub mod temperature;
 
 pub use aging::{AgingOps, AgingParams};
 pub use core::{CState, Core, IdleHistory};
-pub use package::CpuPackage;
+pub use package::{CoreView, CpuPackage};
 pub use procvar::{ProcVarParams, ProcVarSampler};
 pub use temperature::{TemperatureModel, TransientThermal};

@@ -4,28 +4,107 @@
 //! currently *oversubscribed* tasks — tasks that arrived while no active
 //! free core existed. Oversubscribed tasks still execute (time-shared by
 //! the OS) but degrade service quality; Algorithm 2 consumes their count
-//! and the Fig. 8 metric integrates them.
+//! and the Fig. 8 metric integrates them. The queue is strictly FIFO:
+//! tasks are promoted to dedicated cores in arrival order, and a task that
+//! finishes while still queued is removed *order-preservingly*
+//! ([`VecDeque::remove`], not `swap_remove_back`).
 //!
-//! The package also owns the [`AgingOps`] operating-point cache: the ADFs
-//! of the (C0, allocated) and (C0, unallocated) points are precomputed
-//! here once, so the per-event core advances are transcendental-free
-//! (§Perf).
+//! # Structure-of-arrays layout (§Perf)
+//!
+//! Core state lives in flat per-field slices owned by the package, not in
+//! an array of `Core` structs. The hot fields — `eq_time_s` (canonical
+//! equivalent stress time), `eq_rate` (the core's current operating-point
+//! accrual rate), `last_update`, the cumulative time integrals, and the
+//! two f64 occupancy masks — are each one contiguous `Vec<f64>`, so
+//! [`CpuPackage::advance_all`] is a single branchless multiply-add loop
+//! the compiler can vectorize:
+//!
+//! ```text
+//! tau          = max(now - last_update[i], 0)
+//! eq_time_s[i] += tau * eq_rate[i]          // 1.0 | rate_unalloc | 0.0
+//! busy_time[i] += tau * busy_m[i]           // 1.0 iff task pinned
+//! active_time[i] += tau * active_m[i]       // 1.0 iff C0
+//! c6_time[i]   += tau * (1.0 - active_m[i])
+//! last_update[i] = now
+//! ```
+//!
+//! `eq_rate` folds the three operating points of the
+//! [equivalent-stress-time invariant](super::aging::AgingOps) into one
+//! multiplier per core — (C0, allocated) = 1, (C0, unallocated) =
+//! `rate_unalloc`, C6 = 0 — maintained at the (rare) configuration-change
+//! edges (`assign`/`finish_task`/`set_state`) so the (frequent) advances
+//! never branch on C-state or allocation. Cold metadata (`f0_ghz`, the
+//! task slot, idle histories) stays in parallel slices read only on the
+//! slow paths. Policies and tests access per-core state through the
+//! borrowed [`CoreView`] accessor or through the flat key slices
+//! ([`CpuPackage::eq_times`], [`CpuPackage::busy_times`]); the standalone
+//! [`Core`](super::core::Core) struct remains as the scalar reference
+//! implementation that `tests/aging_parity.rs` pins this layout against.
+//!
+//! # The dirty flag: skip-ahead for the coalesced adjust tick
+//!
+//! The cluster's 250 ms `Ev::Adjust` event ticks every machine. Most
+//! machines see no task or C-state event between consecutive ticks, and
+//! for them the adjust is provably a no-op: Algorithm 2's decision depends
+//! only on discrete counts (active cores, sleepers, tasks) and on the
+//! *ordering* of candidate ages — and between events every parking
+//! candidate (free C0 core) accrues equivalent stress time at the same
+//! `rate_unalloc` while every wake candidate (C6) is frozen, so orderings
+//! and counts are time-invariant until the next mutation. The package
+//! therefore keeps a `dirty` bit, set by every state-changing operation
+//! (`assign`, `finish_task`, `push_oversub`, `pop_oversub`, an effective
+//! `set_state`) and *not* by pure time advances; the manager's
+//! `adjust_tick` returns immediately for clean packages
+//! (`CoreManager::adjust_tick`), so untouched machines cost one branch per
+//! tick instead of a full Algorithm 2 pass.
 
 use std::collections::{HashMap, VecDeque};
 
 use super::aging::{AgingOps, AgingParams};
-use super::core::{CState, Core};
+use super::core::{CState, IdleHistory};
 use super::temperature::TemperatureModel;
 
-/// A multi-core CPU with aging state.
+/// A multi-core CPU with aging state, stored structure-of-arrays (see the
+/// module docs for the layout and the dirty-flag contract).
 #[derive(Clone, Debug)]
 pub struct CpuPackage {
-    pub cores: Vec<Core>,
     pub aging: AgingParams,
     pub temps: TemperatureModel,
     /// Precomputed operating-point cache (ADFs, eq-time rates) — derived
     /// from `aging` + `temps` at construction.
     pub ops: AgingOps,
+
+    // ---- hot SoA slices (the batch-advance loop touches only these) ----
+    /// Canonical equivalent stress time (s) per core.
+    eq_time_s: Vec<f64>,
+    /// Current operating-point accrual rate per core: 1.0 (C0, allocated),
+    /// `ops.rate_unalloc` (C0, unallocated), or 0.0 (C6).
+    eq_rate: Vec<f64>,
+    /// Last simulation time each core's aging was advanced to.
+    last_update: Vec<f64>,
+    /// 1.0 iff the core is in C0 (f64 mask for branchless bookkeeping).
+    active_m: Vec<f64>,
+    /// 1.0 iff a task is pinned to the core (f64 mask).
+    busy_m: Vec<f64>,
+    /// Cumulative seconds with a task allocated (least-aged's work proxy).
+    busy_time: Vec<f64>,
+    /// Cumulative seconds in C0.
+    active_time: Vec<f64>,
+    /// Cumulative seconds in C6 (age-halted).
+    c6_time: Vec<f64>,
+
+    // ---- cold per-core slices (slow paths only) ----
+    state: Vec<CState>,
+    /// Inference task currently pinned to each core.
+    task: Vec<Option<u64>>,
+    /// Initial (process-variation) frequency in GHz.
+    f0_ghz: Vec<f64>,
+    /// Recent idle durations (Algorithm 1 input).
+    idle_hist: Vec<IdleHistory>,
+    /// When each core last became task-free.
+    idle_since: Vec<f64>,
+
+    // ---- package bookkeeping ----
     /// task id -> core index, for O(1) release.
     task_core: HashMap<u64, usize>,
     /// Tasks executing without a dedicated core (oversubscription).
@@ -34,23 +113,129 @@ pub struct CpuPackage {
     /// Cached count of cores in C0 (§Perf: the hot path queries counts on
     /// every task spawn; scanning all cores was the top profile entry).
     active_cnt: usize,
+    /// Set by every state-changing operation, never by pure time advances
+    /// — the adjust-tick skip-ahead bit (module docs).
+    dirty: bool,
+}
+
+/// Borrowed per-core accessor over the package's SoA slices — the view
+/// policies and tests read instead of a per-core struct.
+#[derive(Clone, Copy)]
+pub struct CoreView<'a> {
+    pkg: &'a CpuPackage,
+    idx: usize,
+}
+
+impl CoreView<'_> {
+    #[inline]
+    pub fn id(&self) -> usize {
+        self.idx
+    }
+
+    /// Initial (process-variation) frequency in GHz.
+    #[inline]
+    pub fn f0_ghz(&self) -> f64 {
+        self.pkg.f0_ghz[self.idx]
+    }
+
+    #[inline]
+    pub fn state(&self) -> CState {
+        self.pkg.state[self.idx]
+    }
+
+    /// Inference task currently pinned to this core.
+    #[inline]
+    pub fn task(&self) -> Option<u64> {
+        self.pkg.task[self.idx]
+    }
+
+    #[inline]
+    pub fn is_allocated(&self) -> bool {
+        self.pkg.task[self.idx].is_some()
+    }
+
+    /// Canonical equivalent stress time (s), as of the last advance.
+    #[inline]
+    pub fn eq_time_s(&self) -> f64 {
+        self.pkg.eq_time_s[self.idx]
+    }
+
+    /// Cumulative seconds with a task allocated, as of the last advance.
+    #[inline]
+    pub fn busy_time(&self) -> f64 {
+        self.pkg.busy_time[self.idx]
+    }
+
+    /// Cumulative seconds in C0, as of the last advance.
+    #[inline]
+    pub fn active_time(&self) -> f64 {
+        self.pkg.active_time[self.idx]
+    }
+
+    /// Cumulative seconds in C6 (age-halted), as of the last advance.
+    #[inline]
+    pub fn c6_time(&self) -> f64 {
+        self.pkg.c6_time[self.idx]
+    }
+
+    /// Algorithm 1's idle score: sum of the last 8 idle durations.
+    #[inline]
+    pub fn idle_score(&self) -> f64 {
+        self.pkg.idle_hist[self.idx].score()
+    }
+
+    #[inline]
+    pub fn idle_history(&self) -> &IdleHistory {
+        &self.pkg.idle_hist[self.idx]
+    }
+
+    /// Accumulated ΔVth (V), *as of the last advance* — the lazy `powf`
+    /// snapshot derived from equivalent stress time.
+    #[inline]
+    pub fn dvth(&self) -> f64 {
+        self.pkg.ops.dvth_of_eq(self.eq_time_s())
+    }
+
+    /// Current frequency in GHz, *as of the last advance*.
+    #[inline]
+    pub fn freq_ghz(&self) -> f64 {
+        self.pkg.ops.freq_ghz(self.f0_ghz(), self.eq_time_s())
+    }
+
+    /// Absolute frequency reduction since t=0 (GHz).
+    #[inline]
+    pub fn freq_reduction_ghz(&self) -> f64 {
+        self.f0_ghz() - self.freq_ghz()
+    }
 }
 
 impl CpuPackage {
     /// Build a package from per-core initial frequencies (GHz).
     pub fn new(f0_ghz: Vec<f64>, aging: AgingParams, temps: TemperatureModel) -> CpuPackage {
-        let cores: Vec<Core> =
-            f0_ghz.into_iter().enumerate().map(|(i, f)| Core::new(i, f)).collect();
-        let active_cnt = cores.len();
+        let n = f0_ghz.len();
         let ops = AgingOps::new(&aging, &temps);
         CpuPackage {
-            cores,
             aging,
             temps,
             ops,
+            eq_time_s: vec![0.0; n],
+            // All cores start (C0, unallocated).
+            eq_rate: vec![ops.rate_unalloc; n],
+            last_update: vec![0.0; n],
+            active_m: vec![1.0; n],
+            busy_m: vec![0.0; n],
+            busy_time: vec![0.0; n],
+            active_time: vec![0.0; n],
+            c6_time: vec![0.0; n],
+            state: vec![CState::C0; n],
+            task: vec![None; n],
+            f0_ghz,
+            idle_hist: vec![IdleHistory::default(); n],
+            idle_since: vec![0.0; n],
             task_core: HashMap::new(),
             oversub: VecDeque::new(),
-            active_cnt,
+            active_cnt: n,
+            dirty: true,
         }
     }
 
@@ -61,7 +246,32 @@ impl CpuPackage {
 
     #[inline]
     pub fn n_cores(&self) -> usize {
-        self.cores.len()
+        self.eq_time_s.len()
+    }
+
+    /// Accessor view over one core's SoA state.
+    #[inline]
+    pub fn core(&self, idx: usize) -> CoreView<'_> {
+        debug_assert!(idx < self.n_cores());
+        CoreView { pkg: self, idx }
+    }
+
+    /// Views over every core, in id order.
+    pub fn core_views(&self) -> impl Iterator<Item = CoreView<'_>> + '_ {
+        (0..self.n_cores()).map(move |idx| CoreView { pkg: self, idx })
+    }
+
+    /// The flat per-core equivalent-stress-time slice — the age key the
+    /// proposed policy's candidate selection runs over (§Perf).
+    #[inline]
+    pub fn eq_times(&self) -> &[f64] {
+        &self.eq_time_s
+    }
+
+    /// The flat per-core cumulative-busy-time slice (least-aged's key).
+    #[inline]
+    pub fn busy_times(&self) -> &[f64] {
+        &self.busy_time
     }
 
     /// Number of cores in C0 (the *working set* plus any active-but-free).
@@ -69,7 +279,7 @@ impl CpuPackage {
     pub fn active_count(&self) -> usize {
         debug_assert_eq!(
             self.active_cnt,
-            self.cores.iter().filter(|c| c.state == CState::C0).count()
+            self.state.iter().filter(|&&s| s == CState::C0).count()
         );
         self.active_cnt
     }
@@ -90,9 +300,9 @@ impl CpuPackage {
         self.task_core.len() + self.oversub.len()
     }
 
-    /// Indices of active, unallocated cores (assignment candidates).
-    pub fn free_active_cores(&self) -> impl Iterator<Item = &Core> {
-        self.cores.iter().filter(|c| c.state == CState::C0 && c.task.is_none())
+    /// Views of active, unallocated cores (assignment candidates).
+    pub fn free_active_cores(&self) -> impl Iterator<Item = CoreView<'_>> + '_ {
+        self.core_views().filter(|c| c.state() == CState::C0 && c.task().is_none())
     }
 
     #[inline]
@@ -108,27 +318,79 @@ impl CpuPackage {
         self.active_cnt - self.task_core.len()
     }
 
+    /// True if a state-changing operation touched the package since the
+    /// last [`CpuPackage::clear_dirty`] (skip-ahead contract: module docs).
+    #[inline]
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Mark the package clean — called by the adjust tick before it runs,
+    /// so mutations made *by* the adjust re-arm the next tick.
+    #[inline]
+    pub fn clear_dirty(&mut self) {
+        self.dirty = false;
+    }
+
+    /// Advance one core's aging to `now` under its current configuration —
+    /// the same multiply-add as the batch loop, on the slow (edge) paths.
+    #[inline]
+    fn advance_one(&mut self, i: usize, now: f64) {
+        debug_assert!(
+            now >= self.last_update[i] - 1e-9,
+            "time went backwards: {} < {}",
+            now,
+            self.last_update[i]
+        );
+        let tau = (now - self.last_update[i]).max(0.0);
+        if tau == 0.0 {
+            return;
+        }
+        self.eq_time_s[i] += tau * self.eq_rate[i];
+        self.busy_time[i] += tau * self.busy_m[i];
+        self.active_time[i] += tau * self.active_m[i];
+        self.c6_time[i] += tau * (1.0 - self.active_m[i]);
+        self.last_update[i] = now;
+    }
+
     /// Pin `task` to `core_idx`.
     pub fn assign(&mut self, core_idx: usize, task: u64, now: f64) {
-        let ops = self.ops;
-        self.cores[core_idx].assign(task, now, &ops);
+        debug_assert!(self.task[core_idx].is_none(), "core {core_idx} already allocated");
+        debug_assert_eq!(self.state[core_idx], CState::C0, "cannot assign to a deep-idle core");
+        self.advance_one(core_idx, now);
+        // Close out the idle period that ends now.
+        self.idle_hist[core_idx].push((now - self.idle_since[core_idx]).max(0.0));
+        self.task[core_idx] = Some(task);
+        self.eq_rate[core_idx] = 1.0;
+        self.busy_m[core_idx] = 1.0;
         self.task_core.insert(task, core_idx);
+        self.dirty = true;
     }
 
     /// Record `task` as oversubscribed (no dedicated core available).
     pub fn push_oversub(&mut self, task: u64) {
         self.oversub.push_back(task);
+        self.dirty = true;
     }
 
     /// Finish a task wherever it runs. Returns the freed core index when
     /// the task had a dedicated core.
     pub fn finish_task(&mut self, task: u64, now: f64) -> Option<usize> {
         if let Some(core_idx) = self.task_core.remove(&task) {
-            let ops = self.ops;
-            self.cores[core_idx].release(now, &ops);
+            self.advance_one(core_idx, now);
+            self.idle_since[core_idx] = now;
+            self.task[core_idx] = None;
+            // Freed cores stay C0 (unallocated operating point).
+            self.eq_rate[core_idx] = self.ops.rate_unalloc;
+            self.busy_m[core_idx] = 0.0;
+            self.dirty = true;
             Some(core_idx)
         } else if let Some(pos) = self.oversub.iter().position(|&t| t == task) {
-            self.oversub.swap_remove_back(pos);
+            // Order-preserving removal: the queue is promoted strictly
+            // FIFO, so a mid-queue finish must not reorder later arrivals
+            // (`swap_remove_back` did, moving the newest task forward).
+            self.oversub.remove(pos);
+            self.dirty = true;
             None
         } else {
             panic!("finish_task: unknown task {task}");
@@ -142,27 +404,73 @@ impl CpuPackage {
 
     /// Pop one pending oversubscribed task (FIFO), if any — O(1).
     pub fn pop_oversub(&mut self) -> Option<u64> {
-        self.oversub.pop_front()
+        let t = self.oversub.pop_front();
+        if t.is_some() {
+            self.dirty = true;
+        }
+        t
     }
 
     /// Switch a core's C-state.
     pub fn set_state(&mut self, core_idx: usize, state: CState, now: f64) {
-        let ops = self.ops;
-        let before = self.cores[core_idx].state;
-        self.cores[core_idx].set_state(state, now, &ops);
-        match (before, state) {
-            (CState::C0, CState::C6) => self.active_cnt -= 1,
-            (CState::C6, CState::C0) => self.active_cnt += 1,
-            _ => {}
+        if state == self.state[core_idx] {
+            return;
         }
+        debug_assert!(
+            !(state == CState::C6 && self.task[core_idx].is_some()),
+            "cannot deep-idle allocated core {core_idx}"
+        );
+        self.advance_one(core_idx, now);
+        self.state[core_idx] = state;
+        match state {
+            CState::C0 => {
+                self.active_cnt += 1;
+                self.active_m[core_idx] = 1.0;
+                self.eq_rate[core_idx] = if self.task[core_idx].is_some() {
+                    1.0
+                } else {
+                    self.ops.rate_unalloc
+                };
+            }
+            CState::C6 => {
+                self.active_cnt -= 1;
+                self.active_m[core_idx] = 0.0;
+                self.eq_rate[core_idx] = 0.0;
+            }
+        }
+        self.dirty = true;
     }
 
     /// Advance aging of every core to `now` (metrics snapshots; also the
     /// paper's periodic "accurate frequency from aging sensors" moment).
+    ///
+    /// One branchless multiply-add pass over the hot SoA slices (module
+    /// docs) — the compiler can vectorize it, and it is bitwise-identical
+    /// to advancing each core individually at its operating point.
     pub fn advance_all(&mut self, now: f64) {
-        let ops = self.ops;
-        for c in &mut self.cores {
-            c.advance(now, &ops);
+        let CpuPackage {
+            eq_time_s,
+            eq_rate,
+            last_update,
+            active_m,
+            busy_m,
+            busy_time,
+            active_time,
+            c6_time,
+            ..
+        } = self;
+        for i in 0..eq_time_s.len() {
+            debug_assert!(
+                now >= last_update[i] - 1e-9,
+                "time went backwards: {now} < {}",
+                last_update[i]
+            );
+            let tau = (now - last_update[i]).max(0.0);
+            eq_time_s[i] += tau * eq_rate[i];
+            busy_time[i] += tau * busy_m[i];
+            active_time[i] += tau * active_m[i];
+            c6_time[i] += tau * (1.0 - active_m[i]);
+            last_update[i] = now;
         }
     }
 
@@ -170,14 +478,18 @@ impl CpuPackage {
     pub fn frequencies(&mut self, now: f64) -> Vec<f64> {
         self.advance_all(now);
         let ops = self.ops;
-        self.cores.iter().map(|c| c.freq_ghz(&ops)).collect()
+        self.f0_ghz.iter().zip(&self.eq_time_s).map(|(&f0, &eq)| ops.freq_ghz(f0, eq)).collect()
     }
 
     /// Per-core absolute frequency reductions (GHz) as of `now`.
     pub fn freq_reductions(&mut self, now: f64) -> Vec<f64> {
         self.advance_all(now);
         let ops = self.ops;
-        self.cores.iter().map(|c| c.freq_reduction_ghz(&ops)).collect()
+        self.f0_ghz
+            .iter()
+            .zip(&self.eq_time_s)
+            .map(|(&f0, &eq)| f0 - ops.freq_ghz(f0, eq))
+            .collect()
     }
 
     /// Relative execution-time dilation for a task on `core_idx`:
@@ -185,7 +497,7 @@ impl CpuPackage {
     /// task durations by this factor (§5: "execution time ... adjusted
     /// according to the operating frequency").
     pub fn slowdown(&self, core_idx: usize) -> f64 {
-        let f = self.cores[core_idx].freq_ghz(&self.ops);
+        let f = self.ops.freq_ghz(self.f0_ghz[core_idx], self.eq_time_s[core_idx]);
         if f <= 0.0 {
             f64::INFINITY
         } else {
@@ -204,6 +516,20 @@ impl CpuPackage {
     /// (itself included in the running count).
     pub fn normalized_idle_for_extra_task(&self) -> f64 {
         (self.active_count() as f64 - (self.running_tasks() + 1) as f64) / self.n_cores() as f64
+    }
+
+    /// Overwrite a core's canonical equivalent stress time — fixtures and
+    /// state restoration (pairs with [`AgingOps::eq_of_dvth`]); not part
+    /// of the simulation path.
+    pub fn set_eq_time_s(&mut self, core_idx: usize, eq_time_s: f64) {
+        self.eq_time_s[core_idx] = eq_time_s;
+        self.dirty = true;
+    }
+
+    /// Overwrite a core's cumulative busy time (fixtures/tests only).
+    pub fn set_busy_time(&mut self, core_idx: usize, busy_time: f64) {
+        self.busy_time[core_idx] = busy_time;
+        self.dirty = true;
     }
 }
 
@@ -250,6 +576,64 @@ mod tests {
         assert_eq!(p.pop_oversub(), Some(7));
         assert_eq!(p.pop_oversub(), Some(8));
         assert_eq!(p.pop_oversub(), None);
+    }
+
+    #[test]
+    fn finish_mid_queue_preserves_fifo_order() {
+        // Regression: `swap_remove_back` moved the newest arrival into the
+        // removed slot, so [10, 11, 12, 13] minus 11 popped as 10, 13, 12.
+        let mut p = pkg(1);
+        p.assign(0, 1, 0.0);
+        for t in [10, 11, 12, 13] {
+            p.push_oversub(t);
+        }
+        assert_eq!(p.finish_task(11, 1.0), None);
+        assert_eq!(p.pop_oversub(), Some(10));
+        assert_eq!(p.pop_oversub(), Some(12));
+        assert_eq!(p.pop_oversub(), Some(13));
+        assert_eq!(p.pop_oversub(), None);
+    }
+
+    #[test]
+    fn dirty_flag_tracks_mutations_not_advances() {
+        let mut p = pkg(4);
+        assert!(p.is_dirty(), "fresh package must start dirty");
+        p.clear_dirty();
+        p.advance_all(10.0);
+        assert!(!p.is_dirty(), "pure time advance must not re-arm the tick");
+        p.assign(0, 1, 10.0);
+        assert!(p.is_dirty());
+        p.clear_dirty();
+        p.finish_task(1, 11.0);
+        assert!(p.is_dirty());
+        p.clear_dirty();
+        p.set_state(2, CState::C6, 11.0);
+        assert!(p.is_dirty());
+        p.clear_dirty();
+        p.set_state(2, CState::C6, 12.0); // already C6: no state change
+        assert!(!p.is_dirty());
+        p.push_oversub(9);
+        assert!(p.is_dirty());
+        p.clear_dirty();
+        assert_eq!(p.pop_oversub(), Some(9));
+        assert!(p.is_dirty());
+    }
+
+    #[test]
+    fn batch_advance_matches_views() {
+        // advance_all and the per-core edge advances must agree exactly.
+        let mut p = pkg(3);
+        p.assign(0, 1, 0.0);
+        p.set_state(2, CState::C6, 0.0);
+        p.advance_all(1000.0);
+        let eq_alloc = p.core(0).eq_time_s();
+        let eq_free = p.core(1).eq_time_s();
+        assert_eq!(eq_alloc, 1000.0);
+        assert_eq!(eq_free, 1000.0 * p.ops.rate_unalloc);
+        assert_eq!(p.core(2).eq_time_s(), 0.0);
+        assert_eq!(p.core(2).c6_time(), 1000.0);
+        assert_eq!(p.core(0).busy_time(), 1000.0);
+        assert_eq!(p.core(1).busy_time(), 0.0);
     }
 
     #[test]

@@ -24,6 +24,9 @@ pub struct Collector {
     pub oversub_integral: Vec<f64>,
     /// Per machine: ∫ active_core_count dt (core-seconds in C0).
     pub active_core_seconds: Vec<f64>,
+    /// Simulation time the integrals have been advanced to — written at
+    /// each sampling tick and consumed by `Cluster::run`, which integrates
+    /// the final partial `(last Sample, end]` interval before snapshotting.
     pub last_integral_t: f64,
     /// Time-to-first-token per request (s).
     pub ttft: Vec<f64>,

@@ -27,9 +27,10 @@ impl CorePolicy for LeastAgedPolicy {
     }
 
     /// Free active core with the least executed work — a single
-    /// allocation-free pass over the package (§Perf).
+    /// allocation-free pass over the package's flat busy-time slice
+    /// (§Perf).
     fn pick_core(&mut self, cpu: &CpuPackage, _now: f64, _rng: &mut Rng) -> Option<usize> {
-        super::min_free_core_by_key(cpu, |c| c.busy_time)
+        super::min_free_core_by_key(cpu, cpu.busy_times())
     }
 }
 
@@ -47,9 +48,9 @@ mod tests {
         let mut cpu = pkg(3);
         let mut p = LeastAgedPolicy::new();
         let mut rng = Rng::new(1);
-        cpu.cores[0].busy_time = 100.0;
-        cpu.cores[1].busy_time = 5.0;
-        cpu.cores[2].busy_time = 50.0;
+        cpu.set_busy_time(0, 100.0);
+        cpu.set_busy_time(1, 5.0);
+        cpu.set_busy_time(2, 50.0);
         assert_eq!(p.pick_core(&cpu, 0.0, &mut rng), Some(1));
     }
 
@@ -66,7 +67,7 @@ mod tests {
             t_now += 1.0;
             cpu.finish_task(t, t_now);
         }
-        let works: Vec<f64> = cpu.cores.iter().map(|c| c.busy_time).collect();
+        let works: Vec<f64> = cpu.busy_times().to_vec();
         let max = works.iter().cloned().fold(f64::MIN, f64::max);
         let min = works.iter().cloned().fold(f64::MAX, f64::min);
         assert!(max - min <= 1.0 + 1e-9, "works={works:?}");

@@ -49,8 +49,8 @@ impl CorePolicy for LinuxPolicy {
         // Wake-affinity: prefer the most recently used core if it is free.
         if rng.bool(self.sticky_p) {
             while let Some(&cand) = self.recent.last() {
-                let core = &cpu.cores[cand];
-                if core.state == CState::C0 && core.task.is_none() {
+                let core = cpu.core(cand);
+                if core.state() == CState::C0 && core.task().is_none() {
                     self.recent.pop();
                     self.recent.push(cand); // stays most-recent
                     return Some(cand);
@@ -70,7 +70,7 @@ impl CorePolicy for LinuxPolicy {
             .free_active_cores()
             .nth(k)
             .expect("free_active_count consistent with iterator")
-            .id;
+            .id();
         self.recent.retain(|&c| c != pick);
         self.recent.push(pick);
         if self.recent.len() > 16 {

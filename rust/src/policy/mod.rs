@@ -20,27 +20,22 @@ pub use linux::LinuxPolicy;
 pub use proposed::ProposedPolicy;
 pub use reaction::ReactionFunction;
 
-use crate::cpu::{CState, Core, CpuPackage};
+use crate::cpu::CpuPackage;
 use crate::util::rng::Rng;
 
-/// Free-working-set argmin by an arbitrary age proxy — one pass, no
-/// allocation (§Perf). Shared by the `least-aged` baseline (cumulative
-/// busy time) and the `proposed-telemetry` variant (equivalent stress
-/// time). Ties break to the lowest core id (iteration order), matching
-/// the policies' historical behaviour.
-pub(crate) fn min_free_core_by_key<K: Fn(&Core) -> f64>(
-    cpu: &CpuPackage,
-    key: K,
-) -> Option<usize> {
+/// Free-working-set argmin over a flat per-core key slice — one pass, no
+/// allocation (§Perf). Shared by the `least-aged` baseline
+/// ([`CpuPackage::busy_times`]) and the `proposed-telemetry` variant
+/// ([`CpuPackage::eq_times`]). Ties break to the lowest core id
+/// (iteration order), matching the policies' historical behaviour.
+pub(crate) fn min_free_core_by_key(cpu: &CpuPackage, key: &[f64]) -> Option<usize> {
+    debug_assert_eq!(key.len(), cpu.n_cores());
     let mut best: Option<(f64, usize)> = None;
-    for core in &cpu.cores {
-        if core.state != CState::C0 || core.task.is_some() {
-            continue;
-        }
-        let k = key(core);
+    for core in cpu.free_active_cores() {
+        let k = key[core.id()];
         match best {
-            None => best = Some((k, core.id)),
-            Some((b, _)) if k < b => best = Some((k, core.id)),
+            None => best = Some((k, core.id())),
+            Some((b, _)) if k < b => best = Some((k, core.id())),
             _ => {}
         }
     }
@@ -144,6 +139,29 @@ impl CoreManager {
         self.promote_oversub(now);
     }
 
+    /// The cluster's periodic entry point: run [`CoreManager::adjust`]
+    /// only if the package changed since the last tick. Returns whether
+    /// the tick did any work (skip-ahead; see the dirty-flag contract in
+    /// [`crate::cpu::package`]).
+    ///
+    /// Skipping is behaviour-preserving because `adjust` is a
+    /// deterministic function of the package's discrete state — counts of
+    /// active/sleeping cores and tasks, plus the *ordering* of candidate
+    /// ages — and between mutations every parking candidate ages at the
+    /// same unallocated rate while sleepers are frozen, so a clean
+    /// package's adjust would recompute the identical no-op. The flag is
+    /// cleared *before* running, so changes the adjust itself makes
+    /// (parking, waking, promotions) re-arm the next tick and multi-tick
+    /// convergence is untouched.
+    pub fn adjust_tick(&mut self, now: f64) -> bool {
+        if !self.cpu.is_dirty() {
+            return false;
+        }
+        self.cpu.clear_dirty();
+        self.adjust(now);
+        true
+    }
+
     fn promote_oversub(&mut self, now: f64) {
         while !self.cpu.oversub.is_empty() && self.cpu.has_free_active_core() {
             if let Some(core) = self.policy.pick_core(&self.cpu, now, &mut self.rng) {
@@ -202,6 +220,51 @@ mod tests {
             assert_eq!(m.cpu.oversub.len(), 0, "policy {p}");
             assert_eq!(m.cpu.allocated_count(), 2, "policy {p}");
         }
+    }
+
+    #[test]
+    fn promotion_follows_arrival_order_after_mid_queue_finish() {
+        // Regression for the `swap_remove_back` FIFO corruption: finish a
+        // mid-queue oversubscribed task, then free cores one at a time —
+        // the remaining queue must be promoted strictly in arrival order.
+        let mut m = mgr(2, "linux");
+        m.start_task(1, 0.0);
+        m.start_task(2, 0.0);
+        for t in [10, 11, 12, 13] {
+            assert!(m.start_task(t, 0.1).is_none());
+        }
+        m.finish_task(11, 0.2); // still queued: finishes mid-queue
+        let mut promoted = Vec::new();
+        for (i, pinned) in [1u64, 2].iter().enumerate() {
+            m.finish_task(*pinned, 1.0 + i as f64);
+            for t in [10u64, 12, 13] {
+                if m.cpu.task_core_of(t).is_some() && !promoted.contains(&t) {
+                    promoted.push(t);
+                }
+            }
+        }
+        assert_eq!(promoted, vec![10, 12], "promotion order broke arrival order");
+        assert_eq!(m.cpu.oversub.iter().copied().collect::<Vec<_>>(), vec![13]);
+    }
+
+    #[test]
+    fn adjust_tick_skips_clean_packages() {
+        let mut m = mgr(8, "proposed");
+        // A fresh package is dirty: the first tick runs (and parks cores).
+        assert!(m.adjust_tick(0.25));
+        // Ticks keep running while the previous tick changed something;
+        // once a tick is a no-op the package stays clean and later ticks
+        // are skipped outright.
+        let mut ticks = 0;
+        while m.adjust_tick(0.5 + 0.25 * ticks as f64) {
+            ticks += 1;
+            assert!(ticks < 32, "adjust_tick never converged");
+        }
+        assert!(!m.adjust_tick(100.0));
+        assert!(!m.adjust_tick(200.0), "clean package must keep skipping");
+        // Any task event re-arms the tick.
+        m.start_task(1, 300.0);
+        assert!(m.adjust_tick(300.25));
     }
 
     #[test]

@@ -30,9 +30,12 @@
 //! §Perf: `adjust` runs every 250 ms on every machine of every scenario
 //! cell, so its candidate selection is allocation-free — a reusable
 //! scratch buffer plus `select_nth_unstable_by` partial selection instead
-//! of collect-then-full-sort. Ages are compared on the canonical
-//! equivalent-stress-time (`Core::eq_time_s`), which orders identically
-//! to ΔVth without paying the `powf` snapshot per candidate.
+//! of collect-then-full-sort. Ages are compared on the package's flat
+//! canonical equivalent-stress-time slice
+//! ([`CpuPackage::eq_times`]), which orders identically to ΔVth without
+//! paying the `powf` snapshot per candidate.
+
+use std::cmp::Ordering;
 
 use super::reaction::ReactionFunction;
 use super::CorePolicy;
@@ -87,30 +90,31 @@ impl ProposedPolicy {
         ProposedPolicy { use_telemetry: true, ..ProposedPolicy::new() }
     }
 
-    /// Fill `self.scratch` with `(age_key, id)` of every core matching
-    /// `keep`, then partially select the `delta` extreme ones under `ord`
-    /// into `scratch[..delta]` (unordered within the prefix — callers
-    /// apply an order-insensitive state flip). Returns the clamped delta.
+    /// Fill `self.scratch` with flat `(eq_time, id)` keys of every
+    /// candidate core — parking candidates (free C0 cores) when `park`,
+    /// wake candidates (C6 sleepers) otherwise — then partially select the
+    /// `delta` extreme ones into `scratch[..delta]` (most-aged first for
+    /// parking, least-aged first for waking; unordered within the prefix —
+    /// callers apply an order-insensitive state flip). Returns the clamped
+    /// delta.
     ///
     /// The comparator totally orders `(eq_time, id)` tuples, so the
     /// selected *set* is exactly the prefix a full sort would have taken,
     /// at O(n) instead of O(n log n) and with zero heap traffic after the
     /// first call.
-    fn select_extreme<F>(
-        &mut self,
-        cpu: &CpuPackage,
-        delta: usize,
-        keep: F,
-        descending: bool,
-    ) -> usize
-    where
-        F: Fn(&crate::cpu::Core) -> bool,
-    {
+    fn select_extreme(&mut self, cpu: &CpuPackage, delta: usize, park: bool) -> usize {
         self.scratch.clear();
-        self.scratch.extend(cpu.cores.iter().filter(|c| keep(c)).map(|c| (c.eq_time_s, c.id)));
+        let eq = cpu.eq_times();
+        if park {
+            self.scratch.extend(cpu.free_active_cores().map(|c| (eq[c.id()], c.id())));
+        } else {
+            self.scratch.extend(
+                cpu.core_views().filter(|c| c.state() == CState::C6).map(|c| (eq[c.id()], c.id())),
+            );
+        }
         let delta = delta.min(self.scratch.len());
         if delta > 0 && delta < self.scratch.len() {
-            if descending {
+            if park {
                 self.scratch.select_nth_unstable_by(delta - 1, |a, b| b.partial_cmp(a).unwrap());
             } else {
                 self.scratch.select_nth_unstable_by(delta - 1, |a, b| a.partial_cmp(b).unwrap());
@@ -135,17 +139,14 @@ impl CorePolicy for ProposedPolicy {
     /// (or lowest equivalent stress time in the telemetry variant).
     fn pick_core(&mut self, cpu: &CpuPackage, _now: f64, _rng: &mut Rng) -> Option<usize> {
         if self.use_telemetry {
-            return super::min_free_core_by_key(cpu, |c| c.eq_time_s);
+            return super::min_free_core_by_key(cpu, cpu.eq_times());
         }
         let mut selected: Option<usize> = None;
         let mut selected_score = 0.0f64;
-        for core in &cpu.cores {
-            if core.state != CState::C0 || core.task.is_some() {
-                continue;
-            }
-            let idle_score = core.idle_history.score();
+        for core in cpu.free_active_cores() {
+            let idle_score = core.idle_score();
             if selected.is_none() || idle_score > selected_score {
-                selected = Some(core.id);
+                selected = Some(core.id());
                 selected_score = idle_score;
             }
         }
@@ -168,31 +169,23 @@ impl CorePolicy for ProposedPolicy {
         let e_prd = e / n as f64;
         let e_corr = self.reaction.correction(e_prd, n);
 
-        if e_corr > 0 {
-            // Underutilization: park δ cores, most-aged first. Only
-            // active, unallocated cores are candidates.
-            let delta = self.select_extreme(
-                cpu,
-                e_corr as usize,
-                |c| c.state == CState::C0 && c.task.is_none(),
-                true,
-            );
-            for k in 0..delta {
-                let id = self.scratch[k].1;
-                cpu.set_state(id, CState::C6, now);
+        match e_corr.cmp(&0) {
+            Ordering::Greater => {
+                // Underutilization: park δ cores, most-aged first. Only
+                // active, unallocated cores are candidates.
+                let delta = self.select_extreme(cpu, e_corr as usize, true);
+                for &(_, id) in self.scratch.iter().take(delta) {
+                    cpu.set_state(id, CState::C6, now);
+                }
             }
-        } else if e_corr < 0 {
-            // Oversubscription: wake δ cores, least-aged first.
-            let delta = self.select_extreme(
-                cpu,
-                (-e_corr) as usize,
-                |c| c.state == CState::C6,
-                false,
-            );
-            for k in 0..delta {
-                let id = self.scratch[k].1;
-                cpu.set_state(id, CState::C0, now);
+            Ordering::Less => {
+                // Oversubscription: wake δ cores, least-aged first.
+                let delta = self.select_extreme(cpu, (-e_corr) as usize, false);
+                for &(_, id) in self.scratch.iter().take(delta) {
+                    cpu.set_state(id, CState::C0, now);
+                }
             }
+            Ordering::Equal => {}
         }
     }
 
@@ -258,7 +251,7 @@ mod tests {
         let mut cpu = pkg(40);
         let mut p = ProposedPolicy::new();
         p.adjust(&mut cpu, 0.0); // 1 active core left
-        let free = cpu.free_active_cores().next().unwrap().id;
+        let free = cpu.free_active_cores().next().unwrap().id();
         cpu.assign(free, 1, 1.0);
         for t in 2..8 {
             cpu.push_oversub(t);
@@ -277,9 +270,9 @@ mod tests {
             cpu.assign(t as usize, t, 0.0);
         }
         p.adjust(&mut cpu, 1.0);
-        for c in &cpu.cores {
-            if c.task.is_some() {
-                assert_eq!(c.state, CState::C0);
+        for c in cpu.core_views() {
+            if c.task().is_some() {
+                assert_eq!(c.state(), CState::C0);
             }
         }
         assert_eq!(cpu.allocated_count(), 4);
@@ -290,20 +283,20 @@ mod tests {
         let mut cpu = pkg(4);
         // Fabricate distinct ages (equivalent stress time orders like ΔVth).
         for (i, eq) in [4.0e6, 1.0e6, 3.0e6, 2.0e6].iter().enumerate() {
-            cpu.cores[i].eq_time_s = *eq;
+            cpu.set_eq_time_s(i, *eq);
         }
         let mut p = ProposedPolicy::new();
         // No tasks: e_prd=1 -> park 3 cores; survivors should be the least aged (core 1).
         p.adjust(&mut cpu, 0.0);
         assert_eq!(cpu.active_count(), 1);
-        assert_eq!(cpu.cores[1].state, CState::C0, "least-aged core must stay awake");
+        assert_eq!(cpu.core(1).state(), CState::C0, "least-aged core must stay awake");
         // Now oversubscribe so it wakes 2: least-aged sleepers first (3 then 2).
         cpu.assign(1, 100, 1.0);
         for t in 0..3 {
             cpu.push_oversub(t);
         }
         p.adjust(&mut cpu, 2.0);
-        assert_eq!(cpu.cores[3].state, CState::C0, "least-aged sleeper wakes first");
+        assert_eq!(cpu.core(3).state(), CState::C0, "least-aged sleeper wakes first");
     }
 
     #[test]
@@ -312,21 +305,21 @@ mod tests {
         // (age, id) sort would — ties break by id, deterministically.
         let mut cpu = pkg(6);
         for (i, eq) in [5.0, 5.0, 1.0, 5.0, 2.0, 5.0].iter().enumerate() {
-            cpu.cores[i].eq_time_s = *eq * 1e6;
+            cpu.set_eq_time_s(i, *eq * 1e6);
         }
         let mut p = ProposedPolicy::new();
         // No tasks: park 5, keep 1 awake. Full sort descending on
         // (age, id) keeps the smallest tuple awake: core 2 (age 1.0).
         p.adjust(&mut cpu, 0.0);
         assert_eq!(cpu.active_count(), 1);
-        assert_eq!(cpu.cores[2].state, CState::C0);
+        assert_eq!(cpu.core(2).state(), CState::C0);
     }
 
     #[test]
     fn telemetry_variant_picks_least_aged_by_age() {
         let mut cpu = pkg(4);
         for (i, eq) in [4.0e6, 1.0e6, 3.0e6, 2.0e6].iter().enumerate() {
-            cpu.cores[i].eq_time_s = *eq;
+            cpu.set_eq_time_s(i, *eq);
         }
         // Give the *most aged* core the best idle score to show the two
         // estimators disagree — telemetry must follow the aging sensor.

@@ -106,16 +106,10 @@ impl ShadowCpuManager {
 
     pub fn report(&mut self, policy_name: &str) -> ShadowReport {
         let now = self.now();
-        let ops = self.mgr.cpu.ops;
         let freqs = self.mgr.cpu.frequencies(now);
-        let total_time: f64 = self
-            .mgr
-            .cpu
-            .cores
-            .iter()
-            .map(|c| c.active_time + c.c6_time)
-            .sum();
-        let c6_time: f64 = self.mgr.cpu.cores.iter().map(|c| c.c6_time).sum();
+        let total_time: f64 =
+            self.mgr.cpu.core_views().map(|c| c.active_time() + c.c6_time()).sum();
+        let c6_time: f64 = self.mgr.cpu.core_views().map(|c| c.c6_time()).sum();
         ShadowReport {
             policy: policy_name.to_string(),
             n_cores: self.mgr.cpu.n_cores(),
@@ -123,7 +117,7 @@ impl ShadowCpuManager {
             oversub_events: self.mgr.oversub_events,
             c6_fraction: if total_time > 0.0 { c6_time / total_time } else { 0.0 },
             mean_dvth: crate::util::stats::mean(
-                &self.mgr.cpu.cores.iter().map(|c| c.dvth(&ops)).collect::<Vec<_>>(),
+                &self.mgr.cpu.core_views().map(|c| c.dvth()).collect::<Vec<_>>(),
             ),
             freq_cv: crate::util::stats::coeff_of_variation(&freqs),
             idle: Summary::of(&self.idle_samples),

@@ -116,8 +116,16 @@ impl<E> EventQueue<E> {
 
     /// Schedule `payload` `delay` seconds from now; returns the absolute
     /// time used.
+    ///
+    /// Negative delays follow the same contract as [`EventQueue::push`]:
+    /// a delay below `-`[`PAST_TOLERANCE_S`] panics (it used to be clamped
+    /// silently to zero, masking negative-duration bugs in callers), while
+    /// sub-tolerance round-off is forgiven — clamped to `now` and counted
+    /// in [`EventQueue::clamped`].
     pub fn push_in(&mut self, delay: f64, payload: E) -> f64 {
-        self.push(self.now + delay.max(0.0), payload)
+        assert!(delay.is_finite(), "scheduling a non-finite delay: {delay}");
+        assert!(delay >= -PAST_TOLERANCE_S, "scheduling a negative delay: {delay}");
+        self.push(self.now + delay, payload)
     }
 
     /// Pop the next event, advancing the clock to its timestamp.
@@ -217,6 +225,34 @@ mod tests {
         assert_eq!(q.clamped(), 1);
         assert_eq!(q.push_in(1.5, ()), 3.5);
         assert_eq!(q.clamped(), 1);
+    }
+
+    #[test]
+    fn sub_tolerance_negative_delay_is_forgiven_and_counted() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.pop();
+        // Round-off-scale negative delay: clamped to `now`, not dropped.
+        let t = q.push_in(-1e-12, ());
+        assert_eq!(t, 5.0);
+        assert_eq!(q.clamped(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling a negative delay")]
+    fn negative_delay_beyond_tolerance_panics() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.pop();
+        // Used to be silently clamped to zero by `delay.max(0.0)`.
+        q.push_in(-0.5, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite delay")]
+    fn non_finite_delay_panics() {
+        let mut q = EventQueue::new();
+        q.push_in(f64::NEG_INFINITY, ());
     }
 
     #[test]

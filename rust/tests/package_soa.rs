@@ -1,0 +1,174 @@
+//! Property tests for the package's structure-of-arrays fast path.
+//!
+//! Two contracts the SoA layout must uphold under *arbitrary* schedules,
+//! not just the hand-picked ones in the unit tests:
+//!
+//! 1. **Aging parity.** Random interleavings of assign / release / C6
+//!    park / wake / Algorithm-2 adjusts must keep every core's lazy ΔVth
+//!    snapshot within 1e-12 relative of the closed-form
+//!    `AgingParams::dvth_step` recursion applied interval-by-interval.
+//! 2. **FIFO oversubscription.** Under random arrivals and random
+//!    (including mid-queue) finishes, promotion to dedicated cores must
+//!    follow arrival order exactly — the regression `swap_remove_back`
+//!    broke.
+
+use std::collections::VecDeque;
+
+use carbon_sim::cpu::{AgingParams, CState, CpuPackage, TemperatureModel};
+use carbon_sim::policy::{by_name, CoreManager, CorePolicy};
+use carbon_sim::util::proptest::{check, forall, Check};
+use carbon_sim::util::rng::Rng;
+
+fn pkg(n: usize) -> CpuPackage {
+    CpuPackage::uniform(n, AgingParams::paper_default(), TemperatureModel::paper_default())
+}
+
+/// Advance the scalar reference model to `now`: one `dvth_step` per core
+/// at the operating point the core held since the last advance.
+fn advance_reference(cpu: &CpuPackage, ref_dvth: &mut [f64], last_t: &mut f64, now: f64) {
+    let tau = now - *last_t;
+    if tau <= 0.0 {
+        return;
+    }
+    for core in cpu.core_views() {
+        let i = core.id();
+        match core.state() {
+            CState::C6 => {} // age-halted: ΔVth frozen
+            CState::C0 => {
+                let adf = if core.is_allocated() {
+                    cpu.ops.adf_alloc
+                } else {
+                    cpu.ops.adf_unalloc
+                };
+                ref_dvth[i] = cpu.aging.dvth_step(ref_dvth[i], adf, tau);
+            }
+        }
+    }
+    *last_t = now;
+}
+
+#[test]
+fn random_schedules_keep_dvth_within_1e12_of_closed_form() {
+    forall(60, 0x50A, |g| {
+        let n = g.size(2, 24).max(2);
+        let mut cpu = pkg(n);
+        let mut policy = by_name("proposed").unwrap();
+        let mut ref_dvth = vec![0.0f64; n];
+        let mut ref_t = 0.0f64;
+        let mut now = 0.0f64;
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_task = 0u64;
+        for _ in 0..g.size(20, 120) {
+            now += g.f64(0.0, 3600.0);
+            // The reference integrates the interval at the *pre-mutation*
+            // operating points, exactly like the package's lazy advances.
+            advance_reference(&cpu, &mut ref_dvth, &mut ref_t, now);
+            match g.size(0, 9) {
+                0..=3 => {
+                    // Assign a task to a random free active core.
+                    let free = cpu.free_active_count();
+                    if free > 0 {
+                        let k = g.size(0, free - 1);
+                        let c = cpu.free_active_cores().nth(k).unwrap().id();
+                        cpu.assign(c, next_task, now);
+                        live.push(next_task);
+                        next_task += 1;
+                    }
+                }
+                4..=6 => {
+                    // Release a random live task.
+                    if !live.is_empty() {
+                        let idx = g.size(0, live.len() - 1);
+                        let t = live.swap_remove(idx);
+                        cpu.finish_task(t, now);
+                    }
+                }
+                7 => {
+                    // Park a random free active core.
+                    let frees: Vec<usize> = cpu.free_active_cores().map(|c| c.id()).collect();
+                    if !frees.is_empty() {
+                        let c = frees[g.size(0, frees.len() - 1)];
+                        cpu.set_state(c, CState::C6, now);
+                    }
+                }
+                8 => {
+                    // Wake a random sleeper.
+                    let sleepers: Vec<usize> = cpu
+                        .core_views()
+                        .filter(|c| c.state() == CState::C6)
+                        .map(|c| c.id())
+                        .collect();
+                    if !sleepers.is_empty() {
+                        let c = sleepers[g.size(0, sleepers.len() - 1)];
+                        cpu.set_state(c, CState::C0, now);
+                    }
+                }
+                _ => policy.adjust(&mut cpu, now),
+            }
+        }
+        now += g.f64(0.0, 3600.0);
+        advance_reference(&cpu, &mut ref_dvth, &mut ref_t, now);
+        cpu.advance_all(now);
+        for core in cpu.core_views() {
+            let fast = core.dvth();
+            let reference = ref_dvth[core.id()];
+            let err = (fast - reference).abs();
+            if err > 1e-12 * reference.max(1e-15) {
+                return Check::Fail(format!(
+                    "core {}: fast dvth {fast} vs reference {reference} (err {err:e})",
+                    core.id()
+                ));
+            }
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn oversub_promotion_follows_arrival_order_under_random_finishes() {
+    forall(150, 0xF1F0, |g| {
+        let n = g.size(1, 4).max(1);
+        let cpu = pkg(n);
+        let mut m = CoreManager::new(cpu, by_name("linux").unwrap(), Rng::new(17));
+        // Reference model: pinned tasks (any order) + a strict FIFO queue.
+        let mut running: Vec<u64> = Vec::new();
+        let mut queued: VecDeque<u64> = VecDeque::new();
+        let mut next_task = 0u64;
+        let mut now = 0.0f64;
+        for _ in 0..g.size(10, 150) {
+            now += g.f64(0.0, 0.5);
+            let total = running.len() + queued.len();
+            if total == 0 || g.size(0, 9) < 6 {
+                // Arrival: runs immediately iff a free active core exists.
+                let will_queue = !m.cpu.has_free_active_core();
+                m.start_task(next_task, now);
+                if will_queue {
+                    queued.push_back(next_task);
+                } else {
+                    running.push(next_task);
+                }
+                next_task += 1;
+            } else {
+                // Finish a uniformly random task — running or mid-queue.
+                let k = g.size(0, total - 1);
+                if k < running.len() {
+                    let t = running.swap_remove(k);
+                    m.finish_task(t, now);
+                    // The freed core promotes the *oldest* queued task.
+                    if let Some(p) = queued.pop_front() {
+                        running.push(p);
+                    }
+                } else {
+                    let t = queued.remove(k - running.len()).unwrap();
+                    m.finish_task(t, now); // mid-queue: no promotion
+                }
+            }
+            let got: Vec<u64> = m.cpu.oversub.iter().copied().collect();
+            let want: Vec<u64> = queued.iter().copied().collect();
+            if got != want {
+                return Check::Fail(format!("queue diverged: sim {got:?} vs fifo {want:?}"));
+            }
+        }
+        check(m.cpu.running_tasks() == running.len() + queued.len(), "task count diverged")
+    });
+}

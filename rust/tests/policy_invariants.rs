@@ -71,9 +71,9 @@ fn structural_invariants(m: &CoreManager, live: usize, policy: &str) -> Check {
     if cpu.active_count() == 0 && live > 0 {
         return check(false, format!("[{policy}] all cores asleep with live tasks"));
     }
-    for core in &cpu.cores {
-        if core.task.is_some() && core.state == CState::C6 {
-            return check(false, format!("[{policy}] allocated core {} in C6", core.id));
+    for core in cpu.core_views() {
+        if core.task().is_some() && core.state() == CState::C6 {
+            return check(false, format!("[{policy}] allocated core {} in C6", core.id()));
         }
     }
     if !cpu.oversub.is_empty() && cpu.has_free_active_core() {
@@ -196,9 +196,8 @@ fn aging_monotonicity_under_any_schedule() {
             }
             m.adjust(now);
             m.cpu.advance_all(now);
-            let ops = m.cpu.ops;
-            for (i, core) in m.cpu.cores.iter().enumerate() {
-                let dvth = core.dvth(&ops);
+            for (i, core) in m.cpu.core_views().enumerate() {
+                let dvth = core.dvth();
                 if dvth < prev_dvth[i] - 1e-15 {
                     return check(
                         false,
@@ -218,13 +217,12 @@ fn proposed_halts_aging_in_parked_cores() {
     let mut m = mgr(8, "proposed", 5);
     m.adjust(1.0); // parks 7 cores
     let parked: Vec<usize> =
-        m.cpu.cores.iter().filter(|c| c.state == CState::C6).map(|c| c.id).collect();
+        m.cpu.core_views().filter(|c| c.state() == CState::C6).map(|c| c.id()).collect();
     assert!(!parked.is_empty());
-    let ops = m.cpu.ops;
-    let before: Vec<f64> = parked.iter().map(|&i| m.cpu.cores[i].dvth(&ops)).collect();
+    let before: Vec<f64> = parked.iter().map(|&i| m.cpu.core(i).dvth()).collect();
     m.cpu.advance_all(3600.0);
     for (k, &i) in parked.iter().enumerate() {
-        assert_eq!(m.cpu.cores[i].dvth(&ops), before[k], "parked core {i} aged");
+        assert_eq!(m.cpu.core(i).dvth(), before[k], "parked core {i} aged");
     }
 }
 
