@@ -12,7 +12,7 @@
 use carbon_sim::cluster::{Cluster, ClusterConfig};
 use carbon_sim::cpu::{AgingOps, AgingParams, Core, CpuPackage, TemperatureModel};
 use carbon_sim::policy::{by_name, CoreManager};
-use carbon_sim::sim::EventQueue;
+use carbon_sim::sim::{QueueKind, Scheduler, SchedulerImpl};
 use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
 use carbon_sim::util::bench::{bench, section};
 use carbon_sim::util::rng::Rng;
@@ -105,16 +105,26 @@ fn main() {
         std::hint::black_box(mgr_skip.adjust_tick(now_skip));
     });
 
-    section("L3 micro: event queue");
-    let mut q: EventQueue<u64> = EventQueue::new();
-    let mut i = 0u64;
-    bench("push+pop", 0.5, || {
-        q.push_in(1.0 + (i % 7) as f64, i);
-        if q.len() > 64 {
-            q.pop();
+    section("L3 micro: event queue (heap vs calendar)");
+    // Steady state at two in-flight populations: each iteration pushes one
+    // event and pops the earliest, so the queue size stays pinned. Delays
+    // cycle over ~7 s of sim time with repeats, giving both spread and
+    // same-timestamp collisions; the clock advances on every pop, so the
+    // calendar wheel rotates at its production rate.
+    for kind in [QueueKind::Heap, QueueKind::Calendar] {
+        for n in [1_000u64, 100_000] {
+            let mut q: SchedulerImpl<u64> = SchedulerImpl::new(kind);
+            for i in 0..n {
+                q.push_in(0.001 + (i % 7_000) as f64 * 1e-3, i);
+            }
+            let mut i = n;
+            bench(&format!("push+pop [{:<8} @ {n:>6} in-flight]", kind.name()), 0.5, || {
+                q.push_in(0.001 + (i % 7_000) as f64 * 1e-3, i);
+                std::hint::black_box(q.pop());
+                i += 1;
+            });
         }
-        i += 1;
-    });
+    }
 
     section("L3 macro: end-to-end simulator throughput");
     for pol in ["proposed", "linux"] {

@@ -29,7 +29,7 @@ use crate::cpu::{AgingParams, CpuPackage, ProcVarParams, ProcVarSampler, Tempera
 use crate::metrics::{Collector, SimResult};
 use crate::model::PerfModel;
 use crate::policy;
-use crate::sim::EventQueue;
+use crate::sim::{QueueKind, Scheduler, SchedulerImpl};
 use crate::trace::Trace;
 use crate::util::rng::Rng;
 
@@ -55,6 +55,9 @@ pub struct ClusterConfig {
     /// Optional pre-sampled per-machine initial core frequencies. Used to
     /// run *paired* policy comparisons on identical silicon.
     pub f0_override: Option<Vec<Vec<f64>>>,
+    /// Event-queue implementation. An execution detail — results are
+    /// byte-identical under either — so it lives outside sweep specs.
+    pub queue: QueueKind,
     pub aging: AgingParams,
     pub temps: TemperatureModel,
     pub procvar: ProcVarParams,
@@ -73,6 +76,7 @@ impl Default for ClusterConfig {
             kv_capacity_tokens: 400_000,
             seed: 42,
             f0_override: None,
+            queue: QueueKind::default(),
             aging: AgingParams::paper_default(),
             temps: TemperatureModel::paper_default(),
             procvar: ProcVarParams::paper_default(),
@@ -131,18 +135,25 @@ enum Ev {
     TaskDone { m: usize, task: u64 },
     /// Selective Core Idling tick — one coalesced event ticks every
     /// machine (§Perf: all machines share the policy's period, so one
-    /// heap entry replaces `n_machines` per tick).
+    /// queue entry replaces `n_machines` per tick). Fixed-period, so it
+    /// lives in a rearming tick-train slot ([`Scheduler::arm_periodic`])
+    /// and never traverses the queue proper.
     Adjust,
-    /// Metrics sampling tick (all machines).
+    /// Metrics sampling tick (all machines); the other tick-train slot.
     Sample,
 }
+
+/// Tick-train slot indices (arm order matches the pre-slot push order,
+/// keeping sequence-number streams — and thus results — unchanged).
+const SLOT_ADJUST: usize = 0;
+const SLOT_SAMPLE: usize = 1;
 
 /// The cluster simulator.
 pub struct Cluster {
     pub cfg: ClusterConfig,
     pub machines: Vec<Machine>,
     reqs: Vec<ReqState>,
-    q: EventQueue<Ev>,
+    q: SchedulerImpl<Ev>,
     rng: Rng,
     next_task: u64,
     completed: usize,
@@ -166,11 +177,12 @@ impl Cluster {
             })
             .collect();
         let n = cfg.n_machines();
+        let queue = cfg.queue;
         Cluster {
             cfg,
             machines,
             reqs: Vec::new(),
-            q: EventQueue::new(),
+            q: SchedulerImpl::new(queue),
             rng,
             next_task: 0,
             completed: 0,
@@ -203,19 +215,22 @@ impl Cluster {
         for (idx, r) in trace.requests.iter().enumerate() {
             self.q.push(r.arrival_s, Ev::Arrive(idx));
         }
-        // Periodic hooks. The adjust period is read off machine 0's
-        // already-constructed policy — every machine runs the same policy,
-        // and re-boxing via `policy::by_name` just to read the period was
-        // a needless allocation.
+        // Periodic hooks, held as rearming tick-train slots merged into
+        // the pop order (they fire forever; the loop below breaks on the
+        // finishing event, which is never a tick). The adjust period is
+        // read off machine 0's already-constructed policy — every machine
+        // runs the same policy, and re-boxing via `policy::by_name` just
+        // to read the period was a needless allocation.
         let adjust_period = self.machines.first().and_then(|m| m.mgr.policy.adjust_period_s());
         if let Some(p) = adjust_period {
-            self.q.push(p, Ev::Adjust);
+            self.q.arm_periodic(SLOT_ADJUST, p, p, Ev::Adjust);
         }
-        self.q.push(self.cfg.sample_period_s, Ev::Sample);
+        let sample = self.cfg.sample_period_s;
+        self.q.arm_periodic(SLOT_SAMPLE, sample, sample, Ev::Sample);
 
         // Main loop: drain until every request completed.
         while let Some((now, ev)) = self.q.pop() {
-            self.handle(now, ev, adjust_period);
+            self.handle(now, ev);
             if self.completed == self.reqs.len() && self.arrivals_pending == 0 {
                 break;
             }
@@ -252,6 +267,7 @@ impl Cluster {
             completed_requests: self.completed,
             events_processed: self.q.processed(),
             wall_time_s: wall_start.elapsed().as_secs_f64(),
+            queue: self.q.stats(),
             f0,
             freq,
             collector: std::mem::replace(&mut self.collector, Collector::new(0)),
@@ -260,7 +276,7 @@ impl Cluster {
 
     // ------------------------------------------------------------ events
 
-    fn handle(&mut self, now: f64, ev: Ev, adjust_period: Option<f64>) {
+    fn handle(&mut self, now: f64, ev: Ev) {
         match ev {
             Ev::Arrive(idx) => self.on_arrive(now, idx),
             Ev::PromptDone(m) => self.on_prompt_done(now, m),
@@ -273,34 +289,24 @@ impl Cluster {
                 // order at the shared timestamp). `adjust_tick` skips
                 // machines whose package saw no state change since their
                 // last tick (dirty-flag skip-ahead; see `cpu::package`).
+                // Rearming is the scheduler's job now (tick-train slot).
                 for m in 0..self.machines.len() {
                     self.machines[m].mgr.adjust_tick(now);
                 }
-                if let Some(p) = adjust_period {
-                    if !self.finished() {
-                        self.q.push(now + p, Ev::Adjust);
-                    }
-                }
             }
-            Ev::Sample => {
-                self.on_sample(now);
-                if !self.finished() {
-                    self.q.push(now + self.cfg.sample_period_s, Ev::Sample);
-                }
-            }
+            Ev::Sample => self.on_sample(now),
         }
-    }
-
-    fn finished(&self) -> bool {
-        self.arrivals_pending == 0 && self.completed == self.reqs.len()
     }
 
     fn on_arrive(&mut self, now: f64, idx: usize) {
         self.arrivals_pending -= 1;
         // Cluster-level scheduler: JSQ over prompt machines, then the
-        // least-loaded token machine (Splitwise's pairing step).
-        let pm = self.least_loaded(Role::Prompt);
-        let tm = self.least_loaded(Role::Token);
+        // least-loaded token machine (Splitwise's pairing step). Roles
+        // occupy contiguous id ranges, so split once and scan each
+        // role's slice directly instead of filtering all machines twice.
+        let (prompt_machines, token_machines) = self.machines.split_at(self.cfg.n_prompt);
+        let pm = Self::least_loaded(prompt_machines);
+        let tm = Self::least_loaded(token_machines);
         self.reqs[idx].prompt_machine = pm;
         self.reqs[idx].token_machine = tm;
         // Scheduler bookkeeping burns CPU on the chosen prompt machine.
@@ -311,10 +317,12 @@ impl Cluster {
         self.try_start_prompt(now, pm);
     }
 
-    fn least_loaded(&self, role: Role) -> usize {
-        self.machines
+    /// JSQ pick over one role's contiguous machine slice; returns the
+    /// machine id. `min_by_key` keeps the filter-scan era tie-break
+    /// (first minimum in id order), so schedules are unchanged.
+    fn least_loaded(machines: &[Machine]) -> usize {
+        machines
             .iter()
-            .filter(|m| m.role == role)
             .min_by_key(|m| m.sched_load())
             .expect("at least one machine per role")
             .id
@@ -575,6 +583,27 @@ mod tests {
         for m in &c.machines {
             assert_eq!(m.kv.used_tokens, 0, "machine {} leaked KV", m.id);
             assert!(m.batch.is_empty() && m.pending.is_empty());
+        }
+    }
+
+    #[test]
+    fn heap_and_calendar_queues_run_identically() {
+        // The queue implementation is an execution detail: every
+        // observable — event count, clock, silicon aging, and the shared
+        // queue stats — must match exactly between the two.
+        let t = small_trace(6.0, 15.0);
+        for pol in crate::policy::ALL_POLICIES {
+            let run = |queue| {
+                let cfg = ClusterConfig { queue, ..small_cfg(pol) };
+                Cluster::new(cfg).run(&t)
+            };
+            let (h, c) = (run(QueueKind::Heap), run(QueueKind::Calendar));
+            assert_eq!(h.events_processed, c.events_processed, "policy {pol}");
+            assert_eq!(h.duration_s, c.duration_s, "policy {pol}");
+            assert_eq!(h.completed_requests, c.completed_requests, "policy {pol}");
+            assert_eq!(h.freq, c.freq, "policy {pol}");
+            assert_eq!(h.queue, c.queue, "policy {pol}");
+            assert!(h.queue.pushes > 0 && h.queue.peak_len > 0);
         }
     }
 

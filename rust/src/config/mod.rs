@@ -35,6 +35,7 @@ const CLUSTER_KEYS: &[&str] = &[
     "max_batch",
     "kv_capacity_tokens",
     "seed",
+    "queue",
     "aging",
     "procvar",
     "perf",
@@ -61,6 +62,12 @@ pub fn cluster_from_value(v: &Value) -> Result<ClusterConfig, String> {
         seed: v.f64_or("seed", 42.0) as u64,
         ..ClusterConfig::default()
     };
+    if let Some(q) = v.get("queue") {
+        let s = q
+            .as_str()
+            .ok_or("cluster config key 'queue' must be the string \"calendar\" or \"heap\"")?;
+        cfg.queue = crate::sim::QueueKind::parse(s)?;
+    }
     if let Some(a) = v.get("aging") {
         cfg.aging = aging_from_value(a)?;
     }
@@ -370,6 +377,17 @@ mod tests {
         let adf = cfg.aging.adf(cfg.aging.calib_temp_k, 1.0);
         let dvth = cfg.aging.dvth_step(0.0, adf, cfg.aging.calib_lifetime_s);
         assert!((cfg.aging.rel_reduction(dvth) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_key_selects_the_implementation() {
+        use crate::sim::QueueKind;
+        let cfg = cluster_from_value(&parse(r#"{"queue": "heap"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.queue, QueueKind::Heap);
+        let cfg = cluster_from_value(&parse(r#"{"queue": "calendar"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.queue, QueueKind::Calendar);
+        assert!(cluster_from_value(&parse(r#"{"queue": "fifo"}"#).unwrap()).is_err());
+        assert!(cluster_from_value(&parse(r#"{"queue": 3}"#).unwrap()).is_err());
     }
 
     #[test]

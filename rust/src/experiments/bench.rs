@@ -13,6 +13,7 @@
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::policy::ALL_POLICIES;
+use crate::sim::{QueueKind, QueueStats};
 use crate::trace::azure::{AzureTraceGen, TraceParams, Workload};
 use crate::trace::Trace;
 use crate::util::json::Value;
@@ -68,6 +69,10 @@ pub struct BenchCellResult {
     pub wall_s: f64,
     pub completed: usize,
     pub sim_duration_s: f64,
+    /// Event-queue counters for the cell (identical under either queue
+    /// implementation; recorded so CI artifacts track scheduler
+    /// behavior across commits).
+    pub queue: QueueStats,
 }
 
 impl BenchCellResult {
@@ -92,6 +97,9 @@ impl BenchCellResult {
             ("events_per_s", self.events_per_s().into()),
             ("completed", self.completed.into()),
             ("sim_duration_s", self.sim_duration_s.into()),
+            ("peak_queue_len", self.queue.peak_len.into()),
+            ("queue_pushes", (self.queue.pushes as f64).into()),
+            ("queue_clamped", (self.queue.clamped as f64).into()),
         ])
     }
 }
@@ -100,6 +108,9 @@ impl BenchCellResult {
 #[derive(Clone, Debug)]
 pub struct BenchReport {
     pub quick: bool,
+    /// Queue implementation the matrix ran under (recorded in the JSON;
+    /// throughput numbers are only comparable within one kind).
+    pub queue: QueueKind,
     pub cells: Vec<BenchCellResult>,
 }
 
@@ -130,6 +141,7 @@ impl BenchReport {
         Value::obj(vec![
             ("date", date.into()),
             ("quick", self.quick.into()),
+            ("queue", self.queue.name().into()),
             ("schema_version", super::OUTPUT_SCHEMA_VERSION.into()),
             ("seed", format!("{BENCH_SEED}").into()),
             ("n_cells", self.cells.len().into()),
@@ -168,7 +180,7 @@ impl BenchReport {
 }
 
 /// Run one cell against a pre-generated trace.
-fn run_cell(sc: &BenchScenario, trace: &Trace, quick: bool) -> BenchCellResult {
+fn run_cell(sc: &BenchScenario, trace: &Trace, quick: bool, queue: QueueKind) -> BenchCellResult {
     let (n_prompt, n_token) = if quick { (1, 2) } else { (5, 17) };
     let cfg = ClusterConfig {
         n_prompt,
@@ -176,6 +188,7 @@ fn run_cell(sc: &BenchScenario, trace: &Trace, quick: bool) -> BenchCellResult {
         cores_per_cpu: sc.cores,
         policy: sc.policy.into(),
         seed: BENCH_SEED,
+        queue,
         ..ClusterConfig::default()
     };
     let result = Cluster::new(cfg).run(trace);
@@ -185,11 +198,12 @@ fn run_cell(sc: &BenchScenario, trace: &Trace, quick: bool) -> BenchCellResult {
         wall_s: result.wall_time_s,
         completed: result.completed_requests,
         sim_duration_s: result.duration_s,
+        queue: result.queue,
     }
 }
 
-/// Run the full pinned matrix sequentially.
-pub fn run(quick: bool) -> BenchReport {
+/// Run the full pinned matrix sequentially under `queue`.
+pub fn run(quick: bool, queue: QueueKind) -> BenchReport {
     // One trace per label, shared by every (cores, policy) cell of that
     // row — pinned workload, and trace synthesis stays out of the timings.
     // The xor decorrelates the trace RNG stream from the cluster's, like
@@ -204,10 +218,10 @@ pub fn run(quick: bool) -> BenchReport {
         })
         .generate();
         for sc in matrix(quick).into_iter().filter(|s| s.trace == label) {
-            cells.push(run_cell(&sc, &trace, quick));
+            cells.push(run_cell(&sc, &trace, quick, queue));
         }
     }
-    BenchReport { quick, cells }
+    BenchReport { quick, queue, cells }
 }
 
 /// `YYYY-MM-DD` (UTC) from a Unix timestamp — no chrono offline, so this
@@ -246,12 +260,13 @@ mod tests {
 
     #[test]
     fn quick_run_produces_wellformed_report() {
-        let report = run(true);
+        let report = run(true, QueueKind::default());
         assert_eq!(report.cells.len(), matrix(true).len());
         for c in &report.cells {
             assert!(c.events > 0, "{:?} processed no events", c.scenario);
             assert!(c.completed > 0);
             assert!(c.sim_duration_s > 0.0);
+            assert!(c.queue.pushes > 0 && c.queue.peak_len > 0);
         }
         assert!(report.events_per_s() > 0.0);
         let json = report.to_json("2026-01-01");
@@ -260,6 +275,31 @@ mod tests {
         assert_eq!(parsed.usize_or("n_cells", 0), report.cells.len());
         assert_eq!(parsed.usize_or("schema_version", 0), crate::experiments::OUTPUT_SCHEMA_VERSION);
         assert!(parsed.f64_or("events_per_s", 0.0) > 0.0);
+        assert_eq!(parsed.get("queue").and_then(Value::as_str), Some("calendar"));
+        let cells = match parsed.get("cells") {
+            Some(Value::Arr(cells)) => cells,
+            other => panic!("cells should be an array, got {other:?}"),
+        };
+        for c in cells {
+            assert!(c.usize_or("peak_queue_len", 0) > 0);
+            assert!(c.f64_or("queue_pushes", 0.0) > 0.0);
+            assert!(c.f64_or("queue_clamped", -1.0) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn queue_kinds_agree_on_event_counts_and_stats() {
+        // Wall times differ (that's the point of the bench); every
+        // seed-deterministic field must not.
+        let h = run(true, QueueKind::Heap);
+        let c = run(true, QueueKind::Calendar);
+        assert_eq!(h.cells.len(), c.cells.len());
+        for (a, b) in h.cells.iter().zip(c.cells.iter()) {
+            assert_eq!(a.events, b.events, "{:?}", a.scenario);
+            assert_eq!(a.completed, b.completed, "{:?}", a.scenario);
+            assert_eq!(a.sim_duration_s, b.sim_duration_s, "{:?}", a.scenario);
+            assert_eq!(a.queue, b.queue, "{:?}", a.scenario);
+        }
     }
 
     #[test]

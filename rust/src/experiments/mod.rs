@@ -45,14 +45,20 @@ pub mod sweep_stream;
 /// of `null`, and CSV string fields use RFC-4180 quoting when needed;
 /// **3** — adds the `orchestrate.json` shard-fleet manifest
 /// (`carbon-sim orchestrate`); the sweep report, spill, and bench
-/// schemas are unchanged from version 2.
-pub const OUTPUT_SCHEMA_VERSION: usize = 3;
+/// schemas are unchanged from version 2; **4** — bench JSON records the
+/// event-queue implementation (top-level `queue`) and per-cell queue
+/// counters (`peak_queue_len`, `queue_pushes`, `queue_clamped`); the
+/// sweep report, spill, and orchestrate schemas are unchanged from
+/// version 2/3 (the queue kind is an execution detail that never
+/// reaches them).
+pub const OUTPUT_SCHEMA_VERSION: usize = 4;
 
 /// Oldest `cells.jsonl` spill version `--resume` and `merge` still
 /// accept. The spill format is unchanged since version 2 (version 3
-/// only added the orchestrate manifest), so refusing v2 spills would
-/// orphan days of shard work over a label; version-1 spills really do
-/// differ (no embedded spec) and stay refused.
+/// only added the orchestrate manifest; version 4 only extended the
+/// bench JSON), so refusing v2/v3 spills would orphan days of shard
+/// work over a label; version-1 spills really do differ (no embedded
+/// spec) and stay refused.
 pub const MIN_SUPPORTED_SPILL_SCHEMA_VERSION: usize = 2;
 
 use crate::cluster::{Cluster, ClusterConfig};

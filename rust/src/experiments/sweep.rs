@@ -38,6 +38,7 @@ use std::path::Path;
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::metrics::SimResult;
 use crate::policy::ALL_POLICIES;
+use crate::sim::QueueKind;
 use crate::trace::azure::{AzureTraceGen, TraceParams, Workload};
 use crate::util::json::Value;
 use crate::util::pool;
@@ -338,7 +339,20 @@ impl SweepCellResult {
 const TRACE_SEED_XOR: u64 = 0x7AC3_5EED_0000_0001;
 
 /// Run one cell: synthesize its trace, build the cluster, simulate.
+/// Uses the default queue implementation; the queue kind is an
+/// execution detail and never part of the spec identity.
 pub fn run_cell(spec: &SweepSpec, cell: &SweepCell) -> SweepCellResult {
+    run_cell_with_queue(spec, cell, QueueKind::default())
+}
+
+/// [`run_cell`] under an explicit queue implementation (`--queue`).
+/// Reports are byte-identical for any choice — pinned by
+/// `tests/queue_sweep_identity.rs` and the CI heap-vs-calendar diff.
+pub fn run_cell_with_queue(
+    spec: &SweepSpec,
+    cell: &SweepCell,
+    queue: QueueKind,
+) -> SweepCellResult {
     let trace = AzureTraceGen::new(TraceParams {
         rate_rps: cell.rate,
         duration_s: spec.duration_s,
@@ -352,6 +366,7 @@ pub fn run_cell(spec: &SweepSpec, cell: &SweepCell) -> SweepCellResult {
         cores_per_cpu: cell.cores,
         policy: cell.policy.clone(),
         seed: cell.seed,
+        queue,
         ..ClusterConfig::default()
     };
     let result = Cluster::new(cfg).run(&trace);
@@ -366,11 +381,22 @@ pub struct SweepReport {
     pub cells: Vec<SweepCellResult>,
 }
 
-/// Run the full sweep on `threads` workers (0 = one per core).
+/// Run the full sweep on `threads` workers (0 = one per core) under the
+/// default queue implementation.
 pub fn run(spec: &SweepSpec, threads: usize) -> Result<SweepReport, String> {
+    run_with_queue(spec, threads, QueueKind::default())
+}
+
+/// [`run`] under an explicit queue implementation (`--queue`).
+pub fn run_with_queue(
+    spec: &SweepSpec,
+    threads: usize,
+    queue: QueueKind,
+) -> Result<SweepReport, String> {
     spec.validate()?;
     let cells = spec.cells();
-    let results = pool::run_indexed(cells.len(), threads, |i| run_cell(spec, &cells[i]));
+    let results =
+        pool::run_indexed(cells.len(), threads, |i| run_cell_with_queue(spec, &cells[i], queue));
     Ok(SweepReport { spec: spec.clone(), cells: results })
 }
 

@@ -39,10 +39,11 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
-use super::sweep::{run_cell, Format, ShardSpec, SweepSpec, CSV_COLUMNS};
+use super::sweep::{run_cell_with_queue, Format, ShardSpec, SweepSpec, CSV_COLUMNS};
 #[allow(unused_imports)] // rustdoc links
 use super::sweep::{SweepCellResult, SweepReport};
 use super::OUTPUT_SCHEMA_VERSION;
+use crate::sim::QueueKind;
 use crate::util::json::{parse, Value};
 use crate::util::pool;
 
@@ -324,6 +325,25 @@ pub fn run_streaming(
     resume: bool,
     verbose: bool,
 ) -> Result<StreamSummary, String> {
+    run_streaming_with(spec, threads, out_dir, shard, format, resume, verbose, QueueKind::default())
+}
+
+/// [`run_streaming`] under an explicit queue implementation
+/// (`--queue`). The choice touches nothing recorded on disk — not the
+/// spill header, not the rows, not the assembled report — so spills
+/// from different queue implementations mix freely under `--resume`
+/// and `merge`.
+#[allow(clippy::too_many_arguments)] // mirrors run_streaming + the kind
+pub fn run_streaming_with(
+    spec: &SweepSpec,
+    threads: usize,
+    out_dir: &Path,
+    shard: &ShardSpec,
+    format: Format,
+    resume: bool,
+    verbose: bool,
+    queue: QueueKind,
+) -> Result<StreamSummary, String> {
     spec.validate()?;
     fs::create_dir_all(out_dir).map_err(|e| format!("creating {out_dir:?}: {e}"))?;
     let cells_path = out_dir.join(CELLS_FILE);
@@ -352,7 +372,7 @@ pub fn run_streaming(
     pool::run_streamed(
         &pending,
         threads,
-        |i| run_cell(spec, &spec.cell(i)),
+        |i| run_cell_with_queue(spec, &spec.cell(i), queue),
         |_i, res| {
             // One write per row: an interrupt loses at most the
             // in-flight line, which the resume scan drops.

@@ -23,6 +23,7 @@ use carbon_sim::carbon::{EmbodiedModel, ServerPowerModel};
 use carbon_sim::cluster::{Cluster, ClusterConfig};
 use carbon_sim::cpu::{AgingParams, TemperatureModel};
 use carbon_sim::experiments::{self, sweep, sweep_stream, Scale};
+use carbon_sim::sim::QueueKind;
 use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
 use carbon_sim::util::cli::Cli;
 use carbon_sim::util::stats::Summary;
@@ -107,6 +108,7 @@ fn cmd_simulate(rest: &[String]) -> i32 {
         .opt("trace", "", "replay a JSONL trace file instead of synthesizing")
         .opt("config", "", "JSON cluster config file (see configs/; flags override)")
         .opt("seed", "", "RNG seed (default: 42)")
+        .opt("queue", "", "event-queue implementation: calendar | heap (default: calendar)")
         .flag("pjrt-aging", "cross-check final aging through the PJRT aging_step artifact");
     let a = parse_or_exit(&cli, rest);
 
@@ -148,12 +150,23 @@ fn cmd_simulate(rest: &[String]) -> i32 {
     // Flags override the config file, which overrides paper defaults.
     // (Empty-string CLI defaults fail to parse and fall through to `base`.)
     let policy_flag = a.str_or("policy", "");
+    let queue = match a.str_or("queue", "").as_str() {
+        "" => base.queue,
+        s => match QueueKind::parse(s) {
+            Ok(k) => k,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
     let cfg = ClusterConfig {
         n_prompt: a.usize_or("prompt-machines", base.n_prompt),
         n_token: a.usize_or("token-machines", base.n_token),
         cores_per_cpu: a.usize_or("cores", base.cores_per_cpu),
         policy: if policy_flag.is_empty() { base.policy.clone() } else { policy_flag },
         seed: a.u64_or("seed", base.seed),
+        queue,
         ..base
     };
     let mut cluster = Cluster::new(cfg);
@@ -253,6 +266,12 @@ fn cmd_sweep(rest: &[String]) -> i32 {
     .opt("token-machines", "17", "token (decode) machines per cell")
     .opt("seed", "42", "root seed; per-cell seeds derive from (seed, scenario index)")
     .opt("threads", "0", "worker threads (0 = one per available core)")
+    .opt(
+        "queue",
+        "calendar",
+        "event-queue implementation: calendar | heap (execution detail — reports are \
+         byte-identical either way, so it composes with --spec)",
+    )
     .opt("out", "", "write the aggregated report to this file (default: stdout table only)")
     .opt(
         "out-dir",
@@ -274,7 +293,7 @@ fn cmd_sweep(rest: &[String]) -> i32 {
     .flag("quiet", "suppress the stdout summary table");
     let a = parse_or_exit(&cli, rest);
 
-    let parsed = (|| -> Result<(sweep::SweepSpec, sweep::Format, usize), String> {
+    let parsed = (|| -> Result<(sweep::SweepSpec, sweep::Format, usize, QueueKind), String> {
         let spec_path = a.str_or("spec", "");
         let spec = if spec_path.is_empty() {
             sweep::SweepSpec {
@@ -316,9 +335,12 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         // sweep::run validates the spec; only the format needs checking here.
         let format = sweep::Format::parse(&a.str_or("format", "json"))?;
         let threads = a.parsed("threads")?;
-        Ok((spec, format, threads))
+        // Not an axis flag: the queue kind changes nothing in the report,
+        // so it composes with --spec (differential CI runs rely on this).
+        let queue = QueueKind::parse(&a.str_or("queue", "calendar"))?;
+        Ok((spec, format, threads, queue))
     })();
-    let (spec, format, threads) = match parsed {
+    let (spec, format, threads, queue) = match parsed {
         Ok(p) => p,
         Err(e) => {
             eprintln!("{e}");
@@ -353,7 +375,7 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         return 2;
     }
     if !out_dir.is_empty() {
-        let summary = match sweep_stream::run_streaming(
+        let summary = match sweep_stream::run_streaming_with(
             &spec,
             threads,
             Path::new(&out_dir),
@@ -361,6 +383,7 @@ fn cmd_sweep(rest: &[String]) -> i32 {
             format,
             a.flag("resume"),
             !a.flag("quiet"),
+            queue,
         ) {
             Ok(s) => s,
             Err(e) => {
@@ -389,7 +412,7 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         return 0;
     }
 
-    let report = match sweep::run(&spec, threads) {
+    let report = match sweep::run_with_queue(&spec, threads, queue) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("{e}");
@@ -588,12 +611,20 @@ fn cmd_bench(rest: &[String]) -> i32 {
          and record simulated events/sec",
     )
     .opt("out", "", "output JSON path (default: BENCH_<date>.json)")
+    .opt("queue", "calendar", "event-queue implementation under test: calendar | heap")
     .flag("quick", "CI-scale matrix: seconds-long traces, 1+2 machines")
     .flag("quiet", "suppress the stdout table");
     let a = parse_or_exit(&cli, rest);
 
     let quick = a.flag("quick");
-    let report = experiments::bench::run(quick);
+    let queue = match QueueKind::parse(&a.str_or("queue", "calendar")) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let report = experiments::bench::run(quick, queue);
     let date = experiments::bench::utc_date_string(
         std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)

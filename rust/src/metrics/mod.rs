@@ -86,6 +86,11 @@ pub struct SimResult {
     pub completed_requests: usize,
     pub events_processed: u64,
     pub wall_time_s: f64,
+    /// Event-queue counters (peak length, pushes, clamps). Identical
+    /// for either queue implementation; surfaced in the bench JSON but
+    /// kept out of [`SimResult::to_json_summary`] so sweep reports stay
+    /// a function of the spec alone.
+    pub queue: crate::sim::QueueStats,
 
     /// Per machine, per core: initial frequency (GHz).
     pub f0: Vec<Vec<f64>>,
@@ -186,6 +191,7 @@ mod tests {
             completed_requests: 0,
             events_processed: 0,
             wall_time_s: 0.0,
+            queue: crate::sim::QueueStats::default(),
             f0,
             freq,
             collector: Collector::new(1),

@@ -1,0 +1,650 @@
+//! Calendar-queue (two-level timing-wheel) scheduler: O(1) amortized
+//! push/pop for the DES hot loop.
+//!
+//! The [`super::EventQueue`] heap pays O(log n) float-comparison sift
+//! operations for every task spawn, decode iteration, and periodic
+//! tick. This module replaces it on the hot path with a classic
+//! calendar queue (Brown 1988): near-future events land in an array of
+//! time buckets sized to the observed event spacing, so push is a
+//! bucket-index computation plus (almost always) a `Vec` append, and
+//! pop walks a cursor across the wheel.
+//!
+//! # Structure
+//!
+//! - **Wheel.** `buckets[i]` covers the half-open interval
+//!   `[wheel_start + i·width, wheel_start + (i+1)·width)`. Each bucket
+//!   keeps its events sorted ascending by `(time, seq)`; because
+//!   sequence numbers increase globally, the common case inserts at the
+//!   tail in O(1). A `cursor` sweeps the wheel left to right and only
+//!   ever advances past *empty* buckets, so a new event whose computed
+//!   index falls behind the cursor (possible only for buckets the sweep
+//!   has already verified empty) is clamped forward to the cursor
+//!   bucket and sorted into place there.
+//! - **Backlog.** Events at or beyond the wheel's end spill to an
+//!   overflow `Vec` kept sorted *descending* by `(time, seq)` (earliest
+//!   at the back, so draining pops from the tail). When the wheel is
+//!   exhausted, it **rotates**: `wheel_start` jumps to the earliest
+//!   backlog event, the bucket width is re-derived from the observed
+//!   inter-pop gap (see below), and every backlog event inside the new
+//!   wheel span is re-homed into buckets.
+//! - **Tick train.** The fixed-period `Adjust`/`Sample` recurring
+//!   events live in two rearming slots ([`super::Scheduler::arm_periodic`])
+//!   merged into the pop order on demand — they never traverse the
+//!   wheel at all. Firing a slot rearms it one period ahead under a
+//!   fresh sequence number, exactly reproducing the event stream of the
+//!   handler-side re-push it replaces.
+//!
+//! # Bucket sizing
+//!
+//! The wheel starts at 64 buckets of 1 ms. Every pop feeds the gap to
+//! the previous pop into an exponential moving average (`α = 0.1`), and
+//! each rotation or resize re-derives `width = max(4·gap_ema, 1e-9)` —
+//! a bucket then holds ~4 events, keeping both the per-pop bucket scan
+//! and the per-push sort cost O(1) amortized. When the pending count
+//! exceeds 2× the bucket count, the wheel doubles and rebuilds (events
+//! keep their sequence numbers, so order is unaffected). All geometry
+//! inputs (gap EMA, counts) are pure functions of the push/pop stream,
+//! so the layout — and therefore every observable — is deterministic.
+//!
+//! # Determinism argument
+//!
+//! The contract is *strict global `(time, seq)` order*, bit-identical
+//! to the heap's. Within a bucket and within the backlog, order is
+//! explicit (sorted inserts). Across buckets it follows from monotone
+//! placement: the computed index `⌊(t − wheel_start)/width⌋` is
+//! monotone non-decreasing in `t` (subtraction and division by a
+//! positive width are correctly-rounded monotone operations; `floor`
+//! and the saturating f64→usize cast preserve monotonicity, as do the
+//! `min`/`max` clamps applied after). Hence `t < t′` can never place
+//! `t′` in an earlier bucket than `t`, and *exactly equal* times
+//! compute the *identical* index — same bucket — where the sorted
+//! insert restores FIFO by `seq`. Events re-homed by a rotation or
+//! rebuild are all re-placed under one geometry, so the same argument
+//! applies; events left in the backlog lie entirely beyond the new
+//! wheel, preserving order between the two levels. Push clamp/panic
+//! semantics ([`PAST_TOLERANCE_S`]) are shared verbatim with the heap.
+//! `tests/queue_differential.rs` pins all of this differentially, and
+//! `tests/queue_sweep_identity.rs` pins byte-identical sweep reports.
+
+use std::collections::VecDeque;
+
+use super::{QueueStats, Scheduler, TickTrain, PAST_TOLERANCE_S};
+
+/// Initial bucket count; doubles when occupancy exceeds 2× the count.
+const INITIAL_BUCKETS: usize = 64;
+/// Initial bucket width before any inter-pop gap has been observed.
+const INITIAL_WIDTH_S: f64 = 1e-3;
+/// Floor on the derived bucket width (degenerate all-same-time loads).
+const MIN_WIDTH_S: f64 = 1e-9;
+/// Target mean events per bucket: `width = TARGET_GAPS_PER_BUCKET · gap_ema`.
+const TARGET_GAPS_PER_BUCKET: f64 = 4.0;
+/// EMA smoothing for the observed inter-pop gap.
+const GAP_EMA_ALPHA: f64 = 0.1;
+
+/// A pending event: the same `(time, seq, payload)` triple the heap
+/// stores, kept in sorted bucket / backlog order instead.
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> Entry<E> {
+    #[inline]
+    fn key(&self) -> (f64, u64) {
+        (self.time, self.seq)
+    }
+}
+
+/// The calendar-queue event queue / simulation clock — the production
+/// implementation (see the module docs for the full contract).
+pub struct CalendarQueue<E> {
+    buckets: Vec<VecDeque<Entry<E>>>,
+    /// Absolute time of bucket 0's left edge.
+    wheel_start: f64,
+    /// Width of one bucket in seconds (> 0).
+    width: f64,
+    /// First bucket that may still hold events; only advances past
+    /// empty buckets.
+    cursor: usize,
+    /// Overflow beyond the wheel, sorted descending by `(time, seq)`.
+    backlog: Vec<Entry<E>>,
+    /// Pending entries across buckets and backlog (excludes the train).
+    items: usize,
+    /// EMA of the gap between consecutive pop timestamps.
+    gap_ema: f64,
+    train: TickTrain<E>,
+    seq: u64,
+    now: f64,
+    processed: u64,
+    stats: QueueStats,
+}
+
+impl<E> CalendarQueue<E> {
+    /// An empty queue with the clock at 0.
+    pub fn new() -> CalendarQueue<E> {
+        CalendarQueue {
+            buckets: (0..INITIAL_BUCKETS).map(|_| VecDeque::new()).collect(),
+            wheel_start: 0.0,
+            width: INITIAL_WIDTH_S,
+            cursor: 0,
+            backlog: Vec::new(),
+            items: 0,
+            gap_ema: INITIAL_WIDTH_S / TARGET_GAPS_PER_BUCKET,
+            train: TickTrain::new(),
+            seq: 0,
+            now: 0.0,
+            processed: 0,
+            stats: QueueStats::default(),
+        }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Total events processed so far (periodic firings included).
+    #[inline]
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending events plus armed periodic slots.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.items + self.train.armed()
+    }
+
+    /// True when nothing is pending and no slot is armed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of pushes whose time was clamped forward to `now` (always a
+    /// sub-[`PAST_TOLERANCE_S`] float round-off; larger skews panic).
+    #[inline]
+    pub fn clamped(&self) -> u64 {
+        self.stats.clamped
+    }
+
+    /// Counters shared by both implementations.
+    #[inline]
+    pub fn stats(&self) -> QueueStats {
+        self.stats
+    }
+
+    #[inline]
+    fn wheel_end(&self) -> f64 {
+        self.wheel_start + self.width * self.buckets.len() as f64
+    }
+
+    /// Width the next rotation/rebuild should use, from the gap EMA.
+    #[inline]
+    fn target_width(&self) -> f64 {
+        (self.gap_ema * TARGET_GAPS_PER_BUCKET).max(MIN_WIDTH_S)
+    }
+
+    /// Bucket index for `time`, clamped into `[cursor, len)`. Only
+    /// called with `cursor < buckets.len()` and `time < wheel_end`.
+    /// Monotone in `time` — the module-docs determinism argument.
+    #[inline]
+    fn bucket_index(&self, time: f64) -> usize {
+        // A past-wheel_start time (possible right after a rotation, see
+        // `insert`) yields a negative quotient: the f64→usize cast
+        // saturates to 0, which `max(cursor)` then fixes up.
+        let raw = ((time - self.wheel_start) / self.width) as usize;
+        raw.clamp(self.cursor, self.buckets.len() - 1)
+    }
+
+    /// Sorted-insert into one bucket. Sequence numbers grow globally,
+    /// so the overwhelmingly common case is an O(1) tail append.
+    fn bucket_insert(bucket: &mut VecDeque<Entry<E>>, e: Entry<E>) {
+        let tail_ok = match bucket.back() {
+            None => true,
+            Some(last) => last.key() < e.key(),
+        };
+        if tail_ok {
+            bucket.push_back(e);
+        } else {
+            let at = bucket.partition_point(|x| x.key() < e.key());
+            bucket.insert(at, e);
+        }
+    }
+
+    /// Route one entry to its bucket or to the backlog. Does not touch
+    /// `items` or the stats — callers account for those.
+    fn insert(&mut self, e: Entry<E>) {
+        // `cursor == buckets.len()` means the sweep exhausted the wheel
+        // (and any pending events sit in the backlog); park new events
+        // there too and let the next pop rotate a fresh wheel.
+        if e.time >= self.wheel_end() || self.cursor >= self.buckets.len() {
+            let at = self.backlog.partition_point(|x| x.key() > e.key());
+            self.backlog.insert(at, e);
+        } else {
+            let idx = self.bucket_index(e.time);
+            Self::bucket_insert(&mut self.buckets[idx], e);
+        }
+    }
+
+    /// Schedule `payload` at absolute time `at`; contract identical to
+    /// [`super::EventQueue::push`] (same clamp, same panics).
+    pub fn push(&mut self, at: f64, payload: E) -> f64 {
+        assert!(at.is_finite(), "scheduling a non-finite time: {at}");
+        assert!(
+            at >= self.now - PAST_TOLERANCE_S,
+            "scheduling into the past: {at} < {}",
+            self.now
+        );
+        let time = if at < self.now {
+            self.stats.clamped += 1;
+            self.now
+        } else {
+            at
+        };
+        let seq = self.seq;
+        self.seq += 1;
+        self.insert(Entry { time, seq, payload });
+        self.items += 1;
+        if self.items > 2 * self.buckets.len() {
+            self.rebuild(self.buckets.len() * 2);
+        }
+        self.stats.pushes += 1;
+        self.stats.peak_len = self.stats.peak_len.max(self.len());
+        time
+    }
+
+    /// Schedule `payload` `delay` seconds from now; contract identical
+    /// to [`super::EventQueue::push_in`].
+    pub fn push_in(&mut self, delay: f64, payload: E) -> f64 {
+        assert!(delay.is_finite(), "scheduling a non-finite delay: {delay}");
+        assert!(delay >= -PAST_TOLERANCE_S, "scheduling a negative delay: {delay}");
+        self.push(self.now + delay, payload)
+    }
+
+    /// Arm periodic slot `slot`; see [`Scheduler::arm_periodic`].
+    pub fn arm_periodic(&mut self, slot: usize, first: f64, period: f64, payload: E) {
+        assert!(first.is_finite(), "scheduling a non-finite time: {first}");
+        assert!(
+            first >= self.now - PAST_TOLERANCE_S,
+            "scheduling into the past: {first} < {}",
+            self.now
+        );
+        let time = if first < self.now {
+            self.stats.clamped += 1;
+            self.now
+        } else {
+            first
+        };
+        self.train.arm(slot, time, period, payload, self.seq);
+        self.seq += 1;
+        self.stats.peak_len = self.stats.peak_len.max(self.len());
+    }
+
+    /// Advance the cursor to the next non-empty bucket (rotating the
+    /// backlog into a fresh wheel as needed) and return the head's
+    /// `(time, seq)`; `None` when no events are pending anywhere.
+    fn wheel_peek(&mut self) -> Option<(f64, u64)> {
+        loop {
+            while self.cursor < self.buckets.len() {
+                if let Some(e) = self.buckets[self.cursor].front() {
+                    return Some(e.key());
+                }
+                self.cursor += 1;
+            }
+            if self.backlog.is_empty() {
+                return None;
+            }
+            self.rotate();
+        }
+    }
+
+    /// Re-anchor an exhausted wheel at the earliest backlog event,
+    /// re-derive the bucket width from the gap EMA, and re-home every
+    /// backlog event that fits the new wheel span. The earliest event
+    /// lands in bucket 0, so rotation always makes progress.
+    fn rotate(&mut self) {
+        self.width = self.target_width();
+        self.wheel_start = self.backlog.last().expect("rotate needs a backlog").time;
+        self.cursor = 0;
+        let wheel_end = self.wheel_end();
+        while let Some(e) = self.backlog.last() {
+            if e.time >= wheel_end {
+                break;
+            }
+            let e = self.backlog.pop().expect("peeked above");
+            let idx = self.bucket_index(e.time);
+            Self::bucket_insert(&mut self.buckets[idx], e);
+        }
+    }
+
+    /// Re-bucket everything under `n_buckets` buckets of the current
+    /// target width, anchored at `now`. Entries keep their sequence
+    /// numbers, so observable order is unchanged.
+    fn rebuild(&mut self, n_buckets: usize) {
+        let mut entries: Vec<Entry<E>> = Vec::with_capacity(self.items);
+        for b in &mut self.buckets {
+            entries.extend(b.drain(..));
+        }
+        entries.append(&mut self.backlog);
+        self.buckets = (0..n_buckets).map(|_| VecDeque::new()).collect();
+        self.width = self.target_width();
+        self.wheel_start = self.now;
+        self.cursor = 0;
+        for e in entries {
+            self.insert(e);
+        }
+    }
+
+    /// Fold the gap from the previous pop into the EMA (before `now`
+    /// advances to `t`).
+    #[inline]
+    fn observe_gap(&mut self, t: f64) {
+        let gap = (t - self.now).max(0.0);
+        self.gap_ema += GAP_EMA_ALPHA * (gap - self.gap_ema);
+    }
+
+    /// Peek at the next event time without advancing. The first
+    /// non-empty bucket at/after the cursor holds the wheel minimum
+    /// (monotone placement); any bucket event precedes every backlog
+    /// event.
+    pub fn peek_time(&self) -> Option<f64> {
+        let mut pending = None;
+        for b in self.buckets.iter().skip(self.cursor) {
+            if let Some(e) = b.front() {
+                pending = Some(e.time);
+                break;
+            }
+        }
+        if pending.is_none() {
+            pending = self.backlog.last().map(|e| e.time);
+        }
+        match (self.train.peek_time(), pending) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+}
+
+impl<E: Clone> CalendarQueue<E> {
+    /// Pop the next event — the global `(time, seq)` minimum across the
+    /// wheel, the backlog, and the armed periodic slots — advancing the
+    /// clock to its timestamp. A firing periodic slot is rearmed one
+    /// period ahead under a fresh sequence number, exactly as if its
+    /// handler had re-pushed it.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let wheel_key = self.wheel_peek();
+        if let Some((t, s, slot)) = self.train.peek() {
+            let train_first = match wheel_key {
+                None => true,
+                Some(wk) => (t, s) < wk,
+            };
+            if train_first {
+                debug_assert!(t >= self.now - PAST_TOLERANCE_S);
+                self.observe_gap(t);
+                self.now = t;
+                self.processed += 1;
+                let payload = self.train.fire(slot, self.seq);
+                self.seq += 1;
+                return Some((t, payload));
+            }
+        }
+        wheel_key?;
+        let e = self.buckets[self.cursor].pop_front().expect("wheel_peek found this");
+        self.items -= 1;
+        debug_assert!(e.time >= self.now - PAST_TOLERANCE_S);
+        self.observe_gap(e.time);
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.payload))
+    }
+}
+
+impl<E> Default for CalendarQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E: Clone> Scheduler<E> for CalendarQueue<E> {
+    fn push(&mut self, at: f64, payload: E) -> f64 {
+        CalendarQueue::push(self, at, payload)
+    }
+    fn push_in(&mut self, delay: f64, payload: E) -> f64 {
+        CalendarQueue::push_in(self, delay, payload)
+    }
+    fn arm_periodic(&mut self, slot: usize, first: f64, period: f64, payload: E) {
+        CalendarQueue::arm_periodic(self, slot, first, period, payload);
+    }
+    fn pop(&mut self) -> Option<(f64, E)> {
+        CalendarQueue::pop(self)
+    }
+    fn peek_time(&self) -> Option<f64> {
+        CalendarQueue::peek_time(self)
+    }
+    fn now(&self) -> f64 {
+        CalendarQueue::now(self)
+    }
+    fn processed(&self) -> u64 {
+        CalendarQueue::processed(self)
+    }
+    fn len(&self) -> usize {
+        CalendarQueue::len(self)
+    }
+    fn stats(&self) -> QueueStats {
+        CalendarQueue::stats(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::EventQueue;
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = CalendarQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn same_time_burst_is_fifo() {
+        let mut q = CalendarQueue::new();
+        for i in 0..1000 {
+            q.push(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_and_counters_advance() {
+        let mut q = CalendarQueue::new();
+        q.push(1.5, ());
+        q.push(4.0, ());
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.now(), 1.5);
+        q.push_in(1.0, ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 2.5);
+        q.pop();
+        assert_eq!(q.now(), 4.0);
+        assert_eq!(q.processed(), 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = CalendarQueue::new();
+        q.push(2.0, ());
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn push_returns_scheduled_time_and_counts_clamps() {
+        let mut q = CalendarQueue::new();
+        assert_eq!(q.push(2.0, ()), 2.0);
+        q.pop();
+        let t = q.push(2.0 - 1e-12, ());
+        assert_eq!(t, 2.0);
+        assert_eq!(q.clamped(), 1);
+        assert_eq!(q.push_in(1.5, ()), 3.5);
+        assert_eq!(q.stats().clamped, 1);
+        assert_eq!(q.stats().pushes, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling a negative delay")]
+    fn negative_delay_beyond_tolerance_panics() {
+        let mut q = CalendarQueue::new();
+        q.push(5.0, ());
+        q.pop();
+        q.push_in(-0.5, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_time_panics_in_all_profiles() {
+        let mut q = CalendarQueue::new();
+        q.push(5.0, ());
+        q.pop();
+        q.push(4.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn non_finite_time_panics() {
+        let mut q = CalendarQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn far_future_spills_to_backlog_and_rotates_in_order() {
+        // The initial wheel spans [0, 64 ms); everything beyond lives in
+        // the backlog until rotations pull it in.
+        let mut q = CalendarQueue::new();
+        let times = [500.0, 0.01, 250.0, 250.0, 1e6, 0.02, 3_000.0];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, i);
+        }
+        let mut sorted: Vec<(f64, usize)> = times.iter().copied().zip(0..times.len()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let got: Vec<(f64, usize)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(got, sorted);
+    }
+
+    #[test]
+    fn resize_preserves_order() {
+        // 500 pushes force several wheel doublings (threshold 2×buckets).
+        let mut q = CalendarQueue::new();
+        let mut expect = Vec::new();
+        for i in 0..500u32 {
+            // A deterministic scatter with exact duplicate times mixed in.
+            let t = f64::from(i * 37 % 101) * 0.25;
+            q.push(t, i);
+            expect.push((t, i));
+        }
+        expect.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        let got: Vec<(f64, u32)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn interleaved_push_pop_with_backlog_matches_heap() {
+        // A scripted interleaving that exercises rotation mid-stream and
+        // pushes landing behind the cursor, checked against the heap.
+        let mut cal = CalendarQueue::new();
+        let mut heap = EventQueue::new();
+        let script: &[(f64, u32)] =
+            &[(0.001, 0), (10.0, 1), (0.002, 2), (500.0, 3), (10.0, 4), (0.05, 5)];
+        for &(t, p) in script {
+            cal.push(t, p);
+            heap.push(t, p);
+        }
+        for _ in 0..3 {
+            assert_eq!(cal.pop(), heap.pop());
+        }
+        // Mid-stream pushes: one at exactly `now`, one near-future, one
+        // joining the 500.0 event in the backlog.
+        for &(dt, p) in &[(0.0, 6), (0.01, 7), (400.0, 8)] {
+            cal.push_in(dt, p);
+            heap.push_in(dt, p);
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_eq!(a, b);
+            assert_eq!(cal.now(), heap.now());
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(cal.stats(), heap.stats());
+    }
+
+    #[test]
+    fn tick_train_merges_with_wheel_events() {
+        let mut q = CalendarQueue::new();
+        q.arm_periodic(0, 1.0, 1.0, "tick");
+        q.push(1.0, "push@1");
+        q.push(2.5, "push@2.5");
+        let mut got = Vec::new();
+        for _ in 0..5 {
+            got.push(q.pop().unwrap());
+        }
+        assert_eq!(
+            got,
+            vec![
+                (1.0, "tick"),
+                (1.0, "push@1"),
+                (2.0, "tick"),
+                (2.5, "push@2.5"),
+                (3.0, "tick"),
+            ]
+        );
+        assert_eq!(q.len(), 1); // the slot stays armed
+    }
+
+    #[test]
+    fn property_matches_heap_on_random_schedules() {
+        crate::util::proptest::forall(150, 4242, |g| {
+            let n = g.size(1, 300);
+            let mut cal = CalendarQueue::new();
+            let mut heap = EventQueue::new();
+            for i in 0..n {
+                // Mix short-range, far-future, and quantized (collision-
+                // prone) times; interleave pops to move the clock.
+                let t = if g.bool() {
+                    (g.f64(0.0, 20.0) * 8.0).floor() / 8.0
+                } else {
+                    g.f64(0.0, 5_000.0)
+                };
+                let at = t.max(cal.now());
+                cal.push(at, i);
+                heap.push(at, i);
+                if g.bool() && cal.pop() != heap.pop() {
+                    return crate::util::proptest::check(false, format!("diverged at {i}"));
+                }
+            }
+            loop {
+                let (a, b) = (cal.pop(), heap.pop());
+                if a != b {
+                    let msg = format!("drain diverged: {a:?} vs {b:?}");
+                    return crate::util::proptest::check(false, msg);
+                }
+                if a.is_none() {
+                    break;
+                }
+            }
+            crate::util::proptest::check(cal.stats() == heap.stats(), "stats diverged")
+        });
+    }
+}

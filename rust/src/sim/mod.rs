@@ -1,13 +1,39 @@
 //! Deterministic discrete-event simulation engine.
 //!
-//! Our from-scratch equivalent of splitwise-sim's event core: a binary
-//! heap of `(time, seq)`-ordered events. The `seq` tiebreaker guarantees
-//! FIFO order among same-timestamp events, which makes every run exactly
-//! reproducible from a seed — a property every experiment in
-//! EXPERIMENTS.md relies on.
+//! Two interchangeable schedulers implement the same contract behind the
+//! [`Scheduler`] trait:
+//!
+//! - [`EventQueue`] — a `BinaryHeap` of `(time, seq)`-ordered events,
+//!   O(log n) per operation. Our from-scratch equivalent of
+//!   splitwise-sim's event core, retained as the differential-testing
+//!   reference: small, obviously correct, and pinned bit-for-bit
+//!   interchangeable with the calendar queue by
+//!   `tests/queue_differential.rs` and `tests/queue_sweep_identity.rs`.
+//! - [`CalendarQueue`] ([`calendar`]) — a two-level calendar /
+//!   timing-wheel queue with O(1) amortized push/pop, the production
+//!   default for the simulation hot loop.
+//!
+//! Both order events strictly by `(time, seq)`: the `seq` tiebreaker
+//! guarantees FIFO order among same-timestamp events, which makes every
+//! run exactly reproducible from a seed — a property every experiment in
+//! EXPERIMENTS.md relies on. Both also carry a two-slot periodic "tick
+//! train" ([`Scheduler::arm_periodic`]) for fixed-period recurring
+//! events (`Adjust` / `Sample`): a recurring event occupies one rearming
+//! slot merged into the pop order on demand instead of being re-pushed
+//! through the queue every 100/250 ms. Firing a slot rearms it one
+//! period ahead and consumes a sequence number exactly like the
+//! handler-side re-push it replaces, so event streams are unchanged.
+//!
+//! [`SchedulerImpl`] is the enum-dispatch wrapper [`crate::cluster::Cluster`]
+//! embeds; [`QueueKind`] selects the implementation
+//! (`--queue {heap,calendar}`, calendar default).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+pub mod calendar;
+
+pub use calendar::CalendarQueue;
 
 /// An event scheduled at a simulation time.
 struct Scheduled<E> {
@@ -41,21 +67,289 @@ impl<E> PartialOrd for Scheduled<E> {
 
 /// Scheduling a past time beyond this tolerance is a hard error; within
 /// it, the time is clamped to `now` (float round-off from accumulated
-/// `now + dt` arithmetic) and counted in [`EventQueue::clamped`].
+/// `now + dt` arithmetic) and counted in [`QueueStats::clamped`].
 pub const PAST_TOLERANCE_S: f64 = 1e-9;
 
-/// The event queue / simulation clock.
+/// Number of periodic tick-train slots every scheduler carries.
+pub const PERIODIC_SLOTS: usize = 2;
+
+/// Counters shared by both scheduler implementations, exported into the
+/// bench JSON (`peak_queue_len` / `queue_pushes` / `queue_clamped`).
+///
+/// The counts are a pure function of the logical operation stream, so a
+/// heap and a calendar run of the same simulation report identical
+/// stats (pinned by `tests/queue_differential.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// High-water mark of [`Scheduler::len`] (pending events plus armed
+    /// periodic slots), sampled after every push and arm.
+    pub peak_len: usize,
+    /// Total [`Scheduler::push`] / [`Scheduler::push_in`] calls.
+    /// Periodic rearms are not pushes: arming a slot counts nothing
+    /// here.
+    pub pushes: u64,
+    /// Pushes whose time was clamped forward to `now` (always a
+    /// sub-[`PAST_TOLERANCE_S`] float round-off; larger skews panic).
+    pub clamped: u64,
+}
+
+/// One armed periodic slot of a [`TickTrain`].
+struct TickSlot<E> {
+    time: f64,
+    seq: u64,
+    period: f64,
+    payload: E,
+}
+
+/// The two-slot periodic tick train shared by both scheduler
+/// implementations. A slot holds the next firing `(time, seq)` of a
+/// fixed-period recurring event; firing clones the payload, advances
+/// `time` by exactly one period (the same `now + period` float the old
+/// handler-side re-push computed), and takes a fresh sequence number
+/// from the owning queue's counter.
+struct TickTrain<E> {
+    slots: [Option<TickSlot<E>>; PERIODIC_SLOTS],
+}
+
+impl<E> TickTrain<E> {
+    fn new() -> TickTrain<E> {
+        TickTrain { slots: [None, None] }
+    }
+
+    /// Number of armed slots (counted into [`Scheduler::len`]).
+    fn armed(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn arm(&mut self, slot: usize, first: f64, period: f64, payload: E, seq: u64) {
+        assert!(slot < PERIODIC_SLOTS, "periodic slot {slot} out of range");
+        assert!(
+            period.is_finite() && period > 0.0,
+            "periodic slot needs a positive finite period, got {period}"
+        );
+        self.slots[slot] = Some(TickSlot { time: first, seq, period, payload });
+    }
+
+    /// The earliest armed `(time, seq)` and its slot index, if any.
+    fn peek(&self) -> Option<(f64, u64, usize)> {
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(s) = slot {
+                let better = match best {
+                    None => true,
+                    Some((t, q, _)) => (s.time, s.seq) < (t, q),
+                };
+                if better {
+                    best = Some((s.time, s.seq, i));
+                }
+            }
+        }
+        best
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        self.peek().map(|(t, _, _)| t)
+    }
+}
+
+impl<E: Clone> TickTrain<E> {
+    /// Fire `slot`: return its payload and rearm it one period ahead
+    /// under `new_seq`.
+    fn fire(&mut self, slot: usize, new_seq: u64) -> E {
+        let s = self.slots[slot].as_mut().expect("firing an unarmed periodic slot");
+        let payload = s.payload.clone();
+        s.time += s.period;
+        s.seq = new_seq;
+        payload
+    }
+}
+
+/// The common contract of both event-queue implementations. Everything
+/// downstream of [`crate::cluster::Cluster`] is generic over this, and
+/// `tests/queue_differential.rs` pins that both implementations produce
+/// identical `(time, seq, payload)` pop streams for identical operation
+/// streams.
+pub trait Scheduler<E: Clone> {
+    /// Schedule `payload` at absolute time `at` (must be ≥ now within
+    /// [`PAST_TOLERANCE_S`]); returns the time actually used.
+    fn push(&mut self, at: f64, payload: E) -> f64;
+    /// Schedule `payload` `delay` seconds from now; returns the absolute
+    /// time used.
+    fn push_in(&mut self, delay: f64, payload: E) -> f64;
+    /// Arm periodic slot `slot` (< [`PERIODIC_SLOTS`]) to fire first at
+    /// `first` and every `period` seconds after. Consumes one sequence
+    /// number, like the push it replaces; rearming an armed slot
+    /// replaces it.
+    fn arm_periodic(&mut self, slot: usize, first: f64, period: f64, payload: E);
+    /// Pop the globally earliest `(time, seq)` event — pending or armed
+    /// periodic — advancing the clock to its timestamp.
+    fn pop(&mut self) -> Option<(f64, E)>;
+    /// The next event time without advancing the clock.
+    fn peek_time(&self) -> Option<f64>;
+    /// Current simulation time (time of the last popped event).
+    fn now(&self) -> f64;
+    /// Total events processed so far (periodic firings included).
+    fn processed(&self) -> u64;
+    /// Pending events plus armed periodic slots.
+    fn len(&self) -> usize;
+    /// True when nothing is pending and no slot is armed.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Counters shared by both implementations.
+    fn stats(&self) -> QueueStats;
+}
+
+/// Selects the event-queue implementation (`--queue {heap,calendar}`).
+///
+/// An execution detail, deliberately excluded from sweep specs, spec
+/// hashes, and report JSON: reports are byte-identical under either
+/// implementation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueKind {
+    /// [`EventQueue`]: `BinaryHeap`, O(log n), differential reference.
+    Heap,
+    /// [`CalendarQueue`]: timing wheel, O(1) amortized, the default.
+    #[default]
+    Calendar,
+}
+
+impl QueueKind {
+    /// Parse a `--queue` / config-file value.
+    pub fn parse(s: &str) -> Result<QueueKind, String> {
+        match s {
+            "heap" => Ok(QueueKind::Heap),
+            "calendar" => Ok(QueueKind::Calendar),
+            other => Err(format!(
+                "unknown queue implementation '{other}' (expected 'calendar' or 'heap')"
+            )),
+        }
+    }
+
+    /// The canonical flag spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueKind::Heap => "heap",
+            QueueKind::Calendar => "calendar",
+        }
+    }
+}
+
+/// Enum-dispatch wrapper over the two implementations, so the hot loop
+/// stays statically dispatched (one match, no vtable) while callers pick
+/// the implementation at runtime via [`QueueKind`].
+pub enum SchedulerImpl<E> {
+    /// The binary-heap reference implementation.
+    Heap(EventQueue<E>),
+    /// The calendar-queue production implementation.
+    Calendar(CalendarQueue<E>),
+}
+
+impl<E: Clone> SchedulerImpl<E> {
+    /// An empty scheduler of the requested implementation.
+    pub fn new(kind: QueueKind) -> SchedulerImpl<E> {
+        match kind {
+            QueueKind::Heap => SchedulerImpl::Heap(EventQueue::new()),
+            QueueKind::Calendar => SchedulerImpl::Calendar(CalendarQueue::new()),
+        }
+    }
+
+    /// Which implementation this is.
+    pub fn kind(&self) -> QueueKind {
+        match self {
+            SchedulerImpl::Heap(_) => QueueKind::Heap,
+            SchedulerImpl::Calendar(_) => QueueKind::Calendar,
+        }
+    }
+}
+
+impl<E: Clone> Scheduler<E> for SchedulerImpl<E> {
+    fn push(&mut self, at: f64, payload: E) -> f64 {
+        match self {
+            SchedulerImpl::Heap(q) => q.push(at, payload),
+            SchedulerImpl::Calendar(q) => q.push(at, payload),
+        }
+    }
+
+    fn push_in(&mut self, delay: f64, payload: E) -> f64 {
+        match self {
+            SchedulerImpl::Heap(q) => q.push_in(delay, payload),
+            SchedulerImpl::Calendar(q) => q.push_in(delay, payload),
+        }
+    }
+
+    fn arm_periodic(&mut self, slot: usize, first: f64, period: f64, payload: E) {
+        match self {
+            SchedulerImpl::Heap(q) => q.arm_periodic(slot, first, period, payload),
+            SchedulerImpl::Calendar(q) => q.arm_periodic(slot, first, period, payload),
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, E)> {
+        match self {
+            SchedulerImpl::Heap(q) => q.pop(),
+            SchedulerImpl::Calendar(q) => q.pop(),
+        }
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        match self {
+            SchedulerImpl::Heap(q) => q.peek_time(),
+            SchedulerImpl::Calendar(q) => q.peek_time(),
+        }
+    }
+
+    fn now(&self) -> f64 {
+        match self {
+            SchedulerImpl::Heap(q) => q.now(),
+            SchedulerImpl::Calendar(q) => q.now(),
+        }
+    }
+
+    fn processed(&self) -> u64 {
+        match self {
+            SchedulerImpl::Heap(q) => q.processed(),
+            SchedulerImpl::Calendar(q) => q.processed(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            SchedulerImpl::Heap(q) => q.len(),
+            SchedulerImpl::Calendar(q) => q.len(),
+        }
+    }
+
+    fn stats(&self) -> QueueStats {
+        match self {
+            SchedulerImpl::Heap(q) => q.stats(),
+            SchedulerImpl::Calendar(q) => q.stats(),
+        }
+    }
+}
+
+/// The binary-heap event queue / simulation clock — the differential
+/// reference implementation (see the module docs).
 pub struct EventQueue<E> {
     heap: BinaryHeap<Scheduled<E>>,
+    train: TickTrain<E>,
     seq: u64,
     now: f64,
     processed: u64,
-    clamped: u64,
+    stats: QueueStats,
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue with the clock at 0.
     pub fn new() -> EventQueue<E> {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0, processed: 0, clamped: 0 }
+        EventQueue {
+            heap: BinaryHeap::new(),
+            train: TickTrain::new(),
+            seq: 0,
+            now: 0.0,
+            processed: 0,
+            stats: QueueStats::default(),
+        }
     }
 
     /// Current simulation time (time of the last popped event).
@@ -64,27 +358,35 @@ impl<E> EventQueue<E> {
         self.now
     }
 
-    /// Total events processed so far.
+    /// Total events processed so far (periodic firings included).
     #[inline]
     pub fn processed(&self) -> u64 {
         self.processed
     }
 
+    /// Pending events plus armed periodic slots.
     #[inline]
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() + self.train.armed()
     }
 
+    /// True when nothing is pending and no slot is armed.
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Number of pushes whose time was clamped forward to `now` (always a
     /// sub-[`PAST_TOLERANCE_S`] float round-off; larger skews panic).
     #[inline]
     pub fn clamped(&self) -> u64 {
-        self.clamped
+        self.stats.clamped
+    }
+
+    /// Counters shared by both implementations.
+    #[inline]
+    pub fn stats(&self) -> QueueStats {
+        self.stats
     }
 
     /// Schedule `payload` at absolute time `at` (must be ≥ now) and return
@@ -104,13 +406,15 @@ impl<E> EventQueue<E> {
             self.now
         );
         let time = if at < self.now {
-            self.clamped += 1;
+            self.stats.clamped += 1;
             self.now
         } else {
             at
         };
         self.heap.push(Scheduled { time, seq: self.seq, payload });
         self.seq += 1;
+        self.stats.pushes += 1;
+        self.stats.peak_len = self.stats.peak_len.max(self.len());
         time
     }
 
@@ -121,31 +425,105 @@ impl<E> EventQueue<E> {
     /// a delay below `-`[`PAST_TOLERANCE_S`] panics (it used to be clamped
     /// silently to zero, masking negative-duration bugs in callers), while
     /// sub-tolerance round-off is forgiven — clamped to `now` and counted
-    /// in [`EventQueue::clamped`].
+    /// in [`QueueStats::clamped`].
     pub fn push_in(&mut self, delay: f64, payload: E) -> f64 {
         assert!(delay.is_finite(), "scheduling a non-finite delay: {delay}");
         assert!(delay >= -PAST_TOLERANCE_S, "scheduling a negative delay: {delay}");
         self.push(self.now + delay, payload)
     }
 
-    /// Pop the next event, advancing the clock to its timestamp.
-    pub fn pop(&mut self) -> Option<(f64, E)> {
-        let ev = self.heap.pop()?;
-        debug_assert!(ev.time >= self.now - 1e-9);
-        self.now = ev.time;
-        self.processed += 1;
-        Some((ev.time, ev.payload))
+    /// Arm periodic slot `slot`; see [`Scheduler::arm_periodic`].
+    pub fn arm_periodic(&mut self, slot: usize, first: f64, period: f64, payload: E) {
+        assert!(first.is_finite(), "scheduling a non-finite time: {first}");
+        assert!(
+            first >= self.now - PAST_TOLERANCE_S,
+            "scheduling into the past: {first} < {}",
+            self.now
+        );
+        let time = if first < self.now {
+            self.stats.clamped += 1;
+            self.now
+        } else {
+            first
+        };
+        self.train.arm(slot, time, period, payload, self.seq);
+        self.seq += 1;
+        self.stats.peak_len = self.stats.peak_len.max(self.len());
     }
 
     /// Peek at the next event time without advancing.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time)
+        let heap = self.heap.peek().map(|e| e.time);
+        match (self.train.peek_time(), heap) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+}
+
+impl<E: Clone> EventQueue<E> {
+    /// Pop the next event — the global `(time, seq)` minimum across the
+    /// heap and the armed periodic slots — advancing the clock to its
+    /// timestamp. A firing periodic slot is rearmed one period ahead
+    /// under a fresh sequence number, exactly as if its handler had
+    /// re-pushed it.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let heap_key = self.heap.peek().map(|e| (e.time, e.seq));
+        if let Some((t, s, slot)) = self.train.peek() {
+            let train_first = match heap_key {
+                None => true,
+                Some(hk) => (t, s) < hk,
+            };
+            if train_first {
+                debug_assert!(t >= self.now - PAST_TOLERANCE_S);
+                self.now = t;
+                self.processed += 1;
+                let payload = self.train.fire(slot, self.seq);
+                self.seq += 1;
+                return Some((t, payload));
+            }
+        }
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now - PAST_TOLERANCE_S);
+        self.now = ev.time;
+        self.processed += 1;
+        Some((ev.time, ev.payload))
     }
 }
 
 impl<E> Default for EventQueue<E> {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl<E: Clone> Scheduler<E> for EventQueue<E> {
+    fn push(&mut self, at: f64, payload: E) -> f64 {
+        EventQueue::push(self, at, payload)
+    }
+    fn push_in(&mut self, delay: f64, payload: E) -> f64 {
+        EventQueue::push_in(self, delay, payload)
+    }
+    fn arm_periodic(&mut self, slot: usize, first: f64, period: f64, payload: E) {
+        EventQueue::arm_periodic(self, slot, first, period, payload);
+    }
+    fn pop(&mut self) -> Option<(f64, E)> {
+        EventQueue::pop(self)
+    }
+    fn peek_time(&self) -> Option<f64> {
+        EventQueue::peek_time(self)
+    }
+    fn now(&self) -> f64 {
+        EventQueue::now(self)
+    }
+    fn processed(&self) -> u64 {
+        EventQueue::processed(self)
+    }
+    fn len(&self) -> usize {
+        EventQueue::len(self)
+    }
+    fn stats(&self) -> QueueStats {
+        EventQueue::stats(self)
     }
 }
 
@@ -288,5 +666,103 @@ mod tests {
             }
             crate::util::proptest::check(true, "")
         });
+    }
+
+    #[test]
+    fn stats_track_pushes_peak_and_clamps() {
+        let mut q = EventQueue::new();
+        q.push(1.0, ());
+        q.push(2.0, ());
+        q.arm_periodic(0, 0.5, 0.5, ());
+        assert_eq!(q.len(), 3);
+        q.pop(); // slot fires at 0.5, rearms to 1.0 — len stays 3
+        q.pop(); // 1.0: the push wins (its seq predates the rearm's)
+        let s = q.stats();
+        // Arms are not pushes; peak saw pushes + the armed slot.
+        assert_eq!(s.pushes, 2);
+        assert_eq!(s.peak_len, 3);
+        assert_eq!(s.clamped, 0);
+    }
+
+    #[test]
+    fn tick_train_fires_in_time_and_seq_order() {
+        // Slot armed BEFORE a push at the same timestamp holds the lower
+        // seq and must fire first; rearming consumes a seq so a later
+        // same-time push still loses to the rearmed slot.
+        let mut q = EventQueue::new();
+        q.arm_periodic(0, 1.0, 1.0, "tick"); // seq 0
+        q.push(1.0, "push@1"); // seq 1
+        q.push(2.5, "push@2.5"); // seq 2
+        let mut got = Vec::new();
+        for _ in 0..5 {
+            let (t, e) = q.pop().unwrap();
+            got.push((t, e));
+        }
+        assert_eq!(
+            got,
+            vec![
+                (1.0, "tick"),
+                (1.0, "push@1"),
+                (2.0, "tick"),
+                (2.5, "push@2.5"),
+                (3.0, "tick"),
+            ]
+        );
+        assert_eq!(q.processed(), 5);
+        // The slot stays armed: the queue never runs dry on its own.
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn two_slots_merge_by_time() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.arm_periodic(0, 0.25, 0.25, "adjust");
+        q.arm_periodic(1, 0.1, 0.1, "sample");
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            let (t, e) = q.pop().unwrap();
+            got.push((t, e));
+        }
+        assert_eq!(
+            got,
+            vec![
+                (0.1, "sample"),
+                (0.2, "sample"),
+                (0.25, "adjust"),
+                (0.30000000000000004, "sample"),
+                (0.4, "sample"),
+                (0.5, "adjust"),
+            ]
+        );
+    }
+
+    #[test]
+    fn queue_kind_parses_and_round_trips() {
+        assert_eq!(QueueKind::parse("heap"), Ok(QueueKind::Heap));
+        assert_eq!(QueueKind::parse("calendar"), Ok(QueueKind::Calendar));
+        assert!(QueueKind::parse("frobnicate").is_err());
+        assert_eq!(QueueKind::default(), QueueKind::Calendar);
+        for k in [QueueKind::Heap, QueueKind::Calendar] {
+            assert_eq!(QueueKind::parse(k.name()), Ok(k));
+        }
+    }
+
+    #[test]
+    fn scheduler_impl_dispatches_to_the_selected_kind() {
+        for kind in [QueueKind::Heap, QueueKind::Calendar] {
+            let mut q: SchedulerImpl<u32> = SchedulerImpl::new(kind);
+            assert_eq!(q.kind(), kind);
+            assert!(q.is_empty());
+            q.push(1.0, 7);
+            q.arm_periodic(1, 0.5, 0.5, 99);
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.peek_time(), Some(0.5));
+            assert_eq!(q.pop(), Some((0.5, 99)));
+            assert_eq!(q.pop(), Some((1.0, 7)));
+            assert_eq!(q.now(), 1.0);
+            assert_eq!(q.processed(), 2);
+            assert_eq!(q.stats().pushes, 1);
+        }
     }
 }

@@ -457,6 +457,32 @@ fn sweep_rejects_bad_flags_with_exit_2() {
 }
 
 #[test]
+fn queue_flag_selects_and_rejects() {
+    // A valid --queue runs on every subcommand that takes it.
+    let (ok, text) = run(&[
+        "simulate", "--queue", "heap", "--rate", "3", "--duration", "3", "--cores", "8",
+        "--prompt-machines", "1", "--token-machines", "1",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("requests completed"), "{text}");
+    // A bad value exits 2 with the expected kinds named, everywhere.
+    for argv in [
+        vec!["simulate", "--queue", "fifo"],
+        vec!["sweep", "--queue", "fifo", "--rates", "4"],
+        vec!["bench", "--queue", "fifo", "--quick"],
+    ] {
+        let (ok, text) = run(&argv);
+        assert!(!ok, "expected failure for {argv:?}:\n{text}");
+        assert!(text.contains("calendar"), "{argv:?}: {text}");
+        assert!(text.contains("heap"), "{argv:?}: {text}");
+    }
+    // --queue is an execution detail, not an axis: it composes with --spec.
+    let spec = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/smoke.json");
+    let (ok, text) = run(&["sweep", "--spec", spec, "--queue", "heap", "--quiet"]);
+    assert!(ok, "{text}");
+}
+
+#[test]
 fn bench_quick_writes_wellformed_json() {
     let dir = std::env::temp_dir().join("carbon_sim_cli_bench");
     std::fs::create_dir_all(&dir).unwrap();

@@ -1,0 +1,46 @@
+//! Sweep-level byte-identity across queue implementations.
+//!
+//! The queue kind is an execution detail: it appears nowhere in the
+//! sweep spec, the spec hash, or the report JSON, and the simulation it
+//! drives is event-for-event identical (pinned by
+//! `tests/queue_differential.rs`). Therefore a sweep report rendered
+//! under `--queue heap` must be **byte-identical** to one rendered under
+//! `--queue calendar`, at any thread count — the same guarantee the
+//! engine already makes across thread counts, extended across
+//! schedulers. CI enforces the same property end-to-end with a `cmp` of
+//! two `carbon-sim sweep` runs.
+
+use carbon_sim::experiments::sweep::{self, Format, SweepSpec};
+use carbon_sim::sim::QueueKind;
+
+#[test]
+fn smoke_sweep_reports_are_byte_identical_across_queues_and_threads() {
+    let spec = SweepSpec { duration_s: 4.0, ..SweepSpec::smoke() };
+    let baseline = sweep::run_with_queue(&spec, 1, QueueKind::Heap)
+        .expect("heap sweep runs")
+        .render(Format::Json);
+    assert!(baseline.contains("\"cells\""), "report looks wrong:\n{baseline}");
+    for (threads, queue) in
+        [(1, QueueKind::Calendar), (4, QueueKind::Calendar), (4, QueueKind::Heap)]
+    {
+        let report = sweep::run_with_queue(&spec, threads, queue)
+            .expect("sweep runs")
+            .render(Format::Json);
+        assert_eq!(
+            baseline, report,
+            "report under {queue:?} @ {threads} thread(s) diverged from heap @ 1 thread"
+        );
+    }
+}
+
+#[test]
+fn csv_rendering_is_also_queue_invariant() {
+    let spec = SweepSpec { duration_s: 4.0, ..SweepSpec::smoke() };
+    let heap = sweep::run_with_queue(&spec, 2, QueueKind::Heap)
+        .expect("heap sweep runs")
+        .render(Format::Csv);
+    let cal = sweep::run_with_queue(&spec, 2, QueueKind::Calendar)
+        .expect("calendar sweep runs")
+        .render(Format::Csv);
+    assert_eq!(heap, cal);
+}
