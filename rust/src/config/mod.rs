@@ -12,6 +12,7 @@ use std::path::Path;
 
 use crate::cluster::ClusterConfig;
 use crate::cpu::{AgingParams, ProcVarParams};
+use crate::experiments::search::SearchConfig;
 use crate::experiments::sweep::SweepSpec;
 use crate::experiments::Scale;
 use crate::model::PerfModel;
@@ -198,20 +199,41 @@ const SWEEP_KEYS: &[&str] = &[
     "n_prompt",
     "n_token",
     "seed",
+    "search",
 ];
 
+const SEARCH_KEYS: &[&str] = &["confidence", "min_replicas", "max_replicas", "metric"];
+
 /// Load a [`SweepSpec`] from a JSON file (`carbon-sim sweep --spec`).
+/// Any `search` block is validated but dropped — plain sweep entry
+/// points share spec files with `sweep --search` without caring.
 pub fn sweep_from_file(path: &Path) -> Result<SweepSpec, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
-    let v = parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
-    sweep_from_value(&v).map_err(|e| format!("{path:?}: {e}"))
+    sweep_search_from_file(path).map(|(spec, _)| spec)
 }
 
-/// Build a [`SweepSpec`] from a parsed JSON object. Starts from the
-/// `"base"` preset (`"paper"`, the default, or `"smoke"`), overrides
-/// whichever axes the object sets, and validates the result. Unknown
-/// keys are rejected, and every error names the offending key.
+/// Load a [`SweepSpec`] plus its optional `search` block
+/// (`carbon-sim sweep --search --spec`).
+pub fn sweep_search_from_file(path: &Path) -> Result<(SweepSpec, Option<SearchConfig>), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+    let v = parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+    sweep_search_from_value(&v).map_err(|e| format!("{path:?}: {e}"))
+}
+
+/// Build a [`SweepSpec`] from a parsed JSON object, dropping any
+/// (still validated) `search` block.
 pub fn sweep_from_value(v: &Value) -> Result<SweepSpec, String> {
+    sweep_search_from_value(v).map(|(spec, _)| spec)
+}
+
+/// Build a [`SweepSpec`] and its optional [`SearchConfig`] from a parsed
+/// JSON object. Starts from the `"base"` preset (`"paper"`, the default,
+/// or `"smoke"`), overrides whichever axes the object sets, and
+/// validates the result. Unknown keys are rejected, and every error
+/// names the offending key. A `search` object configures
+/// `sweep --search` (defaults from [`SearchConfig::defaults_for`] for
+/// whatever it leaves unset); `None` means the spec has no search block
+/// and `--search` falls back to full defaults.
+pub fn sweep_search_from_value(v: &Value) -> Result<(SweepSpec, Option<SearchConfig>), String> {
     let obj = v.as_obj().ok_or("sweep spec must be a JSON object")?;
     for key in obj.keys() {
         if !SWEEP_KEYS.contains(&key.as_str()) {
@@ -262,7 +284,39 @@ pub fn sweep_from_value(v: &Value) -> Result<SweepSpec, String> {
         s.seed = u64_scalar(x, "seed")?;
     }
     s.validate()?;
-    Ok(s)
+    let search = match v.get("search") {
+        None => None,
+        Some(x) => Some(search_from_value(x, &s)?),
+    };
+    Ok((s, search))
+}
+
+/// Parse a spec's `search` block on top of [`SearchConfig::defaults_for`].
+fn search_from_value(v: &Value, spec: &SweepSpec) -> Result<SearchConfig, String> {
+    let obj = v.as_obj().ok_or("sweep spec key 'search' must be a JSON object")?;
+    for key in obj.keys() {
+        if !SEARCH_KEYS.contains(&key.as_str()) {
+            return Err(format!("unknown search key 'search.{key}' (known: {SEARCH_KEYS:?})"));
+        }
+    }
+    let mut cfg = SearchConfig::defaults_for(spec);
+    if let Some(x) = v.get("confidence") {
+        cfg.confidence = f64_scalar(x, "search.confidence")?;
+    }
+    if let Some(x) = v.get("min_replicas") {
+        cfg.min_replicas = usize_scalar(x, "search.min_replicas")?;
+    }
+    if let Some(x) = v.get("max_replicas") {
+        cfg.max_replicas = usize_scalar(x, "search.max_replicas")?;
+    }
+    if let Some(x) = v.get("metric") {
+        cfg.metric = x
+            .as_str()
+            .ok_or("sweep spec key 'search.metric' must be a string")?
+            .to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
 }
 
 // Typed extraction helpers whose errors name the offending key — unlike
@@ -488,6 +542,60 @@ mod tests {
     }
 
     #[test]
+    fn sweep_search_block_parses_with_defaults_and_overrides() {
+        // No block: spec parses, search is None.
+        let (_, search) = sweep_search_from_value(&parse(r#"{"base": "smoke"}"#).unwrap()).unwrap();
+        assert!(search.is_none());
+        // Empty block: full defaults for the spec.
+        let (spec, search) = sweep_search_from_value(
+            &parse(r#"{"base": "smoke", "replicas": 8, "search": {}}"#).unwrap(),
+        )
+        .unwrap();
+        let cfg = search.unwrap();
+        assert_eq!(cfg, SearchConfig::defaults_for(&spec));
+        assert_eq!(cfg.max_replicas, 8, "budget defaults to the spec's replicas");
+        // Overrides apply field by field.
+        let (_, search) = sweep_search_from_value(
+            &parse(
+                r#"{"base": "smoke", "replicas": 8,
+                    "search": {"confidence": 0.9, "min_replicas": 2,
+                               "max_replicas": 6, "metric": "e2e_p99_s"}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let cfg = search.unwrap();
+        assert_eq!(cfg.confidence, 0.9);
+        assert_eq!(cfg.min_replicas, 2);
+        assert_eq!(cfg.max_replicas, 6);
+        assert_eq!(cfg.metric, "e2e_p99_s");
+        // Plain sweep loaders accept — and drop — the block.
+        let spec = sweep_from_value(
+            &parse(r#"{"base": "smoke", "search": {"confidence": 0.9}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.spec_hash(), SweepSpec::smoke().spec_hash());
+    }
+
+    #[test]
+    fn sweep_search_block_errors_name_the_offending_key() {
+        for (bad, named) in [
+            (r#"{"search": 3}"#, "search"),
+            (r#"{"search": {"confidance": 0.9}}"#, "search.confidance"),
+            (r#"{"search": {"confidence": "high"}}"#, "search.confidence"),
+            (r#"{"search": {"confidence": 1.5}}"#, "confidence"),
+            (r#"{"search": {"min_replicas": 1}}"#, "min_replicas"),
+            (r#"{"search": {"min_replicas": 2.5}}"#, "search.min_replicas"),
+            (r#"{"search": {"max_replicas": 2}}"#, "max_replicas"),
+            (r#"{"search": {"metric": "policy"}}"#, "metric"),
+            (r#"{"search": {"metric": 7}}"#, "search.metric"),
+        ] {
+            let err = sweep_search_from_value(&parse(bad).unwrap()).unwrap_err();
+            assert!(err.contains(named), "error for {bad} should name '{named}': {err}");
+        }
+    }
+
+    #[test]
     fn sweep_file_errors_name_the_file() {
         let dir = std::env::temp_dir().join("carbon_sim_sweep_cfg_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -509,6 +617,23 @@ mod tests {
         assert!(stress.validate().is_ok());
         assert!(stress.workloads.contains(&Workload::Diurnal));
         assert!(stress.n_cells() > SweepSpec::paper().n_cells());
+        // The README's --search quickstart spec: smoke grid, replica
+        // budget forced high, a search block that settles early.
+        let (smoke_search, cfg) =
+            sweep_search_from_file(&specs.join("search_smoke.json")).unwrap();
+        let cfg = cfg.expect("examples/specs/search_smoke.json must carry a search block");
+        assert_eq!(
+            smoke_search.spec_hash(),
+            SweepSpec { replicas: 8, ..SweepSpec::smoke() }.spec_hash(),
+            "examples/specs/search_smoke.json drifted from the smoke preset at 8 replicas"
+        );
+        assert_eq!((cfg.confidence, cfg.min_replicas, cfg.max_replicas), (0.9, 3, 8));
+        assert!(cfg.validate().is_ok());
+        assert!(
+            cfg.grid(&smoke_search).n_cells() == smoke_search.n_cells(),
+            "the search budget must equal the spec's own replicas so the exhaustive \
+             comparison in CI is against the same grid"
+        );
     }
 
     #[test]

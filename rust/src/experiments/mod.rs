@@ -17,6 +17,10 @@
 //! distributed pipeline from one spec: it launches the N shard runs
 //! (local children or a `--launcher` template), tracks them in a
 //! retry/resume manifest, and invokes the merge on completion.
+//! [`search`] (`carbon-sim sweep --search`) is the adaptive alternative
+//! to exhausting a grid: successive-halving over the scenario axes that
+//! stops replicating scenarios whose policy ranking is statistically
+//! settled, spilling cells through the same `cells.jsonl` machinery.
 //! [`run_matrix`] itself runs its paired cells on the same pool, so
 //! `carbon-sim figure --fig 6|7|8` parallelizes too.
 
@@ -30,6 +34,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod merge;
 pub mod orchestrate;
+pub mod search;
 pub mod sweep;
 pub mod sweep_stream;
 
@@ -50,15 +55,20 @@ pub mod sweep_stream;
 /// counters (`peak_queue_len`, `queue_pushes`, `queue_clamped`); the
 /// sweep report, spill, and orchestrate schemas are unchanged from
 /// version 2/3 (the queue kind is an execution detail that never
-/// reaches them).
-pub const OUTPUT_SCHEMA_VERSION: usize = 4;
+/// reaches them); **5** — adds the `search.json` summary
+/// (`carbon-sim sweep --search`) and an optional `search` object in the
+/// `cells.jsonl` header recording the search configuration; the sweep
+/// report, plain spill, bench, and orchestrate schemas are unchanged
+/// from version 4.
+pub const OUTPUT_SCHEMA_VERSION: usize = 5;
 
 /// Oldest `cells.jsonl` spill version `--resume` and `merge` still
 /// accept. The spill format is unchanged since version 2 (version 3
 /// only added the orchestrate manifest; version 4 only extended the
-/// bench JSON), so refusing v2/v3 spills would orphan days of shard
-/// work over a label; version-1 spills really do differ (no embedded
-/// spec) and stay refused.
+/// bench JSON; version 5 only added an *optional* header field, which
+/// older rows simply lack), so refusing v2–v4 spills would orphan days
+/// of shard work over a label; version-1 spills really do differ (no
+/// embedded spec) and stay refused.
 pub const MIN_SUPPORTED_SPILL_SCHEMA_VERSION: usize = 2;
 
 use crate::cluster::{Cluster, ClusterConfig};

@@ -1,0 +1,724 @@
+//! Adaptive sweep search (`carbon-sim sweep --search`): successive
+//! halving over the scenario grid instead of exhausting it.
+//!
+//! An exhaustive sweep spends `replicas` seed replicas on every
+//! (workload, cores, rate) scenario, even though most scenarios separate
+//! the policies after two or three. The search runs the grid in
+//! **rungs**: every unresolved scenario gets its replica target doubled
+//! (min → 2·min → … → max), the missing cells of the rung are simulated
+//! on the shared [`pool::run_streamed`] worker pool, and after each rung
+//! a scenario is retired as soon as its policy ranking is statistically
+//! settled — so the replica budget concentrates on the scenarios where
+//! policies are genuinely close.
+//!
+//! **Why paired statistics work here:** every policy of a scenario runs
+//! on the same derived seed ([`super::sweep::cell_seed`] excludes the
+//! policy axis), i.e. the same trace and the same silicon sample. The
+//! per-replica metric difference between two policies is therefore a
+//! paired sample, and the common trace/silicon noise cancels — a
+//! [`PairedDiff`] per adjacent pair of the ranking (Student-t CI on the
+//! mean difference, exact sign test as the small-n fallback, exact ties
+//! short-circuited) decides settlement at the configured confidence.
+//!
+//! **Spill compatibility:** searched cells stream to the same
+//! `cells.jsonl` a plain streaming sweep writes — identical rows,
+//! identical header plus one extra `search` object recording the search
+//! configuration (ignored by every other reader). `--resume` picks an
+//! interrupted search up losslessly, and because the rung ladder is a
+//! pure function of the search config, a resumed search converges to a
+//! `search.json` byte-identical to an uninterrupted run. A finished or
+//! abandoned search directory can even be completed into a full
+//! exhaustive grid later by a plain `sweep --resume --out-dir` on the
+//! same spec.
+//!
+//! **Determinism:** metric values are keyed by cell index (never by
+//! completion order) and per-cell seeds derive from indices, so rung
+//! evaluations — and therefore `search.json` — are identical at any
+//! `--threads` value.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use super::sweep::{run_cell_with_queue, ShardSpec, SweepSpec};
+use super::sweep_stream::{self, CELLS_FILE};
+use super::OUTPUT_SCHEMA_VERSION;
+use crate::sim::QueueKind;
+use crate::trace::azure::Workload;
+use crate::util::json::{parse, Value};
+use crate::util::pool;
+use crate::util::stats::PairedDiff;
+
+/// Search summary file name inside `--out-dir`.
+pub const SEARCH_FILE: &str = "search.json";
+
+/// Cell metrics the search can race on — every key of
+/// [`crate::metrics::SimResult::to_json_summary`] that is a scalar
+/// measurement (identity fields like `policy` or `seed` make no sense
+/// as a ranking objective).
+pub const METRIC_KEYS: &[&str] = &[
+    "rate_achieved_rps",
+    "ttft_p50_s",
+    "ttft_p99_s",
+    "e2e_p50_s",
+    "e2e_p99_s",
+    "fred_mean_ghz",
+    "freq_cv_mean",
+    "oversub_fraction",
+    "idle_p50",
+];
+
+/// How the search races the grid (`search` block of a sweep spec, or
+/// [`SearchConfig::defaults_for`] when the block is absent).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchConfig {
+    /// Confidence level for settlement decisions, in (0, 1).
+    pub confidence: f64,
+    /// Replicas of the first rung — every scenario gets at least these.
+    pub min_replicas: usize,
+    /// Replica budget per scenario; the exhaustive grid this search is
+    /// racing against is the spec expanded at this replica count.
+    pub max_replicas: usize,
+    /// The cell metric whose per-scenario policy ranking is raced
+    /// (one of [`METRIC_KEYS`]).
+    pub metric: String,
+}
+
+impl SearchConfig {
+    /// Defaults: 95% confidence, first rung of 3 replicas, budget =
+    /// the spec's own `replicas` (floored to the minimum rung so the
+    /// ladder is well-formed even for a `replicas: 1` spec).
+    pub fn defaults_for(spec: &SweepSpec) -> SearchConfig {
+        SearchConfig {
+            confidence: 0.95,
+            min_replicas: 3,
+            max_replicas: spec.replicas.max(3),
+            metric: "fred_mean_ghz".to_string(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.confidence > 0.0 && self.confidence < 1.0) {
+            return Err(format!(
+                "search: confidence must be in (0, 1), got {}",
+                self.confidence
+            ));
+        }
+        if self.min_replicas < 2 {
+            return Err(format!(
+                "search: min_replicas must be ≥ 2 (paired tests need two samples), got {}",
+                self.min_replicas
+            ));
+        }
+        if self.max_replicas < self.min_replicas {
+            return Err(format!(
+                "search: max_replicas ({}) must be ≥ min_replicas ({})",
+                self.max_replicas, self.min_replicas
+            ));
+        }
+        if !METRIC_KEYS.contains(&self.metric.as_str()) {
+            return Err(format!(
+                "search: unknown metric '{}' (one of: {})",
+                self.metric,
+                METRIC_KEYS.join(", ")
+            ));
+        }
+        Ok(())
+    }
+
+    /// Canonical JSON — the `search` object of the spill header and of
+    /// `search.json`. Also the identity a `--resume` verifies: resuming
+    /// a search spill under a different search configuration would
+    /// replay a different rung ladder and must be refused.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("confidence", self.confidence.into()),
+            ("max_replicas", self.max_replicas.into()),
+            ("metric", self.metric.as_str().into()),
+            ("min_replicas", self.min_replicas.into()),
+        ])
+    }
+
+    /// The grid the search races over — the base spec expanded at the
+    /// full per-scenario replica budget. Its hash is the spill identity,
+    /// so a plain `sweep --resume` on the same directory completes this
+    /// exact grid.
+    pub fn grid(&self, base: &SweepSpec) -> SweepSpec {
+        SweepSpec { replicas: self.max_replicas, ..base.clone() }
+    }
+}
+
+/// What a search run did (the CLI's summary line comes from this; the
+/// durable record is `search.json`).
+#[derive(Clone, Debug)]
+pub struct SearchSummary {
+    /// Base scenarios raced (grid scenarios / max_replicas).
+    pub n_scenarios: usize,
+    /// Scenarios whose ranking settled before the budget ran out.
+    pub n_settled: usize,
+    /// Cells simulated by this invocation.
+    pub n_run: usize,
+    /// Cells recovered from an existing spill (`--resume`).
+    pub n_resumed: usize,
+    /// Total cells on disk = the budget actually spent.
+    pub n_cells_spent: usize,
+    /// The exhaustive grid's cell count the spend compares against.
+    pub n_cells_exhaustive: usize,
+    pub cells_path: PathBuf,
+    pub search_path: PathBuf,
+}
+
+/// One policy's pooled standing in a ranking.
+struct RankEntry {
+    policy: usize,
+    mean: f64,
+    n: u64,
+}
+
+/// Paired comparison of two ranking-adjacent policies.
+struct PairEval {
+    /// Policy with the lower metric mean (ties broken by spec order).
+    lo: usize,
+    /// Policy with the higher metric mean.
+    hi: usize,
+    diff: PairedDiff,
+    resolved: bool,
+}
+
+/// A scenario's (or the pooled grid's) ranking evaluation.
+struct Eval {
+    ranking: Vec<RankEntry>,
+    pairs: Vec<PairEval>,
+    /// Every adjacent pair resolved (decisively separated or an exact
+    /// tie) — replication of this scenario can stop.
+    settled: bool,
+    /// Replicas with every policy's cell recorded (resumed or run).
+    replicas_done: usize,
+}
+
+/// Evaluate one scenario's ranking from its metric slice `m`, laid out
+/// `m[k * n_policies + p]` for replicas `k = 0..m.len()/n_policies`.
+/// `None` is a cell not yet simulated; non-finite metric values exclude
+/// the whole replica from the statistics (pairing must stay balanced)
+/// but still count as done.
+fn evaluate(m: &[Option<f64>], n_policies: usize, confidence: f64) -> Eval {
+    let n_reps = m.len() / n_policies;
+    let done = |k: usize| (0..n_policies).all(|p| m[k * n_policies + p].is_some());
+    let finite =
+        |k: usize| (0..n_policies).all(|p| m[k * n_policies + p].is_some_and(f64::is_finite));
+    let replicas_done = (0..n_reps).filter(|&k| done(k)).count();
+    let usable: Vec<usize> = (0..n_reps).filter(|&k| finite(k)).collect();
+
+    let mut ranking: Vec<RankEntry> = (0..n_policies)
+        .map(|p| {
+            let mut w = crate::util::stats::Welford::default();
+            for &k in &usable {
+                w.add(m[k * n_policies + p].unwrap());
+            }
+            let mean = if w.count() > 0 { w.mean() } else { f64::NAN };
+            RankEntry { policy: p, mean, n: w.count() }
+        })
+        .collect();
+    // total_cmp gives NaN a fixed sort position, and the spec-order
+    // tie-break keeps the ranking deterministic under exact ties.
+    ranking.sort_by(|a, b| a.mean.total_cmp(&b.mean).then(a.policy.cmp(&b.policy)));
+
+    let mut settled = true;
+    let mut pairs = Vec::with_capacity(n_policies.saturating_sub(1));
+    for w in ranking.windows(2) {
+        let (lo, hi) = (w[0].policy, w[1].policy);
+        let mut diff = PairedDiff::default();
+        for &k in &usable {
+            diff.add(m[k * n_policies + hi].unwrap() - m[k * n_policies + lo].unwrap());
+        }
+        let resolved = diff.decisive(confidence) || diff.all_ties();
+        if !resolved {
+            settled = false;
+        }
+        pairs.push(PairEval { lo, hi, diff, resolved });
+    }
+    Eval { ranking, pairs, settled, replicas_done }
+}
+
+/// Decompose a base-scenario index (grid scenario / max_replicas) into
+/// its axis coordinates — the same nesting as [`SweepSpec::cell`] with
+/// the replica digit stripped.
+fn base_coords(spec: &SweepSpec, b: usize) -> (Workload, usize, f64) {
+    let mut s = b;
+    let rate = spec.rates[s % spec.rates.len()];
+    s /= spec.rates.len();
+    let cores = spec.core_counts[s % spec.core_counts.len()];
+    s /= spec.core_counts.len();
+    (spec.workloads[s], cores, rate)
+}
+
+/// The extended spill header (compact, no trailing newline): the plain
+/// unsharded sweep header plus a `search` object. Every non-search
+/// reader ignores the extra key.
+fn search_header_line(spec: &SweepSpec, cfg: &SearchConfig) -> String {
+    let mut v = sweep_stream::header_value(spec, &ShardSpec::full());
+    match &mut v {
+        Value::Obj(o) => {
+            o.insert("search".to_string(), cfg.to_json());
+        }
+        _ => unreachable!("header_value returns an object"),
+    }
+    v.to_string_compact()
+}
+
+/// Read the spill's first line; `Ok(None)` when the file is empty or the
+/// header never landed (treat as a fresh spill, exactly like
+/// [`sweep_stream::scan_and_compact`] would).
+fn read_header_line(path: &Path) -> Result<Option<Vec<u8>>, String> {
+    let file = File::open(path).map_err(|e| format!("opening {path:?}: {e}"))?;
+    let mut r = BufReader::new(file);
+    let mut buf = Vec::new();
+    let (len, complete) = sweep_stream::read_line(&mut r, &mut buf)?;
+    if len == 0 || !complete {
+        return Ok(None);
+    }
+    Ok(Some(buf))
+}
+
+/// Verify a resumed spill was written by a search with this exact
+/// configuration. Grid identity (spec hash, cell count, shard) is
+/// checked separately by the compaction scan; this guards the rung
+/// ladder itself.
+fn check_search_header(line: &[u8], cfg: &SearchConfig, path: &Path) -> Result<(), String> {
+    let text = std::str::from_utf8(line).map_err(|_| format!("{path:?}: header is not UTF-8"))?;
+    let v = parse(text.trim_end())
+        .map_err(|e| format!("{path:?}: header is not a JSON object: {e}"))?;
+    match v.get("search") {
+        None => Err(format!(
+            "{path:?}: spill has no search configuration — it was written by a plain \
+             sweep; resume it with `sweep --resume` (no --search) or use a fresh --out-dir"
+        )),
+        Some(rec) if *rec == cfg.to_json() => Ok(()),
+        Some(rec) => Err(format!(
+            "{path:?}: spill records search configuration {}, this run expects {} — \
+             a different configuration replays a different rung ladder; use a fresh --out-dir",
+            rec.to_string_compact(),
+            cfg.to_json().to_string_compact()
+        )),
+    }
+}
+
+/// Load the per-cell metric values a compacted spill already records.
+/// Every row counts as done; a missing or non-numeric metric field
+/// becomes NaN (done, but excluded from the statistics).
+fn load_metrics(path: &Path, n: usize, metric: &str) -> Result<Vec<Option<f64>>, String> {
+    let mut metrics: Vec<Option<f64>> = vec![None; n];
+    let file = File::open(path).map_err(|e| format!("opening {path:?}: {e}"))?;
+    let mut r = BufReader::new(file);
+    let mut buf = Vec::new();
+    let (len, complete) = sweep_stream::read_line(&mut r, &mut buf)?;
+    if len == 0 || !complete {
+        return Ok(metrics);
+    }
+    loop {
+        let (len, complete) = sweep_stream::read_line(&mut r, &mut buf)?;
+        if len == 0 || !complete {
+            break;
+        }
+        let Some(idx) = sweep_stream::row_index(&buf, n) else {
+            break; // corrupt tail: resume compaction would drop it too
+        };
+        if metrics[idx].is_some() {
+            continue; // first copy wins, like the compaction scan
+        }
+        let text = std::str::from_utf8(&buf)
+            .map_err(|_| format!("{path:?}: spill row is not UTF-8"))?;
+        let row = parse(text.trim_end()).map_err(|e| format!("{path:?}: spill row: {e}"))?;
+        metrics[idx] = Some(row.get(metric).and_then(Value::as_f64).unwrap_or(f64::NAN));
+    }
+    Ok(metrics)
+}
+
+fn rank_json(spec: &SweepSpec, e: &Eval) -> Value {
+    Value::Arr(
+        e.ranking
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("mean", r.mean.into()),
+                    ("n", (r.n as usize).into()),
+                    ("policy", spec.policies[r.policy].as_str().into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn pairs_json(spec: &SweepSpec, e: &Eval, confidence: f64) -> Value {
+    Value::Arr(
+        e.pairs
+            .iter()
+            .map(|p| {
+                let d = &p.diff;
+                let mean_diff = if d.n() > 0 { d.mean() } else { f64::NAN };
+                Value::obj(vec![
+                    ("ci_half_width", d.ci_half_width(confidence).unwrap_or(f64::NAN).into()),
+                    ("mean_diff", mean_diff.into()),
+                    ("n", (d.n() as usize).into()),
+                    ("policy_hi", spec.policies[p.hi].as_str().into()),
+                    ("policy_lo", spec.policies[p.lo].as_str().into()),
+                    ("resolved", p.resolved.into()),
+                    ("sign_test_p", d.sign_test_p().into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Race the grid. `base` is the spec as configured (its `replicas` value
+/// seeds [`SearchConfig::defaults_for`] but the grid actually raced is
+/// [`SearchConfig::grid`]); cells stream to `<out_dir>/cells.jsonl` and
+/// the verdicts to `<out_dir>/search.json`.
+#[allow(clippy::too_many_arguments)] // mirrors run_streaming_with
+pub fn run_search(
+    base: &SweepSpec,
+    cfg: &SearchConfig,
+    threads: usize,
+    out_dir: &Path,
+    resume: bool,
+    verbose: bool,
+    queue: QueueKind,
+) -> Result<SearchSummary, String> {
+    cfg.validate()?;
+    let spec = cfg.grid(base);
+    spec.validate()?;
+    fs::create_dir_all(out_dir).map_err(|e| format!("creating {out_dir:?}: {e}"))?;
+    let cells_path = out_dir.join(CELLS_FILE);
+    let search_path = out_dir.join(SEARCH_FILE);
+
+    let n = spec.n_cells();
+    let n_policies = spec.policies.len();
+    let n_bases = spec.n_scenarios() / cfg.max_replicas;
+    let scen_stride = cfg.max_replicas * n_policies;
+
+    // Fresh spill, or lossless resume of an interrupted search. The
+    // compaction scan copies the original header line verbatim, so the
+    // `search` extension survives it.
+    let fresh_header = || -> Result<(), String> {
+        let mut line = search_header_line(&spec, cfg);
+        line.push('\n');
+        fs::write(&cells_path, line).map_err(|e| format!("writing {cells_path:?}: {e}"))
+    };
+    let mut metrics: Vec<Option<f64>> = if resume && cells_path.exists() {
+        match read_header_line(&cells_path)? {
+            None => {
+                // Killed before the header landed: no rows can follow.
+                fresh_header()?;
+                vec![None; n]
+            }
+            Some(line) => {
+                check_search_header(&line, cfg, &cells_path)?;
+                sweep_stream::scan_and_compact(&cells_path, &spec, &ShardSpec::full())?;
+                load_metrics(&cells_path, n, &cfg.metric)?
+            }
+        }
+    } else {
+        fresh_header()?;
+        vec![None; n]
+    };
+    let n_resumed = metrics.iter().filter(|m| m.is_some()).count();
+
+    let mut spill = OpenOptions::new()
+        .append(true)
+        .open(&cells_path)
+        .map_err(|e| format!("opening {cells_path:?}: {e}"))?;
+
+    // The rung ladder: each unresolved scenario's replica target doubles
+    // per round, capped at the budget. The ladder is a pure function of
+    // the config and each rung's verdict a pure function of the metric
+    // matrix, so an interrupted search replays to the same verdicts.
+    let mut target = vec![cfg.min_replicas; n_bases];
+    let mut resolved = vec![false; n_bases];
+    let mut settled = vec![false; n_bases];
+    let mut n_run = 0usize;
+    let mut io_err: Option<String> = None;
+    while !resolved.iter().all(|&r| r) {
+        let pending: Vec<usize> = (0..n_bases)
+            .filter(|&b| !resolved[b])
+            .flat_map(|b| {
+                let lo = b * scen_stride;
+                (lo..lo + target[b] * n_policies).filter(|&i| metrics[i].is_none())
+            })
+            .collect();
+        if !pending.is_empty() {
+            pool::run_streamed(
+                &pending,
+                threads,
+                |i| run_cell_with_queue(&spec, &spec.cell(i), queue),
+                |i, res| {
+                    let record = res.to_json();
+                    let mut line = record.to_string_compact();
+                    line.push('\n');
+                    if let Err(e) = spill.write_all(line.as_bytes()) {
+                        io_err = Some(format!("appending to {cells_path:?}: {e}"));
+                        return false;
+                    }
+                    metrics[i] =
+                        Some(record.get(&cfg.metric).and_then(Value::as_f64).unwrap_or(f64::NAN));
+                    n_run += 1;
+                    if verbose {
+                        let c = &res.cell;
+                        println!(
+                            "[{} run] scenario {:>3} {:<12} {:>4}c {:>6.1} rps rep {} {:<12}",
+                            n_run,
+                            c.scenario,
+                            c.workload.name(),
+                            c.cores,
+                            c.rate,
+                            c.replica,
+                            c.policy
+                        );
+                    }
+                    true
+                },
+            );
+            if let Some(e) = io_err.take() {
+                return Err(e);
+            }
+        }
+        for b in 0..n_bases {
+            if resolved[b] {
+                continue;
+            }
+            let lo = b * scen_stride;
+            let e = evaluate(&metrics[lo..lo + target[b] * n_policies], n_policies, cfg.confidence);
+            if e.settled {
+                resolved[b] = true;
+                settled[b] = true;
+            } else if target[b] >= cfg.max_replicas {
+                resolved[b] = true; // budget exhausted, still contested
+            } else {
+                target[b] = (target[b] * 2).min(cfg.max_replicas);
+            }
+        }
+    }
+    drop(spill);
+
+    // Verdicts. Per-scenario evaluations re-run over each scenario's
+    // final replica window; the grid-level ranking pools every usable
+    // replica of every scenario (the full matrix has exactly the
+    // required `[k][p]` layout when read scenario-by-scenario).
+    let n_cells_spent = metrics.iter().filter(|m| m.is_some()).count();
+    let mut scenarios = Vec::with_capacity(n_bases);
+    for b in 0..n_bases {
+        let lo = b * scen_stride;
+        let e = evaluate(&metrics[lo..lo + target[b] * n_policies], n_policies, cfg.confidence);
+        let (workload, cores, rate) = base_coords(&spec, b);
+        scenarios.push(Value::obj(vec![
+            ("cores", cores.into()),
+            ("pairs", pairs_json(&spec, &e, cfg.confidence)),
+            ("ranking", rank_json(&spec, &e)),
+            ("rate_rps", rate.into()),
+            ("replicas_budget", cfg.max_replicas.into()),
+            ("replicas_run", e.replicas_done.into()),
+            ("scenario", b.into()),
+            ("settled", settled[b].into()),
+            ("workload", workload.name().into()),
+        ]));
+    }
+    let pooled = evaluate(&metrics, n_policies, cfg.confidence);
+    let n_settled = settled.iter().filter(|&&s| s).count();
+
+    let doc = Value::obj(vec![
+        ("confidence", cfg.confidence.into()),
+        ("kind", "sweep-search".into()),
+        ("max_replicas", cfg.max_replicas.into()),
+        ("metric", cfg.metric.as_str().into()),
+        ("min_replicas", cfg.min_replicas.into()),
+        ("n_cells_exhaustive", n.into()),
+        ("n_cells_run", n_cells_spent.into()),
+        ("n_scenarios", n_bases.into()),
+        ("n_settled", n_settled.into()),
+        ("pairs", pairs_json(&spec, &pooled, cfg.confidence)),
+        ("ranking", rank_json(&spec, &pooled)),
+        ("scenarios", Value::Arr(scenarios)),
+        ("schema_version", OUTPUT_SCHEMA_VERSION.into()),
+        ("spec", spec.to_json()),
+        ("spec_hash", spec.spec_hash().as_str().into()),
+    ]);
+    let mut rendered = doc.to_string_pretty();
+    rendered.push('\n');
+    fs::write(&search_path, rendered).map_err(|e| format!("writing {search_path:?}: {e}"))?;
+
+    Ok(SearchSummary {
+        n_scenarios: n_bases,
+        n_settled,
+        n_run,
+        n_resumed,
+        n_cells_spent,
+        n_cells_exhaustive: n,
+        cells_path,
+        search_path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec2() -> SweepSpec {
+        SweepSpec {
+            rates: vec![4.0, 8.0],
+            core_counts: vec![8, 16],
+            policies: vec!["linux".into(), "proposed".into()],
+            workloads: vec![Workload::Mixed],
+            replicas: 1,
+            duration_s: 3.0,
+            n_prompt: 1,
+            n_token: 1,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn defaults_are_valid_and_floor_the_budget() {
+        let spec = spec2();
+        let cfg = SearchConfig::defaults_for(&spec);
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.max_replicas, 3, "replicas: 1 spec floors the budget to min");
+        let mut spec8 = spec2();
+        spec8.replicas = 8;
+        assert_eq!(SearchConfig::defaults_for(&spec8).max_replicas, 8);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let base = SearchConfig::defaults_for(&spec2());
+        let mut c = base.clone();
+        c.confidence = 1.0;
+        assert!(c.validate().is_err());
+        c.confidence = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.min_replicas = 1;
+        assert!(c.validate().unwrap_err().contains("min_replicas"));
+        let mut c = base.clone();
+        c.max_replicas = 2;
+        assert!(c.validate().unwrap_err().contains("max_replicas"));
+        let mut c = base.clone();
+        c.metric = "policy".into();
+        assert!(c.validate().unwrap_err().contains("unknown metric"));
+        c.metric = "ttft_p99_s".into();
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn grid_swaps_only_the_replica_count() {
+        let base = spec2();
+        let mut cfg = SearchConfig::defaults_for(&base);
+        cfg.max_replicas = 5;
+        let grid = cfg.grid(&base);
+        assert_eq!(grid.replicas, 5);
+        assert_eq!(grid.rates, base.rates);
+        assert_eq!(grid.seed, base.seed);
+        assert_ne!(grid.spec_hash(), base.spec_hash());
+    }
+
+    #[test]
+    fn base_coords_match_cell_decomposition() {
+        let mut spec = spec2();
+        spec.replicas = 3;
+        let n_bases = spec.n_scenarios() / spec.replicas;
+        assert_eq!(n_bases, 4);
+        for b in 0..n_bases {
+            let (workload, cores, rate) = base_coords(&spec, b);
+            for k in 0..spec.replicas {
+                // First policy cell of (base, replica k).
+                let cell = spec.cell((b * spec.replicas + k) * spec.policies.len());
+                assert_eq!(cell.workload, workload);
+                assert_eq!(cell.cores, cores);
+                assert_eq!(cell.rate, rate);
+                assert_eq!(cell.replica, k);
+            }
+        }
+    }
+
+    #[test]
+    fn extended_header_is_a_valid_spill_header() {
+        let spec = spec2();
+        let cfg = SearchConfig::defaults_for(&spec);
+        let line = search_header_line(&spec, &cfg);
+        // Plain-sweep readers must parse it, ignoring the extension.
+        let h = sweep_stream::parse_header(line.as_bytes(), Path::new("test")).unwrap();
+        assert_eq!(h.spec_hash, spec.spec_hash());
+        assert_eq!(h.n_cells, spec.n_cells());
+        assert!(h.shard.is_full());
+        // And the extension round-trips to exactly the config's JSON.
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("search"), Some(&cfg.to_json()));
+        assert!(check_search_header(line.as_bytes(), &cfg, Path::new("test")).is_ok());
+        let mut other = cfg.clone();
+        other.confidence = 0.5;
+        assert!(check_search_header(line.as_bytes(), &other, Path::new("test")).is_err());
+    }
+
+    // evaluate() on fabricated metric matrices: m[k * P + p].
+    fn m(vals: &[f64]) -> Vec<Option<f64>> {
+        vals.iter().map(|&v| Some(v)).collect()
+    }
+
+    #[test]
+    fn evaluate_settles_clear_separation() {
+        // Two policies, four replicas, policy 1 consistently ~1 lower.
+        let mm = m(&[2.0, 1.0, 2.1, 1.05, 1.9, 0.95, 2.05, 1.0]);
+        let e = evaluate(&mm, 2, 0.95);
+        assert!(e.settled);
+        assert_eq!(e.replicas_done, 4);
+        assert_eq!(e.ranking.len(), 2);
+        assert_eq!(e.ranking[0].policy, 1, "lower metric ranks first");
+        assert_eq!(e.ranking[1].policy, 0);
+        assert_eq!(e.pairs.len(), 1);
+        assert!(e.pairs[0].resolved);
+        assert!(e.pairs[0].diff.mean() > 0.0, "hi − lo must be positive");
+    }
+
+    #[test]
+    fn evaluate_keeps_contested_scenarios_open() {
+        // Sign flips around zero: nothing to settle.
+        let mm = m(&[2.0, 1.0, 1.0, 2.0, 2.0, 1.0, 1.0, 2.0]);
+        let e = evaluate(&mm, 2, 0.95);
+        assert!(!e.settled);
+        assert!(!e.pairs[0].resolved);
+    }
+
+    #[test]
+    fn evaluate_settles_exact_ties() {
+        let mm = m(&[1.5, 1.5, 2.5, 2.5, 0.5, 0.5]);
+        let e = evaluate(&mm, 2, 0.95);
+        assert!(e.settled, "identical policies must not burn the budget");
+        assert!(e.pairs[0].diff.all_ties());
+        // Tie-break: spec order.
+        assert_eq!(e.ranking[0].policy, 0);
+    }
+
+    #[test]
+    fn evaluate_excludes_nan_replicas_and_missing_cells() {
+        let mut mm = m(&[2.0, 1.0, 2.1, 1.1, 2.2, 1.2, 2.05, 1.05]);
+        mm[2] = Some(f64::NAN); // replica 1 poisoned
+        mm[7] = None; // replica 3 not simulated yet
+        let e = evaluate(&mm, 2, 0.95);
+        assert_eq!(e.replicas_done, 3, "NaN is done, missing is not");
+        assert_eq!(e.ranking[0].n, 2, "only finite complete replicas count");
+        assert_eq!(e.pairs[0].diff.n(), 2);
+    }
+
+    #[test]
+    fn evaluate_single_policy_is_trivially_settled() {
+        let e = evaluate(&m(&[1.0, 2.0, 3.0]), 1, 0.95);
+        assert!(e.settled);
+        assert!(e.pairs.is_empty());
+        assert_eq!(e.ranking.len(), 1);
+    }
+
+    #[test]
+    fn evaluate_underpowered_scenario_stays_open() {
+        // One replica: no test has power, decisive() needs n ≥ 2.
+        let e = evaluate(&m(&[2.0, 1.0]), 2, 0.95);
+        assert!(!e.settled);
+    }
+}

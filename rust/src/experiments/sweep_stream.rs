@@ -73,8 +73,11 @@ pub struct StreamSummary {
 /// The shard fields are written only for sharded runs; their absence
 /// means full coverage (`0/1`), so an unsharded spill carries no shard
 /// noise. (Spills from schema version 1 are refused outright by the
-/// version check, sharded or not.)
-fn header_value(spec: &SweepSpec, shard: &ShardSpec) -> Value {
+/// version check, sharded or not.) [`super::search`] extends this
+/// header with a `search` object recording the search configuration —
+/// [`parse_header`] ignores unknown keys, so every tool here reads a
+/// search spill unchanged.
+pub(crate) fn header_value(spec: &SweepSpec, shard: &ShardSpec) -> Value {
     let mut pairs = vec![
         ("kind", "sweep-cells".into()),
         ("schema_version", OUTPUT_SCHEMA_VERSION.into()),

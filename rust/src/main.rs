@@ -4,7 +4,9 @@
 //!   simulate    run the cluster simulator on a (synthetic or file) trace
 //!   sweep       run a parallel scenario sweep (rates × cores × policies ×
 //!               workloads × replicas) and aggregate JSON/CSV results;
-//!               --shard K/N runs one machine's slice of the grid
+//!               --shard K/N runs one machine's slice of the grid;
+//!               --search races the grid adaptively, stopping replication
+//!               of scenarios whose policy ranking is statistically settled
 //!   orchestrate launch a whole sharded sweep from one spec — N shard runs
 //!               (local children or a --launcher template), a retry/resume
 //!               manifest, and the final merge, in one command
@@ -22,7 +24,8 @@ use std::path::Path;
 use carbon_sim::carbon::{EmbodiedModel, ServerPowerModel};
 use carbon_sim::cluster::{Cluster, ClusterConfig};
 use carbon_sim::cpu::{AgingParams, TemperatureModel};
-use carbon_sim::experiments::{self, sweep, sweep_stream, Scale};
+use carbon_sim::experiments::search::SearchConfig;
+use carbon_sim::experiments::{self, search, sweep, sweep_stream, Scale};
 use carbon_sim::sim::QueueKind;
 use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
 use carbon_sim::util::cli::Cli;
@@ -68,7 +71,9 @@ fn top_usage() -> String {
      \x20              JSON/CSV; bit-identical output at any thread count. Grids come\n\
      \x20              from axis flags or a JSON spec (--spec examples/specs/paper.json);\n\
      \x20              --out-dir streams per-cell JSONL with crash resume (--resume);\n\
-     \x20              --shard K/N runs one machine's slice of the grid\n\
+     \x20              --shard K/N runs one machine's slice of the grid; --search races\n\
+     \x20              the grid adaptively and stops replicating scenarios whose policy\n\
+     \x20              ranking is statistically settled (writes search.json)\n\
      \x20 orchestrate  drive a whole sharded sweep from one spec: launch N shard runs\n\
      \x20              (local children, or remote via --launcher template), track them\n\
      \x20              in a retry/resume manifest (orchestrate.json), and merge the\n\
@@ -287,16 +292,23 @@ fn cmd_sweep(rest: &[String]) -> i32 {
          requires --out-dir; reassemble finished shards with `carbon-sim merge`",
     )
     .flag(
+        "search",
+        "adaptive search: race the grid in replica rungs and stop replicating scenarios \
+         whose policy ranking is statistically settled (requires --out-dir; writes \
+         <dir>/search.json; tune via a `search` block in the spec file)",
+    )
+    .flag(
         "resume",
         "with --out-dir: skip cells already recorded in cells.jsonl (spec hash must match)",
     )
     .flag("quiet", "suppress the stdout summary table");
     let a = parse_or_exit(&cli, rest);
 
-    let parsed = (|| -> Result<(sweep::SweepSpec, sweep::Format, usize, QueueKind), String> {
+    type Parsed = (sweep::SweepSpec, Option<SearchConfig>, sweep::Format, usize, QueueKind);
+    let parsed = (|| -> Result<Parsed, String> {
         let spec_path = a.str_or("spec", "");
-        let spec = if spec_path.is_empty() {
-            sweep::SweepSpec {
+        let (spec, search_cfg) = if spec_path.is_empty() {
+            let spec = sweep::SweepSpec {
                 rates: sweep::parse_f64_list(&a.str_or("rates", ""))?,
                 core_counts: sweep::parse_usize_list(&a.str_or("cores", ""))?,
                 policies: sweep::parse_policy_list(&a.str_or("policies", "all"))?,
@@ -309,7 +321,10 @@ fn cmd_sweep(rest: &[String]) -> i32 {
                 n_prompt: a.parsed("prompt-machines")?,
                 n_token: a.parsed("token-machines")?,
                 seed: a.parsed("seed")?,
-            }
+            };
+            // Axis-flag grids carry no `search` block; --search falls back
+            // to SearchConfig::defaults_for below.
+            (spec, None)
         } else {
             // The spec file defines the whole grid; silently ignoring an
             // explicitly typed axis flag would run the wrong grid for
@@ -330,7 +345,7 @@ fn cmd_sweep(rest: &[String]) -> i32 {
                     "--spec defines the whole grid; drop --{conflict} (edit the spec file instead)"
                 ));
             }
-            carbon_sim::config::sweep_from_file(Path::new(&spec_path))?
+            carbon_sim::config::sweep_search_from_file(Path::new(&spec_path))?
         };
         // sweep::run validates the spec; only the format needs checking here.
         let format = sweep::Format::parse(&a.str_or("format", "json"))?;
@@ -338,9 +353,9 @@ fn cmd_sweep(rest: &[String]) -> i32 {
         // Not an axis flag: the queue kind changes nothing in the report,
         // so it composes with --spec (differential CI runs rely on this).
         let queue = QueueKind::parse(&a.str_or("queue", "calendar"))?;
-        Ok((spec, format, threads, queue))
+        Ok((spec, search_cfg, format, threads, queue))
     })();
-    let (spec, format, threads, queue) = match parsed {
+    let (spec, search_cfg, format, threads, queue) = match parsed {
         Ok(p) => p,
         Err(e) => {
             eprintln!("{e}");
@@ -373,6 +388,61 @@ fn cmd_sweep(rest: &[String]) -> i32 {
     if !shard.is_full() && out_dir.is_empty() {
         eprintln!("--shard requires --out-dir (shard spills are what `carbon-sim merge` reassembles)");
         return 2;
+    }
+    if a.flag("search") {
+        if out_dir.is_empty() {
+            eprintln!(
+                "--search requires --out-dir (rung cells spill to <dir>/cells.jsonl and the \
+                 verdict to <dir>/search.json)"
+            );
+            return 2;
+        }
+        if !shard.is_full() {
+            eprintln!(
+                "--search and --shard are mutually exclusive (the search schedules the grid \
+                 itself; shard the exhaustive sweep instead)"
+            );
+            return 2;
+        }
+        // --format shapes the assembled report, which a search does not
+        // produce; silently ignoring an explicitly typed flag would hide
+        // that, so the combination is an error.
+        if a.was_given("format") {
+            eprintln!(
+                "--search writes search.json, not a report; drop --format (finish the grid \
+                 with `sweep --resume` on the same --out-dir to assemble one)"
+            );
+            return 2;
+        }
+        let cfg = search_cfg.unwrap_or_else(|| SearchConfig::defaults_for(&spec));
+        let summary = match search::run_search(
+            &spec,
+            &cfg,
+            threads,
+            Path::new(&out_dir),
+            a.flag("resume"),
+            !a.flag("quiet"),
+            queue,
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        println!(
+            "search settled {}/{} scenarios with {}/{} cells ({} resumed, {} run) in {}; \
+             verdict: {}",
+            summary.n_settled,
+            summary.n_scenarios,
+            summary.n_cells_spent,
+            summary.n_cells_exhaustive,
+            summary.n_resumed,
+            summary.n_run,
+            summary.cells_path.display(),
+            summary.search_path.display()
+        );
+        return 0;
     }
     if !out_dir.is_empty() {
         let summary = match sweep_stream::run_streaming_with(

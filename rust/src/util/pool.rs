@@ -13,7 +13,9 @@
 //! calling thread, and retains nothing — the streaming sweep engine spills
 //! each cell to disk this way, keeping memory O(workers) for grids too big
 //! to hold in memory. It also takes an explicit job-id list rather than a
-//! `0..n` range, so a resumed sweep can run only its remaining cells.
+//! `0..n` range, so a resumed sweep can run only its remaining cells and
+//! the adaptive search (`sweep --search`) can submit one replica rung of
+//! still-contested scenarios at a time.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;

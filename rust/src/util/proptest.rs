@@ -61,9 +61,48 @@ pub fn check(cond: bool, msg: impl Into<String>) -> Check {
     }
 }
 
+/// Env var overriding the seed passed to every [`forall`] call, so a CI
+/// property failure is reproducible locally with one command:
+/// `CARBON_SIM_PROPTEST_SEED=<seed> cargo test -q <test-name>`.
+pub const SEED_ENV: &str = "CARBON_SIM_PROPTEST_SEED";
+
+/// Env var overriding the case count of every [`forall`] call, so CI can
+/// run the property suites at greater depth without a code change.
+pub const CASES_ENV: &str = "CARBON_SIM_PROPTEST_CASES";
+
+fn parse_override(var: &str, raw: &str) -> u64 {
+    match raw.trim().parse::<u64>() {
+        Ok(v) => v,
+        Err(e) => panic!("{var}={raw:?} is not a valid u64: {e}"),
+    }
+}
+
+fn env_override(var: &str) -> Option<u64> {
+    std::env::var(var).ok().map(|raw| parse_override(var, &raw))
+}
+
 /// Run `cases` random cases of `prop`. Panics with the failing case's
-/// message (after shrink attempts) if any case fails.
-pub fn forall<F: FnMut(&mut Gen) -> Check>(cases: u32, seed: u64, mut prop: F) {
+/// message (after shrink attempts) if any case fails; the panic names the
+/// effective seed so `CARBON_SIM_PROPTEST_SEED=<seed>` replays it exactly.
+/// `CARBON_SIM_PROPTEST_CASES` overrides the case count (CI runs the
+/// suites at depth this way).
+pub fn forall<F: FnMut(&mut Gen) -> Check>(cases: u32, seed: u64, prop: F) {
+    forall_with(cases, seed, env_override(SEED_ENV), env_override(CASES_ENV), prop)
+}
+
+/// [`forall`] with the env overrides passed explicitly. Tests exercise the
+/// override wiring through this entry point so they never mutate
+/// process-global env state (other tests' `forall` calls read it
+/// concurrently — cargo runs tests in threads, not processes).
+fn forall_with<F: FnMut(&mut Gen) -> Check>(
+    cases: u32,
+    seed: u64,
+    seed_override: Option<u64>,
+    cases_override: Option<u64>,
+    mut prop: F,
+) {
+    let seed = seed_override.unwrap_or(seed);
+    let cases = cases_override.map(|c| c.min(u32::MAX as u64) as u32).unwrap_or(cases);
     let mut root = Rng::new(seed);
     for case in 0..cases {
         let case_rng = root.fork(case as u64);
@@ -79,7 +118,8 @@ pub fn forall<F: FnMut(&mut Gen) -> Check>(cases: u32, seed: u64, mut prop: F) {
                 }
             }
             panic!(
-                "property failed (seed={seed}, case={case}, shrink-scale={}):\n{}",
+                "property failed (seed={seed}, case={case}, shrink-scale={}):\n{}\n\
+                 reproduce with: {SEED_ENV}={seed} cargo test -q",
                 best.0, best.1
             );
         }
@@ -125,5 +165,42 @@ mod tests {
         for _ in 0..100 {
             assert!(g_small.size(0, 100) <= 11);
         }
+    }
+
+    // The override wiring is tested through `forall_with` rather than by
+    // setting the real env vars: cargo runs tests in threads, and other
+    // tests' `forall` calls read the env concurrently.
+    #[test]
+    fn seed_override_is_applied_and_named_in_the_panic() {
+        let panic = std::panic::catch_unwind(|| {
+            forall_with(50, 999, Some(12345), None, |g| {
+                let x = g.f64(0.0, 1.0);
+                check(x < 0.0, format!("x={x}"))
+            })
+        })
+        .expect_err("always-false property must fail");
+        let msg = panic
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| panic.downcast_ref::<&str>().unwrap_or(&"").to_string());
+        assert!(msg.contains("seed=12345"), "panic message was: {msg}");
+        assert!(msg.contains(&format!("{SEED_ENV}=12345")), "panic message was: {msg}");
+    }
+
+    #[test]
+    fn case_count_override_is_applied() {
+        // With 0 cases even an always-false property never runs; without
+        // the override it fails immediately.
+        forall_with(1000, 7, None, Some(0), |_g| check(false, "never reached"));
+        let unforced = std::panic::catch_unwind(|| {
+            forall_with(1000, 7, None, None, |_g| check(false, "reached"))
+        });
+        assert!(unforced.is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "is not a valid u64")]
+    fn malformed_override_fails_loudly() {
+        parse_override(CASES_ENV, "not-a-number");
     }
 }

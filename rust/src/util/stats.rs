@@ -128,12 +128,18 @@ impl Summary {
         }
     }
 
-    /// Render one compact row, used by the bench harnesses.
+    /// Render one compact row, used by the bench harnesses. NaN samples
+    /// are excluded from every statistic, so a nonzero [`Summary::nan_count`]
+    /// is surfaced explicitly (`nan=<k>`) instead of silently shrinking `n`.
     pub fn row(&self) -> String {
-        format!(
+        let mut row = format!(
             "n={:<8} mean={:<12.6} std={:<12.6} min={:<12.6} p1={:<12.6} p50={:<12.6} p90={:<12.6} p99={:<12.6} max={:<12.6}",
             self.n, self.mean, self.std, self.min, self.p1, self.p50, self.p90, self.p99, self.max
-        )
+        );
+        if self.nan_count > 0 {
+            row.push_str(&format!(" nan={}", self.nan_count));
+        }
+        row
     }
 }
 
@@ -234,6 +240,214 @@ impl Welford {
     }
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
+    }
+
+    /// Unbiased (n−1 denominator) sample variance — what confidence
+    /// intervals need, unlike the population [`Welford::variance`].
+    /// Zero for fewer than two samples.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Half-width of the two-sided Student-t confidence interval on the
+    /// mean at the given `confidence` (e.g. 0.95): `t · s / √n` with
+    /// `n − 1` degrees of freedom. `None` when fewer than two samples
+    /// have been seen (no variance estimate) or `confidence` is not in
+    /// (0, 1). The interval is `mean ± half_width`.
+    pub fn mean_ci_half_width(&self, confidence: f64) -> Option<f64> {
+        if self.n < 2 || !(confidence > 0.0 && confidence < 1.0) {
+            return None;
+        }
+        let t = t_quantile(0.5 + confidence / 2.0, self.n - 1);
+        Some(t * (self.sample_variance() / self.n as f64).sqrt())
+    }
+}
+
+/// Quantile function (inverse CDF) of the standard normal, by Acklam's
+/// rational approximation (absolute error < 1.2e-9 over (0, 1)). The
+/// basis for [`t_quantile`] — no statistics crate is available offline.
+/// `p` outside (0, 1) returns ±infinity at the endpoints and panics
+/// beyond them.
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "normal_quantile: p={p} outside [0, 1]");
+    if p == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let tail = |q: f64| {
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    if p < P_LOW {
+        tail((-2.0 * p.ln()).sqrt())
+    } else if p > 1.0 - P_LOW {
+        -tail((-2.0 * (1.0 - p).ln()).sqrt())
+    } else {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    }
+}
+
+/// Quantile of Student's t with `df` degrees of freedom. Exact closed
+/// forms for df 1 and 2; a four-term Cornish–Fisher expansion around
+/// [`normal_quantile`] above (relative error under ~1e-3 at df = 3,
+/// shrinking as df grows — ample for racing decisions whose inputs are
+/// noisy simulation metrics).
+pub fn t_quantile(p: f64, df: u64) -> f64 {
+    assert!(df >= 1, "t_quantile: df must be ≥ 1");
+    match df {
+        1 => (std::f64::consts::PI * (p - 0.5)).tan(),
+        2 => {
+            let a = 2.0 * p - 1.0;
+            a * (2.0 / (1.0 - a * a)).sqrt()
+        }
+        _ => {
+            let v = df as f64;
+            let z = normal_quantile(p);
+            let z3 = z * z * z;
+            let z5 = z3 * z * z;
+            let z7 = z5 * z * z;
+            let z9 = z7 * z * z;
+            z + (z3 + z) / (4.0 * v)
+                + (5.0 * z5 + 16.0 * z3 + 3.0 * z) / (96.0 * v * v)
+                + (3.0 * z7 + 19.0 * z5 + 17.0 * z3 - 15.0 * z) / (384.0 * v * v * v)
+                + (79.0 * z9 + 776.0 * z7 + 1482.0 * z5 - 1920.0 * z3 - 945.0 * z)
+                    / (92160.0 * v * v * v * v)
+        }
+    }
+}
+
+/// Exact two-sided sign-test p-value: the probability, under the null
+/// that positive and negative differences are equally likely, of a split
+/// at least as lopsided as `(n_pos, n_neg)`. Computed from the exact
+/// Binomial(n, ½) tail (no approximation), doubled and clamped to 1.
+/// Ties carry no sign information and are dropped by the caller
+/// ([`PairedDiff::add`]); zero observations return 1.0.
+pub fn sign_test_two_sided(n_pos: u64, n_neg: u64) -> f64 {
+    let n = n_pos + n_neg;
+    if n == 0 {
+        return 1.0;
+    }
+    let k = n_pos.min(n_neg);
+    // P(X ≤ k) for X ~ Binomial(n, ½), accumulating the pmf
+    // incrementally: pmf(0) = 2^-n, pmf(i+1) = pmf(i)·(n-i)/(i+1).
+    // (2^-n underflows to 0 beyond n ≈ 1074 — at that replica count the
+    // t interval decides long before the sign test matters.)
+    let mut pmf = 0.5f64.powi(n.min(i32::MAX as u64) as i32);
+    let mut tail = 0.0;
+    for i in 0..=k {
+        tail += pmf;
+        pmf *= (n - i) as f64 / (i + 1) as f64;
+    }
+    (2.0 * tail).min(1.0)
+}
+
+/// Paired-difference statistics for the sweep search's racing decisions:
+/// Welford state over per-replica metric differences `d = worse − better`
+/// plus the sign counts for the exact sign test. A policy pair is
+/// [`PairedDiff::decisive`] when either the Student-t CI on the mean
+/// difference excludes zero or the sign test rejects at the same level —
+/// the sign test is the small-n / heavy-tail fallback the t interval
+/// needs (with 2–4 replicas the t critical values are huge, but 4–5
+/// same-sign differences already reject at 90%).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairedDiff {
+    w: Welford,
+    n_pos: u64,
+    n_neg: u64,
+}
+
+impl PairedDiff {
+    /// Record one paired difference. Exact zeros (ties) still update the
+    /// mean/CI state but carry no sign information.
+    pub fn add(&mut self, d: f64) {
+        self.w.add(d);
+        if d > 0.0 {
+            self.n_pos += 1;
+        } else if d < 0.0 {
+            self.n_neg += 1;
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.w.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.w.mean()
+    }
+
+    /// See [`Welford::mean_ci_half_width`].
+    pub fn ci_half_width(&self, confidence: f64) -> Option<f64> {
+        self.w.mean_ci_half_width(confidence)
+    }
+
+    /// See [`sign_test_two_sided`].
+    pub fn sign_test_p(&self) -> f64 {
+        sign_test_two_sided(self.n_pos, self.n_neg)
+    }
+
+    /// Every recorded difference was exactly zero (and there were at
+    /// least two). No test can ever call such a pair decisive, but in a
+    /// paired design repeated exact ties mean the two treatments are
+    /// behaving identically — the search treats this as resolved rather
+    /// than burning the full replica budget on a provable tie.
+    pub fn all_ties(&self) -> bool {
+        self.w.count() >= 2 && self.n_pos == 0 && self.n_neg == 0
+    }
+
+    /// Is the mean difference resolved away from zero at `confidence`?
+    /// True when the t interval excludes zero, or the sign test's
+    /// p-value is at most `1 − confidence`. Fewer than two samples are
+    /// never decisive.
+    pub fn decisive(&self, confidence: f64) -> bool {
+        if self.w.count() < 2 {
+            return false;
+        }
+        if let Some(h) = self.ci_half_width(confidence) {
+            if self.w.mean().abs() > h {
+                return true;
+            }
+        }
+        self.sign_test_p() <= 1.0 - confidence
     }
 }
 
@@ -350,5 +564,142 @@ mod tests {
         }
         assert!((w.mean() - mean(&xs)).abs() < 1e-12);
         assert!((w.variance() - variance(&xs)).abs() < 1e-9);
+        // Sample variance applies the n/(n-1) correction.
+        let expect = variance(&xs) * xs.len() as f64 / (xs.len() - 1) as f64;
+        assert!((w.sample_variance() - expect).abs() < 1e-9);
+        assert_eq!(Welford::default().sample_variance(), 0.0);
+    }
+
+    #[test]
+    fn summary_row_reports_nan_count_only_when_nonzero() {
+        let clean = Summary::of(&[1.0, 2.0, 3.0]);
+        assert!(!clean.row().contains("nan="), "{}", clean.row());
+        let dirty = Summary::of(&[1.0, f64::NAN, 3.0, f64::NAN]);
+        assert!(dirty.row().ends_with(" nan=2"), "{}", dirty.row());
+        assert!(dirty.row().starts_with("n=2"), "{}", dirty.row());
+    }
+
+    #[test]
+    fn normal_quantile_matches_known_values() {
+        // Reference values from standard normal tables.
+        for (p, z) in [
+            (0.5, 0.0),
+            (0.975, 1.959964),
+            (0.95, 1.644854),
+            (0.995, 2.575829),
+            (0.841344746, 1.0),
+            (0.0013498980316301, -3.0),
+        ] {
+            assert!(
+                (normal_quantile(p) - z).abs() < 1e-5,
+                "Φ⁻¹({p}) = {} want {z}",
+                normal_quantile(p)
+            );
+        }
+        // Symmetry and endpoint behavior.
+        assert!((normal_quantile(0.3) + normal_quantile(0.7)).abs() < 1e-9);
+        assert_eq!(normal_quantile(0.0), f64::NEG_INFINITY);
+        assert_eq!(normal_quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn t_quantile_matches_table_values() {
+        // Classic two-sided critical values t_{p, df}. df 1 and 2 are
+        // exact closed forms; df ≥ 3 uses the Cornish–Fisher expansion.
+        for (p, df, t, tol) in [
+            (0.975, 1, 12.7062, 1e-3),
+            (0.975, 2, 4.30265, 1e-4),
+            (0.975, 3, 3.18245, 2e-2),
+            (0.95, 5, 2.01505, 5e-3),
+            (0.975, 10, 2.22814, 2e-3),
+            (0.995, 30, 2.75000, 2e-3),
+            (0.975, 120, 1.97993, 1e-3),
+        ] {
+            let got = t_quantile(p, df);
+            assert!((got - t).abs() < tol, "t_{{{p},{df}}} = {got} want {t}");
+        }
+        // t approaches the normal quantile as df grows.
+        assert!((t_quantile(0.975, 1_000_000) - normal_quantile(0.975)).abs() < 1e-4);
+        // Median is always zero; lower tail mirrors the upper.
+        for df in [1, 2, 7] {
+            assert!(t_quantile(0.5, df).abs() < 1e-12);
+            assert!((t_quantile(0.1, df) + t_quantile(0.9, df)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sign_test_exact_values() {
+        assert_eq!(sign_test_two_sided(0, 0), 1.0);
+        assert_eq!(sign_test_two_sided(1, 1), 1.0);
+        // 5-0 split: 2·(1/32) = 0.0625; 6-0: 2·(1/64) = 0.03125.
+        assert!((sign_test_two_sided(5, 0) - 0.0625).abs() < 1e-12);
+        assert!((sign_test_two_sided(0, 6) - 0.03125).abs() < 1e-12);
+        // 7-1 split: 2·(C(8,0)+C(8,1))/2^8 = 2·9/256.
+        assert!((sign_test_two_sided(7, 1) - 18.0 / 256.0).abs() < 1e-12);
+        // Balanced splits are never significant.
+        assert_eq!(sign_test_two_sided(10, 10), 1.0);
+    }
+
+    #[test]
+    fn welford_ci_brackets_the_mean() {
+        // 100 points from a deterministic ramp: the CI half-width must
+        // match t · s/√n computed by hand.
+        let mut w = Welford::default();
+        for i in 0..100 {
+            w.add(i as f64);
+        }
+        let h = w.mean_ci_half_width(0.95).unwrap();
+        let s = w.sample_variance().sqrt();
+        let expect = t_quantile(0.975, 99) * s / 100f64.sqrt();
+        assert!((h - expect).abs() < 1e-9);
+        assert!(h > 0.0);
+        // Under two samples or out-of-range confidence: no interval.
+        let mut w1 = Welford::default();
+        w1.add(3.0);
+        assert!(w1.mean_ci_half_width(0.95).is_none());
+        assert!(w.mean_ci_half_width(0.0).is_none());
+        assert!(w.mean_ci_half_width(1.0).is_none());
+    }
+
+    #[test]
+    fn paired_diff_decisions() {
+        // Consistent, well-separated differences: decisive quickly.
+        let mut clear = PairedDiff::default();
+        for d in [1.0, 1.1, 0.9, 1.05] {
+            clear.add(d);
+        }
+        assert!(clear.decisive(0.95), "tight same-sign diffs must settle");
+        assert!(clear.mean() > 0.0);
+        assert!(clear.ci_half_width(0.95).unwrap() < clear.mean());
+        // Sign-flipping differences around zero: never decisive.
+        let mut noisy = PairedDiff::default();
+        for d in [1.0, -1.1, 0.9, -1.05] {
+            noisy.add(d);
+        }
+        assert!(!noisy.decisive(0.95));
+        assert_eq!(noisy.sign_test_p(), 1.0);
+        // Same-sign but wildly varying magnitudes: the t interval is
+        // hopeless, the sign test takes over once n is large enough.
+        let mut skewed = PairedDiff::default();
+        for d in [0.001, 10.0, 0.002, 8.0, 0.003] {
+            skewed.add(d);
+        }
+        assert!((skewed.sign_test_p() - 0.0625).abs() < 1e-12);
+        assert!(skewed.decisive(0.9), "5 same-sign diffs reject at 90%");
+        assert!(!skewed.decisive(0.99));
+        // Fewer than two samples: never decisive.
+        let mut one = PairedDiff::default();
+        one.add(5.0);
+        assert!(!one.decisive(0.5));
+        // Exact ties only: no sign information, degenerate CI at zero —
+        // never decisive, but recognizably a tie.
+        let mut ties = PairedDiff::default();
+        ties.add(0.0);
+        ties.add(0.0);
+        assert!(!ties.decisive(0.9));
+        assert_eq!(ties.n(), 2);
+        assert!(ties.all_ties());
+        assert!(!clear.all_ties());
+        assert!(!one.all_ties(), "one sample is not evidence of a tie");
     }
 }

@@ -273,6 +273,77 @@ fn sweep_spec_conflicts_with_axis_flags() {
 }
 
 #[test]
+fn sweep_search_races_the_pinned_example_spec() {
+    let spec = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/search_smoke.json");
+    let dir = std::env::temp_dir().join("carbon_sim_cli_sweep_search");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out_dir = dir.join("out");
+    let (ok, text) = run(&[
+        "sweep",
+        "--spec",
+        spec,
+        "--search",
+        "--threads",
+        "4",
+        "--quiet",
+        "--out-dir",
+        out_dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("search settled"), "{text}");
+    let body = std::fs::read_to_string(out_dir.join("search.json")).unwrap();
+    let v = carbon_sim::util::json::parse(&body).unwrap();
+    assert_eq!(v.str_or("kind", ""), "sweep-search");
+    assert_eq!(v.usize_or("schema_version", 0), carbon_sim::experiments::OUTPUT_SCHEMA_VERSION);
+    // The whole point: the settled scenario stops replicating early.
+    let (spent, exhaustive) = (v.usize_or("n_cells_run", 0), v.usize_or("n_cells_exhaustive", 0));
+    assert!(spent < exhaustive, "search ran {spent}/{exhaustive} cells — nothing settled");
+    assert_eq!(v.get("ranking").and_then(|r| r.as_arr()).unwrap().len(), 3);
+
+    // A --resume re-run finds everything done and rewrites the verdict.
+    let (ok2, text2) = run(&[
+        "sweep",
+        "--spec",
+        spec,
+        "--search",
+        "--quiet",
+        "--resume",
+        "--out-dir",
+        out_dir.to_str().unwrap(),
+    ]);
+    assert!(ok2, "{text2}");
+    assert!(text2.contains(", 0 run)"), "{text2}");
+    assert_eq!(std::fs::read_to_string(out_dir.join("search.json")).unwrap(), body);
+}
+
+#[test]
+fn sweep_search_flag_combinations_are_validated() {
+    let (ok, text) = run(&["sweep", "--search", "--rates", "5", "--cores", "8"]);
+    assert!(!ok);
+    assert!(text.contains("--search requires --out-dir"), "{text}");
+    let (ok2, text2) = run(&[
+        "sweep",
+        "--search",
+        "--shard",
+        "0/2",
+        "--out-dir",
+        "/tmp/unused_search_dir",
+    ]);
+    assert!(!ok2);
+    assert!(text2.contains("mutually exclusive"), "{text2}");
+    let (ok3, text3) = run(&[
+        "sweep",
+        "--search",
+        "--format",
+        "csv",
+        "--out-dir",
+        "/tmp/unused_search_dir",
+    ]);
+    assert!(!ok3);
+    assert!(text3.contains("drop --format"), "{text3}");
+}
+
+#[test]
 fn sweep_resume_requires_out_dir() {
     let (ok, text) = run(&["sweep", "--resume"]);
     assert!(!ok);

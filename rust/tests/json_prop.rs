@@ -1,0 +1,161 @@
+//! Round-trip fuzz tests for the dependency-free JSON module
+//! (`util::json`). The spill/resume machinery and the streaming report
+//! assembler both rest on serialize→parse→serialize being the identity —
+//! including on the writer's non-finite extension tokens (`NaN`,
+//! `Infinity`, `-Infinity`), deep nesting, escape-heavy strings, and
+//! integers near the `u64` range. Comparisons use serialized strings,
+//! not `Value == Value`: the derived `PartialEq` is false for NaN, which
+//! is exactly the case the round trip must preserve.
+
+use carbon_sim::util::json::{parse, Value};
+use carbon_sim::util::proptest::{check, forall, Check, Gen};
+
+/// A random string mixing plain ASCII with the characters the escaper
+/// has to handle: quotes, backslashes, control characters, multibyte
+/// and astral unicode.
+fn gen_string(g: &mut Gen) -> String {
+    const POOL: &[&str] = &[
+        "a",
+        "Z",
+        "7",
+        " ",
+        "_",
+        "\"",
+        "\\",
+        "/",
+        "\n",
+        "\t",
+        "\r",
+        "\u{8}",
+        "\u{c}",
+        "\u{1}",
+        "\u{1f}",
+        "é",
+        "π",
+        "字",
+        "\u{1f600}",
+        "\u{10ffff}",
+        "\u{0}",
+    ];
+    let n = g.size(0, 12);
+    (0..n).map(|_| POOL[g.rng.usize(POOL.len())]).collect()
+}
+
+/// A random number spanning the writer's three emission paths: integral
+/// (printed as `i64`), general floats (shortest round-trip `{}`), and
+/// the non-finite tokens. Includes the 1e15 integral cutoff, `u64`-range
+/// magnitudes, subnormals, and negative zero.
+fn gen_num(g: &mut Gen) -> f64 {
+    match g.size(0, 9) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => -0.0,
+        4 => g.rng.next_u64() as f64,
+        5 => -(g.rng.next_u64() as f64),
+        6 => g.f64(-1e18, 1e18).trunc(),
+        7 => g.f64(-1.0, 1.0) * 1e-300,
+        _ => g.f64(-1e6, 1e6),
+    }
+}
+
+/// A random `Value` tree, depth-limited so case size stays bounded.
+fn gen_value(g: &mut Gen, depth: usize) -> Value {
+    let top = if depth == 0 { 3 } else { 5 };
+    match g.size(0, top) {
+        0 => Value::Null,
+        1 => Value::Bool(g.bool()),
+        2 => Value::Num(gen_num(g)),
+        3 => Value::Str(gen_string(g)),
+        4 => {
+            let n = g.size(0, 4);
+            Value::Arr((0..n).map(|_| gen_value(g, depth - 1)).collect())
+        }
+        _ => {
+            let n = g.size(0, 4);
+            // Duplicate random keys are fine: the BTreeMap keeps the
+            // last one, and the round trip is checked on what remains.
+            Value::Obj((0..n).map(|_| (gen_string(g), gen_value(g, depth - 1))).collect())
+        }
+    }
+}
+
+#[test]
+fn compact_roundtrip_is_the_identity() {
+    forall(400, 201, |g| {
+        let v = gen_value(g, 4);
+        let s1 = v.to_string_compact();
+        let v2 = match parse(&s1) {
+            Ok(v2) => v2,
+            Err(e) => return Check::Fail(format!("parse failed: {e}\ninput: {s1}")),
+        };
+        let s2 = v2.to_string_compact();
+        check(s1 == s2, format!("compact not a fixed point:\n{s1}\n{s2}"))
+    });
+}
+
+#[test]
+fn pretty_roundtrip_is_the_identity() {
+    forall(400, 202, |g| {
+        let v = gen_value(g, 4);
+        let pretty = v.to_string_pretty();
+        let v2 = match parse(&pretty) {
+            Ok(v2) => v2,
+            Err(e) => return Check::Fail(format!("parse failed: {e}\ninput: {pretty}")),
+        };
+        if v2.to_string_pretty() != pretty {
+            return Check::Fail(format!("pretty not a fixed point:\n{pretty}"));
+        }
+        // Pretty and compact must describe the same value.
+        let (c1, c2) = (v.to_string_compact(), v2.to_string_compact());
+        check(c1 == c2, format!("pretty/compact disagree:\n{c1}\n{c2}"))
+    });
+}
+
+#[test]
+fn write_pretty_at_reparses_to_the_same_value() {
+    forall(300, 203, |g| {
+        let v = gen_value(g, 3);
+        let indent = g.size(0, 4);
+        let mut frag = String::new();
+        v.write_pretty_at(&mut frag, indent);
+        let v2 = match parse(&frag) {
+            Ok(v2) => v2,
+            Err(e) => {
+                return Check::Fail(format!("fragment at indent {indent}: {e}\n{frag}"));
+            }
+        };
+        check(
+            v2.to_string_compact() == v.to_string_compact(),
+            format!("fragment at indent {indent} changed the value:\n{frag}"),
+        )
+    });
+}
+
+#[test]
+fn u64_range_integers_survive_the_integral_fast_path() {
+    // The writer prints integral |x| < 1e15 through an `i64` cast; every
+    // such value is exactly representable, so the round trip must be
+    // bit-exact. Above the cutoff the shortest-round-trip `{}` path
+    // takes over — still lossless for any finite f64.
+    forall(600, 204, |g| {
+        let x = gen_num(g);
+        let v = Value::Num(x);
+        let s = v.to_string_compact();
+        let back = match parse(&s) {
+            Ok(b) => b,
+            Err(e) => return Check::Fail(format!("'{s}' unparseable: {e}")),
+        };
+        let y = match back.as_f64() {
+            Some(y) => y,
+            None => return Check::Fail(format!("'{s}' parsed to a non-number")),
+        };
+        // -0.0 legitimately collapses to 0 through the i64 fast path;
+        // everything else must round-trip to the identical float (NaN
+        // compared via serialization).
+        let same = y.to_bits() == x.to_bits()
+            || (x == 0.0 && y == 0.0)
+            || (x.is_nan() && y.is_nan());
+        check(same, format!("{x:?} -> '{s}' -> {y:?}"))
+    });
+}

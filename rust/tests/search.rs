@@ -1,0 +1,227 @@
+//! Adaptive-search contract tests (`sweep --search`): the search must
+//! spend strictly fewer cells than the exhaustive grid when scenarios
+//! settle, a search forced to run the whole grid must reproduce the
+//! exhaustive pooled ranking exactly, an interrupted search resumed from
+//! a truncated `cells.jsonl` must converge to a `search.json`
+//! byte-identical to an uninterrupted run, and the resume guards must
+//! refuse spills written by a plain sweep or by a different search
+//! configuration.
+
+use std::fs;
+use std::path::PathBuf;
+
+use carbon_sim::experiments::search::{run_search, SearchConfig, SEARCH_FILE};
+use carbon_sim::experiments::sweep::{self, Format, ShardSpec, SweepSpec};
+use carbon_sim::experiments::sweep_stream::{self, CELLS_FILE};
+use carbon_sim::experiments::OUTPUT_SCHEMA_VERSION;
+use carbon_sim::sim::QueueKind;
+use carbon_sim::trace::azure::Workload;
+use carbon_sim::util::json::{parse, Value};
+
+fn base_spec() -> SweepSpec {
+    SweepSpec {
+        rates: vec![5.0, 9.0],
+        core_counts: vec![16],
+        policies: vec!["linux".into(), "proposed".into()],
+        workloads: vec![Workload::Mixed],
+        replicas: 1,
+        duration_s: 3.0,
+        n_prompt: 1,
+        n_token: 1,
+        seed: 77,
+    }
+}
+
+fn search_cfg() -> SearchConfig {
+    SearchConfig {
+        confidence: 0.7,
+        min_replicas: 2,
+        max_replicas: 8,
+        metric: "fred_mean_ghz".to_string(),
+    }
+}
+
+/// Fresh scratch dir under the system temp root.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("carbon_sim_search").join(name);
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn read_search_json(dir: &std::path::Path) -> (String, Value) {
+    let raw = fs::read_to_string(dir.join(SEARCH_FILE)).unwrap();
+    let doc = parse(&raw).unwrap();
+    (raw, doc)
+}
+
+#[test]
+fn adaptive_search_spends_fewer_cells_and_writes_a_consistent_verdict() {
+    let spec = base_spec();
+    let cfg = search_cfg();
+    let dir = scratch("adaptive");
+    let s = run_search(&spec, &cfg, 1, &dir, false, false, QueueKind::Calendar).unwrap();
+
+    let grid = cfg.grid(&spec);
+    assert_eq!(s.n_cells_exhaustive, grid.n_cells());
+    assert_eq!(s.n_scenarios, spec.rates.len(), "one base scenario per rate here");
+    assert_eq!(s.n_resumed, 0);
+    assert_eq!(s.n_run, s.n_cells_spent);
+    // Every base gets at least the first rung, never more than the budget.
+    let floor = s.n_scenarios * cfg.min_replicas * spec.policies.len();
+    assert!(s.n_cells_spent >= floor, "{} cells < first rung {floor}", s.n_cells_spent);
+    assert!(
+        s.n_cells_spent < s.n_cells_exhaustive,
+        "search spent the whole exhaustive budget ({} cells) — nothing settled early",
+        s.n_cells_spent
+    );
+
+    let (_, doc) = read_search_json(&dir);
+    assert_eq!(doc.str_or("kind", ""), "sweep-search");
+    assert_eq!(doc.usize_or("schema_version", 0), OUTPUT_SCHEMA_VERSION);
+    assert_eq!(doc.usize_or("n_cells_run", 0), s.n_cells_spent);
+    assert_eq!(doc.usize_or("n_cells_exhaustive", 0), s.n_cells_exhaustive);
+    assert_eq!(doc.usize_or("n_scenarios", 0), s.n_scenarios);
+    assert_eq!(doc.usize_or("n_settled", 99), s.n_settled);
+    assert_eq!(doc.str_or("spec_hash", ""), grid.spec_hash());
+    let ranking = doc.get("ranking").unwrap().as_arr().unwrap();
+    assert_eq!(ranking.len(), spec.policies.len(), "pooled ranking covers every policy");
+    let scenarios = doc.get("scenarios").unwrap().as_arr().unwrap();
+    assert_eq!(scenarios.len(), s.n_scenarios);
+    for sc in scenarios {
+        let run = sc.usize_or("replicas_run", 0);
+        assert!(run >= cfg.min_replicas, "scenario ran {run} < first rung");
+        assert!(run <= cfg.max_replicas);
+        assert_eq!(sc.usize_or("replicas_budget", 0), cfg.max_replicas);
+        let pairs = sc.get("pairs").unwrap().as_arr().unwrap();
+        assert_eq!(pairs.len(), spec.policies.len() - 1);
+        if sc.bool_or("settled", false) {
+            assert!(pairs.iter().all(|p| p.bool_or("resolved", false)));
+        }
+    }
+    // The spill stays a valid plain sweep spill: the resume scanner of
+    // the exhaustive engine accepts it as a partial grid.
+    let done = sweep_stream::scan_done(&dir.join(CELLS_FILE), &grid, &ShardSpec::full()).unwrap();
+    assert_eq!(done.iter().filter(|&&d| d).count(), s.n_cells_spent);
+}
+
+#[test]
+fn forced_full_search_reproduces_the_exhaustive_ranking() {
+    let spec = base_spec();
+    // min == max: a single rung that runs every cell of the grid, so the
+    // pooled ranking must equal the one computed from the exhaustive
+    // engine's report.
+    let cfg = SearchConfig {
+        confidence: 0.7,
+        min_replicas: 3,
+        max_replicas: 3,
+        metric: "fred_mean_ghz".to_string(),
+    };
+    let dir = scratch("forced-full");
+    let s = run_search(&spec, &cfg, 1, &dir, false, false, QueueKind::Calendar).unwrap();
+    assert_eq!(s.n_cells_spent, s.n_cells_exhaustive, "min == max must exhaust the grid");
+
+    let grid = cfg.grid(&spec);
+    let report = sweep::run_with_queue(&grid, 1, QueueKind::Calendar).unwrap();
+    let n_policies = grid.policies.len();
+    // Pool exactly like the search: a replica contributes only when the
+    // metric is finite for every policy of its scenario.
+    let mut sums = vec![0.0f64; n_policies];
+    let mut counts = vec![0u64; n_policies];
+    for scenario in 0..grid.n_scenarios() {
+        let vals: Vec<f64> = (0..n_policies)
+            .map(|p| {
+                let row = report.cells[scenario * n_policies + p].to_json();
+                row.get(&cfg.metric).and_then(Value::as_f64).unwrap_or(f64::NAN)
+            })
+            .collect();
+        if vals.iter().all(|v| v.is_finite()) {
+            for (p, v) in vals.iter().enumerate() {
+                sums[p] += v;
+                counts[p] += 1;
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n_policies).collect();
+    order.sort_by(|&a, &b| {
+        let (ma, mb) = (sums[a] / counts[a] as f64, sums[b] / counts[b] as f64);
+        ma.total_cmp(&mb).then(a.cmp(&b))
+    });
+    let expected: Vec<&str> = order.iter().map(|&p| grid.policies[p].as_str()).collect();
+
+    let (_, doc) = read_search_json(&dir);
+    let got: Vec<String> = doc
+        .get("ranking")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.str_or("policy", "").to_string())
+        .collect();
+    assert_eq!(got, expected, "search ranking diverged from the exhaustive pooled ranking");
+    for sc in doc.get("scenarios").unwrap().as_arr().unwrap() {
+        assert_eq!(sc.usize_or("replicas_run", 0), 3);
+    }
+}
+
+#[test]
+fn interrupted_search_resumes_to_identical_verdict_bytes() {
+    let spec = base_spec();
+    let mut cfg = search_cfg();
+    cfg.max_replicas = 4; // keep the grid small; the ladder is 2 → 4
+    let full_dir = scratch("resume-full");
+    run_search(&spec, &cfg, 1, &full_dir, false, false, QueueKind::Calendar).unwrap();
+    let (full_doc, _) = read_search_json(&full_dir);
+    let full_cells = fs::read(full_dir.join(CELLS_FILE)).unwrap();
+
+    // Interrupt: keep the header and the first three rows, plus a
+    // torn fourth row (a crash mid-append).
+    let cut_dir = scratch("resume-cut");
+    let keep: Vec<&[u8]> = full_cells.split_inclusive(|&b| b == b'\n').take(4).collect();
+    let mut torn = keep.concat();
+    torn.extend_from_slice(b"{\"index\":9,\"torn\":");
+    fs::write(cut_dir.join(CELLS_FILE), &torn).unwrap();
+
+    let s = run_search(&spec, &cfg, 1, &cut_dir, true, false, QueueKind::Calendar).unwrap();
+    assert_eq!(s.n_resumed, 3, "three complete rows survive the cut");
+    assert!(s.n_run > 0);
+    let (cut_doc, _) = read_search_json(&cut_dir);
+    assert_eq!(cut_doc, full_doc, "resumed search.json must be byte-identical");
+
+    // Resuming a finished search runs nothing and rewrites the same bytes.
+    let s2 = run_search(&spec, &cfg, 1, &cut_dir, true, false, QueueKind::Calendar).unwrap();
+    assert_eq!(s2.n_run, 0);
+    assert_eq!(s2.n_resumed, s.n_cells_spent);
+    let (again, _) = read_search_json(&cut_dir);
+    assert_eq!(again, full_doc);
+
+    // A different search configuration must be refused: it would replay
+    // a different rung ladder over the same spill.
+    let mut other = cfg.clone();
+    other.confidence = 0.9;
+    let err = run_search(&spec, &other, 1, &cut_dir, true, false, QueueKind::Calendar).unwrap_err();
+    assert!(err.contains("use a fresh --out-dir"), "unexpected error: {err}");
+}
+
+#[test]
+fn plain_sweep_spills_are_refused_on_search_resume() {
+    // A spill written by the plain streaming engine has no `search`
+    // header object; resuming it as a search must fail loudly instead
+    // of replaying a ladder over foreign rows.
+    let spec = SweepSpec { rates: vec![5.0], policies: vec!["linux".into()], ..base_spec() };
+    let dir = scratch("plain-spill");
+    sweep_stream::run_streaming_with(
+        &spec,
+        1,
+        &dir,
+        &ShardSpec::full(),
+        Format::Json,
+        false,
+        false,
+        QueueKind::Calendar,
+    )
+    .unwrap();
+    let cfg = SearchConfig::defaults_for(&spec);
+    let err = run_search(&spec, &cfg, 1, &dir, true, false, QueueKind::Calendar).unwrap_err();
+    assert!(err.contains("plain"), "unexpected error: {err}");
+}

@@ -1,0 +1,169 @@
+//! Property tests for the statistics foundations (`util::stats`) on the
+//! in-tree `forall` harness. These are the invariants the sweep and
+//! search engines lean on: percentiles that interpolate monotonically and
+//! never leave the data range, NaN handling that is consistent between
+//! [`percentile`] and [`Summary::of`], a streaming [`Welford`] that
+//! agrees with the batch formulas, and a [`Histogram`] that never loses
+//! a sample. `CARBON_SIM_PROPTEST_CASES` raises the case count (CI runs
+//! these suites at depth); `CARBON_SIM_PROPTEST_SEED` replays a failure.
+
+use carbon_sim::util::proptest::{check, forall, Check};
+use carbon_sim::util::stats::{
+    mean, percentile, percentile_sorted, variance, Histogram, Summary, Welford,
+};
+
+/// Absolute-plus-relative tolerance: float noise grows with magnitude.
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn percentile_sorted_is_monotone_and_bounded() {
+    forall(500, 101, |g| {
+        let n = g.size(1, 128);
+        let mut v = g.vec_f64(n, -1e6, 1e6);
+        v.sort_by(f64::total_cmp);
+        let (mut p_lo, mut p_hi) = (g.f64(0.0, 100.0), g.f64(0.0, 100.0));
+        if p_lo > p_hi {
+            std::mem::swap(&mut p_lo, &mut p_hi);
+        }
+        let (q_lo, q_hi) = (percentile_sorted(&v, p_lo), percentile_sorted(&v, p_hi));
+        let (min, max) = (v[0], *v.last().unwrap());
+        // Linear interpolation can overshoot a segment endpoint by float
+        // noise, so monotonicity and the bounds get an epsilon.
+        let eps = 1e-9 * (1.0 + max.abs().max(min.abs()));
+        if q_lo > q_hi + eps {
+            return Check::Fail(format!(
+                "not monotone: p{p_lo}={q_lo} > p{p_hi}={q_hi} on {n} samples"
+            ));
+        }
+        for (p, q) in [(p_lo, q_lo), (p_hi, q_hi)] {
+            if q < min - eps || q > max + eps {
+                return Check::Fail(format!("p{p}={q} outside [{min}, {max}]"));
+            }
+        }
+        let (q0, q100) = (percentile_sorted(&v, 0.0), percentile_sorted(&v, 100.0));
+        check(
+            q0 == min && q100 == max,
+            format!("endpoints: p0={q0} p100={q100} vs [{min}, {max}]"),
+        )
+    });
+}
+
+#[test]
+fn percentile_is_permutation_invariant_and_matches_summary() {
+    forall(500, 102, |g| {
+        let n = g.size(0, 96);
+        let mut xs = g.vec_f64(n, -1e3, 1e3);
+        // Lace in NaNs: both functions must exclude the same samples.
+        for x in xs.iter_mut() {
+            if g.rng.bool(0.15) {
+                *x = f64::NAN;
+            }
+        }
+        let mut shuffled = xs.clone();
+        g.rng.shuffle(&mut shuffled);
+        for p in [0.0, 1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let (a, b) = (percentile(&xs, p), percentile(&shuffled, p));
+            // Bitwise equality: both sort the same filtered values, so
+            // the interpolation is the identical float expression.
+            if a.to_bits() != b.to_bits() {
+                return Check::Fail(format!("p{p}: {a} (original) != {b} (shuffled)"));
+            }
+        }
+        let s = Summary::of(&xs);
+        let nan_count = xs.iter().filter(|x| x.is_nan()).count();
+        if s.n + s.nan_count != xs.len() || s.nan_count != nan_count {
+            return Check::Fail(format!(
+                "counts: n={} nan={} over {} inputs ({nan_count} NaN)",
+                s.n, s.nan_count, xs.len()
+            ));
+        }
+        for (label, summary_q, p) in [
+            ("p1", s.p1, 1.0),
+            ("p25", s.p25, 25.0),
+            ("p50", s.p50, 50.0),
+            ("p75", s.p75, 75.0),
+            ("p90", s.p90, 90.0),
+            ("p99", s.p99, 99.0),
+        ] {
+            let direct = percentile(&xs, p);
+            if summary_q.to_bits() != direct.to_bits() {
+                return Check::Fail(format!("{label}: Summary {summary_q} != percentile {direct}"));
+            }
+        }
+        check(
+            s.min == percentile(&xs, 0.0) && s.max == percentile(&xs, 100.0),
+            format!("min/max: [{}, {}]", s.min, s.max),
+        )
+    });
+}
+
+#[test]
+fn welford_matches_batch_mean_and_variance() {
+    forall(500, 103, |g| {
+        let n = g.size(1, 256);
+        // An offset stresses the naive-sum cancellation Welford avoids.
+        let offset = g.f64(-1e5, 1e5);
+        let xs: Vec<f64> = g.vec_f64(n, -100.0, 100.0).iter().map(|x| x + offset).collect();
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.add(x);
+        }
+        if w.count() != n as u64 {
+            return Check::Fail(format!("count {} != {n}", w.count()));
+        }
+        let (bm, bv) = (mean(&xs), variance(&xs));
+        if !close(w.mean(), bm, 1e-9) {
+            return Check::Fail(format!("mean: streaming {} vs batch {bm}", w.mean()));
+        }
+        check(
+            close(w.variance(), bv, 1e-9),
+            format!("variance: streaming {} vs batch {bv} (n={n})", w.variance()),
+        )
+    });
+}
+
+#[test]
+fn histogram_conserves_samples_and_normalizes() {
+    forall(500, 104, |g| {
+        let lo = g.f64(-50.0, 50.0);
+        let hi = lo + g.f64(0.0, 100.0) + 1e-3;
+        let nbins = g.size(1, 24);
+        let mut h = Histogram::new(lo, hi, nbins);
+        let n = g.size(0, 200);
+        let mut fed = 0u64;
+        for _ in 0..n {
+            // Mix in-range values with the edge cases the doc promises
+            // to handle: out-of-range, ±Inf (clamped), NaN (counted).
+            let x = match g.size(0, 9) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => f64::NEG_INFINITY,
+                _ => g.f64(lo - 20.0, hi + 20.0),
+            };
+            h.add(x);
+            fed += 1;
+        }
+        if h.count + h.nan_count != fed {
+            return Check::Fail(format!(
+                "lost samples: count={} nan={} fed={fed}",
+                h.count, h.nan_count
+            ));
+        }
+        let binned: u64 = h.bins.iter().sum();
+        if binned != h.count {
+            return Check::Fail(format!("bins sum {binned} != count {}", h.count));
+        }
+        let d = h.density();
+        if d.len() != nbins {
+            return Check::Fail(format!("density has {} bins, expected {nbins}", d.len()));
+        }
+        let total: f64 = d.iter().sum();
+        if h.count > 0 {
+            check(close(total, 1.0, 1e-9), format!("density sums to {total} (count={})", h.count))
+        } else {
+            check(total == 0.0, format!("empty histogram density sums to {total}"))
+        }
+    });
+}
