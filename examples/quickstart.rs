@@ -29,7 +29,11 @@ fn main() {
             f0_override: Some(f0.clone()),
             ..base_cfg.clone()
         };
-        let r = Cluster::new(cfg).run(&trace);
+        // `Cluster::run` is wall-clock-free; callers that want wall time
+        // stamp it themselves.
+        let wall_start = std::time::Instant::now();
+        let mut r = Cluster::new(cfg).run(&trace);
+        r.wall_time_s = wall_start.elapsed().as_secs_f64();
         println!(
             "\n[{policy}] completed {} requests, {} events in {:.2}s wall",
             r.completed_requests, r.events_processed, r.wall_time_s

@@ -10,9 +10,9 @@ fn main() {
     let pts = fig5::run(40);
     fig5::print(&pts);
     // Asymmetry + saturation checks.
-    let at = |e: f64| pts.iter().min_by(|a, b| {
-        (a.e - e).abs().partial_cmp(&(b.e - e).abs()).unwrap()
-    }).unwrap().f;
+    let at = |e: f64| {
+        pts.iter().min_by(|a, b| (a.e - e).abs().total_cmp(&(b.e - e).abs())).unwrap().f
+    };
     assert!(at(-0.2).abs() > at(0.2).abs(), "oversubscription branch must react faster");
     assert!(at(1.0) > 0.99 && at(-1.0) < -0.99, "saturation at ±1");
     println!("\nfig5 shape: OK (asymmetric piecewise tan/arctan)");

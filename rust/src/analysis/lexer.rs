@@ -1,0 +1,427 @@
+//! A minimal, dependency-free Rust lexer for the `simlint` pass.
+//!
+//! Same offline philosophy as `util/json.rs`: no proc-macro crates, no
+//! `syn` — just enough tokenization that the rules in
+//! [`super::rules`] can tell *code* apart from comments and string
+//! literals. A grep-based lint would flag `partial_cmp` inside a doc
+//! comment or a string constant; this lexer never does, because rules
+//! only ever see the comment-free token stream.
+//!
+//! What it understands (everything the rules need, nothing more):
+//!
+//! * line comments (`//`, `///`, `//!`) — kept in the stream so the
+//!   pragma scanner can read `// simlint: allow(..) -- reason`;
+//! * block comments, **nested** (`/* /* */ */`), possibly multi-line;
+//! * string literals with escapes, byte strings (`b"…"`), and raw /
+//!   raw-byte strings with any hash depth (`r#"…"#`, `br##"…"##`);
+//! * char and byte-char literals (`'x'`, `'\n'`, `b'\0'`) vs
+//!   lifetimes (`'a`, `'static`) — the classic single-quote ambiguity;
+//! * raw identifiers (`r#match`), plain identifiers, numbers (with
+//!   type suffixes, and `5.into()` lexing as `5` `.` `into` exactly
+//!   like rustc), and single-character punctuation.
+//!
+//! The lexer is intentionally forgiving: an unterminated literal at
+//! EOF simply ends the token rather than erroring, because the input
+//! is the repo's own source (which must already compile to reach CI)
+//! and lint fixtures (which need not compile at all).
+
+/// Token class. Rules match on `(kind, text)` pairs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`partial_cmp`, `for`, `in`, `spawn`, …).
+    Ident,
+    /// Numeric literal (`5`, `0xBE7C`, `1e-9`, `2.5f64`).
+    Number,
+    /// String literal of any flavour; `text` is the *content* (no
+    /// quotes, no prefix), so the schema rule can compare it directly.
+    Str,
+    /// Char or byte-char literal; content without quotes.
+    Char,
+    /// Lifetime (`'a`); content without the leading quote.
+    Lifetime,
+    /// Single punctuation character (`.`, `:`, `(`, `{`, `&`, …).
+    Punct,
+    /// `// …` comment, full text including the slashes (pragmas).
+    LineComment,
+    /// `/* … */` comment, full text; may span lines.
+    BlockComment,
+}
+
+/// One lexed token with the 1-indexed source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+}
+
+impl Cursor {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<char> {
+        self.chars.get(self.pos + off).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into a token stream. Never fails: unknown characters
+/// become single-char [`TokKind::Punct`] tokens and unterminated
+/// literals end at EOF.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut cur = Cursor { chars: src.chars().collect(), pos: 0, line: 1 };
+    let mut toks = Vec::new();
+    while let Some(c) = cur.peek() {
+        let line = cur.line;
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        if c == '/' && cur.peek_at(1) == Some('/') {
+            toks.push(Tok { kind: TokKind::LineComment, text: line_comment(&mut cur), line });
+            continue;
+        }
+        if c == '/' && cur.peek_at(1) == Some('*') {
+            toks.push(Tok { kind: TokKind::BlockComment, text: block_comment(&mut cur), line });
+            continue;
+        }
+        if c == '"' {
+            toks.push(Tok { kind: TokKind::Str, text: cooked_string(&mut cur), line });
+            continue;
+        }
+        // `r"…"`, `r#"…"#`, `r#ident` — raw string vs raw identifier.
+        if c == 'r' {
+            if let Some(hashes) = raw_string_hashes(&cur, 1) {
+                toks.push(Tok { kind: TokKind::Str, text: raw_string(&mut cur, 1, hashes), line });
+                continue;
+            }
+            if cur.peek_at(1) == Some('#') && cur.peek_at(2).is_some_and(is_ident_start) {
+                cur.bump(); // r
+                cur.bump(); // #
+                toks.push(Tok { kind: TokKind::Ident, text: ident(&mut cur), line });
+                continue;
+            }
+        }
+        // `b"…"`, `br#"…"#`, `b'…'` — byte-literal prefixes.
+        if c == 'b' {
+            if cur.peek_at(1) == Some('"') {
+                cur.bump(); // b
+                toks.push(Tok { kind: TokKind::Str, text: cooked_string(&mut cur), line });
+                continue;
+            }
+            if cur.peek_at(1) == Some('r') {
+                if let Some(hashes) = raw_string_hashes(&cur, 2) {
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: raw_string(&mut cur, 2, hashes),
+                        line,
+                    });
+                    continue;
+                }
+            }
+            if cur.peek_at(1) == Some('\'') {
+                cur.bump(); // b
+                toks.push(Tok { kind: TokKind::Char, text: char_literal(&mut cur), line });
+                continue;
+            }
+        }
+        if c == '\'' {
+            // Lifetime unless it closes as a char literal: `'\…'` and
+            // `'x'` are chars; `'a` / `'static` (no closing quote after
+            // the first ident char run) are lifetimes.
+            let is_char = cur.peek_at(1) == Some('\\')
+                || (cur.peek_at(1).is_some() && cur.peek_at(2) == Some('\''));
+            if is_char {
+                toks.push(Tok { kind: TokKind::Char, text: char_literal(&mut cur), line });
+            } else {
+                cur.bump(); // '
+                toks.push(Tok { kind: TokKind::Lifetime, text: ident(&mut cur), line });
+            }
+            continue;
+        }
+        if is_ident_start(c) {
+            toks.push(Tok { kind: TokKind::Ident, text: ident(&mut cur), line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            toks.push(Tok { kind: TokKind::Number, text: number(&mut cur), line });
+            continue;
+        }
+        cur.bump();
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+    }
+    toks
+}
+
+fn line_comment(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    while let Some(c) = cur.peek() {
+        if c == '\n' {
+            break;
+        }
+        s.push(c);
+        cur.bump();
+    }
+    s
+}
+
+fn block_comment(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    let mut depth = 0usize;
+    while let Some(c) = cur.peek() {
+        if c == '/' && cur.peek_at(1) == Some('*') {
+            depth += 1;
+            s.push_str("/*");
+            cur.bump();
+            cur.bump();
+            continue;
+        }
+        if c == '*' && cur.peek_at(1) == Some('/') {
+            depth -= 1;
+            s.push_str("*/");
+            cur.bump();
+            cur.bump();
+            if depth == 0 {
+                break;
+            }
+            continue;
+        }
+        s.push(c);
+        cur.bump();
+    }
+    s
+}
+
+/// Consume a `"…"` body (opening quote under the cursor); returns the
+/// content with escape sequences left verbatim.
+fn cooked_string(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    cur.bump(); // opening "
+    while let Some(c) = cur.bump() {
+        if c == '\\' {
+            s.push(c);
+            if let Some(e) = cur.bump() {
+                s.push(e);
+            }
+            continue;
+        }
+        if c == '"' {
+            break;
+        }
+        s.push(c);
+    }
+    s
+}
+
+/// If the cursor sits on a raw-string opener at `prefix_len` chars in
+/// (`r` = 1, `br` = 2), return its hash count.
+fn raw_string_hashes(cur: &Cursor, prefix_len: usize) -> Option<usize> {
+    let mut n = 0;
+    while cur.peek_at(prefix_len + n) == Some('#') {
+        n += 1;
+    }
+    (cur.peek_at(prefix_len + n) == Some('"')).then_some(n)
+}
+
+fn raw_string(cur: &mut Cursor, prefix_len: usize, hashes: usize) -> String {
+    for _ in 0..prefix_len + hashes + 1 {
+        cur.bump(); // prefix, hashes, opening quote
+    }
+    let mut s = String::new();
+    while let Some(c) = cur.bump() {
+        if c == '"' {
+            let closed = (0..hashes).all(|i| cur.peek_at(i) == Some('#'));
+            if closed {
+                for _ in 0..hashes {
+                    cur.bump();
+                }
+                break;
+            }
+        }
+        s.push(c);
+    }
+    s
+}
+
+fn char_literal(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    cur.bump(); // opening '
+    while let Some(c) = cur.bump() {
+        if c == '\\' {
+            s.push(c);
+            if let Some(e) = cur.bump() {
+                s.push(e);
+            }
+            continue;
+        }
+        if c == '\'' {
+            break;
+        }
+        s.push(c);
+    }
+    s
+}
+
+fn ident(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    while let Some(c) = cur.peek() {
+        if !is_ident_continue(c) {
+            break;
+        }
+        s.push(c);
+        cur.bump();
+    }
+    s
+}
+
+/// Numbers: digits, `_`, hex/suffix letters; a `.` joins only when a
+/// digit follows, so `5.into()` lexes as `5` `.` `into` — exactly the
+/// boundary the schema-version rule relies on. `1e-9` keeps its sign.
+fn number(cur: &mut Cursor) -> String {
+    let mut s = String::new();
+    while let Some(c) = cur.peek() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            s.push(c);
+            cur.bump();
+            // Exponent sign: `1e-9`, `2E+5`.
+            if (c == 'e' || c == 'E')
+                && matches!(cur.peek(), Some('+') | Some('-'))
+                && cur.peek_at(1).is_some_and(|d| d.is_ascii_digit())
+            {
+                s.push(cur.bump().unwrap());
+            }
+            continue;
+        }
+        if c == '.' && cur.peek_at(1).is_some_and(|d| d.is_ascii_digit()) {
+            s.push(c);
+            cur.bump();
+            continue;
+        }
+        break;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_are_isolated_from_code() {
+        let toks = kinds("a.partial_cmp(b) // a.partial_cmp(b)\n/* partial_cmp */ x");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, ["a", "partial_cmp", "b", "x"]);
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::LineComment).count(), 1);
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::BlockComment).count(), 1);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("/* outer /* inner */ still comment */ code");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1], (TokKind::Ident, "code".into()));
+    }
+
+    #[test]
+    fn strings_hide_their_content_from_code() {
+        let toks = kinds(r#"let s = "Instant::now() inside a string";"#);
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Str && t.contains("Instant")));
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "s"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = kinds(r###"r#"raw "quoted" body"# b"bytes" br##"deep"##"###);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Str)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(strs, [r#"raw "quoted" body"#, "bytes", "deep"]);
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let toks = kinds(r#""a \" b" tail"#);
+        assert_eq!(toks[0], (TokKind::Str, r#"a \" b"#.into()));
+        assert_eq!(toks[1], (TokKind::Ident, "tail".into()));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds(r"fn f<'a>(x: &'a str) { let c = 'x'; let n = '\n'; }");
+        let lifetimes = toks.iter().filter(|(k, _)| *k == TokKind::Lifetime).count();
+        let chars = toks.iter().filter(|(k, _)| *k == TokKind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn number_then_dot_method_splits_like_rustc() {
+        let toks = kinds("5.into() 2.5f64 0xBE7C 1e-9");
+        assert_eq!(toks[0], (TokKind::Number, "5".into()));
+        assert_eq!(toks[1], (TokKind::Punct, ".".into()));
+        assert_eq!(toks[2], (TokKind::Ident, "into".into()));
+        assert_eq!(toks[5], (TokKind::Number, "2.5f64".into()));
+        assert_eq!(toks[6], (TokKind::Number, "0xBE7C".into()));
+        assert_eq!(toks[7], (TokKind::Number, "1e-9".into()));
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let toks = kinds("r#match r#fn");
+        assert_eq!(toks[0], (TokKind::Ident, "match".into()));
+        assert_eq!(toks[1], (TokKind::Ident, "fn".into()));
+    }
+
+    #[test]
+    fn line_numbers_are_one_indexed_and_track_newlines() {
+        let toks = lex("a\nb\n/* c\nd */\ne");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3); // block comment starts on line 3
+        assert_eq!(toks[3].line, 5); // `e` after the two-line comment
+    }
+
+    #[test]
+    fn unterminated_string_ends_at_eof() {
+        let toks = kinds("\"never closed");
+        assert_eq!(toks, vec![(TokKind::Str, "never closed".into())]);
+    }
+}

@@ -1,0 +1,429 @@
+//! `simlint` — the repo's determinism & invariants static-analysis
+//! pass (`carbon-sim lint`).
+//!
+//! Every headline number this crate reproduces rests on byte-identity
+//! contracts (same sweep report at any `--threads`, shard count,
+//! `--queue` kind, or resume point). Those contracts in turn rest on
+//! coding rules that, before this pass, were tribal knowledge: float
+//! sorts must use `total_cmp`, hash containers must never be iterated
+//! on a result path, the simulator core must never read the wall
+//! clock, concurrency must flow through the sanctioned layers, and
+//! every `schema_version` stamp must come from
+//! [`crate::experiments::OUTPUT_SCHEMA_VERSION`]. This module makes
+//! them machine-checked: a dependency-free scanner (hand-rolled
+//! [`lexer`], same offline philosophy as `util/json.rs`) walks the
+//! source tree and reports named, `file:line`-addressed findings.
+//!
+//! * [`lexer`] — comment- and string-literal-aware tokenizer.
+//! * [`rules`] — the five named rules and their allowlists.
+//! * this module — file walking, pragma suppression, the [`LintReport`]
+//!   (text and schema-versioned `lint-report` JSON), and the library
+//!   API the CLI and tests drive.
+//!
+//! # Suppression pragma
+//!
+//! ```text
+//! // simlint: allow(no-wall-clock) -- measuring the demo's own latency
+//! ```
+//!
+//! A pragma suppresses the named rule(s) on its own line **and the
+//! line below it** (so it can sit above the flagged statement). The
+//! reason after ` -- ` is mandatory and the rule names must exist —
+//! a malformed pragma is itself a finding (rule `simlint-pragma`) and
+//! suppresses nothing. See `docs/static-analysis.md` for the full
+//! contract each rule protects and how to add a rule.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Value;
+
+pub mod lexer;
+pub mod rules;
+
+use lexer::{Tok, TokKind};
+use rules::SchemaDef;
+
+/// Rule name reserved for malformed suppression pragmas.
+pub const RULE_PRAGMA: &str = "simlint-pragma";
+
+/// One lint finding, addressed as `path:line` in rule `rule`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// The violated rule (one of [`rules::RULE_NAMES`] or
+    /// [`RULE_PRAGMA`]).
+    pub rule: &'static str,
+    /// `/`-normalized path as scanned (relative to the lint root's
+    /// parent, e.g. `src/policy/proposed.rs`).
+    pub path: String,
+    /// 1-indexed source line.
+    pub line: usize,
+    /// Human-readable explanation with the suggested fix.
+    pub message: String,
+}
+
+/// The result of one lint run: findings sorted by `(path, line, rule)`
+/// plus the scan size, renderable as text or as the `lint-report` JSON
+/// document (`docs/output-schemas.md` §6).
+#[derive(Clone, Debug)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// True when the scanned tree is violation-free (exit code 0).
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// One `path:line: [rule] message` line per finding plus a summary
+    /// tail line; stable across runs (findings are sorted).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule, f.message));
+        }
+        if self.is_clean() {
+            s.push_str(&format!(
+                "simlint: clean — {} files scanned, {} rules, 0 findings\n",
+                self.files_scanned,
+                rules::RULE_NAMES.len()
+            ));
+        } else {
+            s.push_str(&format!(
+                "simlint: {} finding(s) in {} files scanned\n",
+                self.findings.len(),
+                self.files_scanned
+            ));
+        }
+        s
+    }
+
+    /// The machine-readable `lint-report` document, stamped with
+    /// [`crate::experiments::OUTPUT_SCHEMA_VERSION`] like every other
+    /// output this crate emits.
+    pub fn to_json(&self) -> Value {
+        let findings: Vec<Value> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Value::obj(vec![
+                    ("rule", f.rule.into()),
+                    ("path", f.path.as_str().into()),
+                    ("line", f.line.into()),
+                    ("message", f.message.as_str().into()),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("kind", "lint-report".into()),
+            ("schema_version", crate::experiments::OUTPUT_SCHEMA_VERSION.into()),
+            ("files_scanned", self.files_scanned.into()),
+            ("clean", self.is_clean().into()),
+            ("findings", Value::Arr(findings)),
+        ])
+    }
+}
+
+/// The default scan roots when the CLI gets no path arguments: the
+/// crate's source tree, probed as `rust/src` (repo root, the CI working
+/// directory) then `src` (package root, the `cargo test` working
+/// directory).
+pub fn default_roots() -> Result<Vec<PathBuf>, String> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return Ok(vec![p]);
+        }
+    }
+    Err("no rust/src or src directory under the working directory; pass paths to scan".to_string())
+}
+
+/// Lint `.rs` files under `roots` (files are taken as-is, directories
+/// are walked recursively in sorted order, so the report is
+/// deterministic). IO failures are hard errors, not findings: a
+/// vanished file means the scan itself is wrong.
+pub fn lint_tree(roots: &[PathBuf]) -> Result<LintReport, String> {
+    let mut files = Vec::new();
+    for root in roots {
+        collect_rs_files(root, &mut files)?;
+    }
+    let mut findings = Vec::new();
+    let mut schema_def: Option<SchemaDef> = None;
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let rel = normalize(path);
+        let toks = lexer::lex(&src);
+        let pragmas = Pragmas::collect(&toks, &rel, &mut findings);
+        let (file_findings, def) = rules::check_file(&rel, &toks);
+        if def.is_some() {
+            schema_def = def;
+        }
+        findings.extend(file_findings.into_iter().filter(|f| !pragmas.suppresses(f)));
+    }
+    if let Some(def) = &schema_def {
+        check_docs_mention(def, &mut findings);
+    }
+    fn key(f: &Finding) -> (&str, usize, &str) {
+        (f.path.as_str(), f.line, f.rule)
+    }
+    findings.sort_by(|a, b| key(a).cmp(&key(b)));
+    Ok(LintReport { findings, files_scanned: files.len() })
+}
+
+/// `schema-version-sync`, docs half: `docs/output-schemas.md` (probed
+/// relative to the working directory, repo root or package root) must
+/// mention the version the scanned tree defines, as the literal phrase
+/// `schema_version N`.
+fn check_docs_mention(def: &SchemaDef, findings: &mut Vec<Finding>) {
+    let doc_path = ["docs/output-schemas.md", "../docs/output-schemas.md"]
+        .iter()
+        .map(Path::new)
+        .find(|p| p.is_file());
+    let Some(doc_path) = doc_path else {
+        let msg = "docs/output-schemas.md not found next to the scanned tree; the schema \
+                   document must ship with the code that stamps the version";
+        findings.push(Finding {
+            rule: rules::RULE_SCHEMA_VERSION_SYNC,
+            path: def.path.clone(),
+            line: def.line,
+            message: msg.to_string(),
+        });
+        return;
+    };
+    let doc = fs::read_to_string(doc_path).unwrap_or_default();
+    let phrase = format!("schema_version {}", def.version);
+    if !doc.contains(&phrase) {
+        findings.push(Finding {
+            rule: rules::RULE_SCHEMA_VERSION_SYNC,
+            path: def.path.clone(),
+            line: def.line,
+            message: format!(
+                "OUTPUT_SCHEMA_VERSION is {} but docs/output-schemas.md never says \
+                 `{phrase}` — update the schema document in the same change that bumps \
+                 the constant",
+                def.version
+            ),
+        });
+    }
+}
+
+fn normalize(path: &Path) -> String {
+    path.to_string_lossy().replace('\\', "/")
+}
+
+fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(());
+    }
+    if !root.is_dir() {
+        return Err(format!("lint path {} is neither a file nor a directory", root.display()));
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(root)
+        .map_err(|e| format!("reading {}: {e}", root.display()))?
+        .map(|r| r.map(|e| e.path()))
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("reading {}: {e}", root.display()))?;
+    entries.sort();
+    for entry in entries {
+        if entry.is_dir() {
+            collect_rs_files(&entry, out)?;
+        } else if entry.extension().is_some_and(|x| x == "rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}
+
+/// Parsed suppression pragmas of one file: rule name → suppressed
+/// lines. A pragma at line L covers L and L+1.
+struct Pragmas {
+    covered: BTreeMap<&'static str, Vec<usize>>,
+}
+
+impl Pragmas {
+    /// Scan the full token stream (comments included) for
+    /// `// simlint: allow(rule, …) -- reason` directives; malformed
+    /// directives become findings under [`RULE_PRAGMA`] and suppress
+    /// nothing.
+    fn collect(toks: &[Tok], rel: &str, findings: &mut Vec<Finding>) -> Pragmas {
+        let mut covered: BTreeMap<&'static str, Vec<usize>> = BTreeMap::new();
+        for t in toks {
+            if t.kind != TokKind::LineComment {
+                continue;
+            }
+            let body = t.text.trim_start_matches('/').trim();
+            let Some(directive) = body.strip_prefix("simlint:") else { continue };
+            match parse_pragma(directive.trim()) {
+                Ok(names) => {
+                    for name in names {
+                        covered.entry(name).or_default().extend([t.line, t.line + 1]);
+                    }
+                }
+                Err(msg) => findings.push(Finding {
+                    rule: RULE_PRAGMA,
+                    path: rel.to_string(),
+                    line: t.line,
+                    message: msg,
+                }),
+            }
+        }
+        Pragmas { covered }
+    }
+
+    fn suppresses(&self, f: &Finding) -> bool {
+        self.covered.get(f.rule).is_some_and(|lines| lines.contains(&f.line))
+    }
+}
+
+/// Parse the directive after `simlint:`. Grammar:
+/// `allow(<rule>[, <rule>]*) -- <non-empty reason>`.
+fn parse_pragma(directive: &str) -> Result<Vec<&'static str>, String> {
+    let Some(rest) = directive.strip_prefix("allow(") else {
+        return Err(format!(
+            "malformed simlint pragma `{directive}`: expected `allow(<rule>) -- <reason>`"
+        ));
+    };
+    let Some((inside, tail)) = rest.split_once(')') else {
+        return Err("malformed simlint pragma: unclosed `allow(`".to_string());
+    };
+    let tail = tail.trim();
+    let reason = tail.strip_prefix("--").map(str::trim).unwrap_or("");
+    if !tail.starts_with("--") || reason.is_empty() {
+        return Err("simlint pragma missing ` -- <reason>` (the reason is mandatory)".to_string());
+    }
+    let mut names = Vec::new();
+    for raw in inside.split(',') {
+        let raw = raw.trim();
+        match rules::RULE_NAMES.iter().find(|n| **n == raw) {
+            Some(name) => names.push(*name),
+            None => {
+                return Err(format!(
+                    "simlint pragma names unknown rule `{raw}` (known: {})",
+                    rules::RULE_NAMES.join(", ")
+                ));
+            }
+        }
+    }
+    if names.is_empty() {
+        return Err("simlint pragma allows no rules: name at least one".to_string());
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_src(rel: &str, src: &str) -> Vec<Finding> {
+        let toks = lexer::lex(src);
+        let mut findings = Vec::new();
+        let pragmas = Pragmas::collect(&toks, rel, &mut findings);
+        let (file_findings, _) = rules::check_file(rel, &toks);
+        findings.extend(file_findings.into_iter().filter(|f| !pragmas.suppresses(f)));
+        findings
+    }
+
+    #[test]
+    fn pragma_on_line_above_suppresses() {
+        let src = "fn f() {\n\
+                   // simlint: allow(no-wall-clock) -- test fixture timing its own harness\n\
+                   let t = std::time::Instant::now();\n\
+                   }\n";
+        assert!(lint_src("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_on_same_line_suppresses() {
+        let src = "let t = std::time::Instant::now(); \
+                   // simlint: allow(no-wall-clock) -- demo latency probe\n";
+        assert!(lint_src("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_does_not_leak_past_the_next_line() {
+        let src = "// simlint: allow(no-wall-clock) -- only covers the next line\n\
+                   let a = 1;\n\
+                   let t = std::time::Instant::now();\n";
+        let found = lint_src("src/x.rs", src);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, rules::RULE_NO_WALL_CLOCK);
+        assert_eq!(found[0].line, 3);
+    }
+
+    #[test]
+    fn pragma_without_reason_is_a_finding_and_suppresses_nothing() {
+        let src = "// simlint: allow(no-wall-clock)\n\
+                   let t = std::time::Instant::now();\n";
+        let found = lint_src("src/x.rs", src);
+        let rules_hit: Vec<&str> = found.iter().map(|f| f.rule).collect();
+        assert!(rules_hit.contains(&RULE_PRAGMA), "{rules_hit:?}");
+        assert!(rules_hit.contains(&rules::RULE_NO_WALL_CLOCK), "{rules_hit:?}");
+    }
+
+    #[test]
+    fn pragma_with_unknown_rule_is_a_finding() {
+        let found = lint_src("src/x.rs", "// simlint: allow(no-such-rule) -- typo\n");
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, RULE_PRAGMA);
+        assert!(found[0].message.contains("no-such-rule"), "{}", found[0].message);
+    }
+
+    #[test]
+    fn pragma_suppresses_only_the_named_rule() {
+        let src = "// simlint: allow(no-stray-threads) -- wrong rule named\n\
+                   let t = std::time::Instant::now();\n";
+        let found = lint_src("src/x.rs", src);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, rules::RULE_NO_WALL_CLOCK);
+    }
+
+    #[test]
+    fn multi_rule_pragma_parses() {
+        let names =
+            parse_pragma("allow(no-wall-clock, no-stray-threads) -- harness does both").unwrap();
+        assert_eq!(names.len(), 2);
+    }
+
+    #[test]
+    fn report_renders_sorted_text_and_json() {
+        let report = LintReport {
+            findings: vec![
+                Finding {
+                    rule: rules::RULE_NO_WALL_CLOCK,
+                    path: "src/a.rs".into(),
+                    line: 3,
+                    message: "m1".into(),
+                },
+                Finding {
+                    rule: rules::RULE_NO_MAP_ITERATION,
+                    path: "src/b.rs".into(),
+                    line: 9,
+                    message: "m2".into(),
+                },
+            ],
+            files_scanned: 2,
+        };
+        let text = report.render_text();
+        assert!(text.contains("src/a.rs:3: [no-wall-clock] m1"), "{text}");
+        assert!(text.contains("2 finding(s) in 2 files"), "{text}");
+        let json = report.to_json();
+        assert_eq!(json.str_or("kind", ""), "lint-report");
+        let v = crate::experiments::OUTPUT_SCHEMA_VERSION;
+        assert_eq!(json.usize_or("schema_version", 0), v);
+        assert!(!json.bool_or("clean", true));
+        assert_eq!(json.get("findings").and_then(Value::as_arr).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn clean_report_says_clean() {
+        let report = LintReport { findings: Vec::new(), files_scanned: 7 };
+        assert!(report.is_clean());
+        assert!(report.render_text().contains("clean — 7 files"));
+        assert!(report.to_json().bool_or("clean", false));
+    }
+}

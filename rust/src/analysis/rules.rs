@@ -1,0 +1,518 @@
+//! The `simlint` rule set: one function per named rule, all operating
+//! on the comment-free token stream from [`super::lexer`].
+//!
+//! Every rule here guards a determinism or schema invariant the repo's
+//! byte-identity contracts depend on (same sweep report at any
+//! `--threads`, shard count, queue kind, or resume point — see
+//! `docs/static-analysis.md` for the full rationale per rule):
+//!
+//! * [`no-float-partial-cmp`](RULE_NO_FLOAT_PARTIAL_CMP) — float
+//!   orderings must use `total_cmp`; `partial_cmp(..).unwrap()` panics
+//!   on the first NaN and `max_by`/`min_by` silently misorder.
+//! * [`no-map-iteration`](RULE_NO_MAP_ITERATION) — iterating a
+//!   `HashMap`/`HashSet` observes the randomized hash order; keyed
+//!   lookup stays allowed (`cpu/package.rs::task_core` is the model).
+//! * [`no-wall-clock`](RULE_NO_WALL_CLOCK) — `Instant::now` /
+//!   `SystemTime::now` only in the benchmarking/serving layers.
+//! * [`no-stray-threads`](RULE_NO_STRAY_THREADS) — thread/process
+//!   spawning only in the sanctioned concurrency layer.
+//! * [`schema-version-sync`](RULE_SCHEMA_VERSION_SYNC) — emitters must
+//!   stamp `experiments::OUTPUT_SCHEMA_VERSION`, never a numeric
+//!   literal, and `docs/output-schemas.md` must describe the current
+//!   version.
+//!
+//! Rules are deliberately token-pattern based (not type-aware): they
+//! trade a small false-positive surface for zero dependencies, and the
+//! pragma escape hatch (`// simlint: allow(<rule>) -- <reason>`)
+//! documents any intentional exception in place.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Tok, TokKind};
+use super::Finding;
+
+/// Rule name: float orderings must use `total_cmp`.
+pub const RULE_NO_FLOAT_PARTIAL_CMP: &str = "no-float-partial-cmp";
+/// Rule name: no `HashMap`/`HashSet` iteration outside `serving/`.
+pub const RULE_NO_MAP_ITERATION: &str = "no-map-iteration";
+/// Rule name: no wall-clock reads outside the allowlist.
+pub const RULE_NO_WALL_CLOCK: &str = "no-wall-clock";
+/// Rule name: no thread/process spawns outside the concurrency layer.
+pub const RULE_NO_STRAY_THREADS: &str = "no-stray-threads";
+/// Rule name: `schema_version` stamps must come from the constant.
+pub const RULE_SCHEMA_VERSION_SYNC: &str = "schema-version-sync";
+
+/// Every rule a pragma may name, in report order.
+pub const RULE_NAMES: &[&str] = &[
+    RULE_NO_FLOAT_PARTIAL_CMP,
+    RULE_NO_MAP_ITERATION,
+    RULE_NO_WALL_CLOCK,
+    RULE_NO_STRAY_THREADS,
+    RULE_SCHEMA_VERSION_SYNC,
+];
+
+/// Files (matched by `/`-suffix) where wall-clock reads are sanctioned:
+/// the micro-bench harness, the perf-matrix harness, the subprocess
+/// layer, and the CLI launcher (bench date stamp + simulate wall-time
+/// stamp). `serving/` is sanctioned as a directory — the live serving
+/// stack is wall-clock by nature.
+const WALL_CLOCK_FILES: &[&str] =
+    &["util/bench.rs", "util/proc.rs", "experiments/bench.rs", "main.rs"];
+const WALL_CLOCK_DIRS: &[&str] = &["serving"];
+
+/// Files/dirs where spawning is sanctioned: the scoped worker pool, the
+/// subprocess pipe readers, and the serving worker thread. Everything
+/// else must route concurrency through these.
+const THREAD_FILES: &[&str] = &["util/pool.rs", "util/proc.rs"];
+const THREAD_DIRS: &[&str] = &["serving"];
+
+/// Dirs exempt from the map-iteration rule: the live serving stack is
+/// not part of any byte-identical result path.
+const MAP_ITER_EXEMPT_DIRS: &[&str] = &["serving"];
+
+/// Map types whose iteration order is seeded per process.
+const HASH_CONTAINERS: &[&str] = &["HashMap", "HashSet"];
+
+/// Methods that observe a container's iteration order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// An `OUTPUT_SCHEMA_VERSION: usize = N` definition found while
+/// scanning (normally in `experiments/mod.rs`); drives the docs half of
+/// the `schema-version-sync` rule.
+#[derive(Clone, Debug)]
+pub struct SchemaDef {
+    pub path: String,
+    pub line: usize,
+    pub version: usize,
+}
+
+/// True when `rel` *is* `name` or ends with `/name` (component-exact,
+/// so `main.rs` never matches `domain.rs`).
+fn is_file(rel: &str, name: &str) -> bool {
+    rel == name || rel.strip_suffix(name).is_some_and(|head| head.ends_with('/'))
+}
+
+/// True when any *directory* component of `rel` equals `dir`.
+fn in_dir(rel: &str, dir: &str) -> bool {
+    let mut parts: Vec<&str> = rel.split('/').collect();
+    parts.pop(); // the file name is not a directory component
+    parts.iter().any(|p| *p == dir)
+}
+
+fn allowlisted(rel: &str, files: &[&str], dirs: &[&str]) -> bool {
+    files.iter().any(|f| is_file(rel, f)) || dirs.iter().any(|d| in_dir(rel, d))
+}
+
+/// The comment-free view the rules pattern-match over.
+struct Code<'a> {
+    toks: Vec<&'a Tok>,
+}
+
+impl<'a> Code<'a> {
+    fn new(toks: &'a [Tok]) -> Code<'a> {
+        Code {
+            toks: toks
+                .iter()
+                .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+                .collect(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.toks.len()
+    }
+
+    fn kind(&self, i: usize) -> Option<TokKind> {
+        self.toks.get(i).map(|t| t.kind)
+    }
+
+    fn is_ident(&self, i: usize, s: &str) -> bool {
+        self.toks.get(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == s)
+    }
+
+    fn is_punct(&self, i: usize, s: &str) -> bool {
+        self.toks.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == s)
+    }
+
+    fn ident_text(&self, i: usize) -> Option<&str> {
+        self.toks.get(i).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
+    }
+
+    fn line(&self, i: usize) -> usize {
+        self.toks[i].line
+    }
+}
+
+/// Run every rule over one file's token stream. Returns the findings
+/// (pragma suppression is applied by the caller, which also sees the
+/// comment tokens) plus any `OUTPUT_SCHEMA_VERSION` definition found.
+pub fn check_file(rel: &str, toks: &[Tok]) -> (Vec<Finding>, Option<SchemaDef>) {
+    let code = Code::new(toks);
+    let mut out = Vec::new();
+    no_float_partial_cmp(rel, &code, &mut out);
+    no_map_iteration(rel, &code, &mut out);
+    no_wall_clock(rel, &code, &mut out);
+    no_stray_threads(rel, &code, &mut out);
+    let def = schema_version_sync(rel, &code, &mut out);
+    (out, def)
+}
+
+fn finding(rule: &'static str, rel: &str, line: usize, message: String) -> Finding {
+    Finding { rule, path: rel.to_string(), line, message }
+}
+
+/// (a) `no-float-partial-cmp` — any *call* of `partial_cmp` (`.`- or
+/// `::`-qualified). A `fn partial_cmp` trait-impl definition is not a
+/// call and is never flagged.
+fn no_float_partial_cmp(rel: &str, code: &Code, out: &mut Vec<Finding>) {
+    for i in 1..code.len() {
+        if code.is_ident(i, "partial_cmp")
+            && (code.is_punct(i - 1, ".") || code.is_punct(i - 1, ":"))
+        {
+            let msg = "partial_cmp call: on floats this panics (`.unwrap()`) or misorders \
+                       (`max_by`/`min_by`) on NaN — order with `total_cmp` instead (see \
+                       util/stats.rs for the NaN-safety rules)";
+            out.push(finding(RULE_NO_FLOAT_PARTIAL_CMP, rel, code.line(i), msg.to_string()));
+        }
+    }
+}
+
+/// (b) `no-map-iteration` — collect the names declared or initialized
+/// as `HashMap`/`HashSet` in this file, then flag any order-observing
+/// use of them: `name.iter()`-style methods and `for … in [&][self.]name`.
+/// Keyed access (`get`/`insert`/`remove`/`len`/`contains_key`) is
+/// untouched, and `BTreeMap`/`BTreeSet` (deterministic order) never
+/// match.
+fn no_map_iteration(rel: &str, code: &Code, out: &mut Vec<Finding>) {
+    if allowlisted(rel, &[], MAP_ITER_EXEMPT_DIRS) {
+        return;
+    }
+    let mut maps: BTreeSet<&str> = BTreeSet::new();
+    for i in 0..code.len() {
+        let Some(name) = code.ident_text(i) else { continue };
+        if !HASH_CONTAINERS.contains(&name) {
+            continue;
+        }
+        // Walk back over a `path::to::` prefix to the start of the type.
+        let mut j = i;
+        while j >= 3
+            && code.is_punct(j - 1, ":")
+            && code.is_punct(j - 2, ":")
+            && code.kind(j - 3) == Some(TokKind::Ident)
+        {
+            j -= 3;
+        }
+        // `binder: HashMap<..>` (field, let-annotation, or parameter).
+        if j >= 2 && code.is_punct(j - 1, ":") && !code.is_punct(j - 2, ":") {
+            if let Some(binder) = code.ident_text(j - 2) {
+                maps.insert(binder);
+            }
+        }
+        // `binder = HashMap::new()` (un-annotated let / assignment).
+        if j >= 2 && code.is_punct(j - 1, "=") && !code.is_punct(j - 2, "=") {
+            if let Some(binder) = code.ident_text(j - 2) {
+                maps.insert(binder);
+            }
+        }
+    }
+    if maps.is_empty() {
+        return;
+    }
+    for i in 0..code.len() {
+        let Some(name) = code.ident_text(i) else { continue };
+        if !maps.contains(name) {
+            continue;
+        }
+        // `name.iter()` / `name.keys()` / …
+        if code.is_punct(i + 1, ".") && code.is_punct(i + 3, "(") {
+            if let Some(m) = code.ident_text(i + 2) {
+                if ITER_METHODS.contains(&m) {
+                    out.push(finding(
+                        RULE_NO_MAP_ITERATION,
+                        rel,
+                        code.line(i),
+                        format!(
+                            "`{name}.{m}()` iterates a randomized-order hash container; \
+                             hash-order iteration breaks byte-identical reports — use keyed \
+                             lookup, or a BTreeMap/sorted Vec if iteration is required"
+                        ),
+                    ));
+                }
+            }
+        }
+        // `for pat in [& [mut]] [self.]name {` — the loop body brace
+        // directly follows the map name.
+        if code.is_punct(i + 1, "{") && i > 0 {
+            let mut k = i - 1;
+            while k > 0
+                && (code.is_punct(k, ".")
+                    || code.is_punct(k, "&")
+                    || code.is_ident(k, "self")
+                    || code.is_ident(k, "mut"))
+            {
+                k -= 1;
+            }
+            if code.is_ident(k, "in") {
+                out.push(finding(
+                    RULE_NO_MAP_ITERATION,
+                    rel,
+                    code.line(i),
+                    format!(
+                        "`for … in {name}` iterates a randomized-order hash container; \
+                         hash-order iteration breaks byte-identical reports — use keyed \
+                         lookup, or a BTreeMap/sorted Vec if iteration is required"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// (c) `no-wall-clock` — `Instant::now` / `SystemTime::now` outside the
+/// allowlisted benchmarking/serving/launcher files. The simulator core
+/// must be a pure function of the spec: wall time is stamped by timing
+/// *callers*, never read inside `Cluster::run` or below.
+fn no_wall_clock(rel: &str, code: &Code, out: &mut Vec<Finding>) {
+    if allowlisted(rel, WALL_CLOCK_FILES, WALL_CLOCK_DIRS) {
+        return;
+    }
+    for i in 0..code.len() {
+        let Some(ty) = code.ident_text(i) else { continue };
+        if (ty == "Instant" || ty == "SystemTime")
+            && code.is_punct(i + 1, ":")
+            && code.is_punct(i + 2, ":")
+            && code.is_ident(i + 3, "now")
+        {
+            out.push(finding(
+                RULE_NO_WALL_CLOCK,
+                rel,
+                code.line(i),
+                format!(
+                    "`{ty}::now()` outside the benchmarking/serving layer: results must be \
+                     a function of the spec alone — time the call site instead and stamp \
+                     the result (see cluster::Cluster::run's wall_time_s contract)"
+                ),
+            ));
+        }
+    }
+}
+
+/// (d) `no-stray-threads` — `.spawn(` / `::spawn(` calls and
+/// `thread::scope` outside the sanctioned concurrency layer. Sweep
+/// determinism relies on every worker funneling through `util/pool.rs`
+/// (deterministic reassembly) or `util/proc.rs` (captured children);
+/// an ad-hoc thread has no such contract.
+fn no_stray_threads(rel: &str, code: &Code, out: &mut Vec<Finding>) {
+    if allowlisted(rel, THREAD_FILES, THREAD_DIRS) {
+        return;
+    }
+    for i in 1..code.len() {
+        if code.is_ident(i, "spawn")
+            && (code.is_punct(i - 1, ".") || code.is_punct(i - 1, ":"))
+            && code.is_punct(i + 1, "(")
+        {
+            let msg = "thread/process spawn outside util/pool.rs, util/proc.rs, or serving/: \
+                       route concurrency through the worker pool (deterministic reassembly) \
+                       or the subprocess layer";
+            out.push(finding(RULE_NO_STRAY_THREADS, rel, code.line(i), msg.to_string()));
+        }
+        if code.is_ident(i, "thread")
+            && code.is_punct(i + 1, ":")
+            && code.is_punct(i + 2, ":")
+            && code.is_ident(i + 3, "scope")
+        {
+            let msg = "`thread::scope` outside util/pool.rs or util/proc.rs: scoped threads \
+                       are the pool's implementation detail, not an application-level API \
+                       here";
+            out.push(finding(RULE_NO_STRAY_THREADS, rel, code.line(i), msg.to_string()));
+        }
+    }
+}
+
+/// (e) `schema-version-sync`, emitter half — a `"schema_version"` key
+/// whose value is a *numeric literal* stamped via the repo's
+/// `Value::obj` idiom (`N.into()`). Readers with integer defaults
+/// (`usize_or("schema_version", 0)`) never match because the literal is
+/// not followed by `.into`. Also extracts the
+/// `OUTPUT_SCHEMA_VERSION: usize = N` definition for the docs half
+/// (run by the caller once the whole tree is scanned).
+fn schema_version_sync(rel: &str, code: &Code, out: &mut Vec<Finding>) -> Option<SchemaDef> {
+    for i in 0..code.len() {
+        let is_key = code
+            .toks
+            .get(i)
+            .is_some_and(|t| t.kind == TokKind::Str && t.text == "schema_version");
+        if !is_key {
+            continue;
+        }
+        let end = (i + 9).min(code.len());
+        for j in i + 1..end {
+            if code.kind(j) == Some(TokKind::Number)
+                && code.is_punct(j + 1, ".")
+                && code.is_ident(j + 2, "into")
+            {
+                out.push(finding(
+                    RULE_SCHEMA_VERSION_SYNC,
+                    rel,
+                    code.line(j),
+                    format!(
+                        "hard-coded schema_version {}: stamp \
+                         `experiments::OUTPUT_SCHEMA_VERSION` so every output and \
+                         docs/output-schemas.md move together",
+                        code.toks[j].text
+                    ),
+                ));
+            }
+        }
+    }
+    let mut def = None;
+    for i in 0..code.len() {
+        if code.is_ident(i, "OUTPUT_SCHEMA_VERSION")
+            && code.is_punct(i + 1, ":")
+            && code.is_ident(i + 2, "usize")
+            && code.is_punct(i + 3, "=")
+            && code.kind(i + 4) == Some(TokKind::Number)
+        {
+            if let Ok(version) = code.toks[i + 4].text.parse::<usize>() {
+                def = Some(SchemaDef { path: rel.to_string(), line: code.line(i), version });
+            }
+        }
+    }
+    def
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        check_file(rel, &lex(src)).0
+    }
+
+    fn rules_hit(rel: &str, src: &str) -> Vec<&'static str> {
+        run(rel, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn partial_cmp_call_flagged_definition_not() {
+        let hits = rules_hit("src/x.rs", "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());");
+        assert_eq!(hits, [RULE_NO_FLOAT_PARTIAL_CMP]);
+        let ok = "impl PartialOrd for T { fn partial_cmp(&self, o: &Self) -> Option<Ordering> \
+                  { Some(self.cmp(o)) } }";
+        assert!(rules_hit("src/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_in_comment_or_string_ignored() {
+        let src = "// a.partial_cmp(b).unwrap() would panic\n\
+                   const HINT: &str = \"never a.partial_cmp(b) on floats\";";
+        assert!(rules_hit("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn map_iteration_flagged_keyed_lookup_not() {
+        let bad = "struct S { m: HashMap<u64, usize> }\n\
+                   impl S { fn f(&self) { for (k, v) in self.m.iter() {} } }";
+        assert_eq!(rules_hit("src/x.rs", bad), [RULE_NO_MAP_ITERATION]);
+        let ok = "struct S { m: HashMap<u64, usize> }\n\
+                  impl S { fn f(&self, id: u64) -> Option<usize> { self.m.get(&id).copied() } }";
+        assert!(rules_hit("src/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn map_for_loop_flagged_btree_not() {
+        let bad = "fn f(seen: std::collections::HashSet<u64>) { for k in &seen {} }";
+        assert_eq!(rules_hit("src/x.rs", bad), [RULE_NO_MAP_ITERATION]);
+        let ok = "fn f(seen: std::collections::BTreeSet<u64>) { for k in &seen {} }";
+        assert!(rules_hit("src/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn map_let_initializer_tracked() {
+        let bad = "fn f() { let mut seen = HashSet::new(); for k in &seen {} }";
+        assert_eq!(rules_hit("src/x.rs", bad), [RULE_NO_MAP_ITERATION]);
+    }
+
+    #[test]
+    fn map_iteration_allowed_in_serving() {
+        let src = "struct S { m: HashMap<u64, usize> }\n\
+                   impl S { fn f(&self) { for v in self.m.values() {} } }";
+        assert!(rules_hit("src/serving/x.rs", src).is_empty());
+        assert_eq!(rules_hit("src/cluster/x.rs", src), [RULE_NO_MAP_ITERATION]);
+    }
+
+    #[test]
+    fn wall_clock_flagged_outside_allowlist_only() {
+        let src = "fn f() -> std::time::Instant { std::time::Instant::now() }";
+        assert_eq!(rules_hit("src/cluster/mod.rs", src), [RULE_NO_WALL_CLOCK]);
+        assert!(rules_hit("src/util/bench.rs", src).is_empty());
+        assert!(rules_hit("src/serving/batcher.rs", src).is_empty());
+        assert!(rules_hit("src/main.rs", src).is_empty());
+        let sys = "fn f() { let _ = SystemTime::now(); }";
+        assert_eq!(rules_hit("src/sim/mod.rs", sys), [RULE_NO_WALL_CLOCK]);
+    }
+
+    #[test]
+    fn own_clock_named_now_is_not_wall_clock() {
+        let src = "fn f(q: &Queue) -> f64 { q.now() }";
+        assert!(rules_hit("src/sim/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn stray_spawn_flagged_spawn_task_not() {
+        assert_eq!(
+            rules_hit("src/x.rs", "fn f() { std::thread::spawn(|| {}); }"),
+            [RULE_NO_STRAY_THREADS]
+        );
+        assert_eq!(
+            rules_hit("src/x.rs", "fn f() { std::thread::scope(|s| {}); }"),
+            [RULE_NO_STRAY_THREADS]
+        );
+        assert!(rules_hit("src/x.rs", "fn f(m: &mut M) { m.spawn_task(0); }").is_empty());
+        let pool = "fn f() { std::thread::scope(|s| {}); }";
+        assert!(rules_hit("src/util/pool.rs", pool).is_empty());
+    }
+
+    #[test]
+    fn hard_coded_schema_version_flagged_constant_not() {
+        let bad = r#"fn j() -> Value { Value::obj(vec![("schema_version", 5.into())]) }"#;
+        assert_eq!(rules_hit("src/x.rs", bad), [RULE_SCHEMA_VERSION_SYNC]);
+        let ok = r#"fn j() -> Value {
+            Value::obj(vec![("schema_version", super::OUTPUT_SCHEMA_VERSION.into())])
+        }"#;
+        assert!(rules_hit("src/x.rs", ok).is_empty());
+        // Readers with integer defaults are not emitters.
+        let reader = r#"fn r(v: &Value) -> usize { v.usize_or("schema_version", 0) }"#;
+        assert!(rules_hit("src/x.rs", reader).is_empty());
+    }
+
+    #[test]
+    fn schema_def_extracted() {
+        let src = "pub const OUTPUT_SCHEMA_VERSION: usize = 6;";
+        let (hits, def) = check_file("src/experiments/mod.rs", &lex(src));
+        assert!(hits.is_empty());
+        let def = def.expect("definition found");
+        assert_eq!(def.version, 6);
+        assert_eq!(def.line, 1);
+    }
+
+    #[test]
+    fn path_matching_is_component_exact() {
+        assert!(is_file("src/main.rs", "main.rs"));
+        assert!(!is_file("src/domain.rs", "main.rs"));
+        assert!(in_dir("src/serving/batcher.rs", "serving"));
+        assert!(!in_dir("src/serving.rs", "serving"), "file name is not a dir component");
+    }
+}

@@ -193,8 +193,11 @@ impl Cluster {
     }
 
     /// Run the trace to completion and report results.
+    ///
+    /// Wall-clock-free by contract (the simlint `no-wall-clock` gate):
+    /// the returned [`SimResult::wall_time_s`] is 0.0 here, and timing
+    /// callers (the CLI, the bench harness) stamp it around this call.
     pub fn run(&mut self, trace: &Trace) -> SimResult {
-        let wall_start = std::time::Instant::now();
         // Seed request states + arrival events.
         self.reqs = trace
             .requests
@@ -266,7 +269,7 @@ impl Cluster {
             duration_s: end,
             completed_requests: self.completed,
             events_processed: self.q.processed(),
-            wall_time_s: wall_start.elapsed().as_secs_f64(),
+            wall_time_s: 0.0,
             queue: self.q.stats(),
             f0,
             freq,

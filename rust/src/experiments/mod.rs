@@ -59,16 +59,19 @@ pub mod sweep_stream;
 /// (`carbon-sim sweep --search`) and an optional `search` object in the
 /// `cells.jsonl` header recording the search configuration; the sweep
 /// report, plain spill, bench, and orchestrate schemas are unchanged
-/// from version 4.
-pub const OUTPUT_SCHEMA_VERSION: usize = 5;
+/// from version 4; **6** — adds the `lint-report` JSON emitted by
+/// `carbon-sim lint --json`; every previously-existing schema is
+/// unchanged from version 5.
+pub const OUTPUT_SCHEMA_VERSION: usize = 6;
 
 /// Oldest `cells.jsonl` spill version `--resume` and `merge` still
 /// accept. The spill format is unchanged since version 2 (version 3
 /// only added the orchestrate manifest; version 4 only extended the
 /// bench JSON; version 5 only added an *optional* header field, which
-/// older rows simply lack), so refusing v2–v4 spills would orphan days
-/// of shard work over a label; version-1 spills really do differ (no
-/// embedded spec) and stay refused.
+/// older rows simply lack; version 6 only added the lint report), so
+/// refusing v2–v5 spills would orphan days of shard work over a label;
+/// version-1 spills really do differ (no embedded spec) and stay
+/// refused.
 pub const MIN_SUPPORTED_SPILL_SCHEMA_VERSION: usize = 2;
 
 use crate::cluster::{Cluster, ClusterConfig};

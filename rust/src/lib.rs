@@ -10,9 +10,11 @@
 //! * [`experiments`] — one runner per paper figure.
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts.
 //! * [`serving`] — the real mini serving stack (end-to-end example).
+//! * [`analysis`] — simlint, the determinism & invariants lint pass.
 //!
 //! See DESIGN.md for the system inventory and per-experiment index.
 
+pub mod analysis;
 pub mod carbon;
 pub mod cluster;
 pub mod config;

@@ -12,6 +12,8 @@
 //!               manifest, and the final merge, in one command
 //!   merge       validate and reassemble sharded sweep spills into one report
 //!   bench       run the pinned perf matrix and write BENCH_<date>.json
+//!   lint        run the determinism & invariants static-analysis pass
+//!               (simlint) over the source tree — the CI gate
 //!   figure      regenerate a paper figure (1, 2, 4, 5, 6, 7, 8)
 //!   trace-gen   synthesize an Azure-like trace to a JSONL file
 //!   serve       run the real PJRT serving stack on sample prompts
@@ -46,6 +48,7 @@ fn main() {
         "orchestrate" => cmd_orchestrate(&rest),
         "merge" => cmd_merge(&rest),
         "bench" => cmd_bench(&rest),
+        "lint" => cmd_lint(&rest),
         "figure" => cmd_figure(&rest),
         "trace-gen" => cmd_trace_gen(&rest),
         "serve" => cmd_serve(&rest),
@@ -82,6 +85,10 @@ fn top_usage() -> String {
      \x20              them into a report byte-identical to a single-machine run\n\
      \x20 bench        run the pinned perf matrix (short/long traces × 40/80 cores ×\n\
      \x20              all policies) and write events/sec to BENCH_<date>.json\n\
+     \x20 lint         simlint: the determinism & invariants static-analysis pass\n\
+     \x20              (total_cmp, no map iteration, no wall clock, no stray threads,\n\
+     \x20              schema-version sync) over rust/src — nonzero exit on findings;\n\
+     \x20              --json emits a lint-report document (docs/static-analysis.md)\n\
      \x20 figure       regenerate a paper figure (--fig 1|2|4|5|6|7|8)\n\
      \x20 trace-gen    synthesize an Azure-like trace (JSONL)\n\
      \x20 serve        run the PJRT serving stack (needs `make artifacts`)\n\
@@ -175,7 +182,11 @@ fn cmd_simulate(rest: &[String]) -> i32 {
         ..base
     };
     let mut cluster = Cluster::new(cfg);
-    let result = cluster.run(&trace);
+    // The simulator core is wall-clock-free (the simlint no-wall-clock
+    // gate): wall time is a launcher-side measurement stamped here.
+    let wall_start = std::time::Instant::now();
+    let mut result = cluster.run(&trace);
+    result.wall_time_s = wall_start.elapsed().as_secs_f64();
 
     println!(
         "── simulation ({} @ {:.0} rps, {} cores) ──",
@@ -727,6 +738,50 @@ fn cmd_bench(rest: &[String]) -> i32 {
         Err(e) => {
             eprintln!("writing {out}: {e}");
             1
+        }
+    }
+}
+
+// ----------------------------------------------------------------- lint
+
+fn cmd_lint(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "carbon-sim lint",
+        "simlint — the determinism & invariants static-analysis pass (rules: \
+         no-float-partial-cmp, no-map-iteration, no-wall-clock, no-stray-threads, \
+         schema-version-sync; see docs/static-analysis.md)",
+    )
+    .pos("path", ".rs files or directories to scan (default: the crate's src tree)")
+    .flag("json", "emit the schema-versioned lint-report JSON document instead of text");
+    let a = parse_or_exit(&cli, rest);
+
+    let roots: Vec<std::path::PathBuf> = if a.positional.is_empty() {
+        match carbon_sim::analysis::default_roots() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        a.positional.iter().map(std::path::PathBuf::from).collect()
+    };
+    match carbon_sim::analysis::lint_tree(&roots) {
+        Ok(report) => {
+            if a.flag("json") {
+                println!("{}", report.to_json().to_string_pretty());
+            } else {
+                print!("{}", report.render_text());
+            }
+            if report.is_clean() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("lint error: {e}");
+            2
         }
     }
 }

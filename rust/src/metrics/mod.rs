@@ -85,6 +85,9 @@ pub struct SimResult {
     pub duration_s: f64,
     pub completed_requests: usize,
     pub events_processed: u64,
+    /// Host wall-clock seconds, stamped by *timing callers* around
+    /// [`crate::cluster::Cluster::run`] (which itself is wall-clock-free
+    /// under the simlint `no-wall-clock` gate and leaves this 0.0).
     pub wall_time_s: f64,
     /// Event-queue counters (peak length, pushes, clamps). Identical
     /// for either queue implementation; surfaced in the bench JSON but

@@ -114,10 +114,18 @@ impl ProposedPolicy {
         }
         let delta = delta.min(self.scratch.len());
         if delta > 0 && delta < self.scratch.len() {
+            // `total_cmp` (not `partial_cmp(..).unwrap()`): a NaN aging
+            // key must degrade, not panic the 250 ms tick of an entire
+            // sweep. NaN orders above +inf, so a poisoned core counts as
+            // most-aged — parked first, woken last — deterministically.
             if park {
-                self.scratch.select_nth_unstable_by(delta - 1, |a, b| b.partial_cmp(a).unwrap());
+                self.scratch.select_nth_unstable_by(delta - 1, |a, b| {
+                    b.0.total_cmp(&a.0).then(b.1.cmp(&a.1))
+                });
             } else {
-                self.scratch.select_nth_unstable_by(delta - 1, |a, b| a.partial_cmp(b).unwrap());
+                self.scratch.select_nth_unstable_by(delta - 1, |a, b| {
+                    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+                });
             }
         }
         delta
@@ -313,6 +321,37 @@ mod tests {
         p.adjust(&mut cpu, 0.0);
         assert_eq!(cpu.active_count(), 1);
         assert_eq!(cpu.core(2).state(), CState::C0);
+    }
+
+    #[test]
+    fn alg2_nan_aging_key_degrades_instead_of_panicking() {
+        // Regression: `select_extreme` used `partial_cmp(..).unwrap()`,
+        // so one NaN equivalent-stress-time key panicked the adjust tick
+        // of an entire sweep. Under `total_cmp` NaN orders above +inf:
+        // the poisoned core counts as most-aged — parked first, woken
+        // last — and the tick completes deterministically.
+        let mut cpu = pkg(4);
+        for (i, eq) in [2.0e6, 1.0e6, 3.0e6, 4.0e6].iter().enumerate() {
+            cpu.set_eq_time_s(i, *eq);
+        }
+        cpu.set_eq_time_s(2, f64::NAN);
+        let mut p = ProposedPolicy::new();
+        // No tasks: park 3 of 4. Descending (age, id) order is NaN(2),
+        // 4e6(3), 2e6(0), 1e6(1) — the least-aged finite core survives.
+        p.adjust(&mut cpu, 0.0);
+        assert_eq!(cpu.active_count(), 1);
+        assert_eq!(cpu.core(1).state(), CState::C0, "least-aged finite core stays awake");
+        assert_eq!(cpu.core(2).state(), CState::C6, "NaN-keyed core parked as most-aged");
+        // Oversubscribe so 2 of the 3 sleepers wake: the finite ages
+        // (cores 0 and 3) wake first, the NaN core last — i.e. not yet.
+        cpu.assign(1, 100, 1.0);
+        for t in 0..3 {
+            cpu.push_oversub(t);
+        }
+        p.adjust(&mut cpu, 2.0);
+        assert_eq!(cpu.core(0).state(), CState::C0, "least-aged finite sleeper wakes");
+        assert_eq!(cpu.core(3).state(), CState::C0, "next finite sleeper wakes");
+        assert_eq!(cpu.core(2).state(), CState::C6, "NaN-keyed core wakes last of all");
     }
 
     #[test]

@@ -187,7 +187,10 @@ impl ServedModel {
             .map(|row| {
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    // total_cmp: a NaN logit must not panic (or, under
+                    // max_by's partial ordering, silently win) — NaN
+                    // sorts above +inf, so the argmax stays total.
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i as i32)
                     .unwrap_or(0)
             })

@@ -244,6 +244,10 @@ impl<E> CalendarQueue<E> {
         } else {
             at
         };
+        // Same -0.0 canonicalization as the heap queue: buckets compare
+        // arithmetically (-0.0 == +0.0) but the differential contract
+        // demands both queues agree with `total_cmp` (-0.0 < +0.0).
+        let time = if time == 0.0 { 0.0 } else { time };
         let seq = self.seq;
         self.seq += 1;
         self.insert(Entry { time, seq, payload });
@@ -537,7 +541,7 @@ mod tests {
             q.push(t, i);
         }
         let mut sorted: Vec<(f64, usize)> = times.iter().copied().zip(0..times.len()).collect();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let got: Vec<(f64, usize)> = std::iter::from_fn(|| q.pop()).collect();
         assert_eq!(got, sorted);
     }
@@ -553,7 +557,7 @@ mod tests {
             q.push(t, i);
             expect.push((t, i));
         }
-        expect.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let got: Vec<(f64, u32)> = std::iter::from_fn(|| q.pop()).collect();
         assert_eq!(got, expect);
     }

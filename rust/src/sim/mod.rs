@@ -52,11 +52,11 @@ impl<E> Eq for Scheduled<E> {}
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reversed: BinaryHeap is a max-heap, we want earliest-first.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .expect("event times must not be NaN")
-            .then_with(|| other.seq.cmp(&self.seq))
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: `push` rejects
+        // non-finite times, but the heap's ordering must stay total even
+        // for values that slip past that gate — a NaN must mis-sort (to
+        // the far future), never panic mid-pop and strand the queue.
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 impl<E> PartialOrd for Scheduled<E> {
@@ -411,6 +411,11 @@ impl<E> EventQueue<E> {
         } else {
             at
         };
+        // Canonicalize -0.0 to +0.0: the heap orders by `total_cmp`
+        // (where -0.0 < +0.0) while the calendar queue buckets by
+        // arithmetic (where -0.0 == +0.0). One canonical zero keeps the
+        // two implementations byte-identical (tests/queue_differential).
+        let time = if time == 0.0 { 0.0 } else { time };
         self.heap.push(Scheduled { time, seq: self.seq, payload });
         self.seq += 1;
         self.stats.pushes += 1;
@@ -549,6 +554,29 @@ mod tests {
         }
         let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
         assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn negative_zero_is_canonicalized_on_push() {
+        // -0.0 and +0.0 must be one timestamp: the heap orders by
+        // `total_cmp` (-0.0 < +0.0) while the calendar queue buckets
+        // arithmetically (-0.0 == +0.0), so without canonicalization the
+        // two queue kinds would disagree on FIFO order at time zero.
+        let mut heap = EventQueue::new();
+        heap.push(-0.0, 0);
+        heap.push(0.0, 1);
+        heap.push(-0.0, 2);
+        let got: Vec<(f64, i32)> = std::iter::from_fn(|| heap.pop()).collect();
+        assert_eq!(got, vec![(0.0, 0), (0.0, 1), (0.0, 2)]);
+        assert!(got.iter().all(|(t, _)| t.is_sign_positive()));
+
+        let mut cal = calendar::CalendarQueue::new();
+        cal.push(-0.0, 0);
+        cal.push(0.0, 1);
+        cal.push(-0.0, 2);
+        let got: Vec<(f64, i32)> = std::iter::from_fn(|| cal.pop()).collect();
+        assert_eq!(got, vec![(0.0, 0), (0.0, 1), (0.0, 2)]);
+        assert!(got.iter().all(|(t, _)| t.is_sign_positive()));
     }
 
     #[test]

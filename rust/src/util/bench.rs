@@ -50,7 +50,7 @@ pub fn bench<F: FnMut()>(name: &str, target_s: f64, mut f: F) -> BenchStats {
         sample_ns.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
     }
     let total_s = total_t.elapsed().as_secs_f64();
-    sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sample_ns.sort_by(f64::total_cmp);
     let mean_ns = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
     let stats = BenchStats {
         iters: samples * per_sample,

@@ -26,6 +26,7 @@ fn help_lists_subcommands() {
         "orchestrate",
         "merge",
         "bench",
+        "lint",
         "figure",
         "trace-gen",
         "serve",
@@ -589,6 +590,45 @@ fn bench_quick_writes_wellformed_json() {
 fn bench_rejects_bad_flags() {
     let (ok, _) = run(&["bench", "--no-such-flag"]);
     assert!(!ok);
+}
+
+#[test]
+fn lint_is_clean_on_the_real_tree() {
+    // The CI gate in binary form: the shipped sources must carry zero
+    // violations (fixed, not suppressed — see docs/static-analysis.md).
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let (ok, text) = run(&["lint", src]);
+    assert!(ok, "{text}");
+    assert!(text.contains("simlint: clean"), "{text}");
+}
+
+#[test]
+fn lint_fails_on_a_seeded_violation_and_names_the_rule() {
+    let bad = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/lint_fixtures/bad_wall_clock.rs");
+    let (ok, text) = run(&["lint", bad]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("no-wall-clock"), "{text}");
+    assert!(text.contains("bad_wall_clock.rs:"), "findings are file:line addressed: {text}");
+}
+
+#[test]
+fn lint_json_emits_schema_versioned_report() {
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let (ok, text) = run(&["lint", "--json", src]);
+    assert!(ok, "{text}");
+    let v = carbon_sim::util::json::parse(&text).expect("lint --json must be valid JSON");
+    assert_eq!(v.get("kind").and_then(|k| k.as_str()), Some("lint-report"));
+    assert_eq!(v.usize_or("schema_version", 0), carbon_sim::experiments::OUTPUT_SCHEMA_VERSION);
+    assert!(v.bool_or("clean", false), "{text}");
+    assert_eq!(v.get("findings").and_then(|f| f.as_arr()).map(|f| f.len()), Some(0));
+    assert!(v.usize_or("files_scanned", 0) > 40, "the whole tree is scanned: {text}");
+}
+
+#[test]
+fn lint_rejects_a_missing_path() {
+    let (ok, text) = run(&["lint", "no/such/path.rs"]);
+    assert!(!ok);
+    assert!(text.contains("lint error"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,22 @@
+// simlint fixture: must trigger `no-map-iteration` (twice).
+// Not compiled — only lexed by the lint pass.
+
+use std::collections::{HashMap, HashSet};
+
+struct Registry {
+    by_id: HashMap<u64, String>,
+}
+
+impl Registry {
+    fn dump(&self) -> Vec<String> {
+        self.by_id.values().cloned().collect()
+    }
+}
+
+fn total(seen: HashSet<u64>) -> u64 {
+    let mut sum = 0;
+    for v in &seen {
+        sum += v;
+    }
+    sum
+}

@@ -1,0 +1,10 @@
+// simlint fixture: must trigger `no-float-partial-cmp` (twice).
+// Not compiled — only lexed by the lint pass.
+
+fn sort_scores(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn best(xs: &[f64]) -> Option<&f64> {
+    xs.iter().max_by(|a, b| f64::partial_cmp(a, b).expect("no NaN"))
+}

@@ -1,0 +1,11 @@
+// simlint fixture: must trigger `schema-version-sync` (emitter half) —
+// a "schema_version" key stamped with a numeric literal instead of
+// `experiments::OUTPUT_SCHEMA_VERSION`.
+
+fn to_json(&self) -> Value {
+    Value::obj(vec![
+        ("kind", "sweep-cells".into()),
+        ("schema_version", 5.into()),
+        ("n_cells", self.n_cells.into()),
+    ])
+}

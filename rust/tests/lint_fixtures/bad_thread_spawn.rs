@@ -1,0 +1,12 @@
+// simlint fixture: must trigger `no-stray-threads` (twice).
+// Not compiled — only lexed by the lint pass.
+
+use std::thread;
+
+fn fan_out(jobs: Vec<u64>) {
+    let handle = thread::spawn(move || jobs.len());
+    handle.join().unwrap();
+    thread::scope(|s| {
+        let _ = s;
+    });
+}

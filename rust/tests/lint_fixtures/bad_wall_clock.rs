@@ -1,0 +1,14 @@
+// simlint fixture: must trigger `no-wall-clock` (twice).
+// Not compiled — only lexed by the lint pass.
+
+use std::time::{Instant, SystemTime};
+
+fn measure() -> f64 {
+    let t0 = Instant::now();
+    expensive();
+    t0.elapsed().as_secs_f64()
+}
+
+fn stamp() -> SystemTime {
+    SystemTime::now()
+}

@@ -1,0 +1,28 @@
+// simlint fixture: near-misses for `no-map-iteration` — must stay
+// clean. Keyed access on a hash map is allowed, and BTreeMap iteration
+// is deterministic.
+
+use std::collections::{BTreeMap, HashMap};
+
+struct Tasks {
+    task_core: HashMap<u64, usize>,
+    ordered: BTreeMap<u64, usize>,
+}
+
+impl Tasks {
+    fn lookup(&self, task: u64) -> Option<usize> {
+        self.task_core.get(&task).copied()
+    }
+
+    fn assign(&mut self, task: u64, core: usize) {
+        self.task_core.insert(task, core);
+    }
+
+    fn walk(&self) -> usize {
+        let mut n = self.task_core.len();
+        for (_, v) in &self.ordered {
+            n += v;
+        }
+        n
+    }
+}

@@ -1,0 +1,20 @@
+// simlint fixture: near-misses for `no-float-partial-cmp` — must stay
+// clean. Defining `fn partial_cmp` in a PartialOrd impl is not a call,
+// and comment/string mentions are invisible to the rules.
+
+use std::cmp::Ordering;
+
+struct Wrapped(u64);
+
+impl PartialOrd for Wrapped {
+    // a.partial_cmp(b).unwrap() in a comment is not a call site.
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.0.cmp(&other.0))
+    }
+}
+
+const HINT: &str = "never a.partial_cmp(b).unwrap() on floats";
+
+fn sort_scores(xs: &mut Vec<f64>) {
+    xs.sort_by(f64::total_cmp);
+}

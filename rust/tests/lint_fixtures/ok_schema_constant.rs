@@ -1,0 +1,14 @@
+// simlint fixture: near-misses for `schema-version-sync` — must stay
+// clean. Stamping the constant is the sanctioned idiom, and readers
+// with integer defaults are not emitters.
+
+fn to_json(&self) -> Value {
+    Value::obj(vec![
+        ("kind", "sweep-cells".into()),
+        ("schema_version", OUTPUT_SCHEMA_VERSION.into()),
+    ])
+}
+
+fn read_version(v: &Value) -> usize {
+    v.usize_or("schema_version", 0)
+}

@@ -1,0 +1,18 @@
+// simlint fixture: near-misses for `no-wall-clock` — must stay clean.
+// A simulated clock's own `now()` is not a wall-clock read; the rule
+// matches the `Instant::now` / `SystemTime::now` path shapes only.
+
+struct SimClock {
+    now_s: f64,
+}
+
+impl SimClock {
+    fn now(&self) -> f64 {
+        self.now_s
+    }
+}
+
+fn sample(clock: &SimClock) -> f64 {
+    // Instant::now() in a comment is invisible to the rules.
+    clock.now()
+}

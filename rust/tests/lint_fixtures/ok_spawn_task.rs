@@ -1,0 +1,17 @@
+// simlint fixture: near-misses for `no-stray-threads` — must stay
+// clean. `spawn_task` is a different identifier, and bare `spawn` not
+// called as a method/path is not a spawn site.
+
+struct Manager;
+
+impl Manager {
+    fn spawn_task(&mut self, task: u64) -> u64 {
+        task
+    }
+}
+
+fn drive(mgr: &mut Manager) {
+    // thread::spawn in a comment is invisible to the rules.
+    let spawn = 3;
+    mgr.spawn_task(spawn);
+}

@@ -1,0 +1,12 @@
+// simlint fixture: a pragma without the mandatory ` -- <reason>` is a
+// `simlint-pragma` finding and suppresses nothing, so this file must
+// report BOTH the malformed pragma and the `no-wall-clock` violation.
+
+use std::time::Instant;
+
+fn demo_latency() -> f64 {
+    // simlint: allow(no-wall-clock)
+    let t0 = Instant::now();
+    run_demo();
+    t0.elapsed().as_secs_f64()
+}

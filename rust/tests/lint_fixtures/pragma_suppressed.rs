@@ -1,0 +1,11 @@
+// simlint fixture: a real violation under a well-formed suppression
+// pragma — must stay clean (the pragma covers the line below it).
+
+use std::time::Instant;
+
+fn demo_latency() -> f64 {
+    // simlint: allow(no-wall-clock) -- demo latency is the demo's output
+    let t0 = Instant::now();
+    run_demo();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,8 @@
+// simlint fixture: a pragma naming a rule that does not exist is a
+// `simlint-pragma` finding and suppresses nothing. The file is
+// otherwise violation-free, so exactly one finding must be reported.
+
+fn compute() -> u64 {
+    // simlint: allow(no-flaky-clocks) -- typo'd rule name
+    41 + 1
+}

@@ -1,0 +1,11 @@
+// simlint fixture: a wall-clock read inside a `serving/` directory —
+// allowlisted, must stay clean. The live serving stack measures real
+// latency by design.
+
+use std::time::Instant;
+
+fn request_latency() -> f64 {
+    let t0 = Instant::now();
+    handle();
+    t0.elapsed().as_secs_f64()
+}
