@@ -8,7 +8,16 @@
 //! mean frequency degradation (at a chosen cluster percentile) is k×
 //! smaller than the linux baseline's supports a k× longer refresh cycle.
 //! Yearly embodied emissions then shrink from `E/3` to `E/(3k)`.
+//!
+//! The [`FleetLedger`] below extends this static picture to a *living*
+//! fleet: machines are commissioned, serve, and retire, and each one's
+//! embodied carbon is amortized over its **actual** service window
+//! rather than the planned refresh cycle. Early retirement therefore
+//! raises a machine's amortization rate (the same kilograms spread over
+//! fewer years) — which is precisely the carbon penalty the paper's
+//! lifetime-extension argument avoids.
 
+use crate::cpu::aging::SECONDS_PER_YEAR;
 use crate::util::stats;
 
 /// Embodied model parameters (paper defaults from Li'24).
@@ -79,6 +88,151 @@ pub fn cluster_yearly_kg(
     model.yearly_kg_for(base_p, tech_p) * n_machines as f64
 }
 
+/// One machine's service window in the fleet ledger: the embodied carbon
+/// charged at commissioning, the lifetime it was *planned* to amortize
+/// over, any service age it carried into the simulation, and — once
+/// retired — the instant its window closed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceRecord {
+    /// Machine slot this record belongs to (machine ids are stable across
+    /// retirement: the replacement SKU takes over the same slot).
+    pub machine: usize,
+    /// Embodied carbon charged when the machine was procured (kgCO₂eq).
+    pub embodied_kg: f64,
+    /// The refresh cycle the charge was planned to amortize over (years).
+    pub planned_lifetime_yr: f64,
+    /// Service years already accrued before simulation time 0 (the
+    /// fleet config's `commission_age_yr`). Zero for replacements
+    /// procured mid-run.
+    pub prior_age_yr: f64,
+    /// Simulation time the record opened (s).
+    pub commissioned_s: f64,
+    /// Simulation time the record closed (s), once the machine retired.
+    pub retired_s: Option<f64>,
+}
+
+impl ServiceRecord {
+    /// Total service years covered by this record as of `now_s`: the
+    /// prior age plus the in-simulation service time (up to retirement).
+    pub fn service_yr(&self, now_s: f64) -> f64 {
+        let end = self.retired_s.unwrap_or(now_s);
+        self.prior_age_yr + (end - self.commissioned_s).max(0.0) / SECONDS_PER_YEAR
+    }
+
+    /// Amortization rate (kg/yr). Closed windows spread the charge over
+    /// the *actual* service years — an early retirement concentrates the
+    /// same kilograms into fewer years. Open windows amortize at the
+    /// planned rate, since their actual lifespan is not yet known.
+    pub fn yearly_kg(&self, now_s: f64) -> f64 {
+        match self.retired_s {
+            Some(_) => self.embodied_kg / self.service_yr(now_s).max(1e-9),
+            None => self.embodied_kg / self.planned_lifetime_yr,
+        }
+    }
+}
+
+/// Append-only ledger of every machine service window the simulation has
+/// seen. Commissioned at fleet construction (and again at each
+/// replacement procurement), closed at retirement. All queries are pure
+/// functions of the records, so the ledger is trivially deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct FleetLedger {
+    pub records: Vec<ServiceRecord>,
+}
+
+impl FleetLedger {
+    pub fn new() -> FleetLedger {
+        FleetLedger { records: Vec::new() }
+    }
+
+    /// Open a service window: a machine is procured and its embodied
+    /// carbon charged.
+    pub fn commission(
+        &mut self,
+        machine: usize,
+        embodied_kg: f64,
+        planned_lifetime_yr: f64,
+        prior_age_yr: f64,
+        now_s: f64,
+    ) {
+        assert!(embodied_kg > 0.0 && planned_lifetime_yr > 0.0 && prior_age_yr >= 0.0);
+        debug_assert!(
+            self.open_record(machine).is_none(),
+            "machine {machine} already has an open service window"
+        );
+        self.records.push(ServiceRecord {
+            machine,
+            embodied_kg,
+            planned_lifetime_yr,
+            prior_age_yr,
+            commissioned_s: now_s,
+            retired_s: None,
+        });
+    }
+
+    /// Close machine `machine`'s open service window at `now_s`. Returns
+    /// false when the machine has no open window.
+    pub fn retire(&mut self, machine: usize, now_s: f64) -> bool {
+        match self.open_record(machine) {
+            Some(i) => {
+                self.records[i].retired_s = Some(now_s);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Index of machine `machine`'s open record, if any.
+    pub fn open_record(&self, machine: usize) -> Option<usize> {
+        self.records.iter().position(|r| r.machine == machine && r.retired_s.is_none())
+    }
+
+    /// Machine `machine`'s current service age in years (prior age plus
+    /// in-simulation time) — the calendar-age retirement trigger's input.
+    pub fn service_age_yr(&self, machine: usize, now_s: f64) -> Option<f64> {
+        self.open_record(machine).map(|i| self.records[i].service_yr(now_s))
+    }
+
+    /// Total embodied carbon charged across every procurement (kg).
+    pub fn total_charged_kg(&self) -> f64 {
+        self.records.iter().map(|r| r.embodied_kg).sum()
+    }
+
+    /// Embodied carbon amortized over each record's *entire* service
+    /// window (prior age included): Σ rate × service-years. For a closed
+    /// record the product collapses back to its full charge, so once
+    /// every window is closed this equals [`FleetLedger::total_charged_kg`]
+    /// exactly — the conservation law `tests/lifecycle_prop.rs` pins.
+    pub fn amortized_total_kg(&self, now_s: f64) -> f64 {
+        self.records.iter().map(|r| r.yearly_kg(now_s) * r.service_yr(now_s)).sum()
+    }
+
+    /// Embodied carbon attributed to the simulated window `[0, now_s]`:
+    /// each record's amortization rate times its in-window service time.
+    pub fn amortized_in_window_kg(&self, now_s: f64) -> f64 {
+        self.records
+            .iter()
+            .map(|r| {
+                let end = r.retired_s.unwrap_or(now_s).min(now_s);
+                let in_window_yr = (end - r.commissioned_s).max(0.0) / SECONDS_PER_YEAR;
+                r.yearly_kg(now_s) * in_window_yr
+            })
+            .sum()
+    }
+
+    /// The fleet-level yearly-embodied metric reported per sweep cell:
+    /// the time-averaged amortization rate over the simulated window
+    /// (kg/yr). Early retirements raise it — their charge amortizes over
+    /// a shorter total life, so every in-window second carries a higher
+    /// rate; lifetime extension lowers it.
+    pub fn yearly_embodied_kg(&self, now_s: f64) -> f64 {
+        if now_s <= 0.0 {
+            return self.records.iter().map(|r| r.yearly_kg(0.0)).sum();
+        }
+        self.amortized_in_window_kg(now_s) / (now_s / SECONDS_PER_YEAR)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +286,62 @@ mod tests {
         let tech = vec![0.1; 22];
         let total = cluster_yearly_kg(&m, &base, &tech, 99.0, 22);
         assert!((total - 22.0 * 278.3 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn static_fleet_ledger_matches_classic_amortization() {
+        // With no retirements the ledger's yearly metric is exactly the
+        // paper's Σ embodied / lifetime, at any query instant.
+        let mut l = FleetLedger::new();
+        l.commission(0, 278.3, 3.0, 0.0, 0.0);
+        l.commission(1, 278.3, 3.0, 1.5, 0.0);
+        let expect = 2.0 * 278.3 / 3.0;
+        assert!((l.yearly_embodied_kg(0.0) - expect).abs() < 1e-9);
+        assert!((l.yearly_embodied_kg(120.0) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn early_retirement_raises_the_yearly_metric() {
+        let mut l = FleetLedger::new();
+        // Commissioned 2.5 years ago against a 3-year plan, retired after
+        // one more in-sim year: actual life 3.5 yr ≥ plan → cheaper rate.
+        l.commission(0, 300.0, 3.0, 2.5, 0.0);
+        l.retire(0, SECONDS_PER_YEAR);
+        let healthy = l.records[0].yearly_kg(0.0);
+        assert!((healthy - 300.0 / 3.5).abs() < 1e-9);
+        // Same machine scrapped after half a year of total service: the
+        // identical charge amortizes over 7× fewer years.
+        let mut l2 = FleetLedger::new();
+        l2.commission(0, 300.0, 3.0, 0.0, 0.0);
+        l2.retire(0, 0.5 * SECONDS_PER_YEAR);
+        assert!(l2.records[0].yearly_kg(0.0) > 6.9 * healthy);
+    }
+
+    #[test]
+    fn retirement_closes_and_recommission_reopens() {
+        let mut l = FleetLedger::new();
+        l.commission(3, 100.0, 3.0, 0.0, 0.0);
+        assert_eq!(l.service_age_yr(3, SECONDS_PER_YEAR), Some(1.0));
+        assert!(l.retire(3, 10.0));
+        assert!(!l.retire(3, 11.0), "no open window left to close");
+        l.commission(3, 120.0, 4.0, 0.0, 10.0);
+        assert_eq!(l.records.len(), 2);
+        assert!((l.total_charged_kg() - 220.0).abs() < 1e-12);
+        let age = l.service_age_yr(3, 10.0 + SECONDS_PER_YEAR).unwrap();
+        assert!((age - 1.0).abs() < 1e-12, "replacement age restarts at 0");
+    }
+
+    #[test]
+    fn fully_closed_ledger_conserves_charge() {
+        let mut l = FleetLedger::new();
+        l.commission(0, 278.3, 3.0, 2.0, 0.0);
+        l.commission(1, 240.0, 3.0, 0.1, 0.0);
+        l.retire(0, 100.0);
+        l.commission(0, 278.3, 3.0, 0.0, 100.0);
+        l.retire(0, 5000.0);
+        l.retire(1, 5000.0);
+        let charged = l.total_charged_kg();
+        let amortized = l.amortized_total_kg(5000.0);
+        assert!(((charged - amortized) / charged).abs() < 1e-9);
     }
 }

@@ -4,5 +4,5 @@
 pub mod embodied;
 pub mod operational;
 
-pub use embodied::EmbodiedModel;
+pub use embodied::{EmbodiedModel, FleetLedger, ServiceRecord};
 pub use operational::{grid_intensities, ServerPowerModel};

@@ -1,0 +1,466 @@
+//! Fleet lifecycle: heterogeneous SKUs, fault injection, and
+//! aging-triggered retirement — the subsystem that turns the fixed
+//! `n_prompt + n_token` machine set into a *living* fleet whose embodied
+//! carbon is amortized over actual service windows (ROADMAP: "Fleet
+//! lifecycle & heterogeneity scenarios").
+//!
+//! # Configuration
+//!
+//! Two optional config blocks drive the subsystem:
+//!
+//! * [`FleetConfig`] — a list of [`MachineGroup`]s (SKUs). Groups fill
+//!   machine ids sequentially: a fleet `[{count: 2, ...}, {count: 3, ...}]`
+//!   assigns machines 0–1 to group 0 and 2–4 to group 1. Each group
+//!   carries its cores-per-package, process-variation generation
+//!   ([`crate::cpu::ProcVarParams::for_generation`]), embodied-carbon
+//!   charge, planned amortization lifetime, and the service age the
+//!   machines carried into the simulation (`commission_age_yr`).
+//! * [`LifecycleConfig`] — fleet *events*: scheduled maintenance windows,
+//!   explicit per-core failure injections, a stochastic per-core failure
+//!   rate, and the two retirement triggers (calendar age limit and the
+//!   p99 ΔVth guard band), plus the replacement SKU procured after a
+//!   retirement. `lifecycle` requires `fleet`: without the ledger there
+//!   is nothing to retire against.
+//!
+//! # Event ordering and determinism contract
+//!
+//! Lifecycle events flow through the ordinary [`crate::sim::Scheduler`]
+//! queue — never a side channel — so they interleave with simulation
+//! events in the deterministic `(time, sequence)` order both queue
+//! implementations share. All lifecycle event pushes happen in
+//! `Cluster::run` *after* the arrival pushes and tick-train arming, in a
+//! fixed order: maintenance windows (config order, start before end),
+//! explicit failures (config order), stochastic failures (machine id
+//! order, then core id order), and finally the retirement-check train.
+//! When no `lifecycle` block is configured **zero** events are pushed and
+//! no lifecycle randomness is drawn, so sequence-number streams, queue
+//! stats, and every report byte are identical to the pre-lifecycle
+//! simulator (`tests/lifecycle_identity.rs` pins this).
+//!
+//! Stochastic failure times are drawn from a dedicated RNG stream forked
+//! off the cluster seed with [`LIFECYCLE_SEED_XOR`] — never wall clock —
+//! and that same stream later feeds replacement-silicon sampling, in
+//! event order, which is itself deterministic. Results are therefore
+//! byte-identical at any `--threads` and for both `--queue` kinds.
+//!
+//! Within one timestamp the usual push-order tie-break applies; the
+//! handlers are written so any interleaving is safe: a failure evicts
+//! its task to the front of the FIFO oversubscription queue (arrival
+//! order preserved), a retirement migrates every in-flight task onto the
+//! replacement package's queue, and scheduled `TaskDone` completions
+//! resolve the task wherever it now lives — so no task is ever lost or
+//! double-completed across drain/failure/retirement
+//! (`tests/lifecycle_prop.rs`).
+
+use crate::carbon::FleetLedger;
+use crate::cpu::ProcVarParams;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// Seed domain separator for the lifecycle RNG stream (stochastic
+/// failure draws + replacement-silicon sampling), keeping it independent
+/// of the task-duration and process-variation streams.
+pub const LIFECYCLE_SEED_XOR: u64 = 0x11FE_C1C1_E5EE_D001;
+
+/// One machine SKU in the fleet: `count` identical machines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineGroup {
+    /// Number of machines in this group.
+    pub count: usize,
+    /// CPU cores per package for this SKU.
+    pub cores: usize,
+    /// Process-variation generation name
+    /// ([`ProcVarParams::for_generation`]): "paper"/"gen1", "gen2", "gen3".
+    pub generation: String,
+    /// Embodied carbon charged per machine at procurement (kgCO₂eq).
+    pub embodied_kg: f64,
+    /// Planned amortization lifetime (years).
+    pub lifetime_yr: f64,
+    /// Service years the group's machines had already accrued at
+    /// simulation time 0 (a commission date in the past).
+    pub commission_age_yr: f64,
+}
+
+impl Default for MachineGroup {
+    /// Paper-default SKU with zero machines: parsers fill `count` and
+    /// `cores` (both required) and override the rest when present.
+    fn default() -> Self {
+        MachineGroup {
+            count: 0,
+            cores: 0,
+            generation: "paper".to_string(),
+            embodied_kg: 278.3,
+            lifetime_yr: 3.0,
+            commission_age_yr: 0.0,
+        }
+    }
+}
+
+impl MachineGroup {
+    /// The process-variation parameters this group's generation implies.
+    pub fn procvar(&self) -> ProcVarParams {
+        ProcVarParams::for_generation(&self.generation).expect("generation validated at parse time")
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("commission_age_yr", self.commission_age_yr.into()),
+            ("cores", self.cores.into()),
+            ("count", self.count.into()),
+            ("embodied_kg", self.embodied_kg.into()),
+            ("generation", self.generation.as_str().into()),
+            ("lifetime_yr", self.lifetime_yr.into()),
+        ])
+    }
+}
+
+/// The heterogeneous fleet: machine groups filling ids sequentially.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    pub groups: Vec<MachineGroup>,
+}
+
+impl FleetConfig {
+    /// Total machines across all groups.
+    pub fn n_machines(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Group index owning machine `id` (ids fill groups sequentially).
+    pub fn group_of(&self, id: usize) -> usize {
+        let mut first = 0;
+        for (gi, g) in self.groups.iter().enumerate() {
+            if id < first + g.count {
+                return gi;
+            }
+            first += g.count;
+        }
+        panic!("machine id {id} beyond fleet of {} machines", first);
+    }
+
+    /// Validate against the cluster's machine count; errors name the
+    /// offending group field.
+    pub fn validate(&self, n_machines: usize) -> Result<(), String> {
+        if self.groups.is_empty() {
+            return Err("fleet.groups must not be empty".into());
+        }
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.count == 0 {
+                return Err(format!("fleet.groups[{gi}].count must be > 0"));
+            }
+            if g.cores == 0 {
+                return Err(format!("fleet.groups[{gi}].cores must be > 0"));
+            }
+            if !(g.embodied_kg > 0.0) {
+                return Err(format!("fleet.groups[{gi}].embodied_kg must be > 0"));
+            }
+            if !(g.lifetime_yr > 0.0) {
+                return Err(format!("fleet.groups[{gi}].lifetime_yr must be > 0"));
+            }
+            if !(g.commission_age_yr >= 0.0) {
+                return Err(format!("fleet.groups[{gi}].commission_age_yr must be >= 0"));
+            }
+            ProcVarParams::for_generation(&g.generation)
+                .map_err(|e| format!("fleet.groups[{gi}].generation: {e}"))?;
+        }
+        let total = self.n_machines();
+        if total != n_machines {
+            return Err(format!(
+                "fleet.groups machine count {total} != n_prompt + n_token = {n_machines}"
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![(
+            "groups",
+            Value::Arr(self.groups.iter().map(|g| g.to_json()).collect()),
+        )])
+    }
+}
+
+/// A scheduled maintenance window: the machine is drained (no new work
+/// routed to it, free cores parked) for `[start_s, start_s + duration_s)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MaintenanceWindow {
+    pub machine: usize,
+    pub start_s: f64,
+    pub duration_s: f64,
+}
+
+impl MaintenanceWindow {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("duration_s", self.duration_s.into()),
+            ("machine", self.machine.into()),
+            ("start_s", self.start_s.into()),
+        ])
+    }
+}
+
+/// An explicit (scripted) permanent core failure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreFailure {
+    pub machine: usize,
+    pub core: usize,
+    pub time_s: f64,
+}
+
+impl CoreFailure {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("core", self.core.into()),
+            ("machine", self.machine.into()),
+            ("time_s", self.time_s.into()),
+        ])
+    }
+}
+
+/// Fleet events: maintenance, failures, and retirement triggers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LifecycleConfig {
+    /// Scheduled maintenance windows.
+    pub maintenance: Vec<MaintenanceWindow>,
+    /// Explicit per-core failure injections.
+    pub failures: Vec<CoreFailure>,
+    /// Stochastic permanent-failure rate per core per year (0 = off).
+    /// Failure times are exponential draws from the seeded lifecycle RNG.
+    pub failure_rate_per_core_year: f64,
+    /// Calendar retirement trigger: retire a machine once its service age
+    /// (prior age + in-simulation time) reaches this many years.
+    pub age_limit_yr: Option<f64>,
+    /// Aging retirement trigger: retire a machine once the p99 of its
+    /// per-core ΔVth reaches this guard band (V).
+    pub dvth_guard_band_v: Option<f64>,
+    /// Period of the retirement-check event train (s).
+    pub check_period_s: f64,
+    /// Index into `fleet.groups` of the SKU procured as a replacement
+    /// after each retirement.
+    pub replacement_group: usize,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig {
+            maintenance: Vec::new(),
+            failures: Vec::new(),
+            failure_rate_per_core_year: 0.0,
+            age_limit_yr: None,
+            dvth_guard_band_v: None,
+            check_period_s: 1.0,
+            replacement_group: 0,
+        }
+    }
+}
+
+impl LifecycleConfig {
+    /// Validate against the fleet this lifecycle runs over; errors name
+    /// the offending field.
+    pub fn validate(&self, fleet: &FleetConfig) -> Result<(), String> {
+        let n_machines = fleet.n_machines();
+        for (i, w) in self.maintenance.iter().enumerate() {
+            if w.machine >= n_machines {
+                return Err(format!(
+                    "lifecycle.maintenance[{i}].machine {} out of range (fleet has {n_machines})",
+                    w.machine
+                ));
+            }
+            if !(w.start_s >= 0.0) {
+                return Err(format!("lifecycle.maintenance[{i}].start_s must be >= 0"));
+            }
+            if !(w.duration_s > 0.0) {
+                return Err(format!("lifecycle.maintenance[{i}].duration_s must be > 0"));
+            }
+        }
+        for (i, f) in self.failures.iter().enumerate() {
+            if f.machine >= n_machines {
+                return Err(format!(
+                    "lifecycle.failures[{i}].machine {} out of range (fleet has {n_machines})",
+                    f.machine
+                ));
+            }
+            if !(f.time_s >= 0.0) {
+                return Err(format!("lifecycle.failures[{i}].time_s must be >= 0"));
+            }
+        }
+        if !(self.failure_rate_per_core_year >= 0.0) {
+            return Err("lifecycle.failure_rate_per_core_year must be >= 0".into());
+        }
+        if let Some(a) = self.age_limit_yr {
+            if !(a > 0.0) {
+                return Err("lifecycle.age_limit_yr must be > 0".into());
+            }
+        }
+        if let Some(g) = self.dvth_guard_band_v {
+            if !(g > 0.0) {
+                return Err("lifecycle.dvth_guard_band_v must be > 0".into());
+            }
+        }
+        if !(self.check_period_s > 0.0) {
+            return Err("lifecycle.check_period_s must be > 0".into());
+        }
+        if self.replacement_group >= fleet.groups.len() {
+            return Err(format!(
+                "lifecycle.replacement_group {} out of range (fleet has {} groups)",
+                self.replacement_group,
+                fleet.groups.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Whether any retirement trigger is configured (arms the
+    /// retirement-check event train).
+    pub fn retirement_armed(&self) -> bool {
+        self.age_limit_yr.is_some() || self.dvth_guard_band_v.is_some()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut entries: Vec<(&str, Value)> = vec![
+            ("check_period_s", self.check_period_s.into()),
+            ("failure_rate_per_core_year", self.failure_rate_per_core_year.into()),
+            (
+                "failures",
+                Value::Arr(self.failures.iter().map(|f| f.to_json()).collect()),
+            ),
+            (
+                "maintenance",
+                Value::Arr(self.maintenance.iter().map(|w| w.to_json()).collect()),
+            ),
+            ("replacement_group", self.replacement_group.into()),
+        ];
+        if let Some(a) = self.age_limit_yr {
+            entries.push(("age_limit_yr", a.into()));
+        }
+        if let Some(g) = self.dvth_guard_band_v {
+            entries.push(("dvth_guard_band_v", g.into()));
+        }
+        Value::obj(entries)
+    }
+}
+
+/// Per-run lifecycle state: the carbon ledger, the seeded event RNG, and
+/// the fleet-event counters the summary reports. Exists exactly when the
+/// cluster config carries a `fleet` block; the event side is armed only
+/// when a `lifecycle` block is present too.
+#[derive(Clone, Debug)]
+pub struct LifecycleRuntime {
+    pub fleet: FleetConfig,
+    pub lifecycle: Option<LifecycleConfig>,
+    /// Embodied-carbon service-window ledger (commission/retire records).
+    pub ledger: FleetLedger,
+    /// Dedicated lifecycle RNG stream (module docs: determinism contract).
+    pub rng: Rng,
+    /// Machines retired (and replaced) during the run.
+    pub retirements: u64,
+    /// Cores permanently failed during the run.
+    pub core_failures: u64,
+    /// Requests re-routed out of a draining machine's prompt queue.
+    pub rerouted: u64,
+}
+
+impl LifecycleRuntime {
+    /// Build the runtime and commission every machine's opening service
+    /// record at t = 0.
+    pub fn new(fleet: FleetConfig, lifecycle: Option<LifecycleConfig>, seed: u64) -> Self {
+        let mut ledger = FleetLedger::new();
+        let mut id = 0;
+        for g in &fleet.groups {
+            for _ in 0..g.count {
+                ledger.commission(id, g.embodied_kg, g.lifetime_yr, g.commission_age_yr, 0.0);
+                id += 1;
+            }
+        }
+        LifecycleRuntime {
+            fleet,
+            lifecycle,
+            ledger,
+            rng: Rng::new(seed ^ LIFECYCLE_SEED_XOR),
+            retirements: 0,
+            core_failures: 0,
+            rerouted: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group(count: usize, cores: usize) -> MachineGroup {
+        MachineGroup {
+            count,
+            cores,
+            generation: "paper".into(),
+            embodied_kg: 278.3,
+            lifetime_yr: 3.0,
+            commission_age_yr: 0.0,
+        }
+    }
+
+    #[test]
+    fn groups_fill_ids_sequentially() {
+        let fleet = FleetConfig { groups: vec![group(2, 16), group(3, 12)] };
+        assert_eq!(fleet.n_machines(), 5);
+        assert_eq!(fleet.group_of(0), 0);
+        assert_eq!(fleet.group_of(1), 0);
+        assert_eq!(fleet.group_of(2), 1);
+        assert_eq!(fleet.group_of(4), 1);
+    }
+
+    #[test]
+    fn fleet_validation_names_offending_fields() {
+        let fleet = FleetConfig { groups: vec![group(2, 16)] };
+        assert!(fleet.validate(2).is_ok());
+        assert!(fleet.validate(3).unwrap_err().contains("n_prompt + n_token"));
+        let mut bad = fleet.clone();
+        bad.groups[0].generation = "7nm".into();
+        assert!(bad.validate(2).unwrap_err().contains("generation"));
+        let mut bad = fleet.clone();
+        bad.groups[0].embodied_kg = 0.0;
+        assert!(bad.validate(2).unwrap_err().contains("embodied_kg"));
+    }
+
+    #[test]
+    fn lifecycle_validation_checks_ranges() {
+        let fleet = FleetConfig { groups: vec![group(2, 16)] };
+        let mut lc = LifecycleConfig::default();
+        assert!(lc.validate(&fleet).is_ok());
+        assert!(!lc.retirement_armed());
+        lc.age_limit_yr = Some(3.0);
+        assert!(lc.retirement_armed());
+        lc.maintenance.push(MaintenanceWindow { machine: 5, start_s: 0.0, duration_s: 1.0 });
+        assert!(lc.validate(&fleet).unwrap_err().contains("maintenance[0].machine"));
+        lc.maintenance.clear();
+        lc.replacement_group = 1;
+        assert!(lc.validate(&fleet).unwrap_err().contains("replacement_group"));
+    }
+
+    #[test]
+    fn runtime_commissions_every_machine() {
+        let fleet = FleetConfig { groups: vec![group(1, 16), group(2, 12)] };
+        let rt = LifecycleRuntime::new(fleet, None, 42);
+        assert_eq!(rt.ledger.records.len(), 3);
+        for (m, r) in rt.ledger.records.iter().enumerate() {
+            assert_eq!(r.machine, m);
+            assert!(r.retired_s.is_none());
+        }
+        let total = rt.ledger.total_charged_kg();
+        assert!((total - 3.0 * 278.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape_round_trips_key_names() {
+        let fleet = FleetConfig { groups: vec![group(2, 16)] };
+        let s = fleet.to_json().to_string_compact();
+        assert!(s.contains("\"groups\"") && s.contains("\"generation\""));
+        let mut lc = LifecycleConfig::default();
+        let s = lc.to_json().to_string_compact();
+        assert!(!s.contains("age_limit_yr"), "unset optional keys stay absent");
+        lc.age_limit_yr = Some(3.0);
+        lc.dvth_guard_band_v = Some(0.05);
+        let s = lc.to_json().to_string_compact();
+        assert!(s.contains("\"age_limit_yr\"") && s.contains("\"dvth_guard_band_v\""));
+    }
+}

@@ -44,6 +44,13 @@ pub struct Machine {
 
     // ---- interconnect state (ingress link serialization) ----
     pub link_busy_until: f64,
+
+    // ---- lifecycle state ----
+    /// False while the machine is drained for a maintenance window: the
+    /// cluster scheduler routes new work elsewhere (when it can) and the
+    /// periodic adjust tick skips it. Always true without a lifecycle
+    /// config, so the flag is behaviour-free when lifecycle is off.
+    pub available: bool,
 }
 
 impl Machine {
@@ -66,6 +73,7 @@ impl Machine {
             pending: VecDeque::new(),
             iterating: false,
             link_busy_until: 0.0,
+            available: true,
         }
     }
 

@@ -10,7 +10,9 @@
 
 use std::path::Path;
 
-use crate::cluster::ClusterConfig;
+use crate::cluster::{
+    ClusterConfig, CoreFailure, FleetConfig, LifecycleConfig, MachineGroup, MaintenanceWindow,
+};
 use crate::cpu::{AgingParams, ProcVarParams};
 use crate::experiments::search::SearchConfig;
 use crate::experiments::sweep::SweepSpec;
@@ -40,6 +42,8 @@ const CLUSTER_KEYS: &[&str] = &[
     "aging",
     "procvar",
     "perf",
+    "fleet",
+    "lifecycle",
 ];
 
 /// Build a [`ClusterConfig`] from a parsed JSON object.
@@ -77,6 +81,12 @@ pub fn cluster_from_value(v: &Value) -> Result<ClusterConfig, String> {
     }
     if let Some(p) = v.get("perf") {
         cfg.perf = perf_from_value(p)?;
+    }
+    if let Some(f) = v.get("fleet") {
+        cfg.fleet = Some(fleet_from_value(f)?);
+    }
+    if let Some(l) = v.get("lifecycle") {
+        cfg.lifecycle = Some(lifecycle_from_value(l)?);
     }
     validate_cluster(&cfg)?;
     Ok(cfg)
@@ -157,6 +167,15 @@ fn validate_cluster(cfg: &ClusterConfig) -> Result<(), String> {
     if cfg.sample_period_s <= 0.0 {
         return Err("sample_period_s must be positive".into());
     }
+    if cfg.lifecycle.is_some() && cfg.fleet.is_none() {
+        return Err("a lifecycle block requires a fleet block".into());
+    }
+    if let Some(fleet) = &cfg.fleet {
+        fleet.validate(cfg.n_prompt + cfg.n_token)?;
+        if let Some(lc) = &cfg.lifecycle {
+            lc.validate(fleet)?;
+        }
+    }
     Ok(())
 }
 
@@ -200,6 +219,8 @@ const SWEEP_KEYS: &[&str] = &[
     "n_token",
     "seed",
     "search",
+    "fleet",
+    "lifecycle",
 ];
 
 const SEARCH_KEYS: &[&str] = &["confidence", "min_replicas", "max_replicas", "metric"];
@@ -283,6 +304,12 @@ pub fn sweep_search_from_value(v: &Value) -> Result<(SweepSpec, Option<SearchCon
     if let Some(x) = v.get("seed") {
         s.seed = u64_scalar(x, "seed")?;
     }
+    if let Some(x) = v.get("fleet") {
+        s.fleet = Some(fleet_from_value(x)?);
+    }
+    if let Some(x) = v.get("lifecycle") {
+        s.lifecycle = Some(lifecycle_from_value(x)?);
+    }
     s.validate()?;
     let search = match v.get("search") {
         None => None,
@@ -317,6 +344,188 @@ fn search_from_value(v: &Value, spec: &SweepSpec) -> Result<SearchConfig, String
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+const FLEET_KEYS: &[&str] = &["groups"];
+
+const GROUP_KEYS: &[&str] = &[
+    "count",
+    "cores",
+    "generation",
+    "embodied_kg",
+    "lifetime_yr",
+    "commission_age_yr",
+];
+
+const LIFECYCLE_KEYS: &[&str] = &[
+    "maintenance",
+    "failures",
+    "failure_rate_per_core_year",
+    "age_limit_yr",
+    "dvth_guard_band_v",
+    "check_period_s",
+    "replacement_group",
+];
+
+const MAINTENANCE_KEYS: &[&str] = &["machine", "start_s", "duration_s"];
+
+const FAILURE_KEYS: &[&str] = &["machine", "core", "time_s"];
+
+/// Parse a `fleet` block (heterogeneous machine groups). Shared between
+/// cluster configs and sweep specs; cross-checks against the machine
+/// count happen later in `FleetConfig::validate`, not here.
+pub fn fleet_from_value(v: &Value) -> Result<FleetConfig, String> {
+    let obj = v.as_obj().ok_or("spec key 'fleet' must be a JSON object")?;
+    for key in obj.keys() {
+        if !FLEET_KEYS.contains(&key.as_str()) {
+            return Err(format!("unknown fleet key 'fleet.{key}' (known: {FLEET_KEYS:?})"));
+        }
+    }
+    let groups = v
+        .get("groups")
+        .ok_or("fleet: missing required key 'fleet.groups'")?
+        .as_arr()
+        .ok_or("spec key 'fleet.groups' must be an array of objects")?
+        .iter()
+        .enumerate()
+        .map(|(i, g)| group_from_value(g, i))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(FleetConfig { groups })
+}
+
+fn group_from_value(v: &Value, i: usize) -> Result<MachineGroup, String> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| format!("spec key 'fleet.groups[{i}]' must be a JSON object"))?;
+    for key in obj.keys() {
+        if !GROUP_KEYS.contains(&key.as_str()) {
+            return Err(format!(
+                "unknown fleet key 'fleet.groups[{i}].{key}' (known: {GROUP_KEYS:?})"
+            ));
+        }
+    }
+    let require = |field: &str| {
+        v.get(field)
+            .ok_or_else(|| format!("fleet.groups[{i}]: missing required key '{field}'"))
+    };
+    let mut g = MachineGroup {
+        count: usize_scalar(require("count")?, &format!("fleet.groups[{i}].count"))?,
+        cores: usize_scalar(require("cores")?, &format!("fleet.groups[{i}].cores"))?,
+        ..MachineGroup::default()
+    };
+    if let Some(x) = v.get("generation") {
+        g.generation = x
+            .as_str()
+            .ok_or_else(|| format!("sweep spec key 'fleet.groups[{i}].generation' must be a string"))?
+            .to_string();
+    }
+    if let Some(x) = v.get("embodied_kg") {
+        g.embodied_kg = f64_scalar(x, &format!("fleet.groups[{i}].embodied_kg"))?;
+    }
+    if let Some(x) = v.get("lifetime_yr") {
+        g.lifetime_yr = f64_scalar(x, &format!("fleet.groups[{i}].lifetime_yr"))?;
+    }
+    if let Some(x) = v.get("commission_age_yr") {
+        g.commission_age_yr = f64_scalar(x, &format!("fleet.groups[{i}].commission_age_yr"))?;
+    }
+    Ok(g)
+}
+
+/// Parse a `lifecycle` block (maintenance windows, core failures,
+/// retirement triggers). Range checks and fleet cross-references happen
+/// later in `LifecycleConfig::validate`.
+pub fn lifecycle_from_value(v: &Value) -> Result<LifecycleConfig, String> {
+    let obj = v.as_obj().ok_or("spec key 'lifecycle' must be a JSON object")?;
+    for key in obj.keys() {
+        if !LIFECYCLE_KEYS.contains(&key.as_str()) {
+            return Err(format!(
+                "unknown lifecycle key 'lifecycle.{key}' (known: {LIFECYCLE_KEYS:?})"
+            ));
+        }
+    }
+    let mut lc = LifecycleConfig::default();
+    if let Some(x) = v.get("maintenance") {
+        lc.maintenance = x
+            .as_arr()
+            .ok_or("spec key 'lifecycle.maintenance' must be an array of objects")?
+            .iter()
+            .enumerate()
+            .map(|(i, w)| maintenance_from_value(w, i))
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    if let Some(x) = v.get("failures") {
+        lc.failures = x
+            .as_arr()
+            .ok_or("spec key 'lifecycle.failures' must be an array of objects")?
+            .iter()
+            .enumerate()
+            .map(|(i, f)| core_failure_from_value(f, i))
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    if let Some(x) = v.get("failure_rate_per_core_year") {
+        lc.failure_rate_per_core_year = f64_scalar(x, "lifecycle.failure_rate_per_core_year")?;
+    }
+    if let Some(x) = v.get("age_limit_yr") {
+        lc.age_limit_yr = Some(f64_scalar(x, "lifecycle.age_limit_yr")?);
+    }
+    if let Some(x) = v.get("dvth_guard_band_v") {
+        lc.dvth_guard_band_v = Some(f64_scalar(x, "lifecycle.dvth_guard_band_v")?);
+    }
+    if let Some(x) = v.get("check_period_s") {
+        lc.check_period_s = f64_scalar(x, "lifecycle.check_period_s")?;
+    }
+    if let Some(x) = v.get("replacement_group") {
+        lc.replacement_group = usize_scalar(x, "lifecycle.replacement_group")?;
+    }
+    Ok(lc)
+}
+
+fn maintenance_from_value(v: &Value, i: usize) -> Result<MaintenanceWindow, String> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| format!("spec key 'lifecycle.maintenance[{i}]' must be a JSON object"))?;
+    for key in obj.keys() {
+        if !MAINTENANCE_KEYS.contains(&key.as_str()) {
+            return Err(format!(
+                "unknown lifecycle key 'lifecycle.maintenance[{i}].{key}' \
+                 (known: {MAINTENANCE_KEYS:?})"
+            ));
+        }
+    }
+    let require = |field: &str| {
+        v.get(field)
+            .ok_or_else(|| format!("lifecycle.maintenance[{i}]: missing required key '{field}'"))
+    };
+    Ok(MaintenanceWindow {
+        machine: usize_scalar(require("machine")?, &format!("lifecycle.maintenance[{i}].machine"))?,
+        start_s: f64_scalar(require("start_s")?, &format!("lifecycle.maintenance[{i}].start_s"))?,
+        duration_s: f64_scalar(
+            require("duration_s")?,
+            &format!("lifecycle.maintenance[{i}].duration_s"),
+        )?,
+    })
+}
+
+fn core_failure_from_value(v: &Value, i: usize) -> Result<CoreFailure, String> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| format!("spec key 'lifecycle.failures[{i}]' must be a JSON object"))?;
+    for key in obj.keys() {
+        if !FAILURE_KEYS.contains(&key.as_str()) {
+            return Err(format!(
+                "unknown lifecycle key 'lifecycle.failures[{i}].{key}' (known: {FAILURE_KEYS:?})"
+            ));
+        }
+    }
+    let require = |field: &str| {
+        v.get(field)
+            .ok_or_else(|| format!("lifecycle.failures[{i}]: missing required key '{field}'"))
+    };
+    Ok(CoreFailure {
+        machine: usize_scalar(require("machine")?, &format!("lifecycle.failures[{i}].machine"))?,
+        core: usize_scalar(require("core")?, &format!("lifecycle.failures[{i}].core"))?,
+        time_s: f64_scalar(require("time_s")?, &format!("lifecycle.failures[{i}].time_s"))?,
+    })
 }
 
 // Typed extraction helpers whose errors name the offending key — unlike
@@ -596,6 +805,138 @@ mod tests {
     }
 
     #[test]
+    fn fleet_and_lifecycle_blocks_parse_with_defaults_and_overrides() {
+        let v = parse(
+            r#"{"base": "smoke", "n_prompt": 2, "n_token": 2,
+                "fleet": {"groups": [
+                    {"count": 2, "cores": 16},
+                    {"count": 2, "cores": 12, "generation": "gen2",
+                     "embodied_kg": 240.0, "lifetime_yr": 4.0,
+                     "commission_age_yr": 2.5}]},
+                "lifecycle": {
+                    "maintenance": [{"machine": 0, "start_s": 1.0, "duration_s": 0.5}],
+                    "failures": [{"machine": 1, "core": 3, "time_s": 2.0}],
+                    "failure_rate_per_core_year": 0.01,
+                    "age_limit_yr": 3.0,
+                    "check_period_s": 2.0,
+                    "replacement_group": 1}}"#,
+        )
+        .unwrap();
+        let s = sweep_from_value(&v).unwrap();
+        let fleet = s.fleet.as_ref().expect("fleet parsed");
+        assert_eq!(fleet.n_machines(), 4);
+        // Omitted group fields keep the paper defaults.
+        assert_eq!(fleet.groups[0].generation, "paper");
+        assert_eq!(fleet.groups[0].embodied_kg, 278.3);
+        assert_eq!(fleet.groups[0].lifetime_yr, 3.0);
+        assert_eq!(fleet.groups[0].commission_age_yr, 0.0);
+        assert_eq!(fleet.groups[1].generation, "gen2");
+        assert_eq!(fleet.groups[1].lifetime_yr, 4.0);
+        let lc = s.lifecycle.as_ref().expect("lifecycle parsed");
+        assert_eq!(lc.maintenance.len(), 1);
+        assert_eq!(lc.failures[0].core, 3);
+        assert_eq!(lc.age_limit_yr, Some(3.0));
+        assert_eq!(lc.dvth_guard_band_v, None);
+        assert_eq!(lc.replacement_group, 1);
+        assert!(lc.retirement_armed());
+
+        // The same blocks work in cluster configs.
+        let v = parse(
+            r#"{"n_prompt": 1, "n_token": 1,
+                "fleet": {"groups": [{"count": 2, "cores": 8}]}}"#,
+        )
+        .unwrap();
+        let cfg = cluster_from_value(&v).unwrap();
+        assert_eq!(cfg.fleet.as_ref().unwrap().n_machines(), 2);
+        assert!(cfg.lifecycle.is_none());
+    }
+
+    #[test]
+    fn fleet_and_lifecycle_errors_name_the_offending_key() {
+        // A fleet whose parse succeeds, for reaching the lifecycle parser.
+        let fleet_ok = r#""fleet": {"groups": [{"count": 3, "cores": 8}]}"#;
+        for (bad, named) in [
+            (r#"{"fleet": 3}"#.to_string(), "fleet"),
+            (r#"{"fleet": {"groupz": []}}"#.to_string(), "fleet.groupz"),
+            (r#"{"fleet": {}}"#.to_string(), "fleet.groups"),
+            (r#"{"fleet": {"groups": [5]}}"#.to_string(), "fleet.groups[0]"),
+            (r#"{"fleet": {"groups": [{"cores": 8}]}}"#.to_string(), "count"),
+            (
+                r#"{"fleet": {"groups": [{"count": 3, "coars": 8}]}}"#.to_string(),
+                "fleet.groups[0].coars",
+            ),
+            (
+                r#"{"fleet": {"groups": [{"count": 3, "cores": 1.5}]}}"#.to_string(),
+                "fleet.groups[0].cores",
+            ),
+            // Validation (not parse) failures still name the key.
+            (
+                r#"{"fleet": {"groups": [{"count": 3, "cores": 8, "generation": "9nm"}]}}"#
+                    .to_string(),
+                "generation",
+            ),
+            (
+                r#"{"fleet": {"groups": [{"count": 3, "cores": 8, "embodied_kg": -1}]}}"#
+                    .to_string(),
+                "embodied_kg",
+            ),
+            // A lifecycle block without a fleet is rejected up front.
+            (r#"{"lifecycle": {}}"#.to_string(), "fleet"),
+            (format!(r#"{{{fleet_ok}, "lifecycle": 7}}"#), "lifecycle"),
+            (
+                format!(r#"{{{fleet_ok}, "lifecycle": {{"maintenancez": []}}}}"#),
+                "lifecycle.maintenancez",
+            ),
+            (
+                format!(r#"{{{fleet_ok}, "lifecycle": {{"maintenance": [{{"machine": 0}}]}}}}"#),
+                "start_s",
+            ),
+            (
+                format!(
+                    r#"{{{fleet_ok}, "lifecycle": {{"failures": [
+                        {{"machine": 0, "core": 1, "tine_s": 2.0}}]}}}}"#
+                ),
+                "lifecycle.failures[0].tine_s",
+            ),
+            (
+                format!(r#"{{{fleet_ok}, "lifecycle": {{"age_limit_yr": "soon"}}}}"#),
+                "lifecycle.age_limit_yr",
+            ),
+            // Cross-reference validation: failure on a machine the fleet
+            // doesn't have.
+            (
+                format!(
+                    r#"{{{fleet_ok}, "lifecycle": {{"failures": [
+                        {{"machine": 9, "core": 0, "time_s": 1.0}}]}}}}"#
+                ),
+                "machine",
+            ),
+        ] {
+            // Base smoke has n_prompt 1 + n_token 2 = 3 machines, matching
+            // fleet_ok's count.
+            let spec = format!(r#"{{"base": "smoke", {}"#, &bad[1..]);
+            let err = sweep_from_value(&parse(&spec).unwrap()).unwrap_err();
+            assert!(err.contains(named), "error for {spec} should name '{named}': {err}");
+            // The same blocks go through the cluster-config path.
+            let cluster = format!(r#"{{"n_prompt": 1, "n_token": 2, {}"#, &bad[1..]);
+            let err = cluster_from_value(&parse(&cluster).unwrap()).unwrap_err();
+            assert!(err.contains(named), "cluster error for {cluster} should name '{named}': {err}");
+        }
+    }
+
+    #[test]
+    fn fleet_group_count_must_match_the_machine_count() {
+        let v = parse(
+            r#"{"base": "smoke", "fleet": {"groups": [{"count": 2, "cores": 8}]}}"#,
+        )
+        .unwrap();
+        // Smoke is 1 prompt + 2 token = 3 machines; a 2-machine fleet
+        // cannot cover it.
+        let err = sweep_from_value(&v).unwrap_err();
+        assert!(err.contains("fleet"), "{err}");
+    }
+
+    #[test]
     fn sweep_file_errors_name_the_file() {
         let dir = std::env::temp_dir().join("carbon_sim_sweep_cfg_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -633,6 +974,23 @@ mod tests {
             cfg.grid(&smoke_search).n_cells() == smoke_search.n_cells(),
             "the search budget must equal the spec's own replicas so the exhaustive \
              comparison in CI is against the same grid"
+        );
+        // The lifecycle quickstart spec: a smoke-sized grid whose fleet
+        // retires the over-age gen2 group at the first check and loses
+        // cores to both scripted failures.
+        let lifecycle = sweep_from_file(&specs.join("lifecycle_smoke.json")).unwrap();
+        assert!(lifecycle.validate().is_ok());
+        let fleet = lifecycle.fleet.as_ref().expect("lifecycle_smoke.json must carry a fleet");
+        assert_eq!(fleet.n_machines(), lifecycle.n_prompt + lifecycle.n_token);
+        assert_eq!(fleet.groups.len(), 2);
+        let lc = lifecycle.lifecycle.as_ref().expect("lifecycle_smoke.json must carry a lifecycle");
+        assert!(lc.retirement_armed(), "the spec must exercise retirement");
+        assert_eq!(lc.failures.len(), 2, "the spec must exercise core failures");
+        assert_eq!(lc.maintenance.len(), 1, "the spec must exercise maintenance");
+        assert!(
+            fleet.groups[1].commission_age_yr > lc.age_limit_yr.unwrap(),
+            "group 1 must enter service past the age limit so the first \
+             retirement check retires it deterministically"
         );
     }
 

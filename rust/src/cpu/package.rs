@@ -113,6 +113,13 @@ pub struct CpuPackage {
     /// Cached count of cores in C0 (§Perf: the hot path queries counts on
     /// every task spawn; scanning all cores was the top profile entry).
     active_cnt: usize,
+    /// Permanently failed cores (fault injection). A failed core is held
+    /// in C6 forever: [`CpuPackage::set_state`] refuses to wake it, so it
+    /// can never re-enter the working set or the allocation candidates.
+    failed: Vec<bool>,
+    /// Cached count of failed cores (`usable_cores` is on the hot
+    /// normalized-idle path).
+    failed_cnt: usize,
     /// Set by every state-changing operation, never by pure time advances
     /// — the adjust-tick skip-ahead bit (module docs).
     dirty: bool,
@@ -207,6 +214,12 @@ impl CoreView<'_> {
     pub fn freq_reduction_ghz(&self) -> f64 {
         self.f0_ghz() - self.freq_ghz()
     }
+
+    /// True if this core has permanently failed (held in C6 forever).
+    #[inline]
+    pub fn failed(&self) -> bool {
+        self.pkg.failed[self.idx]
+    }
 }
 
 impl CpuPackage {
@@ -235,6 +248,8 @@ impl CpuPackage {
             task_core: HashMap::new(),
             oversub: VecDeque::new(),
             active_cnt: n,
+            failed: vec![false; n],
+            failed_cnt: 0,
             dirty: true,
         }
     }
@@ -284,10 +299,31 @@ impl CpuPackage {
         self.active_cnt
     }
 
-    /// Number of cores in C6.
+    /// Number of cores in C6 — *physical* count, failed cores included
+    /// (a dead core is power-gated like any sleeper).
     #[inline]
     pub fn c6_count(&self) -> usize {
         self.n_cores() - self.active_cnt
+    }
+
+    /// Number of permanently failed cores.
+    #[inline]
+    pub fn failed_count(&self) -> usize {
+        self.failed_cnt
+    }
+
+    /// Cores still usable for work: total minus permanently failed. This
+    /// is the capacity denominator once fault injection is on — with no
+    /// failures it equals `n_cores()` exactly.
+    #[inline]
+    pub fn usable_cores(&self) -> usize {
+        self.n_cores() - self.failed_cnt
+    }
+
+    /// True if `core_idx` has permanently failed.
+    #[inline]
+    pub fn is_failed(&self, core_idx: usize) -> bool {
+        self.failed[core_idx]
     }
 
     /// Number of cores with a pinned task.
@@ -373,6 +409,43 @@ impl CpuPackage {
         self.dirty = true;
     }
 
+    /// Re-queue `task` at the *front* of the oversubscription queue.
+    /// Used by the core-failure eviction path: a task evicted from a
+    /// dedicated core arrived (and was promoted) before every task still
+    /// queued behind it, so re-inserting at the front preserves the
+    /// global arrival order the FIFO promotion contract pins.
+    pub fn push_oversub_front(&mut self, task: u64) {
+        self.oversub.push_front(task);
+        self.dirty = true;
+    }
+
+    /// Permanently fail a core: its pinned task (if any) is evicted and
+    /// returned, the core is forced into C6, and its aging freezes. The
+    /// core never re-enters the working set — `set_state` refuses to wake
+    /// it — so every policy's allocation candidates exclude it from now
+    /// on. Panics if the core already failed (callers gate on
+    /// [`CpuPackage::is_failed`]).
+    pub fn fail_core(&mut self, core_idx: usize, now: f64) -> Option<u64> {
+        assert!(!self.failed[core_idx], "core {core_idx} already failed");
+        self.advance_one(core_idx, now);
+        let evicted = self.task[core_idx].take();
+        if let Some(task) = evicted {
+            self.task_core.remove(&task);
+            self.busy_m[core_idx] = 0.0;
+            self.idle_since[core_idx] = now;
+        }
+        if self.state[core_idx] == CState::C0 {
+            self.state[core_idx] = CState::C6;
+            self.active_cnt -= 1;
+            self.active_m[core_idx] = 0.0;
+        }
+        self.eq_rate[core_idx] = 0.0;
+        self.failed[core_idx] = true;
+        self.failed_cnt += 1;
+        self.dirty = true;
+        evicted
+    }
+
     /// Finish a task wherever it runs. Returns the freed core index when
     /// the task had a dedicated core.
     pub fn finish_task(&mut self, task: u64, now: f64) -> Option<usize> {
@@ -411,9 +484,10 @@ impl CpuPackage {
         t
     }
 
-    /// Switch a core's C-state.
+    /// Switch a core's C-state. A no-op for permanently failed cores:
+    /// they are pinned in C6 and can never be woken.
     pub fn set_state(&mut self, core_idx: usize, state: CState, now: f64) {
-        if state == self.state[core_idx] {
+        if self.failed[core_idx] || state == self.state[core_idx] {
             return;
         }
         debug_assert!(
@@ -506,16 +580,21 @@ impl CpuPackage {
     }
 
     /// Normalized idle cores — the Fig. 8 x-axis:
-    /// `(active − running_tasks) / N`. Positive = underutilization,
-    /// negative = oversubscription.
+    /// `(active − running_tasks) / N_usable`. Positive = underutilization,
+    /// negative = oversubscription. The denominator is the *usable* core
+    /// count (total minus permanently failed), so the metric keeps its
+    /// [−1, 1] range on a degraded package; with no failures it is the
+    /// historical `/ n_cores()` exactly.
     pub fn normalized_idle(&self) -> f64 {
-        (self.active_count() as f64 - self.running_tasks() as f64) / self.n_cores() as f64
+        (self.active_count() as f64 - self.running_tasks() as f64)
+            / self.usable_cores().max(1) as f64
     }
 
     /// Normalized idle as seen by a task that is about to be placed
     /// (itself included in the running count).
     pub fn normalized_idle_for_extra_task(&self) -> f64 {
-        (self.active_count() as f64 - (self.running_tasks() + 1) as f64) / self.n_cores() as f64
+        (self.active_count() as f64 - (self.running_tasks() + 1) as f64)
+            / self.usable_cores().max(1) as f64
     }
 
     /// Overwrite a core's canonical equivalent stress time — fixtures and
@@ -672,5 +751,60 @@ mod tests {
     fn finishing_unknown_task_panics() {
         let mut p = pkg(1);
         p.finish_task(42, 0.0);
+    }
+
+    #[test]
+    fn failed_core_is_evicted_gated_and_never_wakes() {
+        let mut p = pkg(4);
+        p.assign(1, 100, 0.0);
+        assert_eq!(p.fail_core(1, 1.0), Some(100));
+        assert!(p.is_failed(1));
+        assert!(p.core(1).failed());
+        assert_eq!(p.failed_count(), 1);
+        assert_eq!(p.usable_cores(), 3);
+        assert_eq!(p.core(1).state(), CState::C6);
+        assert_eq!(p.core(1).task(), None);
+        assert_eq!(p.active_count(), 3);
+        assert_eq!(p.allocated_count(), 0, "evicted task left the pin map");
+        // A failed core can never be woken back into the working set.
+        p.set_state(1, CState::C0, 2.0);
+        assert_eq!(p.core(1).state(), CState::C6);
+        assert_eq!(p.active_count(), 3);
+        assert!(p.free_active_cores().all(|c| c.id() != 1));
+        // And its aging is frozen from the failure instant on.
+        let eq_at_fail = p.core(1).eq_time_s();
+        p.advance_all(1000.0);
+        assert_eq!(p.core(1).eq_time_s(), eq_at_fail);
+    }
+
+    #[test]
+    fn failing_an_idle_c6_core_keeps_counts_consistent() {
+        let mut p = pkg(3);
+        p.set_state(2, CState::C6, 0.0);
+        assert_eq!(p.fail_core(2, 1.0), None);
+        assert_eq!(p.active_count(), 2);
+        assert_eq!(p.c6_count(), 1);
+        assert_eq!(p.usable_cores(), 2);
+        // Denominators follow the usable count, not the physical one.
+        assert!((p.normalized_idle() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_oversub_front_heads_the_queue() {
+        let mut p = pkg(1);
+        p.push_oversub(10);
+        p.push_oversub(11);
+        p.push_oversub_front(9);
+        assert_eq!(p.pop_oversub(), Some(9));
+        assert_eq!(p.pop_oversub(), Some(10));
+        assert_eq!(p.pop_oversub(), Some(11));
+    }
+
+    #[test]
+    #[should_panic(expected = "already failed")]
+    fn double_failure_panics() {
+        let mut p = pkg(2);
+        p.fail_core(0, 0.0);
+        p.fail_core(0, 1.0);
     }
 }

@@ -41,6 +41,32 @@ impl ProcVarParams {
             f_nominal_ghz: 2.6,
         }
     }
+
+    /// Process-variation preset for a named hardware generation — the
+    /// vocabulary the fleet config's `generation` key accepts.
+    ///
+    /// `"paper"`/`"gen1"` is the paper's process node exactly. `"gen2"`
+    /// and `"gen3"` are hypothetical successor nodes for heterogeneity
+    /// studies: tighter variation (smaller `sigma_rel`) and a higher
+    /// nominal frequency, the usual trajectory of a process shrink.
+    pub fn for_generation(name: &str) -> Result<ProcVarParams, String> {
+        match name {
+            "paper" | "gen1" => Ok(ProcVarParams::paper_default()),
+            "gen2" => Ok(ProcVarParams {
+                sigma_rel: 0.03,
+                f_nominal_ghz: 2.8,
+                ..ProcVarParams::paper_default()
+            }),
+            "gen3" => Ok(ProcVarParams {
+                sigma_rel: 0.025,
+                f_nominal_ghz: 3.0,
+                ..ProcVarParams::paper_default()
+            }),
+            other => Err(format!(
+                "unknown process generation '{other}' (known: paper, gen1, gen2, gen3)"
+            )),
+        }
+    }
 }
 
 /// Sampler producing per-core initial frequencies for whole chips.
@@ -175,6 +201,17 @@ mod tests {
             stats::mean(&cvs)
         };
         assert!(cv(&s_hi, &mut r2) > 2.0 * cv(&s_lo, &mut r1));
+    }
+
+    #[test]
+    fn generation_presets_resolve_and_reject() {
+        let paper = ProcVarParams::for_generation("paper").unwrap();
+        assert!((paper.f_nominal_ghz - 2.6).abs() < 1e-12);
+        let gen3 = ProcVarParams::for_generation("gen3").unwrap();
+        assert!(gen3.sigma_rel < paper.sigma_rel);
+        assert!(gen3.f_nominal_ghz > paper.f_nominal_ghz);
+        let err = ProcVarParams::for_generation("90nm").unwrap_err();
+        assert!(err.contains("90nm"), "error names the bad generation: {err}");
     }
 
     #[test]

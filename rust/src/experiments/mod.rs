@@ -61,17 +61,26 @@ pub mod sweep_stream;
 /// report, plain spill, bench, and orchestrate schemas are unchanged
 /// from version 4; **6** — adds the `lint-report` JSON emitted by
 /// `carbon-sim lint --json`; every previously-existing schema is
-/// unchanged from version 5.
-pub const OUTPUT_SCHEMA_VERSION: usize = 6;
+/// unchanged from version 5; **7** — sweep specs may carry optional
+/// `fleet`/`lifecycle` blocks (heterogeneous SKUs, maintenance windows,
+/// core failures, aging-triggered retirement); fleet-configured cell
+/// records append the lifecycle summary keys
+/// (`lifecycle_yearly_embodied_kg`, `lifecycle_retirements`,
+/// `lifecycle_core_failures`, `lifecycle_rerouted`,
+/// `active_capacity_fraction`) and the CSV gains the matching columns;
+/// reports without a fleet block are byte-identical to version 6 apart
+/// from the stamped number.
+pub const OUTPUT_SCHEMA_VERSION: usize = 7;
 
 /// Oldest `cells.jsonl` spill version `--resume` and `merge` still
 /// accept. The spill format is unchanged since version 2 (version 3
 /// only added the orchestrate manifest; version 4 only extended the
 /// bench JSON; version 5 only added an *optional* header field, which
-/// older rows simply lack; version 6 only added the lint report), so
-/// refusing v2–v5 spills would orphan days of shard work over a label;
-/// version-1 spills really do differ (no embedded spec) and stay
-/// refused.
+/// older rows simply lack; version 6 only added the lint report;
+/// version 7 only added optional spec blocks and per-cell keys that
+/// non-fleet spills simply lack), so refusing v2–v6 spills would orphan
+/// days of shard work over a label; version-1 spills really do differ
+/// (no embedded spec) and stay refused.
 pub const MIN_SUPPORTED_SPILL_SCHEMA_VERSION: usize = 2;
 
 use crate::cluster::{Cluster, ClusterConfig};

@@ -626,6 +626,8 @@ mod tests {
             n_prompt: 1,
             n_token: 1,
             seed: 31,
+            fleet: None,
+            lifecycle: None,
         }
     }
 

@@ -572,6 +572,8 @@ mod tests {
             n_prompt: 1,
             n_token: 1,
             seed: 11,
+            fleet: None,
+            lifecycle: None,
         }
     }
 

@@ -35,7 +35,7 @@
 use std::fmt;
 use std::path::Path;
 
-use crate::cluster::{Cluster, ClusterConfig};
+use crate::cluster::{Cluster, ClusterConfig, FleetConfig, LifecycleConfig};
 use crate::metrics::SimResult;
 use crate::policy::ALL_POLICIES;
 use crate::sim::QueueKind;
@@ -61,6 +61,16 @@ pub struct SweepSpec {
     pub n_token: usize,
     /// Root seed; per-cell seeds derive from it via [`cell_seed`].
     pub seed: u64,
+    /// Optional heterogeneous fleet (machine SKU groups). When set,
+    /// per-machine core counts come from the groups and the `core_counts`
+    /// axis is nominal labeling only. Absent from canonical JSON when
+    /// `None`, so pre-fleet specs keep their bytes and [`spec_hash`].
+    ///
+    /// [`spec_hash`]: SweepSpec::spec_hash
+    pub fleet: Option<FleetConfig>,
+    /// Optional fleet events (maintenance / failures / retirement);
+    /// requires `fleet`.
+    pub lifecycle: Option<LifecycleConfig>,
 }
 
 impl SweepSpec {
@@ -76,6 +86,8 @@ impl SweepSpec {
             n_prompt: 5,
             n_token: 17,
             seed: 42,
+            fleet: None,
+            lifecycle: None,
         }
     }
 
@@ -91,6 +103,8 @@ impl SweepSpec {
             n_prompt: 1,
             n_token: 2,
             seed: 7,
+            fleet: None,
+            lifecycle: None,
         }
     }
 
@@ -121,6 +135,15 @@ impl SweepSpec {
         for p in &self.policies {
             crate::policy::by_name(p)?;
         }
+        if self.lifecycle.is_some() && self.fleet.is_none() {
+            return Err("sweep: a lifecycle block requires a fleet block".to_string());
+        }
+        if let Some(fleet) = &self.fleet {
+            fleet.validate(self.n_prompt + self.n_token)?;
+            if let Some(lc) = &self.lifecycle {
+                lc.validate(fleet)?;
+            }
+        }
         Ok(())
     }
 
@@ -136,7 +159,7 @@ impl SweepSpec {
     /// The spec as canonical JSON — the `"spec"` block of the report and
     /// the byte string [`SweepSpec::spec_hash`] is computed over.
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut entries: Vec<(&str, Value)> = vec![
             ("rates", Value::from_f64_slice(&self.rates)),
             (
                 "core_counts",
@@ -156,7 +179,16 @@ impl SweepSpec {
             ("n_token", self.n_token.into()),
             // u64 seeds exceed f64's 2^53 integer range; keep full fidelity.
             ("seed", format!("{}", self.seed).into()),
-        ])
+        ];
+        // Optional blocks appear only when set, so pre-fleet specs keep
+        // their canonical bytes (and spec hashes) exactly.
+        if let Some(fleet) = &self.fleet {
+            entries.push(("fleet", fleet.to_json()));
+        }
+        if let Some(lc) = &self.lifecycle {
+            entries.push(("lifecycle", lc.to_json()));
+        }
+        Value::obj(entries)
     }
 
     /// FNV-1a 64 over the canonical spec JSON, as 16 hex digits. Recorded
@@ -367,6 +399,8 @@ pub fn run_cell_with_queue(
         policy: cell.policy.clone(),
         seed: cell.seed,
         queue,
+        fleet: spec.fleet.clone(),
+        lifecycle: spec.lifecycle.clone(),
         ..ClusterConfig::default()
     };
     let result = Cluster::new(cfg).run(&trace);
@@ -442,6 +476,28 @@ pub const CSV_COLUMNS: &[&str] = &[
     "idle_p50",
 ];
 
+/// Columns appended after [`CSV_COLUMNS`] for fleet-configured sweeps —
+/// each is a key the cell record gains when the spec carries a `fleet`
+/// block (see [`SimResult::to_json_summary`]).
+pub const LIFECYCLE_CSV_COLUMNS: &[&str] = &[
+    "active_capacity_fraction",
+    "lifecycle_core_failures",
+    "lifecycle_rerouted",
+    "lifecycle_retirements",
+    "lifecycle_yearly_embodied_kg",
+];
+
+/// The CSV column list for `spec`: the historic columns, plus the
+/// lifecycle columns iff the spec carries a `fleet` block. Keeping the
+/// extension conditional preserves non-fleet reports byte-for-byte.
+pub fn csv_columns(spec: &SweepSpec) -> Vec<&'static str> {
+    let mut cols: Vec<&'static str> = CSV_COLUMNS.to_vec();
+    if spec.fleet.is_some() {
+        cols.extend_from_slice(LIFECYCLE_CSV_COLUMNS);
+    }
+    cols
+}
+
 /// RFC-4180 CSV field quoting: wrap the field in double quotes (doubling
 /// any inner quote) when it contains a comma, quote, or line break;
 /// everything else passes through bare, so reports whose fields never
@@ -480,12 +536,13 @@ impl SweepReport {
     /// The per-cell table as deterministic CSV, extracted column-by-column
     /// from the same JSON record [`SweepCellResult::to_json`] emits.
     pub fn to_csv(&self) -> String {
+        let cols = csv_columns(&self.spec);
         let mut out = String::new();
-        out.push_str(&CSV_COLUMNS.join(","));
+        out.push_str(&cols.join(","));
         out.push('\n');
         for cr in &self.cells {
             let record = cr.to_json();
-            let row: Vec<String> = CSV_COLUMNS
+            let row: Vec<String> = cols
                 .iter()
                 .map(|col| match record.get(col) {
                     // Strings (workload, policy, seed) are quoted only
@@ -610,7 +667,25 @@ mod tests {
             n_prompt: 1,
             n_token: 1,
             seed: 11,
+            fleet: None,
+            lifecycle: None,
         }
+    }
+
+    fn tiny_fleet() -> SweepSpec {
+        use crate::cluster::MachineGroup;
+        let mut spec = tiny();
+        spec.fleet = Some(FleetConfig {
+            groups: vec![MachineGroup {
+                count: 2,
+                cores: 8,
+                generation: "paper".into(),
+                embodied_kg: 278.3,
+                lifetime_yr: 3.0,
+                commission_age_yr: 0.0,
+            }],
+        });
+        spec
     }
 
     #[test]
@@ -717,6 +792,54 @@ mod tests {
         s.duration_s = 0.0;
         assert!(s.validate().is_err());
         assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn fleet_specs_validate_hash_and_extend_the_csv() {
+        // Lifecycle without fleet is rejected.
+        let mut s = tiny();
+        s.lifecycle = Some(LifecycleConfig::default());
+        assert!(s.validate().unwrap_err().contains("requires a fleet"));
+        // Fleet machine count must match n_prompt + n_token (tiny: 1+1).
+        let ok = tiny_fleet();
+        assert!(ok.validate().is_ok());
+        let mut bad = tiny_fleet();
+        bad.fleet.as_mut().unwrap().groups[0].count = 3;
+        assert!(bad.validate().is_err());
+        // The optional block changes the canonical JSON and the hash;
+        // its absence keeps the pre-fleet key set.
+        assert_ne!(tiny().spec_hash(), ok.spec_hash());
+        let plain = tiny().to_json().to_string_compact();
+        assert!(!plain.contains("fleet"), "non-fleet specs keep their bytes");
+        assert!(ok.to_json().to_string_compact().contains("\"fleet\""));
+        // CSV columns extend only for fleet specs.
+        assert_eq!(csv_columns(&tiny()), CSV_COLUMNS.to_vec());
+        let cols = csv_columns(&ok);
+        assert_eq!(cols.len(), CSV_COLUMNS.len() + LIFECYCLE_CSV_COLUMNS.len());
+        assert!(cols.contains(&"lifecycle_yearly_embodied_kg"));
+    }
+
+    #[test]
+    fn fleet_sweep_cells_report_lifecycle_columns() {
+        let mut spec = tiny_fleet();
+        spec.rates = vec![5.0];
+        spec.workloads = vec![Workload::Mixed];
+        spec.replicas = 1;
+        spec.lifecycle = Some(LifecycleConfig {
+            failures: vec![crate::cluster::CoreFailure { machine: 1, core: 0, time_s: 0.5 }],
+            ..LifecycleConfig::default()
+        });
+        let report = run(&spec, 1).unwrap();
+        let csv = report.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert_eq!(header, csv_columns(&spec).join(","));
+        for cr in &report.cells {
+            let record = cr.to_json();
+            for col in LIFECYCLE_CSV_COLUMNS {
+                assert!(record.get(col).is_some(), "missing {col}");
+            }
+            assert_eq!(record.usize_or("lifecycle_core_failures", 99), 1);
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
-use super::sweep::{run_cell_with_queue, Format, ShardSpec, SweepSpec, CSV_COLUMNS};
+use super::sweep::{csv_columns, run_cell_with_queue, Format, ShardSpec, SweepSpec};
 #[allow(unused_imports)] // rustdoc links
 use super::sweep::{SweepCellResult, SweepReport};
 use super::OUTPUT_SCHEMA_VERSION;
@@ -489,7 +489,9 @@ pub fn assemble_report(
     let write_err = |e: std::io::Error| format!("writing {report_path:?}: {e}");
     match format {
         Format::Json => write_report_json(&mut w, spec, &mut src, &ranges).map_err(write_err)?,
-        Format::Csv => write_report_csv(&mut w, &mut src, &ranges, cells_path)?,
+        Format::Csv => {
+            write_report_csv(&mut w, &mut src, &ranges, cells_path, &csv_columns(spec))?
+        }
     }
     w.flush().map_err(write_err)
 }
@@ -543,20 +545,23 @@ fn write_report_json<W: Write>(
 }
 
 /// Stream the CSV report: the same column extraction as
-/// [`SweepReport::to_csv`], row by row from the spill.
+/// [`SweepReport::to_csv`], row by row from the spill. `columns` comes
+/// from [`csv_columns`] so fleet-configured specs get the lifecycle
+/// columns and plain specs keep their historic header.
 fn write_report_csv<W: Write>(
     w: &mut W,
     src: &mut File,
     ranges: &[(u64, usize)],
     cells_path: &Path,
+    columns: &[&'static str],
 ) -> Result<(), String> {
     let werr = |e: std::io::Error| format!("writing report: {e}");
-    w.write_all(CSV_COLUMNS.join(",").as_bytes()).map_err(werr)?;
+    w.write_all(columns.join(",").as_bytes()).map_err(werr)?;
     w.write_all(b"\n").map_err(werr)?;
     for &range in ranges {
         let record = read_row(src, range)?;
-        let mut row = Vec::with_capacity(CSV_COLUMNS.len());
-        for col in CSV_COLUMNS {
+        let mut row = Vec::with_capacity(columns.len());
+        for col in columns {
             match record.get(col) {
                 // Strings (workload, policy, seed) are quoted only when
                 // RFC 4180 requires it — same rule as SweepReport::to_csv.

@@ -332,6 +332,10 @@ fn cmd_sweep(rest: &[String]) -> i32 {
                 n_prompt: a.parsed("prompt-machines")?,
                 n_token: a.parsed("token-machines")?,
                 seed: a.parsed("seed")?,
+                // Fleet/lifecycle blocks are spec-file-only (too
+                // structured for axis flags); see examples/specs.
+                fleet: None,
+                lifecycle: None,
             };
             // Axis-flag grids carry no `search` block; --search falls back
             // to SearchConfig::defaults_for below.

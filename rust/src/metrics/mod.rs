@@ -24,6 +24,13 @@ pub struct Collector {
     pub oversub_integral: Vec<f64>,
     /// Per machine: ∫ active_core_count dt (core-seconds in C0).
     pub active_core_seconds: Vec<f64>,
+    /// Per machine: ∫ usable_core_count dt (core-seconds of healthy
+    /// capacity). With a static fleet this is the constant
+    /// `cores × duration` the old reporting divided by; under lifecycle
+    /// events (core failures, SKU swaps on retirement) the usable count
+    /// varies over time, and this integral is the correct denominator
+    /// for capacity-fraction metrics.
+    pub capacity_core_seconds: Vec<f64>,
     /// Simulation time the integrals have been advanced to — written at
     /// each sampling tick and consumed by `Cluster::run`, which integrates
     /// the final partial `(last Sample, end]` interval before snapshotting.
@@ -42,6 +49,7 @@ impl Collector {
             idle_samples: vec![Vec::new(); n_machines],
             oversub_integral: vec![0.0; n_machines],
             active_core_seconds: vec![0.0; n_machines],
+            capacity_core_seconds: vec![0.0; n_machines],
             last_integral_t: 0.0,
             ttft: Vec::new(),
             e2e: Vec::new(),
@@ -62,18 +70,44 @@ impl Collector {
     }
 
     /// Advance the time integrals by `dt` given machine `m`'s state.
-    pub fn integrate(&mut self, m: usize, dt: f64, running_tasks: usize, active_cores: usize) {
+    /// `usable_cores` is the machine's healthy (non-failed) core count
+    /// *during this interval* — integrated, not assumed constant, because
+    /// core failures and retirement SKU swaps change it mid-run.
+    pub fn integrate(
+        &mut self,
+        m: usize,
+        dt: f64,
+        running_tasks: usize,
+        active_cores: usize,
+        usable_cores: usize,
+    ) {
         let over = running_tasks as f64 - active_cores as f64;
         if over > 0.0 {
             self.oversub_integral[m] += over * dt;
         }
         self.active_core_seconds[m] += active_cores as f64 * dt;
+        self.capacity_core_seconds[m] += usable_cores as f64 * dt;
     }
 
     pub fn record_request(&mut self, ttft_s: f64, e2e_s: f64) {
         self.ttft.push(ttft_s);
         self.e2e.push(e2e_s);
     }
+}
+
+/// Fleet-lifecycle roll-up reported by runs with a `fleet` config block.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LifecycleSummary {
+    /// Embodied carbon amortized over the service windows machines
+    /// *actually* delivered (kgCO₂eq / year); early retirement raises it
+    /// above the planned `Σ embodied / lifetime` rate.
+    pub yearly_embodied_kg: f64,
+    /// Machines retired (and replaced) during the run.
+    pub retirements: u64,
+    /// Cores permanently failed during the run.
+    pub core_failures: u64,
+    /// Requests re-routed out of draining machines.
+    pub rerouted: u64,
 }
 
 /// End-of-run results: everything the experiment harness and benches need.
@@ -101,6 +135,10 @@ pub struct SimResult {
     pub freq: Vec<Vec<f64>>,
 
     pub collector: Collector,
+    /// Present iff the run had a `fleet` config block (see
+    /// [`LifecycleSummary`]); `None` keeps non-fleet summaries
+    /// byte-identical to the pre-lifecycle schema.
+    pub lifecycle: Option<LifecycleSummary>,
 }
 
 impl SimResult {
@@ -151,7 +189,7 @@ impl SimResult {
     pub fn to_json_summary(&self) -> Value {
         let ttft = self.ttft_summary();
         let e2e = self.e2e_summary();
-        Value::obj(vec![
+        let mut entries: Vec<(&str, Value)> = vec![
             ("policy", self.policy.as_str().into()),
             ("cores", self.cores_per_cpu.into()),
             ("rate_achieved_rps", self.rate_rps.into()),
@@ -166,7 +204,17 @@ impl SimResult {
             ("freq_cv_mean", stats::mean(&self.freq_cv_per_machine()).into()),
             ("oversub_fraction", self.oversub_fraction().into()),
             ("idle_p50", stats::percentile(&self.pooled_idle_samples(), 50.0).into()),
-        ])
+        ];
+        // Lifecycle keys appear only for fleet-configured runs, keeping
+        // plain summaries byte-identical to schema_version 6 output.
+        if let Some(lc) = &self.lifecycle {
+            entries.push(("active_capacity_fraction", self.active_capacity_fraction().into()));
+            entries.push(("lifecycle_core_failures", (lc.core_failures as usize).into()));
+            entries.push(("lifecycle_rerouted", (lc.rerouted as usize).into()));
+            entries.push(("lifecycle_retirements", (lc.retirements as usize).into()));
+            entries.push(("lifecycle_yearly_embodied_kg", lc.yearly_embodied_kg.into()));
+        }
+        Value::obj(entries)
     }
 
     /// Fraction of total core-seconds spent oversubscribed, cluster-wide.
@@ -177,6 +225,22 @@ impl SimResult {
             0.0
         } else {
             over / active
+        }
+    }
+
+    /// Fraction of the fleet's healthy core capacity that was active
+    /// (C0), cluster-wide: `∫active dt / ∫usable dt`. The denominator is
+    /// the time-varying capacity integral, NOT `machines × cores ×
+    /// duration` — a constant denominator over-reports capacity (and so
+    /// under-reports utilization) the moment a core fails or a
+    /// retirement swaps in a different-sized SKU.
+    pub fn active_capacity_fraction(&self) -> f64 {
+        let active: f64 = self.collector.active_core_seconds.iter().sum();
+        let cap: f64 = self.collector.capacity_core_seconds.iter().sum();
+        if cap == 0.0 {
+            0.0
+        } else {
+            active / cap
         }
     }
 }
@@ -198,6 +262,7 @@ mod tests {
             f0,
             freq,
             collector: Collector::new(1),
+            lifecycle: None,
         }
     }
 
@@ -218,11 +283,57 @@ mod tests {
     #[test]
     fn integrate_only_counts_oversubscription() {
         let mut c = Collector::new(1);
-        c.integrate(0, 1.0, 5, 8); // underutilized: no oversub
+        c.integrate(0, 1.0, 5, 8, 8); // underutilized: no oversub
         assert_eq!(c.oversub_integral[0], 0.0);
-        c.integrate(0, 2.0, 10, 8); // 2 tasks over for 2 s
+        c.integrate(0, 2.0, 10, 8, 8); // 2 tasks over for 2 s
         assert!((c.oversub_integral[0] - 4.0).abs() < 1e-12);
         assert!((c.active_core_seconds[0] - 24.0).abs() < 1e-12);
+        assert!((c.capacity_core_seconds[0] - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_integral_tracks_failures_not_the_constant_denominator() {
+        // An 8-core machine loses a core after 1 s: healthy capacity is
+        // 8 + 7 = 15 core-seconds, not the constant-denominator 8 × 2 =
+        // 16 a static `cores × duration` would claim. With 4 cores
+        // active throughout (4 + 7 = 11 active core-seconds once the
+        // survivor count is 7) the fraction must be 11/15.
+        let mut c = Collector::new(1);
+        c.integrate(0, 1.0, 4, 4, 8);
+        c.integrate(0, 1.0, 4, 7, 7);
+        assert!((c.capacity_core_seconds[0] - 15.0).abs() < 1e-12);
+        assert!(c.capacity_core_seconds[0] < 16.0, "old constant-denominator math");
+        let mut r = result_with_freqs(vec![vec![2.6]], vec![vec![2.6]]);
+        r.collector = c;
+        let frac = r.active_capacity_fraction();
+        assert!((frac - 11.0 / 15.0).abs() < 1e-12, "fraction {frac}");
+    }
+
+    #[test]
+    fn lifecycle_keys_appear_only_for_fleet_runs() {
+        let mut r = result_with_freqs(vec![vec![2.6, 2.5]], vec![vec![2.5, 2.4]]);
+        let plain = r.to_json_summary().to_string_pretty();
+        assert!(!plain.contains("lifecycle_"), "non-fleet summary unchanged");
+        assert!(!plain.contains("active_capacity_fraction"));
+        r.lifecycle = Some(LifecycleSummary {
+            yearly_embodied_kg: 123.4,
+            retirements: 2,
+            core_failures: 1,
+            rerouted: 3,
+        });
+        let with = r.to_json_summary().to_string_pretty();
+        for key in [
+            "active_capacity_fraction",
+            "lifecycle_core_failures",
+            "lifecycle_rerouted",
+            "lifecycle_retirements",
+            "lifecycle_yearly_embodied_kg",
+        ] {
+            assert!(with.contains(key), "missing {key}");
+        }
+        let parsed = crate::util::json::parse(&with).unwrap();
+        assert_eq!(parsed.usize_or("lifecycle_retirements", 0), 2);
+        assert!((parsed.f64_or("lifecycle_yearly_embodied_kg", 0.0) - 123.4).abs() < 1e-12);
     }
 
     #[test]

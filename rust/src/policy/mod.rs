@@ -162,6 +162,61 @@ impl CoreManager {
         true
     }
 
+    /// Permanently fail a core (fault injection). A task pinned to the
+    /// dying core is evicted back to the *front* of the oversubscription
+    /// queue — it arrived (and was promoted) before every task still
+    /// queued, so a front re-insert preserves the global arrival order
+    /// the FIFO promotion contract pins. The policy then re-adjusts and
+    /// promotion runs, so the evicted task lands on a healthy core right
+    /// away when one is free. Returns false (and does nothing) when the
+    /// core index is stale (beyond a replacement SKU's core count) or
+    /// already failed.
+    ///
+    /// The evicted task's already-scheduled completion event stays valid:
+    /// `finish_task` finds the task pinned-or-queued either way, so no
+    /// task is lost or double-completed. The modeled approximation is
+    /// that a failure does not extend in-flight task runtimes.
+    pub fn fail_core(&mut self, core_idx: usize, now: f64) -> bool {
+        if core_idx >= self.cpu.n_cores() || self.cpu.is_failed(core_idx) {
+            return false;
+        }
+        if let Some(task) = self.cpu.fail_core(core_idx, now) {
+            self.cpu.push_oversub_front(task);
+        }
+        self.policy.adjust(&mut self.cpu, now);
+        self.promote_oversub(now);
+        true
+    }
+
+    /// Swap in a replacement CPU package (machine retirement → new SKU).
+    /// Every task the old package was running migrates to the new one's
+    /// oversubscription queue — pinned tasks first, in core-id order,
+    /// then the old queue, preserving relative arrival order — and the
+    /// fresh policy immediately adjusts and promotes, so tasks re-pin to
+    /// the new silicon at once. Scheduled completion events stay valid
+    /// (`finish_task` resolves pinned-or-queued). The policy is replaced
+    /// along with the package: its learned per-core state (sticky lists,
+    /// age estimates) indexes the old core count.
+    pub fn replace_package(
+        &mut self,
+        new_cpu: CpuPackage,
+        new_policy: Box<dyn CorePolicy>,
+        now: f64,
+    ) {
+        let old = std::mem::replace(&mut self.cpu, new_cpu);
+        self.policy = new_policy;
+        for core in old.core_views() {
+            if let Some(task) = core.task() {
+                self.cpu.push_oversub(task);
+            }
+        }
+        for &task in old.oversub.iter() {
+            self.cpu.push_oversub(task);
+        }
+        self.policy.adjust(&mut self.cpu, now);
+        self.promote_oversub(now);
+    }
+
     fn promote_oversub(&mut self, now: f64) {
         while !self.cpu.oversub.is_empty() && self.cpu.has_free_active_core() {
             if let Some(core) = self.policy.pick_core(&self.cpu, now, &mut self.rng) {
@@ -245,6 +300,67 @@ mod tests {
         }
         assert_eq!(promoted, vec![10, 12], "promotion order broke arrival order");
         assert_eq!(m.cpu.oversub.iter().copied().collect::<Vec<_>>(), vec![13]);
+    }
+
+    #[test]
+    fn failure_during_oversubscription_preserves_fifo_order() {
+        // Regression guarding the PR 6 FIFO fix against the core-failure
+        // eviction path: fail a pinned core while the oversubscription
+        // queue is non-empty. The evicted task re-queues at the *front*
+        // (it arrived before everything still queued), and subsequent
+        // promotions must follow global arrival order exactly.
+        let mut m = mgr(2, "linux");
+        m.start_task(1, 0.0);
+        m.start_task(2, 0.0);
+        for t in [10, 11, 12, 13] {
+            assert!(m.start_task(t, 0.1).is_none());
+        }
+        let core1 = m.cpu.task_core_of(1).expect("task 1 pinned");
+        assert!(m.fail_core(core1, 0.2));
+        assert!(!m.fail_core(core1, 0.3), "double failure is a no-op");
+        // One usable core left (running task 2): task 1 heads the queue.
+        assert_eq!(
+            m.cpu.oversub.iter().copied().collect::<Vec<_>>(),
+            vec![1, 10, 11, 12, 13]
+        );
+        // Drain through the single surviving core; each finish promotes
+        // the next task. The pin order must be the arrival order.
+        let mut order = Vec::new();
+        m.finish_task(2, 1.0);
+        let mut clock = 1.0;
+        while m.cpu.running_tasks() > 0 {
+            let pinned = m.cpu.core_views().find_map(|c| c.task()).expect("one pinned task");
+            assert_ne!(m.cpu.task_core_of(pinned), Some(core1), "failed core re-used");
+            order.push(pinned);
+            clock += 1.0;
+            m.finish_task(pinned, clock);
+        }
+        assert_eq!(order, vec![1, 10, 11, 12, 13], "promotion broke arrival order");
+    }
+
+    #[test]
+    fn replace_package_migrates_pinned_and_queued_tasks() {
+        for p in ALL_POLICIES {
+            let mut m = mgr(2, p);
+            m.start_task(1, 0.0);
+            m.start_task(2, 0.0);
+            assert!(m.start_task(3, 0.1).is_none());
+            // Retire onto a *smaller* SKU: 1 core. All three tasks must
+            // survive the swap, one pinned and two queued in order.
+            let new_cpu = CpuPackage::uniform(
+                1,
+                AgingParams::paper_default(),
+                TemperatureModel::paper_default(),
+            );
+            m.replace_package(new_cpu, by_name(p).unwrap(), 0.2);
+            assert_eq!(m.cpu.running_tasks(), 3, "policy {p} lost a task");
+            assert_eq!(m.cpu.allocated_count(), 1, "policy {p}");
+            // finish_task still resolves every migrated task.
+            m.finish_task(1, 1.0);
+            m.finish_task(2, 2.0);
+            m.finish_task(3, 3.0);
+            assert_eq!(m.cpu.running_tasks(), 0, "policy {p}");
+        }
     }
 
     #[test]

@@ -108,8 +108,13 @@ impl ProposedPolicy {
         if park {
             self.scratch.extend(cpu.free_active_cores().map(|c| (eq[c.id()], c.id())));
         } else {
+            // Wake candidates: healthy sleepers only — a permanently
+            // failed core is held in C6 and must never rejoin the
+            // working set.
             self.scratch.extend(
-                cpu.core_views().filter(|c| c.state() == CState::C6).map(|c| (eq[c.id()], c.id())),
+                cpu.core_views()
+                    .filter(|c| c.state() == CState::C6 && !c.failed())
+                    .map(|c| (eq[c.id()], c.id())),
             );
         }
         let delta = delta.min(self.scratch.len());
@@ -166,11 +171,21 @@ impl CorePolicy for ProposedPolicy {
         if !self.enable_idling {
             return;
         }
-        let n = cpu.n_cores();
+        // Algorithm 2 runs over the *usable* core count: permanently
+        // failed cores are neither capacity nor sleepers (they can never
+        // be woken), so a degraded package sizes its working set against
+        // what it can actually deliver. With zero failures this is the
+        // historical `n_cores()` exactly.
+        let n = cpu.usable_cores();
+        if n == 0 {
+            return;
+        }
         let active = cpu.active_count();
         let normal_tasks = cpu.allocated_count();
         let oversub_tasks = cpu.oversub.len();
 
+        // Failed cores sit in C6 but are not sleepers Algorithm 2 can
+        // recall, so they are excluded from C_slp.
         let c_slp = n - active;
         let t_total = (normal_tasks + oversub_tasks).min(n);
         let e = n as f64 - c_slp as f64 - t_total as f64;
@@ -352,6 +367,26 @@ mod tests {
         assert_eq!(cpu.core(0).state(), CState::C0, "least-aged finite sleeper wakes");
         assert_eq!(cpu.core(3).state(), CState::C0, "next finite sleeper wakes");
         assert_eq!(cpu.core(2).state(), CState::C6, "NaN-keyed core wakes last of all");
+    }
+
+    #[test]
+    fn alg2_never_wakes_failed_cores_and_sizes_against_usable_count() {
+        let mut cpu = pkg(4);
+        cpu.fail_core(3, 0.0);
+        let mut p = ProposedPolicy::new();
+        // No tasks: park the surplus of the 3 *usable* cores.
+        p.adjust(&mut cpu, 0.0);
+        assert_eq!(cpu.active_count(), 1);
+        // Oversubscribe far beyond capacity: Algorithm 2 wakes every
+        // healthy sleeper but must leave the failed core in C6.
+        let free = cpu.free_active_cores().next().unwrap().id();
+        cpu.assign(free, 100, 1.0);
+        for t in 0..8 {
+            cpu.push_oversub(t);
+        }
+        p.adjust(&mut cpu, 2.0);
+        assert_eq!(cpu.core(3).state(), CState::C6, "failed core woken");
+        assert_eq!(cpu.active_count(), 3, "all healthy cores awake");
     }
 
     #[test]

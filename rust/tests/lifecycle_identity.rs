@@ -1,0 +1,161 @@
+//! Lifecycle identity wall: the fleet/lifecycle subsystem must be
+//! invisible unless configured.
+//!
+//! Two contracts are pinned here. First, a spec **without** a `fleet`
+//! block renders byte-identical reports at any thread count and under
+//! either queue implementation, and its records carry none of the
+//! lifecycle keys — the pre-lifecycle schema, to the byte. Second, the
+//! differential contract: a fleet of ONE default-generation group
+//! covering every machine consumes the exact RNG streams the no-fleet
+//! path does (`ProcVarSampler::sample_chip` draws a fixed `n_chip²`
+//! gaussians per chip regardless of core count), so its report must
+//! equal the no-fleet report *exactly* apart from the five lifecycle
+//! summary keys.
+
+use carbon_sim::cluster::{ClusterConfig, FleetConfig, MachineGroup};
+use carbon_sim::experiments::sweep::{
+    self, csv_columns, Format, SweepSpec, CSV_COLUMNS, LIFECYCLE_CSV_COLUMNS,
+};
+use carbon_sim::sim::QueueKind;
+use carbon_sim::trace::azure::Workload;
+use carbon_sim::util::json::{parse, Value};
+
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        rates: vec![5.0],
+        core_counts: vec![8],
+        policies: vec!["linux".into(), "proposed".into()],
+        workloads: vec![Workload::Mixed],
+        replicas: 1,
+        duration_s: 5.0,
+        n_prompt: 1,
+        n_token: 2,
+        seed: 2024,
+        fleet: None,
+        lifecycle: None,
+    }
+}
+
+/// One default-generation group covering the whole cluster — the
+/// configuration that must be a perfect no-op.
+fn uniform_fleet(spec: &SweepSpec) -> FleetConfig {
+    FleetConfig {
+        groups: vec![MachineGroup {
+            count: spec.n_prompt + spec.n_token,
+            cores: spec.core_counts[0],
+            ..MachineGroup::default()
+        }],
+    }
+}
+
+#[test]
+fn no_fleet_reports_are_byte_identical_at_any_threads_and_either_queue() {
+    let spec = tiny_spec();
+    let base = sweep::run_with_queue(&spec, 1, QueueKind::Heap).unwrap();
+    let json = base.render(Format::Json);
+    let csv = base.render(Format::Csv);
+    for threads in [1, 2, 4] {
+        for queue in [QueueKind::Heap, QueueKind::Calendar] {
+            let r = sweep::run_with_queue(&spec, threads, queue).unwrap();
+            assert_eq!(
+                r.render(Format::Json),
+                json,
+                "JSON diverged at {threads} threads under {queue:?}"
+            );
+            assert_eq!(
+                r.render(Format::Csv),
+                csv,
+                "CSV diverged at {threads} threads under {queue:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn no_fleet_records_keep_the_pre_lifecycle_schema() {
+    let spec = tiny_spec();
+    assert_eq!(csv_columns(&spec), CSV_COLUMNS.to_vec(), "no fleet, no extra columns");
+    let report = sweep::run(&spec, 2).unwrap();
+    let csv = report.render(Format::Csv);
+    assert_eq!(csv.lines().next().unwrap(), CSV_COLUMNS.join(","));
+    let v = parse(&report.render(Format::Json)).unwrap();
+    let spec_json = v.get("spec").expect("report embeds the spec");
+    assert!(spec_json.get("fleet").is_none(), "no-fleet spec JSON must omit 'fleet'");
+    assert!(spec_json.get("lifecycle").is_none(), "no-fleet spec JSON must omit 'lifecycle'");
+    for cell in v.get("cells").unwrap().as_arr().unwrap() {
+        for key in LIFECYCLE_CSV_COLUMNS {
+            assert!(cell.get(key).is_none(), "no-fleet cell record must not carry '{key}'");
+        }
+    }
+}
+
+#[test]
+fn a_single_default_group_samples_the_exact_no_fleet_silicon() {
+    let cfg = ClusterConfig {
+        n_prompt: 1,
+        n_token: 2,
+        cores_per_cpu: 8,
+        seed: 99,
+        ..ClusterConfig::default()
+    };
+    let fleet_cfg = ClusterConfig {
+        fleet: Some(FleetConfig {
+            groups: vec![MachineGroup { count: 3, cores: 8, ..MachineGroup::default() }],
+        }),
+        ..cfg.clone()
+    };
+    assert_eq!(
+        cfg.sample_f0(),
+        fleet_cfg.sample_f0(),
+        "a default-generation fleet group must consume the no-fleet gaussian stream"
+    );
+}
+
+#[test]
+fn a_default_fleet_report_equals_the_no_fleet_report_minus_lifecycle_keys() {
+    let plain_spec = tiny_spec();
+    let fleet_spec = SweepSpec { fleet: Some(uniform_fleet(&plain_spec)), ..tiny_spec() };
+    let plain = sweep::run(&plain_spec, 2).unwrap();
+    let fleet = sweep::run(&fleet_spec, 2).unwrap();
+
+    let pv = parse(&plain.render(Format::Json)).unwrap();
+    let fv = parse(&fleet.render(Format::Json)).unwrap();
+    let pcells = pv.get("cells").unwrap().as_arr().unwrap();
+    let fcells = fv.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(pcells.len(), fcells.len());
+    for (p, f) in pcells.iter().zip(fcells) {
+        // With no lifecycle block, nothing can have happened...
+        assert_eq!(f.usize_or("lifecycle_retirements", 99), 0);
+        assert_eq!(f.usize_or("lifecycle_core_failures", 99), 0);
+        assert_eq!(f.usize_or("lifecycle_rerouted", 99), 0);
+        let frac = f.f64_or("active_capacity_fraction", -1.0);
+        assert!((0.0..=1.0).contains(&frac), "active_capacity_fraction={frac}");
+        // ...but the ledger still amortizes the fleet's embodied carbon
+        // at the planned rate: 3 machines × 278.3 kg / 3 yr.
+        let yearly = f.f64_or("lifecycle_yearly_embodied_kg", 0.0);
+        assert!((yearly - 278.3).abs() < 1e-6, "yearly={yearly}");
+        // Stripping exactly the lifecycle keys recovers the no-fleet
+        // record byte-for-byte (serialized comparison survives NaNs).
+        let mut stripped = f.as_obj().unwrap().clone();
+        for key in LIFECYCLE_CSV_COLUMNS {
+            assert!(stripped.remove(*key).is_some(), "fleet cell record must carry '{key}'");
+        }
+        assert_eq!(
+            Value::Obj(stripped).to_string_compact(),
+            p.to_string_compact(),
+            "historic keys diverged under the default fleet"
+        );
+    }
+
+    // CSV: each fleet row extends the matching no-fleet row by exactly
+    // the lifecycle columns.
+    let pcsv = plain.render(Format::Csv);
+    let fcsv = fleet.render(Format::Csv);
+    assert_eq!(pcsv.lines().count(), fcsv.lines().count());
+    let n_base = CSV_COLUMNS.len();
+    for (pl, fl) in pcsv.lines().zip(fcsv.lines()) {
+        let fields: Vec<&str> = fl.split(',').collect();
+        assert_eq!(fields.len(), n_base + LIFECYCLE_CSV_COLUMNS.len());
+        assert_eq!(fields[..n_base].join(","), pl);
+    }
+}

@@ -1,0 +1,281 @@
+//! Lifecycle property wall: randomized fleets, fault injections, and
+//! retirement schedules must uphold three conservation laws.
+//!
+//! 1. **Carbon conservation** — once every service window is closed, the
+//!    ledger's amortized total equals the total embodied charge to a
+//!    relative 1e-9: amortization redistributes kilograms over time, it
+//!    never creates or destroys them.
+//! 2. **Task conservation** — no request is lost or double-completed
+//!    across maintenance drains, core failures, and machine retirement:
+//!    every simulated request completes exactly once, and at the manager
+//!    level the pinned + oversubscribed task multiset always equals the
+//!    set of started-but-unfinished tasks.
+//! 3. **Failed-core quarantine** — a permanently failed core never holds
+//!    a task and never leaves C6, under any policy, through arbitrary
+//!    start/finish/fail/replace churn.
+
+use carbon_sim::carbon::FleetLedger;
+use carbon_sim::cluster::{
+    Cluster, ClusterConfig, CoreFailure, FleetConfig, LifecycleConfig, MachineGroup,
+    MaintenanceWindow,
+};
+use carbon_sim::cpu::{AgingParams, CState, CpuPackage, TemperatureModel};
+use carbon_sim::policy::{by_name, CoreManager, ALL_POLICIES};
+use carbon_sim::trace::azure::{AzureTraceGen, TraceParams, Workload};
+use carbon_sim::util::proptest::{check, forall, Check};
+use carbon_sim::util::rng::Rng;
+
+// ---------------------------------------------------- carbon conservation
+
+#[test]
+fn fully_closed_ledgers_conserve_the_embodied_charge() {
+    forall(300, 0xCA12B0, |g| {
+        let mut ledger = FleetLedger::new();
+        let n_machines = 1 + g.size(0, 5);
+        let mut now = 0.0;
+        for m in 0..n_machines {
+            ledger.commission(m, g.f64(1.0, 500.0), g.f64(0.5, 5.0), g.f64(0.0, 4.0), now);
+        }
+        // Random retire → replace cycles at strictly increasing times (a
+        // zero-length service window would amortize nothing by fiat).
+        for _ in 0..g.size(0, 12) {
+            now += g.f64(1.0, 1e7);
+            let m = g.size(0, n_machines - 1);
+            if ledger.retire(m, now) {
+                ledger.commission(m, g.f64(1.0, 500.0), g.f64(0.5, 5.0), 0.0, now);
+            }
+        }
+        // Close every window and compare the totals.
+        now += g.f64(1.0, 1e7);
+        for m in 0..n_machines {
+            ledger.retire(m, now);
+        }
+        let charged = ledger.total_charged_kg();
+        let amortized = ledger.amortized_total_kg(now);
+        let rel = ((charged - amortized) / charged).abs();
+        check(
+            rel < 1e-9,
+            format!(
+                "conservation violated: charged {charged} kg, amortized {amortized} kg \
+                 (rel {rel:.3e}, {} records)",
+                ledger.records.len()
+            ),
+        )
+    });
+}
+
+// ------------------------------------------------------ task conservation
+
+#[test]
+fn every_request_completes_exactly_once_under_random_fleet_events() {
+    // Whole-simulator property: randomized two-group fleets with
+    // maintenance windows, scripted + stochastic core failures, and
+    // age-triggered retirement, across every policy. Few cases — each
+    // runs 3 × a full simulation — but each case is a different fleet.
+    forall(6, 0x71FE, |g| {
+        let n_prompt = 1 + g.size(0, 1);
+        let n_token = 1 + g.size(0, 1);
+        let n = n_prompt + n_token;
+        let cores = 4 + g.size(0, 4);
+        let duration = 3.0 + g.f64(0.0, 2.0);
+        let seed = g.size(0, 1_000_000) as u64;
+
+        let split = 1 + g.size(0, n - 2);
+        let fleet = FleetConfig {
+            groups: vec![
+                MachineGroup {
+                    count: split,
+                    cores,
+                    commission_age_yr: g.f64(0.0, 2.0),
+                    ..MachineGroup::default()
+                },
+                MachineGroup {
+                    count: n - split,
+                    cores: 4 + g.size(0, 4),
+                    generation: "gen2".into(),
+                    // Straddles the 3-year age limit: some fleets retire
+                    // this group at the first check, some never do.
+                    commission_age_yr: g.f64(2.5, 3.5),
+                    ..MachineGroup::default()
+                },
+            ],
+        };
+        let lifecycle = LifecycleConfig {
+            maintenance: (0..g.size(0, 2))
+                .map(|_| MaintenanceWindow {
+                    machine: g.size(0, n - 1),
+                    start_s: g.f64(0.0, duration),
+                    duration_s: 0.1 + g.f64(0.0, duration),
+                })
+                .collect(),
+            failures: (0..g.size(0, 3))
+                .map(|_| CoreFailure {
+                    machine: g.size(0, n - 1),
+                    core: g.size(0, 3),
+                    time_s: g.f64(0.0, duration),
+                })
+                .collect(),
+            // Absurdly high rate on purpose: the exponential draws land
+            // inside the few simulated seconds, exercising the stochastic
+            // failure path hard.
+            failure_rate_per_core_year: g.f64(0.0, 3.0e6),
+            age_limit_yr: Some(3.0),
+            dvth_guard_band_v: if g.bool() { Some(0.05) } else { None },
+            check_period_s: 0.5 + g.f64(0.0, 2.0),
+            replacement_group: g.size(0, 1),
+        };
+
+        let trace = AzureTraceGen::new(TraceParams {
+            rate_rps: 2.0 + g.f64(0.0, 4.0),
+            duration_s: duration,
+            workload: Workload::Mixed,
+            seed: seed ^ 0xABCD,
+        })
+        .generate();
+
+        for policy in ALL_POLICIES {
+            let cfg = ClusterConfig {
+                n_prompt,
+                n_token,
+                cores_per_cpu: cores,
+                policy: policy.to_string(),
+                seed,
+                fleet: Some(fleet.clone()),
+                lifecycle: Some(lifecycle.clone()),
+                ..ClusterConfig::default()
+            };
+            let mut cluster = Cluster::new(cfg);
+            let result = cluster.run(&trace);
+            if result.completed_requests != trace.requests.len() {
+                return Check::Fail(format!(
+                    "[{policy}] {} of {} requests completed (fleet={fleet:?}, \
+                     lifecycle={lifecycle:?})",
+                    result.completed_requests,
+                    trace.requests.len()
+                ));
+            }
+            let rt = cluster.lifecycle.as_ref().expect("fleet run has lifecycle state");
+            // Ledger invariants: one open window per machine slot, one
+            // record per initial commission + one per retirement, and the
+            // reported summary agrees with the ledger's counters.
+            for m in 0..n {
+                if rt.ledger.open_record(m).is_none() {
+                    return Check::Fail(format!("[{policy}] machine {m} has no open window"));
+                }
+            }
+            if rt.ledger.records.len() != n + rt.retirements as usize {
+                return Check::Fail(format!(
+                    "[{policy}] {} ledger records for {n} slots + {} retirements",
+                    rt.ledger.records.len(),
+                    rt.retirements
+                ));
+            }
+            let summary = result.lifecycle.expect("fleet run reports a lifecycle summary");
+            if summary.retirements != rt.retirements
+                || summary.core_failures != rt.core_failures
+                || summary.rerouted != rt.rerouted
+            {
+                return Check::Fail(format!("[{policy}] summary diverged from runtime counters"));
+            }
+            // Failed-core quarantine at end of run, on every machine.
+            for mach in &cluster.machines {
+                for c in mach.mgr.cpu.core_views() {
+                    if c.failed() && (c.task().is_some() || c.state() != CState::C6) {
+                        return Check::Fail(format!(
+                            "[{policy}] failed core {} on machine {} holds task {:?} in {:?}",
+                            c.id(),
+                            mach.id,
+                            c.task(),
+                            c.state()
+                        ));
+                    }
+                }
+            }
+        }
+        Check::Pass
+    });
+}
+
+// ------------------------------------------------- failed-core quarantine
+
+#[test]
+fn failed_cores_never_hold_tasks_through_arbitrary_churn() {
+    forall(60, 0xFA11, |g| {
+        let policy = ALL_POLICIES[g.size(0, ALL_POLICIES.len() - 1)];
+        let n = 2 + g.size(0, 10);
+        let cpu = CpuPackage::uniform(
+            n,
+            AgingParams::paper_default(),
+            TemperatureModel::paper_default(),
+        );
+        let mut mgr =
+            CoreManager::new(cpu, by_name(policy).unwrap(), Rng::new(g.size(0, 10_000) as u64));
+        let mut next_task: u64 = 0;
+        let mut active: Vec<u64> = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..g.size(5, 60) {
+            now += 0.05;
+            match g.size(0, 9) {
+                0..=3 => {
+                    mgr.start_task(next_task, now);
+                    active.push(next_task);
+                    next_task += 1;
+                }
+                4..=6 => {
+                    if !active.is_empty() {
+                        let i = g.size(0, active.len() - 1);
+                        mgr.finish_task(active.swap_remove(i), now);
+                    }
+                }
+                7 | 8 => {
+                    // Deliberately allows stale/repeat indices: fail_core
+                    // must be a no-op on out-of-range or already-failed
+                    // cores.
+                    mgr.fail_core(g.size(0, n + 2), now);
+                }
+                _ => {
+                    // Machine retirement: swap in a fresh package (maybe a
+                    // different SKU core count) and a fresh policy.
+                    let n2 = 2 + g.size(0, 10);
+                    let fresh = CpuPackage::uniform(
+                        n2,
+                        AgingParams::paper_default(),
+                        TemperatureModel::paper_default(),
+                    );
+                    mgr.replace_package(fresh, by_name(policy).unwrap(), now);
+                }
+            }
+            mgr.adjust(now);
+            for c in mgr.cpu.core_views() {
+                if c.failed() && c.task().is_some() {
+                    return Check::Fail(format!(
+                        "[{policy}] failed core {} holds task {:?}",
+                        c.id(),
+                        c.task()
+                    ));
+                }
+                if c.failed() && c.state() != CState::C6 {
+                    return Check::Fail(format!(
+                        "[{policy}] failed core {} is in {:?}, not C6",
+                        c.id(),
+                        c.state()
+                    ));
+                }
+            }
+            // Task conservation at the manager level: pinned + queued is
+            // exactly the started-but-unfinished multiset.
+            let mut seen: Vec<u64> = mgr.cpu.core_views().filter_map(|c| c.task()).collect();
+            seen.extend(mgr.cpu.oversub.iter().copied());
+            seen.sort_unstable();
+            let mut expect = active.clone();
+            expect.sort_unstable();
+            if seen != expect {
+                return Check::Fail(format!(
+                    "[{policy}] task multiset diverged: pinned+queued {seen:?} vs active \
+                     {expect:?}"
+                ));
+            }
+        }
+        Check::Pass
+    });
+}

@@ -32,6 +32,8 @@ fn tiny_spec() -> SweepSpec {
         n_prompt: 1,
         n_token: 1,
         seed: 31,
+        fleet: None,
+        lifecycle: None,
     }
 }
 

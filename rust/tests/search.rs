@@ -29,6 +29,8 @@ fn base_spec() -> SweepSpec {
         n_prompt: 1,
         n_token: 1,
         seed: 77,
+        fleet: None,
+        lifecycle: None,
     }
 }
 

@@ -23,6 +23,8 @@ fn tiny_spec() -> SweepSpec {
         n_prompt: 1,
         n_token: 2,
         seed: 1234,
+        fleet: None,
+        lifecycle: None,
     }
 }
 

@@ -25,6 +25,8 @@ fn tiny_spec() -> SweepSpec {
         n_prompt: 1,
         n_token: 2,
         seed: 77,
+        fleet: None,
+        lifecycle: None,
     }
 }
 
